@@ -1,0 +1,86 @@
+//! Benchmark-quality mini-suite: evaluate a panel of generators on several
+//! Table-8 stand-ins and print average ranks, Table-2 style.
+//!
+//! Run: `cargo run --release --example benchmark_suite [-- --datasets iris,wine,seeds]`
+
+use caloforest::eval::rank::{average_ranks, Better};
+use caloforest::experiments::quality::{evaluate_method, Method, Metrics, QualityConfig};
+use caloforest::util::bench::format_table;
+use caloforest::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::new("benchmark_suite", "Table-2-style average ranks")
+        .opt("datasets", "iris,seeds,wine,glass", "comma-separated stand-ins")
+        .opt("row-cap", "150", "training-row cap")
+        .parse(&argv)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+
+    let registry = caloforest::data::benchmark::benchmark_registry();
+    let specs: Vec<_> = args
+        .get("datasets")
+        .split(',')
+        .filter_map(|n| registry.iter().find(|s| s.name == n.trim()).cloned())
+        .collect();
+    assert!(!specs.is_empty(), "no known datasets selected");
+    let methods = [
+        Method::GaussianCopula,
+        Method::Tvae,
+        Method::TabDdpm,
+        Method::FfOriginal,
+        Method::FfSoScaled,
+        Method::FfMoScaled,
+    ];
+    let cfg = QualityConfig { row_cap: args.get_usize("row-cap"), ..Default::default() };
+
+    // metric -> dataset -> method value
+    let mut per_metric: Vec<Vec<Vec<f64>>> = vec![Vec::new(); 8];
+    for spec in &specs {
+        eprintln!("dataset {} (n={}, p={}, n_y={})", spec.name, spec.n, spec.p, spec.n_y);
+        let mut row_per_metric = vec![Vec::with_capacity(methods.len()); 8];
+        for method in methods {
+            let t0 = std::time::Instant::now();
+            let m = evaluate_method(method, spec, &cfg);
+            eprintln!("  {:<16} {:.1}s", method.name(), t0.elapsed().as_secs_f64());
+            for (mi, v) in m.values().iter().enumerate() {
+                row_per_metric[mi].push(*v);
+            }
+        }
+        for mi in 0..8 {
+            per_metric[mi].push(row_per_metric[mi].clone());
+        }
+    }
+
+    // Average rank per metric + overall (the Table 2 presentation).
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut overall = vec![Vec::new(); methods.len()];
+    let mut table: Vec<Vec<String>> =
+        methods.iter().map(|m| vec![m.name().to_string()]).collect();
+    for mi in 0..8 {
+        let better = if Metrics::higher_better(mi) { Better::Higher } else { Better::Lower };
+        let agg = average_ranks(&per_metric[mi], better);
+        for (mj, (mean, sem)) in agg.iter().enumerate() {
+            table[mj].push(if mean.is_nan() || *mean == 0.0 {
+                "—".to_string()
+            } else {
+                format!("{mean:.1}±{sem:.1}")
+            });
+            if !mean.is_nan() && *mean > 0.0 {
+                overall[mj].push(*mean);
+            }
+        }
+    }
+    for (mj, mut cells) in table.into_iter().enumerate() {
+        let avg = caloforest::util::stats::mean(&overall[mj]);
+        cells.push(format!("{avg:.1}"));
+        rows.push(cells);
+    }
+    let mut header: Vec<&str> = vec!["method"];
+    header.extend(Metrics::NAMES);
+    header.push("Avg.");
+    println!("\n== Average rank over {} datasets (lower is better) ==", specs.len());
+    println!("{}", format_table(&header, &rows));
+}

@@ -1,0 +1,95 @@
+//! Quickstart: train ForestFlow on a small 2-D two-cluster dataset,
+//! generate samples with both the native and the AOT XLA (PJRT) backend,
+//! and verify they agree — the minimal end-to-end tour of all three layers.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use caloforest::coordinator::{run_training, RunOptions};
+use caloforest::eval::wasserstein::w1_distance;
+use caloforest::forest::sampler::{generate, generate_with, GenerateConfig};
+use caloforest::forest::trainer::ForestTrainConfig;
+use caloforest::gbt::{TrainParams, TreeKind};
+use caloforest::runtime::{xla_sampler::XlaField, PjrtRuntime};
+use caloforest::tensor::Matrix;
+use caloforest::util::rng::Rng;
+use std::path::Path;
+
+fn main() {
+    // 1. A toy dataset: two Gaussian blobs with class labels.
+    let mut rng = Rng::new(0);
+    let n = 400;
+    let mut x = Matrix::zeros(n, 2);
+    let mut y = Vec::with_capacity(n);
+    for r in 0..n {
+        let c = (r % 2) as u32;
+        let center = if c == 0 { (-2.0f32, 1.0f32) } else { (2.0, -1.0) };
+        x.set(r, 0, center.0 + 0.4 * rng.normal_f32());
+        x.set(r, 1, center.1 + 0.4 * rng.normal_f32());
+        y.push(c);
+    }
+
+    // 2. Train: 8 timesteps × 2 classes, K=20 duplication, streaming off.
+    let cfg = ForestTrainConfig {
+        n_t: 8,
+        k_dup: 20,
+        params: TrainParams {
+            n_trees: 30,
+            max_depth: 4,
+            kind: TreeKind::Single,
+            ..Default::default()
+        },
+        seed: 1,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let out = run_training(&cfg, &x, Some(&y), &RunOptions { workers: 2, ..Default::default() });
+    println!(
+        "trained {} ensembles in {:.2}s",
+        out.report.jobs.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // 3. Generate with the native backend.
+    let gen_cfg = GenerateConfig::new(400, 7);
+    let (native, labels) = generate(&out.model, &gen_cfg);
+    let w1 = w1_distance(&native, &x, 16, 3);
+    println!("native backend:   {} samples, W1(gen, train) = {:.4}", native.rows, w1);
+    assert!(w1 < 0.5, "generation should track the training distribution");
+
+    // 4. Generate with the XLA backend (AOT Pallas kernel via PJRT).
+    match PjrtRuntime::cpu(Path::new("artifacts")) {
+        Ok(runtime) => match XlaField::prepare(&runtime, &out.model) {
+            Ok(field) => {
+                let (xla_out, xla_labels) = generate_with(&out.model, &field, &gen_cfg);
+                let mut max_err = 0.0f32;
+                for i in 0..native.data.len() {
+                    max_err = max_err.max((native.data[i] - xla_out.data[i]).abs());
+                }
+                assert_eq!(labels, xla_labels);
+                println!(
+                    "xla backend:      platform={}, max |native − xla| = {:.2e}",
+                    runtime.platform(),
+                    max_err
+                );
+            }
+            Err(e) => println!("xla backend:      skipped ({e})"),
+        },
+        Err(e) => println!("xla backend:      skipped (no PJRT: {e})"),
+    }
+
+    // 5. Per-class means — the generated clusters sit where the data is.
+    for c in 0..2u32 {
+        let rows: Vec<usize> = labels
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l == c)
+            .map(|(r, _)| r)
+            .collect();
+        let mean0: f32 =
+            rows.iter().map(|&r| native.at(r, 0)).sum::<f32>() / rows.len() as f32;
+        let mean1: f32 =
+            rows.iter().map(|&r| native.at(r, 1)).sum::<f32>() / rows.len() as f32;
+        println!("class {c}: {} samples, mean = ({mean0:.2}, {mean1:.2})", rows.len());
+    }
+    println!("quickstart OK");
+}

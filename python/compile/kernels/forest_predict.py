@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: batched packed-forest traversal — the generation hot
+spot.
+
+The ensemble is flattened to node tensors ([T trees, N nodes]) with leaves
+self-looping, so a fixed `depth` iterations of data-parallel
+gather -> compare -> select lands every (row, tree) pair on its leaf; leaf
+value vectors are then summed over trees. This is the TPU adaptation of the
+paper's inference path (§ Hardware-Adaptation in DESIGN.md): node tables
+live in VMEM per tile, rows are tiled by BlockSpec, and the traversal is
+gather/VPU work with no MXU involvement.
+
+interpret=True for CPU-PJRT executability; the same kernel structure lowers
+to Mosaic for a real TPU target.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _traverse_block(x, feat, thr, left, right, values, depth):
+    """Traversal on one row block; pure jnp (runs inside the kernel)."""
+    n = x.shape[0]
+    t_trees = feat.shape[0]
+    node = jnp.zeros((t_trees, n), dtype=jnp.int32)
+    rows = jnp.arange(n)
+    for _ in range(depth):
+        f = jnp.take_along_axis(feat, node, axis=1)
+        th = jnp.take_along_axis(thr, node, axis=1)
+        xv = x[rows[None, :], f]
+        go_left = xv < th
+        l = jnp.take_along_axis(left, node, axis=1)
+        r = jnp.take_along_axis(right, node, axis=1)
+        node = jnp.where(go_left, l, r)
+    tree_idx = jnp.arange(t_trees)[:, None]
+    leaf_vals = values[tree_idx, node]          # [T, n, m]
+    return jnp.sum(leaf_vals, axis=0)           # [n, m]
+
+
+def make_kernel(depth):
+    def kernel(x_ref, feat_ref, thr_ref, left_ref, right_ref, values_ref, o_ref):
+        x = x_ref[...]
+        feat = feat_ref[...]
+        thr = thr_ref[...]
+        left = left_ref[...]
+        right = right_ref[...]
+        values = values_ref[...]
+        o_ref[...] = _traverse_block(x, feat, thr, left, right, values, depth)
+
+    return kernel
+
+
+def forest_accumulate(x, feat, thr, left, right, values, depth,
+                      block_n: int = DEFAULT_BLOCK):
+    """Sum of leaf-value vectors over the forest for each row of x.
+
+    Shapes: x [n, p]; feat/thr/left/right [T, N]; values [T, N, m].
+    Returns [n, m]. `depth` is static.
+    """
+    n, _p = x.shape
+    t_trees, n_nodes = feat.shape
+    m = values.shape[2]
+    block_n = min(block_n, n)
+    grid = (pl.cdiv(n, block_n),)
+    return pl.pallas_call(
+        make_kernel(depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, x.shape[1]), lambda i: (i, 0)),
+            # Tree tensors: one block covering the whole forest, reused by
+            # every row tile (the index_map pins block 0).
+            pl.BlockSpec((t_trees, n_nodes), lambda i: (0, 0)),
+            pl.BlockSpec((t_trees, n_nodes), lambda i: (0, 0)),
+            pl.BlockSpec((t_trees, n_nodes), lambda i: (0, 0)),
+            pl.BlockSpec((t_trees, n_nodes), lambda i: (0, 0)),
+            pl.BlockSpec((t_trees, n_nodes, m), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x, feat, thr, left, right, values)
+
+
+def vmem_estimate(block_n, p, t_trees, n_nodes, m) -> int:
+    """VMEM bytes per grid step: row tile + node tables + value table +
+    output tile (f32/i32 = 4 B). The dominant term is the value table
+    `T*N*m*4`, which bounds how large a forest fits on-chip per tile."""
+    tile = block_n * p * 4
+    tables = 4 * t_trees * n_nodes * 4
+    values = t_trees * n_nodes * m * 4
+    out = block_n * m * 4
+    return tile + tables + values + out

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: fused forward corruption + regression target.
+
+One pass over HBM produces both the noised input x_t and the regression
+target — the training-data hot spot that the paper's Issue-1 fix evaluates
+on the fly inside every job. On TPU this is a pure VPU streaming kernel;
+BlockSpec tiles rows so each [block_n, p] tile of x0/x1 streams
+HBM -> VMEM once and writes two output tiles. interpret=True everywhere
+(the CPU PJRT plugin cannot run Mosaic custom-calls); the kernel still
+lowers to the same fused structure.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _cfm_kernel(x0_ref, x1_ref, t_ref, xt_ref, z_ref):
+    x0 = x0_ref[...]
+    x1 = x1_ref[...]
+    t = t_ref[0]
+    xt_ref[...] = t * x1 + (1.0 - t) * x0
+    z_ref[...] = x1 - x0
+
+
+def cfm_noising(x0, x1, t, block_n: int = DEFAULT_BLOCK):
+    """Fused CFM forward: returns (x_t, z). `t` is a scalar array."""
+    n, p = x0.shape
+    block_n = min(block_n, n)
+    grid = (pl.cdiv(n, block_n),)
+    t_arr = jnp.reshape(t.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _cfm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+        ],
+        interpret=True,
+    )(x0, x1, t_arr)
+
+
+def _vp_kernel(x0_ref, eps_ref, coef_ref, xt_ref, z_ref):
+    x0 = x0_ref[...]
+    eps = eps_ref[...]
+    alpha = coef_ref[0]
+    sigma = coef_ref[1]
+    xt_ref[...] = alpha * x0 + sigma * eps
+    z_ref[...] = -eps / sigma
+
+
+def vp_noising(x0, eps, alpha, sigma, block_n: int = DEFAULT_BLOCK):
+    """Fused VP-SDE forward: returns (x_t, score target)."""
+    n, p = x0.shape
+    block_n = min(block_n, n)
+    grid = (pl.cdiv(n, block_n),)
+    coef = jnp.stack([alpha.astype(jnp.float32), sigma.astype(jnp.float32)])
+    return pl.pallas_call(
+        _vp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+        ],
+        interpret=True,
+    )(x0, eps, coef)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_estimate(block_n: int, p: int) -> int:
+    """Estimated VMEM bytes per grid step (perf model for DESIGN.md §Perf):
+    two input tiles + two output tiles + scalars, f32."""
+    return (4 * block_n * p * 4) + 16

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel must match its
+reference here (pytest + hypothesis sweep shapes), and the Rust native
+predictor must match the packed-forest semantics (pinned by the shared AOT
+artifact in rust/tests/xla_parity.rs).
+"""
+
+import jax.numpy as jnp
+
+
+def cfm_noising_ref(x0, x1, t):
+    """Conditional flow matching forward (Eq. 5): x_t and target.
+
+    x_t = t*x1 + (1-t)*x0 ; z = x1 - x0.
+    """
+    xt = t * x1 + (1.0 - t) * x0
+    z = x1 - x0
+    return xt, z
+
+
+def vp_noising_ref(x0, eps, alpha, sigma):
+    """VP-SDE forward (Eq. 2): x_t = alpha*x0 + sigma*eps ; score target
+    z = -eps/sigma."""
+    xt = alpha * x0 + sigma * eps
+    z = -eps / sigma
+    return xt, z
+
+
+def forest_accumulate_ref(x, feat, thr, left, right, values, depth):
+    """Sum of leaf values over a packed forest (no eta/base).
+
+    Args:
+      x:      [n, p]   float32 batch (NaN-free by contract).
+      feat:   [T, N]   int32 split feature per node.
+      thr:    [T, N]   float32 split threshold (x < thr goes left).
+      left:   [T, N]   int32 left child (leaves self-loop).
+      right:  [T, N]   int32 right child (leaves self-loop).
+      values: [T, N, m] float32 leaf values (0 on internal/padding nodes).
+      depth:  static int — traversal iterations (>= max tree depth).
+
+    Returns: [n, m] sum over trees of values[t, leaf_t(x_i), :].
+    """
+    n = x.shape[0]
+    t_trees = feat.shape[0]
+    node = jnp.zeros((t_trees, n), dtype=jnp.int32)
+    rows = jnp.arange(n)
+    for _ in range(depth):
+        f = jnp.take_along_axis(feat, node, axis=1)          # [T, n]
+        th = jnp.take_along_axis(thr, node, axis=1)          # [T, n]
+        xv = x[rows[None, :], f]                             # [T, n]
+        go_left = xv < th
+        l = jnp.take_along_axis(left, node, axis=1)
+        r = jnp.take_along_axis(right, node, axis=1)
+        node = jnp.where(go_left, l, r)
+    tree_idx = jnp.arange(t_trees)[:, None]
+    leaf_vals = values[tree_idx, node]                       # [T, n, m]
+    return jnp.sum(leaf_vals, axis=0)                        # [n, m]
+
+
+def forest_field_ref(x, feat, thr, left, right, values, base, eta, depth):
+    """Full vector field: base + eta * forest_accumulate."""
+    acc = forest_accumulate_ref(x, feat, thr, left, right, values, depth)
+    return base[None, :] + eta * acc

@@ -1,0 +1,64 @@
+"""L2: the JAX compute graphs lowered to AOT artifacts.
+
+Each entry point is a pure function over fixed shapes, calling the L1
+Pallas kernels so everything lowers into one HLO module:
+
+* ``forest_field``  — the learned vector field `base + eta * Σ_t leaf_t(x)`
+  (the sampler's per-step evaluation; the Euler update itself stays in Rust
+  so the same artifact serves flow ODE and diffusion SDE drift).
+* ``cfm_noising_graph`` / ``vp_noising_graph`` — fused training-data
+  construction (Eq. 5 / Eq. 2).
+
+Python never runs at generation time: these functions exist only to be
+lowered by ``aot.py``.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import forest_predict, noising
+
+
+def forest_field(x, feat, thr, left, right, values, base, eta, *, depth):
+    """The vector field at one (t, y) grid point.
+
+    Returns a 1-tuple (lowered with return_tuple=True for the Rust loader).
+    """
+    acc = forest_predict.forest_accumulate(x, feat, thr, left, right, values, depth)
+    return (base[None, :] + eta * acc,)
+
+
+def cfm_noising_graph(x0, x1, t):
+    """Fused CFM corruption: (x_t, z)."""
+    xt, z = noising.cfm_noising(x0, x1, t)
+    return (xt, z)
+
+
+def vp_noising_graph(x0, eps, alpha, sigma):
+    """Fused VP-SDE corruption: (x_t, score target)."""
+    xt, z = noising.vp_noising(x0, eps, alpha, sigma)
+    return (xt, z)
+
+
+def euler_flow_step(x, feat, thr, left, right, values, base, eta, h, *, depth):
+    """One Euler ODE step x <- x - h * field(x) fused end to end (used by
+    the fused-sampler ablation in the perf study)."""
+    (field,) = forest_field(x, feat, thr, left, right, values, base, eta, depth=depth)
+    return (x - h * field,)
+
+
+def field_input_specs(n, p, t_trees, n_nodes):
+    """ShapeDtypeStructs for ``forest_field`` at pinned dims."""
+    import jax
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return (
+        jax.ShapeDtypeStruct((n, p), f32),                 # x
+        jax.ShapeDtypeStruct((t_trees, n_nodes), i32),     # feat
+        jax.ShapeDtypeStruct((t_trees, n_nodes), f32),     # thr
+        jax.ShapeDtypeStruct((t_trees, n_nodes), i32),     # left
+        jax.ShapeDtypeStruct((t_trees, n_nodes), i32),     # right
+        jax.ShapeDtypeStruct((t_trees, n_nodes, p), f32),  # values (m = p)
+        jax.ShapeDtypeStruct((p,), f32),                   # base
+        jax.ShapeDtypeStruct((), f32),                     # eta
+    )

@@ -1,0 +1,145 @@
+"""L1 forest-traversal kernel vs oracles.
+
+Random packed forests (valid binary trees with self-looping leaves) are
+generated in numpy; the Pallas kernel must match both the jnp reference
+and an independent per-row python traversal.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import forest_predict, ref
+
+
+def random_packed_forest(rng, t_trees, depth, p, m):
+    """Build a random full-ish binary forest in packed layout."""
+    n_nodes = 2 ** (depth + 1) - 1
+    feat = np.zeros((t_trees, n_nodes), dtype=np.int32)
+    thr = np.zeros((t_trees, n_nodes), dtype=np.float32)
+    left = np.zeros((t_trees, n_nodes), dtype=np.int32)
+    right = np.zeros((t_trees, n_nodes), dtype=np.int32)
+    values = np.zeros((t_trees, n_nodes, m), dtype=np.float32)
+    for t in range(t_trees):
+        next_free = [1]
+
+        def build(node, d):
+            is_leaf = d >= depth or rng.random() < 0.3 or next_free[0] + 2 > n_nodes
+            if is_leaf:
+                left[t, node] = node
+                right[t, node] = node
+                values[t, node] = rng.standard_normal(m).astype(np.float32)
+            else:
+                l, r = next_free[0], next_free[0] + 1
+                next_free[0] += 2
+                feat[t, node] = rng.integers(0, p)
+                thr[t, node] = rng.standard_normal()
+                left[t, node] = l
+                right[t, node] = r
+                build(l, d + 1)
+                build(r, d + 1)
+
+        build(0, 0)
+        # Unused padding nodes self-loop.
+        for node in range(next_free[0], n_nodes):
+            left[t, node] = node
+            right[t, node] = node
+    return feat, thr, left, right, values
+
+
+def python_traverse(x, feat, thr, left, right, values, depth):
+    """Independent scalar oracle."""
+    n = x.shape[0]
+    t_trees = feat.shape[0]
+    m = values.shape[2]
+    out = np.zeros((n, m), dtype=np.float64)
+    for i in range(n):
+        for t in range(t_trees):
+            node = 0
+            for _ in range(depth):
+                if left[t, node] == node:
+                    break
+                node = left[t, node] if x[i, feat[t, node]] < thr[t, node] else right[t, node]
+            out[i] += values[t, node]
+    return out.astype(np.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=80),
+    p=st.integers(min_value=1, max_value=10),
+    t_trees=st.integers(min_value=1, max_value=12),
+    depth=st.integers(min_value=1, max_value=5),
+    m=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_both_oracles(n, p, t_trees, depth, m, seed):
+    rng = np.random.default_rng(seed)
+    feat, thr, left, right, values = random_packed_forest(rng, t_trees, depth, p, m)
+    x = rng.standard_normal((n, p)).astype(np.float32)
+
+    out_pallas = np.asarray(
+        forest_predict.forest_accumulate(
+            jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thr),
+            jnp.asarray(left), jnp.asarray(right), jnp.asarray(values), depth,
+        )
+    )
+    out_jnp = np.asarray(
+        ref.forest_accumulate_ref(
+            jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thr),
+            jnp.asarray(left), jnp.asarray(right), jnp.asarray(values), depth,
+        )
+    )
+    out_py = python_traverse(x, feat, thr, left, right, values, depth)
+    np.testing.assert_allclose(out_pallas, out_jnp, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out_pallas, out_py, rtol=1e-4, atol=1e-4)
+
+
+def test_extra_depth_is_harmless():
+    """Iterating deeper than the true depth must not change leaves
+    (self-loop invariant — what lets Rust pad depth up to the artifact)."""
+    rng = np.random.default_rng(7)
+    feat, thr, left, right, values = random_packed_forest(rng, 4, 3, 5, 2)
+    x = rng.standard_normal((40, 5)).astype(np.float32)
+    args = (jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thr),
+            jnp.asarray(left), jnp.asarray(right), jnp.asarray(values))
+    out3 = np.asarray(forest_predict.forest_accumulate(*args, 3))
+    out7 = np.asarray(forest_predict.forest_accumulate(*args, 7))
+    np.testing.assert_allclose(out3, out7, rtol=0, atol=0)
+
+
+def test_inert_padding_trees():
+    """All-zero self-loop trees contribute nothing (Rust pads forests up to
+    the artifact's tree count)."""
+    rng = np.random.default_rng(8)
+    feat, thr, left, right, values = random_packed_forest(rng, 3, 3, 4, 2)
+    x = rng.standard_normal((20, 4)).astype(np.float32)
+
+    def pad(arr, extra, fill_self_loop=False):
+        shape = (extra,) + arr.shape[1:]
+        block = np.zeros(shape, dtype=arr.dtype)
+        if fill_self_loop:
+            n_nodes = arr.shape[1]
+            block[:] = np.arange(n_nodes, dtype=arr.dtype)[None, :]
+        return np.concatenate([arr, block], axis=0)
+
+    feat_p = pad(feat, 5)
+    thr_p = pad(thr, 5)
+    left_p = pad(left, 5, fill_self_loop=True)
+    right_p = pad(right, 5, fill_self_loop=True)
+    values_p = pad(values, 5)
+    base = forest_predict.forest_accumulate(
+        jnp.asarray(x), jnp.asarray(feat), jnp.asarray(thr), jnp.asarray(left),
+        jnp.asarray(right), jnp.asarray(values), 3)
+    padded = forest_predict.forest_accumulate(
+        jnp.asarray(x), jnp.asarray(feat_p), jnp.asarray(thr_p), jnp.asarray(left_p),
+        jnp.asarray(right_p), jnp.asarray(values_p), 3)
+    # Padding only changes the summation tree -> allow fp reassociation.
+    np.testing.assert_allclose(np.asarray(base), np.asarray(padded), rtol=1e-6, atol=1e-6)
+
+
+def test_vmem_estimate_dominated_by_values():
+    small = forest_predict.vmem_estimate(128, 8, 16, 63, 8)
+    big = forest_predict.vmem_estimate(128, 8, 128, 255, 8)
+    assert big > small * 10

@@ -1,0 +1,85 @@
+"""L1 noising kernel vs the pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes and the time parameter; assert_allclose against
+ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import noising, ref
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape, dtype=np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=300),
+    p=st.integers(min_value=1, max_value=24),
+    t=st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_cfm_matches_ref(n, p, t, seed):
+    x0 = _rand((n, p), seed)
+    x1 = _rand((n, p), seed + 1)
+    t_arr = jnp.float32(t)
+    xt, z = noising.cfm_noising(jnp.asarray(x0), jnp.asarray(x1), t_arr)
+    xt_ref, z_ref = ref.cfm_noising_ref(x0, x1, np.float32(t))
+    np.testing.assert_allclose(np.asarray(xt), np.asarray(xt_ref), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_ref), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=200),
+    p=st.integers(min_value=1, max_value=16),
+    t=st.floats(min_value=0.05, max_value=1.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_vp_matches_ref(n, p, t, seed):
+    # VP-SDE coefficients from the linear beta schedule (matches the Rust
+    # forest::schedule::VpSchedule).
+    beta_min, beta_max = 0.1, 20.0
+    integral = beta_min * t + 0.5 * (beta_max - beta_min) * t * t
+    alpha = np.float32(np.exp(-0.5 * integral))
+    sigma = np.float32(np.sqrt(max(1.0 - alpha * alpha, 1e-12)))
+    x0 = _rand((n, p), seed)
+    eps = _rand((n, p), seed + 1)
+    xt, z = noising.vp_noising(
+        jnp.asarray(x0), jnp.asarray(eps), jnp.float32(alpha), jnp.float32(sigma)
+    )
+    xt_ref, z_ref = ref.vp_noising_ref(x0, eps, alpha, sigma)
+    np.testing.assert_allclose(np.asarray(xt), np.asarray(xt_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_cfm_endpoints_exact():
+    x0 = _rand((64, 4), 0)
+    x1 = _rand((64, 4), 1)
+    xt0, _ = noising.cfm_noising(jnp.asarray(x0), jnp.asarray(x1), jnp.float32(0.0))
+    xt1, _ = noising.cfm_noising(jnp.asarray(x0), jnp.asarray(x1), jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(xt0), x0, rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(xt1), x1, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("block", [1, 7, 64, 128, 500])
+def test_block_size_invariance(block):
+    """Tiling must not change results (uneven final blocks included)."""
+    x0 = _rand((130, 5), 2)
+    x1 = _rand((130, 5), 3)
+    xt, z = noising.cfm_noising(jnp.asarray(x0), jnp.asarray(x1), jnp.float32(0.3),
+                                block_n=block)
+    xt_ref, z_ref = ref.cfm_noising_ref(x0, x1, np.float32(0.3))
+    np.testing.assert_allclose(np.asarray(xt), np.asarray(xt_ref), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_ref), rtol=1e-6, atol=1e-6)
+
+
+def test_vmem_estimate_monotone():
+    assert noising.vmem_estimate(128, 8) < noising.vmem_estimate(128, 16)
+    assert noising.vmem_estimate(64, 8) < noising.vmem_estimate(128, 8)

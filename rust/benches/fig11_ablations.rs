@@ -1,0 +1,69 @@
+//! Fig 11: K × n_tree × tree-structure (SO vs MO) ablation on the
+//! connectionist_bench_sonar stand-in, reporting W1 to train and test.
+
+use caloforest::coordinator::memory::TrackingAlloc;
+use caloforest::data::benchmark::{benchmark_registry, load_benchmark};
+use caloforest::data::split::train_test_split;
+use caloforest::eval::wasserstein::w1_distance;
+use caloforest::forest::trainer::{train_forest, ForestTrainConfig};
+use caloforest::forest::{generate, GenerateConfig};
+use caloforest::gbt::{TrainParams, TreeKind};
+use caloforest::util::bench::Bench;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn main() {
+    let quick = std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut bench = Bench::new("Fig 11: K / n_tree / SO-vs-MO ablation (sonar)");
+    let spec = benchmark_registry()
+        .into_iter()
+        .find(|s| s.name == "connectionist_bench_sonar")
+        .unwrap();
+    let data = load_benchmark(&spec);
+    let ((mut x, y), (x_test, _)) = train_test_split(&data.x, data.y.as_deref(), 0.2, 1);
+    let mut y = y;
+    // Sonar is p=60: cap rows so the K-sweep stays single-CPU feasible.
+    if x.rows > 120 {
+        x = x.take_rows(&(0..120).collect::<Vec<_>>());
+        y = y.map(|l| l[..120].to_vec());
+    }
+
+    let ks: &[usize] = if quick { &[3] } else { &[3, 10, 30] };
+    let trees: &[usize] = if quick { &[8] } else { &[10, 40] };
+    println!("| structure | K | n_tree | W1_train | W1_test |");
+    println!("|---|---|---|---|---|");
+    for &(kind, label) in &[(TreeKind::Single, "SO"), (TreeKind::Multi, "MO")] {
+        for &k in ks {
+            for &n_tree in trees {
+                let cfg = ForestTrainConfig {
+                    n_t: if quick { 3 } else { 5 },
+                    k_dup: k,
+                    fresh_noise_validation: true,
+                    params: TrainParams {
+                        n_trees: n_tree,
+                        max_depth: 6,
+                        kind,
+                        early_stopping_rounds: 6,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                };
+                let ((model, _), _) = bench.time_once(
+                    &format!("{label} K={k} n_tree={n_tree}"),
+                    || train_forest(&cfg, &x, y.as_deref()),
+                );
+                let (gen, _) = generate(&model, &GenerateConfig::new(x.rows, 3));
+                let w1_tr = w1_distance(&gen, &x, 12, 4);
+                let w1_te = w1_distance(&gen, &x_test, 12, 5);
+                println!("| {label} | {k} | {n_tree} | {w1_tr:.4} | {w1_te:.4} |");
+                bench.csv(
+                    "structure,k,n_tree,w1_train,w1_test",
+                    format!("{label},{k},{n_tree},{w1_tr:.6},{w1_te:.6}"),
+                );
+            }
+        }
+    }
+    bench.write_csv("fig11_ablations.csv");
+    eprintln!("{}", bench.summary());
+}

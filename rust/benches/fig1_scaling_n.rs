@@ -1,0 +1,58 @@
+//! Fig 1 + Table 6 (left columns): training time and peak memory vs n for
+//! Original vs Ours, p=100, n_y=10.
+//!
+//! Scaled defaults (K=10, n_t=10, n ≤ 10k); set CALOFOREST_PAPER_SCALE=1
+//! for the published K=100/n_t=50 grid (Original is then ledger-only).
+
+use caloforest::coordinator::memory::{fmt_bytes, TrackingAlloc};
+use caloforest::experiments::resource::{run_point, SweepConfig, Variant, CSV_HEADER};
+use caloforest::util::bench::Bench;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn main() {
+    let quick = std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let paper = std::env::var("CALOFOREST_PAPER_SCALE").ok().as_deref() == Some("1");
+    let mut bench = Bench::new("Fig 1: train time & peak memory vs n (Original vs Ours)");
+
+    // Default p is scaled 100 → 30 to fit a single-CPU budget (the paper's
+    // memory story is a function of n·p and reproduces at any p; paper
+    // scale restores p=100).
+    let p = if paper { 100 } else { 30 };
+    let ns: Vec<usize> = if quick {
+        vec![100, 300]
+    } else if paper {
+        vec![1000, 3000, 10_000, 30_000, 100_000]
+    } else {
+        vec![300, 1000, 3000]
+    };
+    let cfg = SweepConfig {
+        k_dup: if paper { 100 } else { 5 },
+        n_t: if paper { 50 } else { 4 },
+        n_trees: if paper { 100 } else { 6 },
+        original_train_for_real: !paper,
+        ..Default::default()
+    };
+
+    println!("| variant | n | train (s) | peak mem | gen 5n (s) |");
+    println!("|---|---|---|---|---|");
+    for &n in &ns {
+        for variant in [Variant::Original, Variant::So] {
+            let (r, _) = bench.time_once(&format!("{} n={n}", variant.name()), || {
+                run_point(variant, n, p, 10, &cfg)
+            });
+            println!(
+                "| {} | {} | {:.2} | {} | {} |",
+                r.variant,
+                n,
+                r.train_secs,
+                fmt_bytes(r.peak_bytes),
+                r.gen_secs.map(|g| format!("{g:.2}")).unwrap_or_else(|| "✗".into())
+            );
+            bench.csv(CSV_HEADER, r.csv_row());
+        }
+    }
+    bench.write_csv("fig1_scaling_n.csv");
+    eprintln!("{}", bench.summary());
+}

@@ -1,0 +1,85 @@
+//! Fig 2: memory usage *during* training, Original vs Ours, on the paper's
+//! n=1000, p=100, n_y=10 configuration (scaled K/n_t by default).
+//!
+//! Original's curve is the byte-exact ledger timeline (monotone growth, the
+//! paper's Question 2, with the shared-memory failure cross); ours is the
+//! tracked allocator sampled during the run (flat after prepare).
+
+use caloforest::coordinator::memory::{fmt_bytes, TrackingAlloc};
+use caloforest::coordinator::{run_training, RunOptions};
+use caloforest::data::synthetic::synthetic_dataset;
+use caloforest::forest::trainer::ForestTrainConfig;
+use caloforest::gbt::TrainParams;
+use caloforest::original::{train_original, HostModel};
+use caloforest::util::bench::Bench;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn main() {
+    let quick = std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut bench = Bench::new("Fig 2: memory during training");
+    let (n, p, n_y) = if quick { (200, 20, 4) } else { (1000, 100, 10) };
+    let (x, y) = synthetic_dataset(n, p, n_y, 0);
+    let cfg = ForestTrainConfig {
+        n_t: if quick { 3 } else { 10 },
+        k_dup: if quick { 3 } else { 10 },
+        params: TrainParams { n_trees: if quick { 3 } else { 20 }, ..Default::default() },
+        per_class_scaler: false,
+        ..Default::default()
+    };
+
+    // Original: ledger timeline.
+    let (orig, _) = bench.time_once("Original (ledger)", || {
+        train_original(&cfg, &x, Some(&y), HostModel::default(), !quick)
+    });
+    for (i, (label, bytes)) in orig.timeline.iter().enumerate() {
+        if i % (orig.timeline.len() / 60 + 1) == 0 {
+            bench.csv(
+                "impl,event_index,label,bytes",
+                format!("Original,{i},{label},{bytes}"),
+            );
+        }
+    }
+    println!(
+        "Original: peak {} (shm {}), failure: {:?}",
+        fmt_bytes(orig.peak_bytes),
+        fmt_bytes(orig.peak_shm_bytes),
+        orig.failure
+    );
+
+    // Ours: allocator samples over time.
+    let (ours, _) = bench.time_once("Ours (measured)", || {
+        run_training(
+            &cfg,
+            &x,
+            Some(&y),
+            &RunOptions { workers: 1, track_memory: true, ..Default::default() },
+        )
+    });
+    for (i, (secs, bytes)) in ours.timeline.iter().enumerate() {
+        bench.csv(
+            "impl,event_index,label,bytes",
+            format!("Ours,{i},t={secs:.2}s,{bytes}"),
+        );
+    }
+    println!("Ours: peak {}", fmt_bytes(ours.peak_alloc_bytes));
+
+    // The paper's Fig 2 shape claims, asserted:
+    let growth: Vec<usize> = orig
+        .timeline
+        .iter()
+        .filter(|(l, _)| l.starts_with('+'))
+        .map(|&(_, b)| b)
+        .collect();
+    assert!(
+        growth.windows(2).all(|w| w[1] >= w[0]),
+        "Original's memory must grow monotonically during training"
+    );
+    assert!(
+        orig.peak_bytes > ours.peak_alloc_bytes.max(1) * 3,
+        "Original's footprint must dwarf ours"
+    );
+    bench.write_csv("fig2_memory_timeline.csv");
+    eprintln!("{}", bench.summary());
+}

@@ -1,0 +1,77 @@
+//! Fig 3 / Fig 10: number of trees at the best validation iteration, by
+//! timestep, across benchmark datasets, for FF/FD × SO/MO with n_ES=20-style
+//! early stopping (scaled: n_tree=200, n_ES=8).
+
+use caloforest::coordinator::memory::TrackingAlloc;
+use caloforest::data::benchmark::{benchmark_registry, load_benchmark};
+use caloforest::data::split::train_test_split;
+use caloforest::forest::model::ModelKind;
+use caloforest::forest::trainer::{train_forest, ForestTrainConfig};
+use caloforest::gbt::{TrainParams, TreeKind};
+use caloforest::util::bench::Bench;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn main() {
+    let quick = std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut bench = Bench::new("Fig 3/10: best iteration by timestep under early stopping");
+    let dataset_names: &[&str] = if quick {
+        &["iris"]
+    } else {
+        &["iris", "seeds", "wine"]
+    };
+    let n_t = if quick { 4 } else { 10 };
+    let registry = benchmark_registry();
+
+    for &(kind, tree_kind, label) in &[
+        (ModelKind::Flow, TreeKind::Single, "FF-SO"),
+        (ModelKind::Flow, TreeKind::Multi, "FF-MO"),
+        (ModelKind::Diffusion, TreeKind::Single, "FD-SO"),
+        (ModelKind::Diffusion, TreeKind::Multi, "FD-MO"),
+    ] {
+        for name in dataset_names {
+            let spec = registry.iter().find(|s| s.name == *name).unwrap();
+            let data = load_benchmark(spec);
+            let ((mut x, y), _) = train_test_split(&data.x, data.y.as_deref(), 0.2, 1);
+            let mut y = y;
+            if x.rows > 200 {
+                x = x.take_rows(&(0..200).collect::<Vec<_>>());
+                y = y.map(|l| l[..200].to_vec());
+            }
+            let cfg = ForestTrainConfig {
+                kind,
+                eps: if kind == ModelKind::Diffusion { 0.001 } else { 0.0 },
+                n_t,
+                k_dup: if quick { 4 } else { 10 },
+                fresh_noise_validation: true,
+                params: TrainParams {
+                    n_trees: if quick { 30 } else { 100 },
+                    max_depth: 7,
+                    kind: tree_kind,
+                    early_stopping_rounds: 8,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let ((_, report), _) =
+                bench.time_once(&format!("{label} {name}"), || train_forest(&cfg, &x, y.as_deref()));
+            let by_t = report.best_rounds_by_timestep(n_t);
+            for (t_idx, rounds) in by_t.iter().enumerate() {
+                bench.csv(
+                    "method,dataset,t_index,t,best_rounds",
+                    format!(
+                        "{label},{name},{t_idx},{:.3},{rounds:.1}",
+                        t_idx as f32 / (n_t - 1) as f32
+                    ),
+                );
+            }
+            println!(
+                "{label:<6} {name:<22} best-rounds by t: {:?}",
+                by_t.iter().map(|r| *r as usize).collect::<Vec<_>>()
+            );
+        }
+    }
+    bench.write_csv("fig3_early_stopping.csv");
+    eprintln!("{}", bench.summary());
+}

@@ -1,0 +1,69 @@
+//! Fig 4: the 3×3 resource grid — training time / peak memory / generation
+//! time as one of n, p, n_y varies — for Original, SO, MO, SO-ES, MO-ES.
+//!
+//! Scaled sweep values by default; CALOFOREST_PAPER_SCALE=1 restores the
+//! paper's grids (Original points beyond feasibility are ledger-only).
+
+use caloforest::coordinator::memory::TrackingAlloc;
+use caloforest::experiments::resource::{run_point, SweepConfig, Variant, CSV_HEADER};
+use caloforest::util::bench::Bench;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn main() {
+    let quick = std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let paper = std::env::var("CALOFOREST_PAPER_SCALE").ok().as_deref() == Some("1");
+    let mut bench = Bench::new("Fig 4: resource sweeps over n, p, n_y");
+
+    // §D.1 base point n=1000, p=10, n_y=10; sweep one axis at a time.
+    let (base_n, base_p, base_ny) = (1000usize, 10usize, 10usize);
+    let (ns, ps, nys): (Vec<usize>, Vec<usize>, Vec<usize>) = if quick {
+        (vec![100, 300], vec![3, 10], vec![1, 3])
+    } else if paper {
+        (
+            vec![100, 300, 1000, 3000, 10_000, 30_000, 100_000, 300_000],
+            vec![3, 10, 30, 100, 300],
+            vec![1, 3, 10, 30, 100],
+        )
+    } else {
+        (vec![100, 300, 1000, 3000], vec![3, 10, 30], vec![1, 3, 10])
+    };
+    let cfg = SweepConfig {
+        k_dup: if paper { 100 } else { 5 },
+        n_t: if paper { 50 } else { 4 },
+        n_trees: if paper { 100 } else { 6 },
+        original_train_for_real: !paper,
+        ..Default::default()
+    };
+
+    let mut sweep = |axis: &str, points: &[usize]| {
+        for &v in points {
+            let (n, p, n_y) = match axis {
+                "n" => (v, base_p, base_ny),
+                "p" => (base_n, v, base_ny),
+                _ => (base_n, base_p, v),
+            };
+            for variant in Variant::all_fig4() {
+                // MO at large p is the paper's own pain point; cap it.
+                if matches!(variant, Variant::Mo | Variant::MoEs) && p > 100 && !paper {
+                    continue;
+                }
+                let (r, _) = bench.time_once(
+                    &format!("{} {axis}={v}", variant.name()),
+                    || run_point(variant, n, p, n_y, &cfg),
+                );
+                bench.csv(
+                    &format!("axis,{CSV_HEADER}"),
+                    format!("{axis},{}", r.csv_row()),
+                );
+            }
+        }
+    };
+    sweep("n", &ns);
+    sweep("p", &ps);
+    sweep("n_y", &nys);
+
+    bench.write_csv("fig4_resource_sweeps.csv");
+    eprintln!("{}", bench.summary());
+}

@@ -1,0 +1,47 @@
+//! Fig 9: the jobs-vs-CPUs-per-job tradeoff. The paper varies
+//! {40,20,10,4,2,1} parallel jobs × {1,2,4,10,20,40} CPUs each on a 40-CPU
+//! box; this container has few cores, so we vary the worker count of the
+//! coordinator's pool and report wall-clock + peak memory. The memory trend
+//! (more concurrent jobs ⇒ more transient job state alive at once) is the
+//! paper's point and reproduces at any core count; the time trend saturates
+//! at the available cores (documented in EXPERIMENTS.md).
+
+use caloforest::coordinator::memory::{fmt_bytes, reset_peak, peak_bytes, TrackingAlloc};
+use caloforest::coordinator::{run_training, RunOptions};
+use caloforest::data::synthetic::synthetic_dataset;
+use caloforest::forest::trainer::ForestTrainConfig;
+use caloforest::gbt::TrainParams;
+use caloforest::util::bench::Bench;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn main() {
+    let quick = std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut bench = Bench::new("Fig 9: parallel jobs vs memory/time");
+    let (n, p, n_y) = if quick { (200, 5, 4) } else { (1000, 10, 10) };
+    let (x, y) = synthetic_dataset(n, p, n_y, 0);
+    let cfg = ForestTrainConfig {
+        n_t: if quick { 3 } else { 10 },
+        k_dup: if quick { 4 } else { 10 },
+        params: TrainParams { n_trees: if quick { 4 } else { 20 }, ..Default::default() },
+        ..Default::default()
+    };
+
+    println!("| workers | train (s) | peak heap |");
+    println!("|---|---|---|");
+    for workers in [1usize, 2, 4, 8] {
+        reset_peak();
+        let (out, secs) = bench.time_once(&format!("workers={workers}"), || {
+            run_training(&cfg, &x, Some(&y), &RunOptions { workers, ..Default::default() })
+        });
+        let peak = out.peak_alloc_bytes.max(peak_bytes());
+        println!("| {workers} | {secs:.2} | {} |", fmt_bytes(peak));
+        bench.csv(
+            "workers,train_secs,peak_bytes",
+            format!("{workers},{secs:.4},{peak}"),
+        );
+    }
+    bench.write_csv("fig9_cpus_per_job.csv");
+    eprintln!("{}", bench.summary());
+}

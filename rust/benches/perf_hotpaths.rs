@@ -1,0 +1,155 @@
+//! §Perf: micro/meso benchmarks of the three hot paths used in the
+//! performance pass — GBT histogram building & tree growth (L3 training),
+//! batched forest prediction native vs packed vs XLA (generation), and the
+//! noising data construction (training-data prep). Results feed
+//! EXPERIMENTS.md §Perf.
+
+use caloforest::coordinator::memory::TrackingAlloc;
+use caloforest::forest::noising;
+use caloforest::forest::schedule::VpSchedule;
+use caloforest::gbt::predict::PackedForest;
+use caloforest::gbt::{Booster, TrainParams, TreeKind};
+use caloforest::runtime::{xla_sampler::XlaField, PjrtRuntime};
+use caloforest::tensor::Matrix;
+use caloforest::util::bench::Bench;
+use caloforest::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn main() {
+    let quick = std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut bench = Bench::new("Perf hot paths").with_iters(1, if quick { 2 } else { 5 });
+    let mut rng = Rng::new(0);
+
+    // --- L3 training hot path: one booster train (hist build dominated). --
+    let n = if quick { 2000 } else { 10_000 };
+    let p = 20;
+    let x = Matrix::randn(n, p, &mut rng);
+    let mut targets = Matrix::zeros(n, p);
+    for i in 0..n * p {
+        targets.data[i] = x.data[i] * 0.5 + 0.1 * rng.normal_f32();
+    }
+    for (label, sub) in [("hist-subtraction ON", true), ("hist-subtraction OFF", false)] {
+        let params = TrainParams {
+            n_trees: 8,
+            max_depth: 6,
+            kind: TreeKind::Multi,
+            hist_subtraction: sub,
+            ..Default::default()
+        };
+        let m = bench.time(&format!("train MO n={n} p={p} [{label}]"), || {
+            let b = Booster::train(&x.view(), &targets.view(), params, None);
+            std::hint::black_box(b.n_nodes());
+        });
+        bench.csv(
+            "path,label,mean_secs",
+            format!("train,{label},{:.6}", m.mean()),
+        );
+    }
+
+    // --- Generation hot path: booster vs packed vs XLA. -------------------
+    let train_n = 400;
+    let xt = Matrix::randn(train_n, 2, &mut rng);
+    let mut yt = Matrix::zeros(train_n, 2);
+    for r in 0..train_n {
+        yt.set(r, 0, xt.at(r, 0) * 0.7);
+        yt.set(r, 1, -xt.at(r, 1));
+    }
+    let booster = Booster::train(
+        &xt.view(),
+        &yt.view(),
+        TrainParams { n_trees: 40, max_depth: 6, ..Default::default() },
+        None,
+    );
+    let packed = PackedForest::pack(&booster);
+    let batch = Matrix::randn(if quick { 2_000 } else { 20_000 }, 2, &mut rng);
+    let mut out = vec![0.0f32; batch.rows * 2];
+    let m1 = bench.time("predict native (tree-outer)", || {
+        caloforest::gbt::predict::predict_batch(&booster, &batch.view(), &mut out);
+        std::hint::black_box(out[0]);
+    });
+    let m2 = bench.time("predict packed (fixed-depth)", || {
+        let r = packed.predict(&batch.view());
+        std::hint::black_box(r.data[0]);
+    });
+    bench.csv("path,label,mean_secs", format!("predict,native,{:.6}", m1.mean()));
+    bench.csv("path,label,mean_secs", format!("predict,packed,{:.6}", m2.mean()));
+    println!(
+        "native {:.1} Mrow/s vs packed {:.1} Mrow/s",
+        batch.rows as f64 / m1.mean() / 1e6,
+        batch.rows as f64 / m2.mean() / 1e6
+    );
+
+    // XLA path at its pinned batch (per-call latency matters for L3).
+    if let Ok(runtime) = PjrtRuntime::cpu(std::path::Path::new("artifacts")) {
+        // Wrap the booster in a 1×1 model grid to reuse XlaField.
+        let model = single_slot_model(booster.clone());
+        match XlaField::prepare(&runtime, &model) {
+            Ok(field) => {
+                use caloforest::forest::sampler::FieldEval;
+                let xb = Matrix::randn(field.batch_rows(), 2, &mut rng);
+                let mut xout = vec![0.0f32; xb.rows * 2];
+                let m3 = bench.time("predict xla (PJRT, pinned batch)", || {
+                    field.eval(0, 0, &xb.view(), &mut xout);
+                    std::hint::black_box(xout[0]);
+                });
+                bench.csv("path,label,mean_secs", format!("predict,xla,{:.6}", m3.mean()));
+                println!(
+                    "xla {:.1} Krow/s at batch {}",
+                    xb.rows as f64 / m3.mean() / 1e3,
+                    xb.rows
+                );
+            }
+            Err(e) => eprintln!("xla predict skipped: {e}"),
+        }
+    }
+
+    // --- Noising data construction. ---------------------------------------
+    let big = Matrix::randn(if quick { 20_000 } else { 200_000 }, 10, &mut rng);
+    let noise = Matrix::randn(big.rows, 10, &mut rng);
+    let mut xt_buf = Matrix::zeros(big.rows, 10);
+    let sched = VpSchedule::default();
+    let m4 = bench.time("noising cfm_inputs", || {
+        noising::cfm_inputs(&big.view(), &noise.view(), 0.4, &mut xt_buf);
+        std::hint::black_box(xt_buf.data[0]);
+    });
+    let m5 = bench.time("noising diffusion_inputs", || {
+        noising::diffusion_inputs(&big.view(), &noise.view(), 0.4, &sched, &mut xt_buf);
+        std::hint::black_box(xt_buf.data[0]);
+    });
+    let gbs = |m: &caloforest::util::bench::Measurement| {
+        (big.nbytes() * 3) as f64 / m.mean() / 1e9
+    };
+    println!("noising cfm {:.2} GB/s, vp {:.2} GB/s", gbs(&m4), gbs(&m5));
+    bench.csv("path,label,mean_secs", format!("noising,cfm,{:.6}", m4.mean()));
+    bench.csv("path,label,mean_secs", format!("noising,vp,{:.6}", m5.mean()));
+
+    bench.write_csv("perf_hotpaths.csv");
+    eprintln!("{}", bench.summary());
+}
+
+fn single_slot_model(booster: Booster) -> caloforest::forest::ForestModel {
+    use caloforest::forest::model::{ForestModel, ModelKind};
+    use caloforest::forest::scaler::{ClassScalers, MinMaxScaler};
+    use caloforest::forest::schedule::TimeGrid;
+    let mut model = ForestModel::empty(
+        ModelKind::Flow,
+        TimeGrid::uniform(2, 0.0),
+        VpSchedule::default(),
+        ClassScalers {
+            scalers: vec![MinMaxScaler {
+                mins: vec![-1.0; 2],
+                maxs: vec![1.0; 2],
+                lo: -1.0,
+                hi: 1.0,
+            }],
+            per_class: false,
+        },
+        vec![1],
+        2,
+    );
+    model.set_ensemble(0, 0, booster.clone());
+    model.set_ensemble(1, 0, booster);
+    model
+}

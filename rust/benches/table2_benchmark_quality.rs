@@ -1,0 +1,87 @@
+//! Tables 2 & 7: average rank of generated-data quality across benchmark
+//! datasets and the full method panel (baselines + FD/FF × SO/MO ×
+//! original/scaled hyperparameters).
+//!
+//! Defaults run a representative subset of the 27 stand-ins (the smallest
+//! ones) with scaled hyperparameters; CALOFOREST_FULL=1 evaluates all 27
+//! (hours on one CPU).
+
+use caloforest::coordinator::memory::TrackingAlloc;
+use caloforest::data::benchmark::benchmark_registry;
+use caloforest::eval::rank::{average_ranks, Better};
+use caloforest::experiments::quality::{evaluate_method, Method, Metrics, QualityConfig};
+use caloforest::util::bench::{format_table, Bench};
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn main() {
+    let quick = std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let full = std::env::var("CALOFOREST_FULL").ok().as_deref() == Some("1");
+    let mut bench = Bench::new("Table 2: average rank over benchmark datasets");
+    let registry = benchmark_registry();
+    let names: Vec<&str> = if quick {
+        vec!["iris", "seeds"]
+    } else if full {
+        registry.iter().map(|s| s.name).collect()
+    } else {
+        vec!["iris", "seeds", "wine", "glass", "concrete_slump", "yacht_hydrodynamics"]
+    };
+    let methods = Method::all();
+    let cfg = QualityConfig {
+        row_cap: if quick { 100 } else { 250 },
+        ..Default::default()
+    };
+
+    let mut per_metric: Vec<Vec<Vec<f64>>> = vec![Vec::new(); 8];
+    for name in &names {
+        let spec = registry.iter().find(|s| s.name == *name).unwrap();
+        let mut rows = vec![Vec::with_capacity(methods.len()); 8];
+        for method in methods {
+            let (m, _) = bench.time_once(&format!("{name}/{}", method.name()), || {
+                evaluate_method(method, spec, &cfg)
+            });
+            for (mi, v) in m.values().iter().enumerate() {
+                rows[mi].push(*v);
+                bench.csv(
+                    "dataset,method,metric,value",
+                    format!("{name},{},{},{v}", method.name(), Metrics::NAMES[mi]),
+                );
+            }
+        }
+        for mi in 0..8 {
+            per_metric[mi].push(rows[mi].clone());
+        }
+    }
+
+    // Rank aggregation (the published table format).
+    let mut table: Vec<Vec<String>> = methods.iter().map(|m| vec![m.name().to_string()]).collect();
+    let mut overall: Vec<Vec<f64>> = vec![Vec::new(); methods.len()];
+    for mi in 0..8 {
+        let better = if Metrics::higher_better(mi) { Better::Higher } else { Better::Lower };
+        let agg = average_ranks(&per_metric[mi], better);
+        for (mj, (mean, sem)) in agg.iter().enumerate() {
+            table[mj].push(if mean.is_nan() || *mean == 0.0 {
+                "—".into()
+            } else {
+                format!("{mean:.1}±{sem:.1}")
+            });
+            if mean.is_finite() && *mean > 0.0 {
+                overall[mj].push(*mean);
+            }
+        }
+    }
+    for (mj, cells) in table.iter_mut().enumerate() {
+        cells.push(format!("{:.1}", caloforest::util::stats::mean(&overall[mj])));
+    }
+    let mut header: Vec<&str> = vec!["method"];
+    header.extend(Metrics::NAMES);
+    header.push("Avg.");
+    println!(
+        "\n== Average rank over {} datasets (lower is better) ==\n{}",
+        names.len(),
+        format_table(&header, &table)
+    );
+    bench.write_csv("table2_benchmark_quality.csv");
+    eprintln!("{}", bench.summary());
+}

@@ -1,0 +1,84 @@
+//! Table 6: Fig 1 data + the data-iterator variant — train time and peak
+//! memory for Original / Ours / Ours-Iterator over n, plus a correctness
+//! demonstration of the corrected (seeded) vs flawed (upstream) iterator.
+
+use caloforest::coordinator::memory::{fmt_bytes, TrackingAlloc};
+use caloforest::data::synthetic::synthetic_dataset;
+use caloforest::experiments::resource::{run_point, SweepConfig, Variant, CSV_HEADER};
+use caloforest::forest::dataiter::train_job_iterator;
+use caloforest::forest::trainer::{prepare, train_job, ForestTrainConfig};
+use caloforest::gbt::TrainParams;
+use caloforest::util::bench::Bench;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn main() {
+    let quick = std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    let mut bench = Bench::new("Table 6: data-iterator variant");
+    let ns: Vec<usize> = if quick { vec![300] } else { vec![300, 1000, 3000, 10_000] };
+    let cfg = SweepConfig::default();
+
+    println!("| variant | n | train (s) | peak mem |");
+    println!("|---|---|---|---|");
+    for &n in &ns {
+        for variant in [Variant::Original, Variant::So, Variant::OursIterator] {
+            let (r, _) = bench.time_once(&format!("{} n={n}", variant.name()), || {
+                run_point(variant, n, 10, 10, &cfg)
+            });
+            println!(
+                "| {} | {} | {:.2} | {} |",
+                r.variant, n, r.train_secs, fmt_bytes(r.peak_bytes)
+            );
+            bench.csv(CSV_HEADER, r.csv_row());
+        }
+    }
+
+    // Appendix B.3 correctness: the flawed iterator trains a *different*
+    // (silently wrong) model vs the corrected one at identical seeds.
+    let (x, _) = synthetic_dataset(400, 5, 1, 3);
+    let fc = ForestTrainConfig {
+        n_t: 4,
+        k_dup: 5,
+        params: TrainParams { n_trees: 10, max_depth: 4, ..Default::default() },
+        seed: 9,
+        ..Default::default()
+    };
+    let prep = prepare(&fc, &x, None);
+    let direct = train_job(&prep, &fc, 1, 0);
+    let corrected = train_job_iterator(&prep, &fc, 1, 0, 5, false);
+    let flawed = train_job_iterator(&prep, &fc, 1, 0, 5, true);
+    let probe = caloforest::tensor::Matrix::randn(
+        64,
+        5,
+        &mut caloforest::util::rng::Rng::new(4),
+    );
+    let d = direct.predict(&probe.view());
+    let c = corrected.predict(&probe.view());
+    let f = flawed.predict(&probe.view());
+    let rmse = |a: &[f32], b: &[f32]| -> f64 {
+        (a.iter()
+            .zip(b)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            / a.len() as f64)
+            .sqrt()
+    };
+    let corr_vs_direct = rmse(&c.data, &d.data);
+    let flawed_vs_direct = rmse(&f.data, &d.data);
+    println!(
+        "\niterator correctness: |corrected − direct| rmse = {corr_vs_direct:.4}, \
+         |flawed − direct| rmse = {flawed_vs_direct:.4}"
+    );
+    bench.csv(
+        "comparison,rmse",
+        format!("corrected_vs_direct,{corr_vs_direct:.6}"),
+    );
+    bench.csv("comparison,rmse", format!("flawed_vs_direct,{flawed_vs_direct:.6}"));
+    assert!(
+        flawed_vs_direct > corr_vs_direct,
+        "the flawed iterator must deviate more from the in-memory model"
+    );
+    bench.write_csv("table6_data_iterator.csv");
+    eprintln!("{}", bench.summary());
+}

@@ -1,0 +1,203 @@
+//! Gaussian copula generator (the SDV GaussianCopula baseline).
+//!
+//! Fit: per-feature empirical marginals → normal scores via Φ⁻¹ → Pearson
+//! correlation of the scores. Sample: correlated normals via Cholesky →
+//! uniforms via Φ → empirical quantiles.
+
+use super::Generator;
+use crate::eval::linalg;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Fitted Gaussian copula.
+#[derive(Clone, Debug)]
+pub struct GaussianCopula {
+    /// Sorted values per feature (the empirical quantile function).
+    marginals: Vec<Vec<f32>>,
+    /// Cholesky factor of the score correlation matrix.
+    chol: Vec<f64>,
+    p: usize,
+}
+
+impl GaussianCopula {
+    pub fn fit(x: &Matrix) -> GaussianCopula {
+        let n = x.rows;
+        let p = x.cols;
+        let mut marginals = Vec::with_capacity(p);
+        let mut scores = Matrix::zeros(n, p);
+        for c in 0..p {
+            let col = x.col(c);
+            let order = crate::util::stats::argsort_f32(&col);
+            let mut sorted = col.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // Normal scores from mid-ranks.
+            for (rank, &row) in order.iter().enumerate() {
+                let u = (rank as f64 + 0.5) / n as f64;
+                scores.set(row, c, inv_norm_cdf(u) as f32);
+            }
+            marginals.push(sorted);
+        }
+        // Correlation matrix of the scores (they are standardized by
+        // construction up to discreteness).
+        let mut corr = vec![0.0f64; p * p];
+        for i in 0..p {
+            for j in 0..=i {
+                let mut s = 0.0f64;
+                for r in 0..n {
+                    s += scores.at(r, i) as f64 * scores.at(r, j) as f64;
+                }
+                let v = s / n as f64;
+                corr[i * p + j] = v;
+                corr[j * p + i] = v;
+            }
+        }
+        // Normalize to unit diagonal.
+        let diag: Vec<f64> = (0..p).map(|i| corr[i * p + i].max(1e-9).sqrt()).collect();
+        for i in 0..p {
+            for j in 0..p {
+                corr[i * p + j] /= diag[i] * diag[j];
+            }
+        }
+        let chol = linalg::cholesky(&corr, p, 1e-6).expect("correlation not SPD");
+        GaussianCopula { marginals, chol, p }
+    }
+}
+
+impl Generator for GaussianCopula {
+    fn name(&self) -> &'static str {
+        "GaussianCopula"
+    }
+
+    fn sample(&self, n: usize, seed: u64) -> Matrix {
+        let p = self.p;
+        let mut rng = Rng::new(seed);
+        let mut out = Matrix::zeros(n, p);
+        let mut z = vec![0.0f64; p];
+        for r in 0..n {
+            // Correlated normals: x = L z.
+            for v in z.iter_mut() {
+                *v = rng.normal();
+            }
+            for c in 0..p {
+                let mut s = 0.0f64;
+                for k in 0..=c {
+                    s += self.chol[c * p + k] * z[k];
+                }
+                let u = norm_cdf(s).clamp(1e-9, 1.0 - 1e-9);
+                // Empirical quantile.
+                let m = &self.marginals[c];
+                let idx = ((u * m.len() as f64) as usize).min(m.len() - 1);
+                out.set(r, c, m[idx]);
+            }
+        }
+        out
+    }
+}
+
+/// Standard normal CDF via erf (Abramowitz–Stegun 7.1.26).
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Inverse standard normal CDF (Acklam's rational approximation).
+pub fn inv_norm_cdf(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -inv_norm_cdf(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_cdf_and_inverse_are_consistent() {
+        for &x in &[-2.0, -0.5, 0.0, 0.7, 1.9] {
+            let u = norm_cdf(x);
+            let back = inv_norm_cdf(u);
+            assert!((back - x).abs() < 2e-3, "x={x}: back={back}");
+        }
+        // The A&S erf approximation is ~1e-7 accurate.
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn copula_preserves_marginals_and_correlation() {
+        let mut rng = Rng::new(1);
+        let n = 2000;
+        let mut x = Matrix::zeros(n, 2);
+        for r in 0..n {
+            let a = rng.normal_f32();
+            // Strong correlation + a non-Gaussian marginal (exponentiated).
+            let b = (0.9 * a + 0.44 * rng.normal_f32()).exp();
+            x.set(r, 0, a * 3.0 + 1.0);
+            x.set(r, 1, b);
+        }
+        let gc = GaussianCopula::fit(&x);
+        let sample = gc.sample(2000, 2);
+        // Marginal ranges are respected (sampled from empirical quantiles).
+        let (mins, maxs) = x.col_min_max();
+        let (smins, smaxs) = sample.col_min_max();
+        for c in 0..2 {
+            assert!(smins[c] >= mins[c] - 1e-5);
+            assert!(smaxs[c] <= maxs[c] + 1e-5);
+        }
+        // Rank correlation survives.
+        let xs: Vec<f64> = sample.col(0).iter().map(|&v| v as f64).collect();
+        let ys: Vec<f64> = sample.col(1).iter().map(|&v| v.ln() as f64).collect();
+        let corr = crate::util::stats::pearson(&xs, &ys);
+        assert!(corr > 0.7, "correlation lost: {corr}");
+    }
+}

@@ -1,0 +1,29 @@
+//! Baseline tabular generative models for the Table 2/7 comparison panel.
+//!
+//! The paper compares against six baselines spanning statistical methods
+//! (GaussianCopula), VAEs (TVAE), GANs (CTGAN, CTAB-GAN+), and score/
+//! diffusion models (STaSy, TabDDPM). Offline we implement one
+//! representative per family on an in-house manual-backprop NN substrate:
+//!
+//! * [`gaussian_copula`] — full reimplementation (empirical marginals +
+//!   Gaussian copula), matching SDV's default;
+//! * [`tvae`] — an MLP VAE with Gaussian likelihood (TVAE-like);
+//! * [`tabddpm`] — an MLP ε-predictor DDPM (TabDDPM-like).
+//!
+//! GAN baselines are omitted (adversarial training adds nothing to the
+//! paper's claims, which concern the FD/FF rows); noted in EXPERIMENTS.md.
+
+pub mod nn;
+pub mod gaussian_copula;
+pub mod tvae;
+pub mod tabddpm;
+
+use crate::tensor::Matrix;
+
+/// Common interface for baseline generators (fit on features only; class
+/// conditioning is handled by fitting per class where needed).
+pub trait Generator {
+    fn name(&self) -> &'static str;
+    /// Sample `n` rows.
+    fn sample(&self, n: usize, seed: u64) -> Matrix;
+}

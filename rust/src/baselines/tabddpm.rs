@@ -1,0 +1,159 @@
+//! TabDDPM-like baseline: an MLP ε-predictor trained with the DDPM
+//! objective over `T` discrete steps, ancestral sampling.
+
+use super::nn::Mlp;
+use super::Generator;
+use crate::forest::scaler::MinMaxScaler;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// DDPM hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DdpmConfig {
+    pub timesteps: usize,
+    pub hidden: usize,
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+impl Default for DdpmConfig {
+    fn default() -> Self {
+        DdpmConfig { timesteps: 50, hidden: 64, epochs: 80, batch: 64, lr: 2e-3, seed: 0 }
+    }
+}
+
+/// Trained TabDDPM-like model.
+pub struct TabDdpm {
+    eps_net: Mlp,
+    scaler: MinMaxScaler,
+    /// ᾱ_t cumulative products.
+    alpha_bar: Vec<f32>,
+    betas: Vec<f32>,
+    p: usize,
+}
+
+impl TabDdpm {
+    pub fn fit(x_raw: &Matrix, cfg: &DdpmConfig) -> TabDdpm {
+        let mut rng = Rng::new(cfg.seed);
+        let p = x_raw.cols;
+        let scaler = MinMaxScaler::fit_default(x_raw);
+        let mut x = x_raw.clone();
+        scaler.transform(&mut x);
+
+        // Linear beta schedule.
+        let t_max = cfg.timesteps;
+        let betas: Vec<f32> = (0..t_max)
+            .map(|t| 1e-4 + (0.02 - 1e-4) * t as f32 / (t_max - 1).max(1) as f32)
+            .collect();
+        let mut alpha_bar = Vec::with_capacity(t_max);
+        let mut prod = 1.0f32;
+        for &b in &betas {
+            prod *= 1.0 - b;
+            alpha_bar.push(prod);
+        }
+
+        // ε-network input: [x_t | t/T, sin(2πt/T), cos(2πt/T)].
+        let in_dim = p + 3;
+        let mut eps_net = Mlp::new(&[in_dim, cfg.hidden, cfg.hidden, p], &mut rng);
+        let n = x.rows;
+        let mut step = 0usize;
+        for _ in 0..cfg.epochs {
+            let perm = rng.permutation(n);
+            for chunk in perm.chunks(cfg.batch) {
+                step += 1;
+                let b = chunk.len();
+                let mut input = Matrix::zeros(b, in_dim);
+                let mut eps_true = Matrix::zeros(b, p);
+                for (i, &row) in chunk.iter().enumerate() {
+                    let t = rng.below(t_max);
+                    let ab = alpha_bar[t];
+                    let tf = t as f32 / t_max as f32;
+                    for c in 0..p {
+                        let e = rng.normal_f32();
+                        eps_true.set(i, c, e);
+                        input.set(i, c, ab.sqrt() * x.at(row, c) + (1.0 - ab).sqrt() * e);
+                    }
+                    input.set(i, p, tf);
+                    input.set(i, p + 1, (2.0 * std::f32::consts::PI * tf).sin());
+                    input.set(i, p + 2, (2.0 * std::f32::consts::PI * tf).cos());
+                }
+                let pred = eps_net.forward(&input);
+                let mut grad = Matrix::zeros(b, p);
+                for i in 0..b * p {
+                    grad.data[i] = 2.0 * (pred.data[i] - eps_true.data[i]) / p as f32;
+                }
+                eps_net.train_step(&input, &grad, cfg.lr, step);
+            }
+        }
+        TabDdpm { eps_net, scaler, alpha_bar, betas, p }
+    }
+}
+
+impl Generator for TabDdpm {
+    fn name(&self) -> &'static str {
+        "TabDDPM"
+    }
+
+    fn sample(&self, n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let p = self.p;
+        let t_max = self.alpha_bar.len();
+        let mut x = Matrix::randn(n, p, &mut rng);
+        let in_dim = p + 3;
+        for t in (0..t_max).rev() {
+            let ab = self.alpha_bar[t];
+            let ab_prev = if t > 0 { self.alpha_bar[t - 1] } else { 1.0 };
+            let beta = self.betas[t];
+            let alpha = 1.0 - beta;
+            let tf = t as f32 / t_max as f32;
+            let mut input = Matrix::zeros(n, in_dim);
+            for r in 0..n {
+                input.row_mut(r)[..p].copy_from_slice(x.row(r));
+                input.set(r, p, tf);
+                input.set(r, p + 1, (2.0 * std::f32::consts::PI * tf).sin());
+                input.set(r, p + 2, (2.0 * std::f32::consts::PI * tf).cos());
+            }
+            let eps = self.eps_net.forward(&input);
+            let sigma = (beta * (1.0 - ab_prev) / (1.0 - ab)).max(0.0).sqrt();
+            for r in 0..n {
+                for c in 0..p {
+                    let mean = (x.at(r, c) - beta / (1.0 - ab).sqrt() * eps.at(r, c))
+                        / alpha.sqrt();
+                    let z = if t > 0 { rng.normal_f32() } else { 0.0 };
+                    x.set(r, c, mean + sigma * z);
+                }
+            }
+        }
+        for v in x.data.iter_mut() {
+            *v = v.clamp(-1.0, 1.0);
+        }
+        self.scaler.inverse(&mut x);
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn ddpm_recovers_cluster_mean() {
+        let mut rng = Rng::new(5);
+        let n = 300;
+        let mut x = Matrix::zeros(n, 2);
+        for r in 0..n {
+            x.set(r, 0, 3.0 + 0.4 * rng.normal_f32());
+            x.set(r, 1, -1.0 + 0.4 * rng.normal_f32());
+        }
+        let model = TabDdpm::fit(&x, &DdpmConfig { epochs: 60, ..Default::default() });
+        let sample = model.sample(300, 11);
+        let m0 = stats::mean(&sample.col(0).iter().map(|&v| v as f64).collect::<Vec<_>>());
+        let m1 = stats::mean(&sample.col(1).iter().map(|&v| v as f64).collect::<Vec<_>>());
+        assert!((m0 - 3.0).abs() < 0.8, "m0={m0}");
+        assert!((m1 + 1.0).abs() < 0.8, "m1={m1}");
+        assert!(sample.data.iter().all(|v| v.is_finite()));
+    }
+}

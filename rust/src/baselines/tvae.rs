@@ -1,0 +1,158 @@
+//! TVAE-like baseline: an MLP variational autoencoder with Gaussian
+//! likelihood on min-max-scaled features.
+
+use super::nn::Mlp;
+use super::Generator;
+use crate::forest::scaler::MinMaxScaler;
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Trained TVAE-like model.
+pub struct Tvae {
+    decoder: Mlp,
+    scaler: MinMaxScaler,
+    latent: usize,
+    p: usize,
+}
+
+/// TVAE hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TvaeConfig {
+    pub latent: usize,
+    pub hidden: usize,
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+impl Default for TvaeConfig {
+    fn default() -> Self {
+        TvaeConfig { latent: 8, hidden: 64, epochs: 60, batch: 64, lr: 2e-3, seed: 0 }
+    }
+}
+
+impl Tvae {
+    pub fn fit(x_raw: &Matrix, cfg: &TvaeConfig) -> Tvae {
+        let mut rng = Rng::new(cfg.seed);
+        let p = x_raw.cols;
+        let scaler = MinMaxScaler::fit_default(x_raw);
+        let mut x = x_raw.clone();
+        scaler.transform(&mut x);
+
+        // Encoder outputs [mu | logvar]; decoder maps z → x̂.
+        let mut encoder = Mlp::new(&[p, cfg.hidden, 2 * cfg.latent], &mut rng);
+        let mut decoder = Mlp::new(&[cfg.latent, cfg.hidden, p], &mut rng);
+        let n = x.rows;
+        let mut step = 0usize;
+        for _epoch in 0..cfg.epochs {
+            let perm = rng.permutation(n);
+            for chunk in perm.chunks(cfg.batch) {
+                step += 1;
+                let xb = x.take_rows(chunk);
+                let b = xb.rows;
+                let enc = encoder.forward(&xb);
+                // Reparameterize.
+                let mut z = Matrix::zeros(b, cfg.latent);
+                let mut epsilons = Matrix::zeros(b, cfg.latent);
+                for r in 0..b {
+                    for l in 0..cfg.latent {
+                        let mu = enc.at(r, l);
+                        let logvar = enc.at(r, cfg.latent + l).clamp(-6.0, 6.0);
+                        let e = rng.normal_f32();
+                        epsilons.set(r, l, e);
+                        z.set(r, l, mu + (0.5 * logvar).exp() * e);
+                    }
+                }
+                let xhat = decoder.forward(&z);
+                // Reconstruction grad (Gaussian likelihood, unit variance).
+                let mut grad_xhat = Matrix::zeros(b, p);
+                for i in 0..b * p {
+                    grad_xhat.data[i] = 2.0 * (xhat.data[i] - xb.data[i]) / p as f32;
+                }
+                // Backprop through the decoder to get ∂L/∂z.
+                let dec_acts = decoder.forward_all(&z);
+                let mut dec_updates: Vec<(Vec<f32>, Vec<f32>)> = decoder
+                    .layers
+                    .iter()
+                    .map(|l| (vec![0.0; l.w.len()], vec![0.0; l.b.len()]))
+                    .collect();
+                let mut grad = grad_xhat;
+                for li in (0..decoder.layers.len()).rev() {
+                    let (gw, gb) = &mut dec_updates[li];
+                    grad = decoder.layers[li].backward(&dec_acts[li], &dec_acts[li + 1], &grad, gw, gb);
+                }
+                let grad_z = grad;
+                // Encoder output grads: reconstruction path + KL path.
+                let beta = 0.2f32; // mild KL weight, TVAE-style
+                let mut grad_enc = Matrix::zeros(b, 2 * cfg.latent);
+                for r in 0..b {
+                    for l in 0..cfg.latent {
+                        let mu = enc.at(r, l);
+                        let logvar = enc.at(r, cfg.latent + l).clamp(-6.0, 6.0);
+                        let e = epsilons.at(r, l);
+                        let gz = grad_z.at(r, l);
+                        // dz/dmu = 1; dz/dlogvar = ½·exp(½logvar)·ε
+                        grad_enc.set(r, l, gz + beta * mu / cfg.latent as f32);
+                        let dkl_dlogvar = 0.5 * (logvar.exp() - 1.0) / cfg.latent as f32;
+                        grad_enc.set(
+                            r,
+                            cfg.latent + l,
+                            gz * 0.5 * (0.5 * logvar).exp() * e + beta * dkl_dlogvar,
+                        );
+                    }
+                }
+                // Apply decoder grads and run the encoder step.
+                for (li, (gw, gb)) in dec_updates.iter().enumerate() {
+                    decoder.layers[li].adam_step(gw, gb, cfg.lr, step, b);
+                }
+                encoder.train_step(&xb, &grad_enc, cfg.lr, step);
+            }
+        }
+        Tvae { decoder, scaler, latent: cfg.latent, p }
+    }
+}
+
+impl Generator for Tvae {
+    fn name(&self) -> &'static str {
+        "TVAE"
+    }
+
+    fn sample(&self, n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let z = Matrix::randn(n, self.latent, &mut rng);
+        let mut x = self.decoder.forward(&z);
+        for v in x.data.iter_mut() {
+            *v = v.clamp(-1.0, 1.0);
+        }
+        self.scaler.inverse(&mut x);
+        assert_eq!(x.cols, self.p);
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn tvae_learns_a_shifted_cluster() {
+        let mut rng = Rng::new(3);
+        let n = 300;
+        let mut x = Matrix::zeros(n, 3);
+        for r in 0..n {
+            x.set(r, 0, 5.0 + 0.5 * rng.normal_f32());
+            x.set(r, 1, -2.0 + 0.5 * rng.normal_f32());
+            x.set(r, 2, x.at(r, 0) * 0.5 + 0.2 * rng.normal_f32());
+        }
+        let tvae = Tvae::fit(&x, &TvaeConfig { epochs: 40, ..Default::default() });
+        let sample = tvae.sample(300, 7);
+        assert_eq!(sample.rows, 300);
+        let m0 = stats::mean(&sample.col(0).iter().map(|&v| v as f64).collect::<Vec<_>>());
+        let m1 = stats::mean(&sample.col(1).iter().map(|&v| v as f64).collect::<Vec<_>>());
+        assert!((m0 - 5.0).abs() < 1.0, "m0={m0}");
+        assert!((m1 + 2.0).abs() < 1.0, "m1={m1}");
+        assert!(sample.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,264 @@
+//! Layer-3 coordinator: parallel training orchestration, memory policies,
+//! and the streaming model store.
+//!
+//! This is where the paper's system contribution lives as *code paths you can
+//! benchmark against each other*:
+//!
+//! * [`pool`] — the worker pool scheduling `(t, y)` training jobs;
+//! * [`memory`] — a tracking allocator + `/proc` RSS reader for *measuring*
+//!   our implementation, and a byte-accurate [`memory::MemoryModel`] for
+//!   *modelling* the original implementation's joblib/numpy behaviour
+//!   without actually exhausting the host (the paper's 250 GiB failures);
+//! * [`store`] — the on-disk model store (Issue 3): trained ensembles are
+//!   written as soon as their job completes, freed from memory, and double
+//!   as resumable checkpoints;
+//! * [`run_training`] — the improved pipeline end to end: shared read-only
+//!   `Prepared` state (Issue 2/4), slice-based class conditioning (Issue 5),
+//!   per-job on-the-fly `x_t` (Issue 1), one binning per job shared across
+//!   outputs (Issue 6), fp32 throughout (Issue 7).
+
+pub mod pool;
+pub mod memory;
+pub mod store;
+
+use crate::forest::model::ForestModel;
+use crate::forest::trainer::{prepare, train_job, ForestTrainConfig, JobRecord, TrainReport};
+use crate::tensor::Matrix;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Options for a coordinated training run.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    /// Parallel training jobs (the paper's `n_jobs`).
+    pub workers: usize,
+    /// Stream trained ensembles to this directory and drop them from memory
+    /// (Issue 3). `None` keeps the full model in memory.
+    pub store_dir: Option<PathBuf>,
+    /// Resume: skip `(t, y)` slots already present in the store.
+    pub resume: bool,
+    /// Sample the memory timeline while training.
+    pub track_memory: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { workers: 1, store_dir: None, resume: false, track_memory: false }
+    }
+}
+
+/// Outcome of a coordinated run.
+pub struct RunOutcome {
+    /// The trained model; ensembles are `None` when streamed to disk only
+    /// (load them back with [`store::ModelStore::load_model`]).
+    pub model: ForestModel,
+    pub report: TrainReport,
+    /// Peak allocator bytes observed during the run (ours, measured).
+    pub peak_alloc_bytes: usize,
+    /// Memory timeline samples `(seconds, bytes)` when tracking was enabled.
+    pub timeline: Vec<(f64, usize)>,
+}
+
+/// Run the improved training pipeline: prepare shared state once, schedule
+/// the `(t, y)` grid over a worker pool, stream models to the store.
+pub fn run_training(
+    cfg: &ForestTrainConfig,
+    x_raw: &Matrix,
+    y: Option<&[u32]>,
+    opts: &RunOptions,
+) -> RunOutcome {
+    let t0 = std::time::Instant::now();
+    memory::reset_peak();
+    let timeline = Mutex::new(Vec::new());
+    let sample_mem = |timeline: &Mutex<Vec<(f64, usize)>>, t0: &std::time::Instant| {
+        if opts.track_memory {
+            timeline
+                .lock()
+                .unwrap()
+                .push((t0.elapsed().as_secs_f64(), memory::current_bytes()));
+        }
+    };
+
+    // Shared, read-only state: built once, referenced by every worker
+    // (Issue 2: no per-job copies; Issue 4 analogue: the coordinator holds
+    // exactly one copy).
+    let prep = prepare(cfg, x_raw, y);
+    sample_mem(&timeline, &t0);
+
+    let n_t = prep.grid.n_t();
+    let n_y = prep.label_counts.len();
+    let store = opts
+        .store_dir
+        .as_ref()
+        .map(|dir| store::ModelStore::create(dir).expect("cannot create model store"));
+
+    // Job list, skipping already-stored slots on resume.
+    let mut jobs: Vec<(usize, usize)> = Vec::with_capacity(n_t * n_y);
+    for t_idx in 0..n_t {
+        for y_idx in 0..n_y {
+            let done = opts.resume
+                && store
+                    .as_ref()
+                    .map(|s| s.contains(t_idx, y_idx))
+                    .unwrap_or(false);
+            if !done {
+                jobs.push((t_idx, y_idx));
+            }
+        }
+    }
+
+    let completed: Mutex<Vec<(usize, usize, Option<crate::gbt::Booster>, JobRecord)>> =
+        Mutex::new(Vec::with_capacity(jobs.len()));
+    let job_counter = AtomicUsize::new(0);
+
+    pool::run_indexed(opts.workers, jobs.len(), |job_idx| {
+        let (t_idx, y_idx) = jobs[job_idx];
+        let jt0 = std::time::Instant::now();
+        let booster = train_job(&prep, cfg, t_idx, y_idx);
+        let rec = JobRecord {
+            t_idx,
+            y: y_idx,
+            best_round: booster.best_round,
+            rounds_trained: booster.history.len(),
+            final_train_loss: booster.history.last().map(|h| h.train_loss).unwrap_or(0.0),
+            final_valid_loss: booster.history.last().and_then(|h| h.valid_loss),
+            seconds: jt0.elapsed().as_secs_f64(),
+            nbytes: booster.nbytes(),
+        };
+        // Issue 3: write to disk inside the worker, then drop from memory.
+        let keep = match &store {
+            Some(s) => {
+                s.save(t_idx, y_idx, &booster).expect("store write failed");
+                None
+            }
+            None => Some(booster),
+        };
+        completed.lock().unwrap().push((t_idx, y_idx, keep, rec));
+        let done = job_counter.fetch_add(1, Ordering::Relaxed);
+        if done % 8 == 0 {
+            sample_mem(&timeline, &t0);
+        }
+    });
+    sample_mem(&timeline, &t0);
+
+    let mut model = ForestModel::empty(
+        cfg.kind,
+        prep.grid.clone(),
+        prep.schedule,
+        prep.scalers.clone(),
+        prep.label_counts.clone(),
+        prep.p,
+    );
+    let mut report = TrainReport::default();
+    for (t_idx, y_idx, booster, rec) in completed.into_inner().unwrap() {
+        if let Some(b) = booster {
+            model.set_ensemble(t_idx, y_idx, b);
+        }
+        report.jobs.push(rec);
+    }
+    // Persist sampler metadata next to the streamed ensembles.
+    if let Some(s) = &store {
+        s.save_meta(&model).expect("store meta write failed");
+    }
+    report.total_seconds = t0.elapsed().as_secs_f64();
+
+    RunOutcome {
+        model,
+        report,
+        peak_alloc_bytes: memory::peak_bytes(),
+        timeline: timeline.into_inner().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbt::TrainParams;
+    use crate::util::rng::Rng;
+
+    fn data(n: usize, seed: u64) -> (Matrix, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::randn(n, 3, &mut rng);
+        let y: Vec<u32> = (0..n).map(|i| (i % 2) as u32).collect();
+        for r in 0..n {
+            let shift = if y[r] == 0 { -2.0 } else { 2.0 };
+            x.set(r, 0, x.at(r, 0) + shift);
+        }
+        (x, y)
+    }
+
+    fn cfg() -> ForestTrainConfig {
+        ForestTrainConfig {
+            n_t: 3,
+            k_dup: 4,
+            params: TrainParams { n_trees: 4, max_depth: 3, ..Default::default() },
+            seed: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let (x, y) = data(40, 1);
+        let c = cfg();
+        let seq = crate::forest::trainer::train_forest(&c, &x, Some(&y));
+        let par = run_training(&c, &x, Some(&y), &RunOptions { workers: 4, ..Default::default() });
+        assert!(par.model.is_complete());
+        // Same deterministic prep ⇒ identical ensembles regardless of
+        // scheduling: compare generated samples.
+        let g1 = crate::forest::generate(&seq.0, &crate::forest::GenerateConfig::new(30, 9));
+        let g2 = crate::forest::generate(&par.model, &crate::forest::GenerateConfig::new(30, 9));
+        assert_eq!(g1.0.data, g2.0.data);
+        assert_eq!(par.report.jobs.len(), 6);
+    }
+
+    #[test]
+    fn streaming_store_and_resume() {
+        let (x, y) = data(30, 2);
+        let c = cfg();
+        let dir = std::env::temp_dir().join("caloforest_test_store_resume");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = RunOptions {
+            workers: 2,
+            store_dir: Some(dir.clone()),
+            resume: false,
+            track_memory: false,
+        };
+        let out = run_training(&c, &x, Some(&y), &opts);
+        // Streamed: in-memory model is empty, store holds everything.
+        assert_eq!(out.model.n_trained(), 0);
+        let store = store::ModelStore::open(&dir).unwrap();
+        let loaded = store.load_model().unwrap();
+        assert!(loaded.is_complete());
+        // Delete two slots, resume fills only those.
+        std::fs::remove_file(dir.join("t0000_y000.fbj")).unwrap();
+        std::fs::remove_file(dir.join("t0002_y001.fbj")).unwrap();
+        let opts2 = RunOptions { resume: true, ..opts };
+        let out2 = run_training(&c, &x, Some(&y), &opts2);
+        assert_eq!(out2.report.jobs.len(), 2);
+        let reloaded = store::ModelStore::open(&dir).unwrap().load_model().unwrap();
+        assert!(reloaded.is_complete());
+        // Resumed model generates identically to a fresh full run (same
+        // seeds ⇒ same ensembles).
+        let g1 = crate::forest::generate(&loaded, &crate::forest::GenerateConfig::new(20, 5));
+        let g2 = crate::forest::generate(&reloaded, &crate::forest::GenerateConfig::new(20, 5));
+        assert_eq!(g1.0.data, g2.0.data);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn memory_tracking_produces_timeline() {
+        let (x, y) = data(30, 3);
+        let c = cfg();
+        let out = run_training(
+            &c,
+            &x,
+            Some(&y),
+            &RunOptions { workers: 1, track_memory: true, ..Default::default() },
+        );
+        assert!(out.timeline.len() >= 2);
+        // peak_alloc_bytes is only nonzero when the tracking allocator is
+        // registered (launcher/benches); the unit-test binary uses System.
+    }
+}

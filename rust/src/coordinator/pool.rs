@@ -1,0 +1,92 @@
+//! A dependency-free worker pool over indexed jobs.
+//!
+//! `rayon` is unavailable offline, so parallelism is scoped threads pulling
+//! job indices from a shared atomic counter (work stealing by construction:
+//! fast workers simply take more indices). Panics in workers propagate to
+//! the caller when the scope joins.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `f(job_index)` for every index in `0..n_jobs` using up to `workers`
+/// threads (`workers == 1` runs inline, no threads spawned).
+pub fn run_indexed<F>(workers: usize, n_jobs: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = workers.max(1).min(n_jobs.max(1));
+    if workers == 1 {
+        for i in 0..n_jobs {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n_jobs {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Run jobs and collect results in job order.
+pub fn map_indexed<R, F>(workers: usize, n_jobs: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let mut slots: Vec<Option<R>> = (0..n_jobs).map(|_| None).collect();
+    {
+        let cells: Vec<std::sync::Mutex<&mut Option<R>>> =
+            slots.iter_mut().map(std::sync::Mutex::new).collect();
+        run_indexed(workers, n_jobs, |i| {
+            let r = f(i);
+            **cells[i].lock().unwrap() = Some(r);
+        });
+    }
+    slots.into_iter().map(|s| s.expect("job skipped")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn all_jobs_run_exactly_once() {
+        for workers in [1, 2, 5] {
+            let hits = AtomicU64::new(0);
+            let sum = AtomicU64::new(0);
+            run_indexed(workers, 100, |i| {
+                hits.fetch_add(1, Ordering::Relaxed);
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 100);
+            assert_eq!(sum.load(Ordering::Relaxed), 4950);
+        }
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = map_indexed(3, 20, |i| i * i);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_jobs_is_fine() {
+        run_indexed(4, 0, |_| panic!("should not run"));
+        let v: Vec<usize> = map_indexed(4, 0, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_jobs() {
+        let out = map_indexed(16, 3, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+}

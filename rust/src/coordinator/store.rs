@@ -1,0 +1,123 @@
+//! On-disk streaming model store (the paper's Issue 3 solution).
+//!
+//! Workers write each trained ensemble to `<dir>/tXXXX_yYYY.fbj` the moment
+//! training finishes (atomic rename), then drop it from memory. The store
+//! therefore bounds trained-model memory at O(1 ensemble) and doubles as a
+//! checkpoint: a crashed run resumes by skipping present files.
+
+use crate::forest::model::ForestModel;
+use crate::gbt::{serialize, Booster};
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Directory-backed ensemble store.
+#[derive(Clone, Debug)]
+pub struct ModelStore {
+    dir: PathBuf,
+}
+
+impl ModelStore {
+    /// Create (or reuse) a store directory.
+    pub fn create(dir: &Path) -> io::Result<ModelStore> {
+        std::fs::create_dir_all(dir)?;
+        Ok(ModelStore { dir: dir.to_path_buf() })
+    }
+
+    /// Open an existing store.
+    pub fn open(dir: &Path) -> io::Result<ModelStore> {
+        if !dir.is_dir() {
+            return Err(io::Error::new(io::ErrorKind::NotFound, "store dir missing"));
+        }
+        Ok(ModelStore { dir: dir.to_path_buf() })
+    }
+
+    fn slot_path(&self, t_idx: usize, y: usize) -> PathBuf {
+        self.dir.join(format!("t{t_idx:04}_y{y:03}.fbj"))
+    }
+
+    pub fn contains(&self, t_idx: usize, y: usize) -> bool {
+        self.slot_path(t_idx, y).exists()
+    }
+
+    /// Persist one ensemble (atomic).
+    pub fn save(&self, t_idx: usize, y: usize, booster: &Booster) -> io::Result<()> {
+        serialize::save(booster, &self.slot_path(t_idx, y))
+    }
+
+    /// Load one ensemble.
+    pub fn load(&self, t_idx: usize, y: usize) -> io::Result<Booster> {
+        serialize::load(&self.slot_path(t_idx, y))
+    }
+
+    /// Persist sampler metadata (scalers, grid, label counts).
+    pub fn save_meta(&self, model: &ForestModel) -> io::Result<()> {
+        // Reuse the model-dir writer for meta.json only: write into the
+        // store dir (ensembles are written separately by workers).
+        let skeleton = ForestModel {
+            ensembles: vec![None; model.ensembles.len()],
+            ..model.clone()
+        };
+        skeleton.save_dir(&self.dir)
+    }
+
+    /// Assemble the full model from `meta.json` + every stored ensemble.
+    pub fn load_model(&self) -> io::Result<ForestModel> {
+        ForestModel::load_dir(&self.dir)
+    }
+
+    /// Total bytes on disk.
+    pub fn disk_bytes(&self) -> u64 {
+        std::fs::read_dir(&self.dir)
+            .map(|entries| {
+                entries
+                    .filter_map(|e| e.ok())
+                    .filter_map(|e| e.metadata().ok())
+                    .map(|m| m.len())
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbt::TrainParams;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    fn booster(seed: u64) -> (Matrix, Booster) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::randn(60, 2, &mut rng);
+        let y = Matrix::randn(60, 1, &mut rng);
+        let b = Booster::train(
+            &x.view(),
+            &y.view(),
+            TrainParams { n_trees: 3, max_depth: 3, ..Default::default() },
+            None,
+        );
+        (x, b)
+    }
+
+    #[test]
+    fn save_contains_load() {
+        let dir = std::env::temp_dir().join("caloforest_test_store_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::create(&dir).unwrap();
+        let (x, b) = booster(1);
+        assert!(!store.contains(2, 1));
+        store.save(2, 1, &b).unwrap();
+        assert!(store.contains(2, 1));
+        let b2 = store.load(2, 1).unwrap();
+        assert_eq!(b.predict(&x.view()).data, b2.predict(&x.view()).data);
+        assert!(store.disk_bytes() > 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        let dir = std::env::temp_dir().join("caloforest_no_such_store");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(ModelStore::open(&dir).is_err());
+    }
+}

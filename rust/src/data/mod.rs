@@ -1,0 +1,10 @@
+//! Dataset substrates: controllable synthetic data for the resource-scaling
+//! experiments and structured stand-ins for the 27 benchmark datasets.
+
+pub mod synthetic;
+pub mod benchmark;
+pub mod split;
+
+pub use benchmark::{benchmark_registry, load_benchmark, BenchmarkSpec, TargetType};
+pub use split::train_test_split;
+pub use synthetic::synthetic_dataset;

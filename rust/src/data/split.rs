@@ -1,0 +1,63 @@
+//! Seeded train/test splitting (80/20 held-out, §D.1).
+
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Split `(x, y)` into `(train, test)` with `test_frac` held out.
+pub fn train_test_split(
+    x: &Matrix,
+    y: Option<&[u32]>,
+    test_frac: f64,
+    seed: u64,
+) -> ((Matrix, Option<Vec<u32>>), (Matrix, Option<Vec<u32>>)) {
+    let n = x.rows;
+    let mut rng = Rng::new(seed);
+    let perm = rng.permutation(n);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let n_test = n_test.clamp(1, n - 1);
+    let test_idx = &perm[..n_test];
+    let train_idx = &perm[n_test..];
+    let take_y = |idx: &[usize]| -> Option<Vec<u32>> {
+        y.map(|labels| idx.iter().map(|&i| labels[i]).collect())
+    };
+    (
+        (x.take_rows(train_idx), take_y(train_idx)),
+        (x.take_rows(test_idx), take_y(test_idx)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn split_sizes_and_disjointness() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(100, 2, &mut rng);
+        let y: Vec<u32> = (0..100).map(|i| (i % 3) as u32).collect();
+        let ((xtr, ytr), (xte, yte)) = train_test_split(&x, Some(&y), 0.2, 7);
+        assert_eq!(xtr.rows, 80);
+        assert_eq!(xte.rows, 20);
+        assert_eq!(ytr.unwrap().len(), 80);
+        assert_eq!(yte.unwrap().len(), 20);
+        // Disjoint: every test row appears exactly once in the original.
+        let mut all: Vec<Vec<u8>> = Vec::new();
+        for r in 0..80 {
+            all.push(xtr.row(r).iter().flat_map(|v| v.to_le_bytes()).collect());
+        }
+        for r in 0..20 {
+            let row: Vec<u8> = xte.row(r).iter().flat_map(|v| v.to_le_bytes()).collect();
+            assert!(!all.contains(&row), "row leaked between splits");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::randn(50, 2, &mut rng);
+        let (a, _) = train_test_split(&x, None, 0.2, 3);
+        let (b, _) = train_test_split(&x, None, 0.2, 3);
+        assert_eq!(a.0.data, b.0.data);
+    }
+}

@@ -1,0 +1,119 @@
+//! Coverage — the diversity metric (Eq. 8, Naeem et al. 2020).
+//!
+//! A reference point is covered when at least one generated point lies
+//! inside the L1 ball of radius `NND_k` (its k-th nearest-neighbour distance
+//! within the reference set). `k` is chosen automatically as the smallest
+//! value such that the training data has ≥95% Coverage of the test data
+//! (App. D.2).
+
+use crate::tensor::Matrix;
+
+/// L1 distance between rows.
+#[inline]
+fn l1(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| (x - y).abs() as f64).sum()
+}
+
+/// k-th nearest-neighbour distance of each reference point *within* the
+/// reference set (excluding itself).
+pub fn knn_radii(reference: &Matrix, k: usize) -> Vec<f64> {
+    let m = reference.rows;
+    let k = k.clamp(1, m.saturating_sub(1).max(1));
+    let mut radii = Vec::with_capacity(m);
+    let mut dists = Vec::with_capacity(m - 1);
+    for j in 0..m {
+        dists.clear();
+        for other in 0..m {
+            if other != j {
+                dists.push(l1(reference.row(j), reference.row(other)));
+            }
+        }
+        // k-th smallest (1-indexed).
+        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        radii.push(dists[k - 1]);
+    }
+    radii
+}
+
+/// Coverage of `reference` by `generated` with fixed `k`.
+pub fn coverage_k(generated: &Matrix, reference: &Matrix, k: usize) -> f64 {
+    assert_eq!(generated.cols, reference.cols);
+    if reference.rows == 0 || generated.rows == 0 {
+        return 0.0;
+    }
+    let radii = knn_radii(reference, k);
+    let mut covered = 0usize;
+    for j in 0..reference.rows {
+        let r = radii[j];
+        let hit = (0..generated.rows).any(|i| l1(generated.row(i), reference.row(j)) <= r);
+        if hit {
+            covered += 1;
+        }
+    }
+    covered as f64 / reference.rows as f64
+}
+
+/// Auto-select k: smallest k with Coverage(train → test) ≥ 0.95.
+pub fn auto_k(train: &Matrix, test: &Matrix) -> usize {
+    let max_k = test.rows.saturating_sub(1).max(1).min(30);
+    for k in 1..=max_k {
+        if coverage_k(train, test, k) >= 0.95 {
+            return k;
+        }
+    }
+    max_k
+}
+
+/// Coverage with auto-k (using `reference` against itself when no separate
+/// calibration pair is given).
+pub fn coverage(generated: &Matrix, reference: &Matrix, k: usize) -> f64 {
+    coverage_k(generated, reference, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_sets_full_coverage() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(80, 3, &mut rng);
+        assert!((coverage_k(&m, &m, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn collapsed_generator_low_coverage() {
+        let mut rng = Rng::new(2);
+        let reference = Matrix::randn(100, 2, &mut rng);
+        // Mode collapse: all generated points at the origin.
+        let collapsed = Matrix::zeros(100, 2);
+        let c = coverage_k(&collapsed, &reference, 3);
+        assert!(c < 0.5, "collapsed coverage {c}");
+        // A faithful sample covers much more.
+        let good = Matrix::randn(100, 2, &mut rng);
+        let cg = coverage_k(&good, &reference, 3);
+        assert!(cg > c + 0.2, "good {cg} vs collapsed {c}");
+    }
+
+    #[test]
+    fn auto_k_calibrates_train_test() {
+        let mut rng = Rng::new(3);
+        let train = Matrix::randn(120, 2, &mut rng);
+        let test = Matrix::randn(60, 2, &mut rng);
+        let k = auto_k(&train, &test);
+        assert!(k >= 1);
+        assert!(coverage_k(&train, &test, k) >= 0.95);
+    }
+
+    #[test]
+    fn radii_monotone_in_k() {
+        let mut rng = Rng::new(4);
+        let m = Matrix::randn(40, 2, &mut rng);
+        let r1 = knn_radii(&m, 1);
+        let r3 = knn_radii(&m, 3);
+        for j in 0..40 {
+            assert!(r3[j] >= r1[j]);
+        }
+    }
+}

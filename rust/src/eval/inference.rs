@@ -1,0 +1,109 @@
+//! Usefulness for statistical inference: percent bias `P_bias` of OLS
+//! coefficients estimated on generated data vs real data, and the coverage
+//! rate of their 95% confidence intervals (App. D.2; regression tasks only).
+
+use super::linalg;
+use crate::tensor::Matrix;
+
+/// Split a dataset into (features, target) at `target_col` and fit OLS.
+fn fit(m: &Matrix, target_col: usize) -> (Vec<f64>, Vec<f64>) {
+    let p = m.cols - 1;
+    let mut x = vec![0.0f32; m.rows * p];
+    let mut y = vec![0.0f32; m.rows];
+    for r in 0..m.rows {
+        let mut ci = 0;
+        for c in 0..m.cols {
+            if c == target_col {
+                y[r] = m.at(r, c);
+            } else {
+                x[r * p + ci] = m.at(r, c);
+                ci += 1;
+            }
+        }
+    }
+    linalg::ols(&x, m.rows, p, &y, 1e-6)
+}
+
+/// Inference metrics from one generated dataset.
+pub struct InferenceMetrics {
+    /// `P_bias = |E[(β̂ − β)/β]|` over coefficients with `|β|` above tolerance.
+    pub p_bias: f64,
+    /// Fraction of true β inside the 95% CI around β̂.
+    pub cov_rate: f64,
+}
+
+/// Compare OLS fits on generated vs training data.
+pub fn inference_metrics(
+    generated: &Matrix,
+    train: &Matrix,
+    target_col: usize,
+) -> InferenceMetrics {
+    let (beta_true, _) = fit(train, target_col);
+    let (beta_hat, stderr_hat) = fit(generated, target_col);
+    // Skip the intercept; use coefficients with meaningful magnitude.
+    let mut rel_bias = Vec::new();
+    let mut covered = 0usize;
+    let mut total = 0usize;
+    for i in 1..beta_true.len() {
+        let b = beta_true[i];
+        let bh = beta_hat[i];
+        if b.abs() > 1e-6 {
+            rel_bias.push((bh - b) / b);
+        }
+        let half = 1.96 * stderr_hat[i];
+        if (b - bh).abs() <= half {
+            covered += 1;
+        }
+        total += 1;
+    }
+    InferenceMetrics {
+        p_bias: crate::util::stats::mean(&rel_bias).abs(),
+        cov_rate: covered as f64 / total.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn linear_data(rng: &mut Rng, n: usize, noise: f32) -> Matrix {
+        let mut m = Matrix::zeros(n, 3);
+        for r in 0..n {
+            let a = rng.normal_f32();
+            let b = rng.normal_f32();
+            m.set(r, 0, a);
+            m.set(r, 1, b);
+            m.set(r, 2, 1.5 * a - 2.0 * b + noise * rng.normal_f32());
+        }
+        m
+    }
+
+    #[test]
+    fn faithful_generation_low_bias_high_coverage() {
+        let mut rng = Rng::new(1);
+        let train = linear_data(&mut rng, 500, 0.2);
+        let gen_same = linear_data(&mut rng, 500, 0.2);
+        let m = inference_metrics(&gen_same, &train, 2);
+        assert!(m.p_bias < 0.05, "p_bias {}", m.p_bias);
+        assert!(m.cov_rate >= 0.5, "cov_rate {}", m.cov_rate);
+    }
+
+    #[test]
+    fn broken_generation_high_bias() {
+        let mut rng = Rng::new(2);
+        let train = linear_data(&mut rng, 500, 0.2);
+        // "Generated" data with the opposite relationship.
+        let mut broken = Matrix::zeros(500, 3);
+        for r in 0..500 {
+            let a = rng.normal_f32();
+            let b = rng.normal_f32();
+            broken.set(r, 0, a);
+            broken.set(r, 1, b);
+            broken.set(r, 2, -1.5 * a + 2.0 * b + 0.2 * rng.normal_f32());
+        }
+        let m = inference_metrics(&broken, &train, 2);
+        assert!(m.p_bias > 1.0, "p_bias {}", m.p_bias);
+        assert!(m.cov_rate < 0.5, "cov_rate {}", m.cov_rate);
+    }
+}

@@ -1,0 +1,178 @@
+//! Small dense linear algebra: Cholesky solves for OLS/ridge and the
+//! Gaussian-copula sampler.
+
+/// Cholesky factorization of a symmetric positive-definite matrix (row-major
+/// `n × n`); returns lower-triangular `L` with `A = L Lᵀ`. Adds `jitter` to
+//  the diagonal on failure (up to 3 escalations).
+pub fn cholesky(a: &[f64], n: usize, jitter: f64) -> Option<Vec<f64>> {
+    let mut jit = jitter;
+    for _ in 0..4 {
+        if let Some(l) = try_cholesky(a, n, jit) {
+            return Some(l);
+        }
+        jit = (jit * 10.0).max(1e-10);
+    }
+    None
+}
+
+fn try_cholesky(a: &[f64], n: usize, jitter: f64) -> Option<Vec<f64>> {
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j] + if i == j { jitter } else { 0.0 };
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A x = b` given the Cholesky factor `L` (forward + back
+/// substitution).
+pub fn cholesky_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    // L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    // Lᵀ x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    x
+}
+
+/// Inverse diagonal of `A⁻¹` from the Cholesky factor (for OLS standard
+/// errors): solves `A e_i = x` per basis vector.
+pub fn inv_diagonal(l: &[f64], n: usize) -> Vec<f64> {
+    let mut diag = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    for i in 0..n {
+        e.iter_mut().for_each(|v| *v = 0.0);
+        e[i] = 1.0;
+        let x = cholesky_solve(l, n, &e);
+        diag[i] = x[i];
+    }
+    diag
+}
+
+/// OLS/ridge fit with intercept: returns `(beta, stderr)` where `beta[0]` is
+/// the intercept. `x` is row-major `[n × p]`.
+pub fn ols(x: &[f32], n: usize, p: usize, y: &[f32], ridge: f64) -> (Vec<f64>, Vec<f64>) {
+    let d = p + 1;
+    // Normal equations with an intercept column of ones.
+    let mut xtx = vec![0.0f64; d * d];
+    let mut xty = vec![0.0f64; d];
+    for r in 0..n {
+        let row = &x[r * p..(r + 1) * p];
+        let yv = y[r] as f64;
+        // Column 0 = intercept.
+        xtx[0] += 1.0;
+        xty[0] += yv;
+        for i in 0..p {
+            let xi = row[i] as f64;
+            xtx[(i + 1) * d] += xi; // column 0 interactions
+            xtx[i + 1] += xi;
+            xty[i + 1] += xi * yv;
+            for j in 0..=i {
+                xtx[(i + 1) * d + (j + 1)] += xi * row[j] as f64;
+            }
+        }
+    }
+    // Symmetrize.
+    for i in 0..d {
+        for j in i + 1..d {
+            xtx[i * d + j] = xtx[j * d + i];
+        }
+    }
+    let l = cholesky(&xtx, d, ridge).expect("XtX not SPD even with jitter");
+    let beta = cholesky_solve(&l, d, &xty);
+    // Residual variance and standard errors.
+    let mut rss = 0.0f64;
+    for r in 0..n {
+        let row = &x[r * p..(r + 1) * p];
+        let mut pred = beta[0];
+        for i in 0..p {
+            pred += beta[i + 1] * row[i] as f64;
+        }
+        let e = y[r] as f64 - pred;
+        rss += e * e;
+    }
+    let dof = (n as f64 - d as f64).max(1.0);
+    let sigma2 = rss / dof;
+    let inv_diag = inv_diagonal(&l, d);
+    let stderr: Vec<f64> = inv_diag.iter().map(|&v| (sigma2 * v.max(0.0)).sqrt()).collect();
+    (beta, stderr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cholesky_recovers_known_factor() {
+        // A = [[4, 2], [2, 3]] → L = [[2, 0], [1, √2]]
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let l = cholesky(&a, 2, 0.0).unwrap();
+        assert!((l[0] - 2.0).abs() < 1e-12);
+        assert!((l[2] - 1.0).abs() < 1e-12);
+        assert!((l[3] - 2f64.sqrt()).abs() < 1e-12);
+        let x = cholesky_solve(&l, 2, &[8.0, 7.0]);
+        // Check A x = b.
+        assert!((4.0 * x[0] + 2.0 * x[1] - 8.0).abs() < 1e-10);
+        assert!((2.0 * x[0] + 3.0 * x[1] - 7.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn non_spd_gets_jitter_or_none() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // indefinite
+        // With jitter escalation it may still fail (eigenvalue -1): allow
+        // either None or a factor of the jittered matrix.
+        let _ = cholesky(&a, 2, 1e-9);
+        let zero = vec![0.0, 0.0, 0.0, 0.0];
+        assert!(cholesky(&zero, 2, 0.0).is_none() || cholesky(&zero, 2, 0.0).is_some());
+    }
+
+    #[test]
+    fn ols_recovers_coefficients() {
+        let mut rng = Rng::new(5);
+        let n = 500;
+        let p = 3;
+        let mut x = vec![0.0f32; n * p];
+        let mut y = vec![0.0f32; n];
+        let true_beta = [0.5f64, 2.0, -1.0, 3.0]; // intercept + 3 coefs
+        for r in 0..n {
+            let mut pred = true_beta[0];
+            for c in 0..p {
+                let v = rng.normal_f32();
+                x[r * p + c] = v;
+                pred += true_beta[c + 1] * v as f64;
+            }
+            y[r] = (pred + 0.1 * rng.normal()) as f32;
+        }
+        let (beta, stderr) = ols(&x, n, p, &y, 1e-9);
+        for i in 0..4 {
+            assert!((beta[i] - true_beta[i]).abs() < 0.05, "beta[{i}]={}", beta[i]);
+            assert!(stderr[i] > 0.0 && stderr[i] < 0.05);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! The eight generated-data quality metrics of §4.2 / Appendix D.2, plus
+//! the rank aggregation that produces Tables 2 and 7.
+//!
+//! * distributional distance — Wasserstein-1 to train/test ([`wasserstein`]);
+//! * diversity — Coverage with auto-chosen k ([`coverage`]);
+//! * usefulness for discriminative training — F1_gen / R²_gen over a panel
+//!   of downstream models ([`downstream`]);
+//! * usefulness for statistical inference — P_bias and coverage rate of OLS
+//!   confidence intervals ([`inference`]);
+//! * average-rank aggregation across datasets ([`rank`]).
+
+pub mod linalg;
+pub mod wasserstein;
+pub mod coverage;
+pub mod downstream;
+pub mod inference;
+pub mod rank;
+
+pub use coverage::coverage;
+pub use wasserstein::w1_distance;

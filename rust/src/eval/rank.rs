@@ -1,0 +1,118 @@
+//! Average-rank aggregation across datasets — the presentation format of
+//! Tables 2 and 7: per metric, rank the methods on each dataset (rank 1 =
+//! best), then report mean ± standard error across datasets.
+
+use crate::util::stats;
+
+/// Direction of a metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Better {
+    Lower,
+    Higher,
+}
+
+/// Rank methods on one dataset (average ranks for ties). `values[i]` is
+/// method `i`'s metric; NaN ranks last.
+pub fn rank_methods(values: &[f64], better: Better) -> Vec<f64> {
+    let n = values.len();
+    let key = |v: f64| -> f64 {
+        if v.is_nan() {
+            f64::INFINITY
+        } else {
+            match better {
+                Better::Lower => v,
+                Better::Higher => -v,
+            }
+        }
+    };
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| key(values[a]).partial_cmp(&key(values[b])).unwrap());
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && key(values[order[j + 1]]) == key(values[order[i]]) {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &idx in &order[i..=j] {
+            ranks[idx] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Aggregate: `per_dataset[d][m]` = metric of method `m` on dataset `d`
+/// (NaN = not applicable). Returns `(mean_rank, sem)` per method, averaging
+/// only over datasets where the metric applies for at least two methods.
+pub fn average_ranks(per_dataset: &[Vec<f64>], better: Better) -> Vec<(f64, f64)> {
+    assert!(!per_dataset.is_empty());
+    let n_methods = per_dataset[0].len();
+    let mut per_method_ranks: Vec<Vec<f64>> = vec![Vec::new(); n_methods];
+    for values in per_dataset {
+        assert_eq!(values.len(), n_methods);
+        if values.iter().filter(|v| !v.is_nan()).count() < 2 {
+            continue;
+        }
+        let ranks = rank_methods(values, better);
+        for m in 0..n_methods {
+            if !values[m].is_nan() {
+                per_method_ranks[m].push(ranks[m]);
+            }
+        }
+    }
+    per_method_ranks
+        .iter()
+        .map(|rs| (stats::mean(rs), stats::sem(rs)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ranking_lower_better() {
+        let r = rank_methods(&[0.3, 0.1, 0.2], Better::Lower);
+        assert_eq!(r, vec![3.0, 1.0, 2.0]);
+        let rh = rank_methods(&[0.3, 0.1, 0.2], Better::Higher);
+        assert_eq!(rh, vec![1.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn ties_get_average_rank() {
+        let r = rank_methods(&[1.0, 1.0, 2.0], Better::Lower);
+        assert_eq!(r, vec![1.5, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn nan_ranks_last() {
+        let r = rank_methods(&[f64::NAN, 0.5, 0.1], Better::Lower);
+        assert_eq!(r, vec![3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn aggregation_across_datasets() {
+        let data = vec![
+            vec![0.1, 0.2, 0.3], // method 0 best
+            vec![0.2, 0.1, 0.3], // method 1 best
+            vec![0.1, 0.2, 0.3],
+        ];
+        let agg = average_ranks(&data, Better::Lower);
+        assert!((agg[0].0 - (1.0 + 2.0 + 1.0) / 3.0).abs() < 1e-12);
+        assert!((agg[2].0 - 3.0).abs() < 1e-12);
+        assert!(agg[0].1 >= 0.0);
+    }
+
+    #[test]
+    fn skips_mostly_nan_datasets() {
+        let data = vec![
+            vec![0.1, f64::NAN, f64::NAN], // fewer than 2 methods: skipped
+            vec![0.2, 0.1, 0.3],
+        ];
+        let agg = average_ranks(&data, Better::Lower);
+        // Method 0 only ranked on dataset 2 (rank 2).
+        assert!((agg[0].0 - 2.0).abs() < 1e-12);
+    }
+}

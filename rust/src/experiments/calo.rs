@@ -1,0 +1,247 @@
+//! CaloForest experiment runner (Tables 3/4/5, Figs 5–8, §4.3).
+//!
+//! Pipeline: simulate a Geant4-stand-in train/test pair → train ForestFlow
+//! (SO, per-class scalers, Table 9's CaloForest row) → generate a dataset
+//! matching the test-set label distribution → evaluate every high-level
+//! feature's χ² separation power and the classifier AUC.
+//!
+//! The default geometry is a reduced ("mini") voxelization with the same
+//! layer structure so a full run fits one CPU in seconds; `--full-geometry`
+//! restores the Challenge's 368/533 voxels.
+
+use crate::coordinator::{self, RunOptions};
+use crate::forest::trainer::ForestTrainConfig;
+use crate::forest::{generate, GenerateConfig};
+use crate::gbt::{TrainParams, TreeKind};
+use crate::sim::chi2::chi2_of_samples;
+use crate::sim::classifier::classifier_auc;
+use crate::sim::features::{compute_feature, feature_list};
+use crate::sim::geometry::{CaloGeometry, LayerSpec, Particle};
+use crate::sim::shower::{generate_dataset, CaloDataset};
+
+/// Reduced Photons geometry (62 voxels) with the full layer structure.
+pub fn photons_mini() -> CaloGeometry {
+    CaloGeometry {
+        particle: Particle::Photon,
+        layers: vec![
+            LayerSpec { id: 0, n_alpha: 1, n_r: 4, depth: 1.0 },
+            LayerSpec { id: 1, n_alpha: 4, n_r: 6, depth: 4.0 },
+            LayerSpec { id: 2, n_alpha: 4, n_r: 7, depth: 9.0 },
+            LayerSpec { id: 3, n_alpha: 1, n_r: 3, depth: 14.0 },
+            LayerSpec { id: 12, n_alpha: 1, n_r: 3, depth: 18.0 },
+        ],
+        energies: CaloGeometry::photons().energies,
+    }
+}
+
+/// Reduced Pions geometry (102 voxels).
+pub fn pions_mini() -> CaloGeometry {
+    CaloGeometry {
+        particle: Particle::Pion,
+        layers: vec![
+            LayerSpec { id: 0, n_alpha: 1, n_r: 4, depth: 1.0 },
+            LayerSpec { id: 1, n_alpha: 4, n_r: 5, depth: 4.0 },
+            LayerSpec { id: 2, n_alpha: 4, n_r: 5, depth: 9.0 },
+            LayerSpec { id: 3, n_alpha: 1, n_r: 3, depth: 13.0 },
+            LayerSpec { id: 12, n_alpha: 4, n_r: 6, depth: 17.0 },
+            LayerSpec { id: 13, n_alpha: 4, n_r: 7, depth: 22.0 },
+            LayerSpec { id: 14, n_alpha: 1, n_r: 3, depth: 27.0 },
+        ],
+        energies: CaloGeometry::pions().energies,
+    }
+}
+
+/// CaloForest run configuration (Table 9 CaloForest row, scaled defaults).
+#[derive(Clone, Debug)]
+pub struct CaloConfig {
+    pub n_per_class: usize,
+    pub n_t: usize,
+    pub k_dup: usize,
+    pub n_trees: usize,
+    pub max_depth: usize,
+    /// Learning rate (paper: 1.5 for calo).
+    pub eta: f32,
+    pub lambda: f64,
+    pub workers: usize,
+    pub seed: u64,
+    pub chi2_bins: usize,
+}
+
+impl Default for CaloConfig {
+    fn default() -> Self {
+        CaloConfig {
+            n_per_class: 30,
+            n_t: 6,
+            k_dup: 5,
+            n_trees: 12,
+            max_depth: 6,
+            eta: 1.5,
+            lambda: 1.0,
+            workers: 1,
+            seed: 0,
+            chi2_bins: 30,
+        }
+    }
+}
+
+impl CaloConfig {
+    /// The paper's §4.3 settings (n_t=100, K=20, 20 trees, depth 7, η=1.5).
+    pub fn paper_scale() -> CaloConfig {
+        CaloConfig {
+            n_per_class: 8067, // ≈121k / 15
+            n_t: 100,
+            k_dup: 20,
+            n_trees: 20,
+            max_depth: 7,
+            eta: 1.5,
+            lambda: 1.0,
+            workers: 1,
+            seed: 0,
+            chi2_bins: 100,
+        }
+    }
+}
+
+/// Results of one CaloForest run.
+pub struct CaloOutcome {
+    /// (feature name, χ² separation power) rows of Table 4/5.
+    pub chi2: Vec<(String, f64)>,
+    /// Classifier AUC (Table 3).
+    pub auc: f64,
+    pub train_secs: f64,
+    pub gen_secs: f64,
+    pub ms_per_datapoint: f64,
+    pub ensembles_trained: usize,
+    /// Histogram CSV rows for the Fig 5/8 plots:
+    /// (feature, bin_center, reference_frac, generated_frac).
+    pub histograms: Vec<(String, f64, f64, f64)>,
+}
+
+/// Run the full CaloForest pipeline on a geometry.
+pub fn run_caloforest(geometry: &CaloGeometry, cfg: &CaloConfig) -> CaloOutcome {
+    // Independent train/test sets — the Geant4 stand-in produces both.
+    let train = generate_dataset(geometry, cfg.n_per_class, cfg.seed + 1);
+    let test = generate_dataset(geometry, cfg.n_per_class, cfg.seed + 2);
+
+    let fc = ForestTrainConfig {
+        params: TrainParams {
+            n_trees: cfg.n_trees,
+            max_depth: cfg.max_depth,
+            eta: cfg.eta,
+            lambda: cfg.lambda,
+            kind: TreeKind::Single,
+            ..Default::default()
+        },
+        n_t: cfg.n_t,
+        k_dup: cfg.k_dup,
+        per_class_scaler: true, // §C.3 — essential for exponential energies
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let out = coordinator::run_training(
+        &fc,
+        &train.voxels,
+        Some(&train.labels),
+        &RunOptions { workers: cfg.workers, ..Default::default() },
+    );
+    let n_gen = test.voxels.rows;
+    let t0 = std::time::Instant::now();
+    let (gen_voxels, gen_labels) = generate(&out.model, &GenerateConfig::new(n_gen, cfg.seed + 3));
+    let gen_secs = t0.elapsed().as_secs_f64();
+
+    // Negative energies are unphysical: clip at the readout threshold.
+    let mut gen_voxels = gen_voxels;
+    for v in gen_voxels.data.iter_mut() {
+        if *v < 0.015 {
+            *v = 0.0;
+        }
+    }
+    let generated = CaloDataset {
+        voxels: gen_voxels,
+        labels: gen_labels,
+        geometry: geometry.clone(),
+    };
+
+    // χ² separation for every high-level feature + histogram dumps.
+    let mut chi2 = Vec::new();
+    let mut histograms = Vec::new();
+    for feature in feature_list(geometry) {
+        let ref_vals = compute_feature(&test, &feature);
+        let gen_vals = compute_feature(&generated, &feature);
+        chi2.push((feature.name(), chi2_of_samples(&ref_vals, &gen_vals, cfg.chi2_bins)));
+        // Histogram dump (shared reference binning).
+        let lo = crate::util::stats::quantile(&ref_vals, 0.005);
+        let hi = crate::util::stats::quantile(&ref_vals, 0.995);
+        let (lo, hi) = if hi > lo { (lo, hi) } else { (lo - 0.5, lo + 0.5) };
+        let bins = 24;
+        let hr = crate::util::stats::normalize(&crate::util::stats::histogram(&ref_vals, lo, hi, bins));
+        let hg = crate::util::stats::normalize(&crate::util::stats::histogram(&gen_vals, lo, hi, bins));
+        for b in 0..bins {
+            let center = lo + (hi - lo) * (b as f64 + 0.5) / bins as f64;
+            histograms.push((feature.name(), center, hr[b], hg[b]));
+        }
+    }
+
+    // Classifier AUC on (per-E_inc normalized) voxels.
+    let normalize = |ds: &CaloDataset| -> crate::tensor::Matrix {
+        let mut m = ds.voxels.clone();
+        for r in 0..m.rows {
+            let e = ds.e_inc(r);
+            for v in m.row_mut(r) {
+                *v /= e;
+            }
+        }
+        m
+    };
+    let auc = classifier_auc(&normalize(&test), &normalize(&generated), cfg.seed + 9);
+
+    CaloOutcome {
+        chi2,
+        auc,
+        train_secs: out.report.total_seconds,
+        gen_secs,
+        ms_per_datapoint: gen_secs * 1000.0 / n_gen as f64,
+        ensembles_trained: out.report.jobs.len(),
+        histograms,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mini_geometries_preserve_layer_structure() {
+        let p = photons_mini();
+        assert_eq!(p.layers.len(), 5);
+        assert_eq!(p.n_voxels(), 62);
+        let pi = pions_mini();
+        assert_eq!(pi.layers.len(), 7);
+        assert_eq!(pi.n_voxels(), 102);
+        assert_eq!(pi.n_classes(), 15);
+    }
+
+    #[test]
+    fn caloforest_pipeline_end_to_end_tiny() {
+        let cfg = CaloConfig {
+            n_per_class: 8,
+            n_t: 3,
+            k_dup: 2,
+            n_trees: 4,
+            max_depth: 4,
+            eta: 1.0,
+            ..Default::default()
+        };
+        let geometry = photons_mini();
+        let out = run_caloforest(&geometry, &cfg);
+        // Table rows exist for every feature.
+        assert_eq!(out.chi2.len(), 14.min(feature_list(&geometry).len()));
+        for (name, v) in &out.chi2 {
+            assert!((0.0..=1.0).contains(v), "{name}: chi2 {v}");
+        }
+        assert!(out.auc >= 0.5 && out.auc <= 1.0);
+        assert!(out.ensembles_trained == 3 * 15);
+        assert!(out.ms_per_datapoint > 0.0);
+        assert!(!out.histograms.is_empty());
+    }
+}

@@ -1,0 +1,6 @@
+//! Shared experiment runners behind the `cargo bench` harnesses and the CLI:
+//! one submodule per paper table/figure family (see DESIGN.md §4).
+
+pub mod resource;
+pub mod quality;
+pub mod calo;

@@ -1,0 +1,374 @@
+//! Model-quality experiment runner (Tables 2 and 7, Fig 11).
+//!
+//! For each benchmark dataset: train every method, generate samples, and
+//! compute the eight §4.2 metrics; then aggregate average ranks across
+//! datasets. Defaults are scaled down (subsampled rows, smaller K / n_tree)
+//! so a point runs in seconds on one CPU; `paper_scale` restores Table 9.
+
+use crate::baselines::gaussian_copula::GaussianCopula;
+use crate::baselines::tabddpm::{DdpmConfig, TabDdpm};
+use crate::baselines::tvae::{Tvae, TvaeConfig};
+use crate::baselines::Generator;
+use crate::data::benchmark::{load_benchmark, BenchmarkSpec};
+use crate::data::split::train_test_split;
+use crate::eval::{coverage, downstream, inference, wasserstein};
+use crate::forest::model::ModelKind;
+use crate::forest::trainer::{train_forest, ForestTrainConfig};
+use crate::forest::{generate, GenerateConfig, LabelSampler};
+use crate::gbt::{TrainParams, TreeKind};
+use crate::tensor::Matrix;
+
+/// Methods compared in Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    GaussianCopula,
+    Tvae,
+    TabDdpm,
+    FdOriginal,
+    FdSoScaled,
+    FdMoScaled,
+    FfOriginal,
+    FfSoScaled,
+    FfMoScaled,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::GaussianCopula => "GaussianCopula",
+            Method::Tvae => "TVAE",
+            Method::TabDdpm => "TabDDPM",
+            Method::FdOriginal => "FD-Original",
+            Method::FdSoScaled => "FD-SO-Scaled",
+            Method::FdMoScaled => "FD-MO-Scaled",
+            Method::FfOriginal => "FF-Original",
+            Method::FfSoScaled => "FF-SO-Scaled",
+            Method::FfMoScaled => "FF-MO-Scaled",
+        }
+    }
+
+    pub fn all() -> [Method; 9] {
+        [
+            Method::GaussianCopula,
+            Method::Tvae,
+            Method::TabDdpm,
+            Method::FdOriginal,
+            Method::FdSoScaled,
+            Method::FdMoScaled,
+            Method::FfOriginal,
+            Method::FfSoScaled,
+            Method::FfMoScaled,
+        ]
+    }
+}
+
+/// Scaled-down vs paper-scale hyperparameters (Table 9).
+#[derive(Clone, Copy, Debug)]
+pub struct QualityConfig {
+    /// Cap on training rows per dataset (subsampled; 0 = no cap).
+    pub row_cap: usize,
+    pub n_t: usize,
+    pub k_base: usize,
+    pub k_scaled: usize,
+    pub n_tree_base: usize,
+    pub n_tree_scaled: usize,
+    pub n_es: usize,
+    pub seed: u64,
+}
+
+impl Default for QualityConfig {
+    fn default() -> Self {
+        QualityConfig {
+            row_cap: 200,
+            n_t: 6,
+            k_base: 8,
+            k_scaled: 20,
+            n_tree_base: 15,
+            n_tree_scaled: 60,
+            n_es: 8,
+            seed: 0,
+        }
+    }
+}
+
+impl QualityConfig {
+    /// The paper's Table 9 settings.
+    pub fn paper_scale() -> QualityConfig {
+        QualityConfig {
+            row_cap: 0,
+            n_t: 50,
+            k_base: 100,
+            k_scaled: 1000,
+            n_tree_base: 100,
+            n_tree_scaled: 2000,
+            n_es: 20,
+            seed: 0,
+        }
+    }
+}
+
+/// The eight metrics for one (dataset, method) pair; NaN = not applicable.
+#[derive(Clone, Copy, Debug)]
+pub struct Metrics {
+    pub w1_train: f64,
+    pub w1_test: f64,
+    pub cov_train: f64,
+    pub cov_test: f64,
+    pub r2_gen: f64,
+    pub f1_gen: f64,
+    pub p_bias: f64,
+    pub cov_rate: f64,
+}
+
+impl Metrics {
+    pub fn nan() -> Metrics {
+        Metrics {
+            w1_train: f64::NAN,
+            w1_test: f64::NAN,
+            cov_train: f64::NAN,
+            cov_test: f64::NAN,
+            r2_gen: f64::NAN,
+            f1_gen: f64::NAN,
+            p_bias: f64::NAN,
+            cov_rate: f64::NAN,
+        }
+    }
+
+    pub const NAMES: [&'static str; 8] = [
+        "W1_train", "W1_test", "Cov_train", "Cov_test", "R2_gen", "F1_gen", "P_bias", "cov_rate",
+    ];
+
+    pub fn values(&self) -> [f64; 8] {
+        [
+            self.w1_train,
+            self.w1_test,
+            self.cov_train,
+            self.cov_test,
+            self.r2_gen,
+            self.f1_gen,
+            self.p_bias,
+            self.cov_rate,
+        ]
+    }
+
+    /// Direction per metric (Table 2: "lower is better" is achieved by
+    /// ranking Coverage/R²/F1/cov_rate as higher-better).
+    pub fn higher_better(idx: usize) -> bool {
+        matches!(idx, 2 | 3 | 4 | 5 | 7)
+    }
+}
+
+fn forest_cfg(method: Method, cfg: &QualityConfig) -> Option<ForestTrainConfig> {
+    let (kind, tree_kind, scaled) = match method {
+        Method::FdOriginal => (ModelKind::Diffusion, TreeKind::Single, false),
+        Method::FdSoScaled => (ModelKind::Diffusion, TreeKind::Single, true),
+        Method::FdMoScaled => (ModelKind::Diffusion, TreeKind::Multi, true),
+        Method::FfOriginal => (ModelKind::Flow, TreeKind::Single, false),
+        Method::FfSoScaled => (ModelKind::Flow, TreeKind::Single, true),
+        Method::FfMoScaled => (ModelKind::Flow, TreeKind::Multi, true),
+        _ => return None,
+    };
+    let eps = if kind == ModelKind::Diffusion { 0.001 } else { 0.0 };
+    Some(ForestTrainConfig {
+        kind,
+        params: TrainParams {
+            n_trees: if scaled { cfg.n_tree_scaled } else { cfg.n_tree_base },
+            max_depth: 7,
+            kind: tree_kind,
+            early_stopping_rounds: if scaled { cfg.n_es } else { 0 },
+            ..Default::default()
+        },
+        n_t: cfg.n_t,
+        k_dup: if scaled { cfg.k_scaled } else { cfg.k_base },
+        eps,
+        per_class_scaler: scaled,
+        fresh_noise_validation: scaled,
+        seed: cfg.seed,
+        ..Default::default()
+    })
+}
+
+/// Generate one synthetic dataset with `method` trained on `(x, y)`.
+pub fn train_and_generate(
+    method: Method,
+    x: &Matrix,
+    y: Option<&[u32]>,
+    n_gen: usize,
+    cfg: &QualityConfig,
+) -> (Matrix, Option<Vec<u32>>) {
+    match method {
+        Method::GaussianCopula => {
+            let m = GaussianCopula::fit(x);
+            (m.sample(n_gen, cfg.seed + 1), y.map(|l| resample_labels(l, n_gen, cfg.seed)))
+        }
+        Method::Tvae => {
+            let m = Tvae::fit(x, &TvaeConfig { seed: cfg.seed, epochs: 40, ..Default::default() });
+            (m.sample(n_gen, cfg.seed + 1), y.map(|l| resample_labels(l, n_gen, cfg.seed)))
+        }
+        Method::TabDdpm => {
+            let m = TabDdpm::fit(x, &DdpmConfig { seed: cfg.seed, epochs: 50, ..Default::default() });
+            (m.sample(n_gen, cfg.seed + 1), y.map(|l| resample_labels(l, n_gen, cfg.seed)))
+        }
+        _ => {
+            let mut fc = forest_cfg(method, cfg).unwrap();
+            // "Original" conditions with multinomial labels + global scaler.
+            let original_style = matches!(method, Method::FdOriginal | Method::FfOriginal);
+            if original_style {
+                fc.per_class_scaler = false;
+            }
+            let (model, _) = train_forest(&fc, x, y);
+            let gen_cfg = GenerateConfig {
+                n: n_gen,
+                seed: cfg.seed + 1,
+                label_sampler: if original_style {
+                    LabelSampler::Multinomial
+                } else {
+                    LabelSampler::Empirical
+                },
+                clip: true,
+            };
+            let (gx, gy) = generate(&model, &gen_cfg);
+            (gx, y.map(|_| gy))
+        }
+    }
+}
+
+/// Proportional label resampling for unconditional baselines.
+fn resample_labels(labels: &[u32], n: usize, seed: u64) -> Vec<u32> {
+    let n_y = labels.iter().map(|&l| l as usize).max().unwrap_or(0) + 1;
+    let mut counts = vec![0usize; n_y];
+    for &l in labels {
+        counts[l as usize] += 1;
+    }
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let alloc = crate::forest::sampler::sample_labels(
+        &counts,
+        n,
+        LabelSampler::Empirical,
+        &mut rng,
+    );
+    let mut out = Vec::with_capacity(n);
+    for (c, &k) in alloc.iter().enumerate() {
+        out.extend(std::iter::repeat(c as u32).take(k));
+    }
+    out
+}
+
+/// Evaluate one method on one dataset spec.
+pub fn evaluate_method(method: Method, spec: &BenchmarkSpec, cfg: &QualityConfig) -> Metrics {
+    let data = load_benchmark(spec);
+    let ((mut x_train, y_train), (x_test, y_test)) =
+        train_test_split(&data.x, data.y.as_deref(), 0.2, cfg.seed + 7);
+    let mut y_train = y_train;
+    if cfg.row_cap > 0 && x_train.rows > cfg.row_cap {
+        let idx: Vec<usize> = (0..cfg.row_cap).collect();
+        x_train = x_train.take_rows(&idx);
+        y_train = y_train.map(|l| l[..cfg.row_cap].to_vec());
+    }
+    let n_gen = x_train.rows;
+    let (gx, gy) = train_and_generate(method, &x_train, y_train.as_deref(), n_gen, cfg);
+
+    let k = crate::eval::coverage::auto_k(&x_train, &x_test).min(5);
+    let w1_cap = 800; // W1 omitted for the largest datasets (paper D.2)
+    let (w1_train, w1_test) = if x_train.rows <= w1_cap {
+        (
+            wasserstein::w1_distance(&gx, &x_train, 12, cfg.seed + 3),
+            wasserstein::w1_distance(&gx, &x_test, 12, cfg.seed + 4),
+        )
+    } else {
+        (f64::NAN, f64::NAN)
+    };
+    let cov_train = coverage::coverage_k(&gx, &x_train, k);
+    let cov_test = coverage::coverage_k(&gx, &x_test, k);
+
+    let (r2, f1, p_bias, cov_rate) = match (&y_train, &y_test, data.target_col) {
+        (Some(_), Some(yt), None) => {
+            // Classification task.
+            let gy = gy.unwrap();
+            let f1 = downstream::f1_gen(&gx, &gy, &x_test, yt, spec.n_y);
+            (f64::NAN, f1, f64::NAN, f64::NAN)
+        }
+        (None, None, Some(tc)) => {
+            // Regression task.
+            let r2 = downstream::r2_gen(&gx, &x_test, tc);
+            let inf = inference::inference_metrics(&gx, &x_train, tc);
+            (r2, f64::NAN, inf.p_bias, inf.cov_rate)
+        }
+        _ => (f64::NAN, f64::NAN, f64::NAN, f64::NAN),
+    };
+
+    Metrics {
+        w1_train,
+        w1_test,
+        cov_train,
+        cov_test,
+        r2_gen: r2,
+        f1_gen: f1,
+        p_bias,
+        cov_rate,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::benchmark::benchmark_registry;
+
+    #[test]
+    fn forest_methods_map_to_configs() {
+        let cfg = QualityConfig::default();
+        assert!(forest_cfg(Method::GaussianCopula, &cfg).is_none());
+        let fd = forest_cfg(Method::FdSoScaled, &cfg).unwrap();
+        assert_eq!(fd.kind, ModelKind::Diffusion);
+        assert!(fd.fresh_noise_validation);
+        let ff = forest_cfg(Method::FfOriginal, &cfg).unwrap();
+        assert_eq!(ff.kind, ModelKind::Flow);
+        assert_eq!(ff.params.early_stopping_rounds, 0);
+    }
+
+    #[test]
+    fn evaluate_iris_with_copula_and_ff() {
+        let spec = benchmark_registry().into_iter().find(|s| s.name == "iris").unwrap();
+        let cfg = QualityConfig {
+            row_cap: 120,
+            n_t: 4,
+            k_base: 4,
+            k_scaled: 6,
+            n_tree_base: 6,
+            n_tree_scaled: 10,
+            n_es: 4,
+            seed: 1,
+        };
+        let mc = evaluate_method(Method::GaussianCopula, &spec, &cfg);
+        let mf = evaluate_method(Method::FfSoScaled, &spec, &cfg);
+        for m in [&mc, &mf] {
+            assert!(m.w1_train.is_finite() && m.w1_train >= 0.0);
+            assert!(m.cov_test >= 0.0 && m.cov_test <= 1.0);
+            assert!(m.f1_gen.is_finite(), "classification dataset must yield F1");
+            assert!(m.r2_gen.is_nan(), "no regression metrics on iris");
+        }
+    }
+
+    #[test]
+    fn evaluate_regression_dataset() {
+        let spec = benchmark_registry()
+            .into_iter()
+            .find(|s| s.name == "concrete_slump")
+            .unwrap();
+        let cfg = QualityConfig {
+            row_cap: 80,
+            n_t: 4,
+            k_base: 4,
+            k_scaled: 6,
+            n_tree_base: 6,
+            n_tree_scaled: 10,
+            n_es: 4,
+            seed: 2,
+        };
+        let m = evaluate_method(Method::FfSoScaled, &spec, &cfg);
+        assert!(m.r2_gen.is_finite());
+        assert!(m.p_bias.is_finite() && m.p_bias >= 0.0);
+        assert!(m.cov_rate >= 0.0 && m.cov_rate <= 1.0);
+        assert!(m.f1_gen.is_nan());
+    }
+}

@@ -1,0 +1,33 @@
+//! ForestFlow and ForestDiffusion — the paper's generative algorithm.
+//!
+//! Both methods regress a time-indexed vector field with gradient-boosted
+//! trees: conditional flow matching (Eq. 5/6) for ForestFlow, denoising
+//! score matching on a VP-SDE (Eq. 1/2) for ForestDiffusion. Because GBTs
+//! have no minibatches, the training set is duplicated `K` times with fresh
+//! noise per copy, time is discretized into `n_t` grid points with one
+//! ensemble each, and class conditioning trains disjoint ensembles per
+//! label (§2.3).
+//!
+//! Module layout:
+//! * [`schedule`] — time grids and the VP-SDE noise schedule σ_t;
+//! * [`scaler`] — global and per-class min-max scalers (§C.3);
+//! * [`noising`] — forward corruption + regression-target construction
+//!   (mirrored by the L1 Pallas kernel `python/compile/kernels/noising.py`);
+//! * [`model`] — the trained `(t, y)` ensemble grid;
+//! * [`trainer`] — memory-lean job construction (the paper's Issues 1/5/6
+//!   fixes live here; Issue 2/3/4 live in [`crate::coordinator`]);
+//! * [`sampler`] — Euler ODE / Euler–Maruyama reverse-SDE generation with
+//!   per-class batching (Issues 8/9 fixes).
+
+pub mod schedule;
+pub mod scaler;
+pub mod noising;
+pub mod model;
+pub mod trainer;
+pub mod sampler;
+pub mod dataiter;
+pub mod impute;
+
+pub use model::{ForestModel, ModelKind};
+pub use sampler::{generate, GenerateConfig, LabelSampler};
+pub use trainer::{train_forest, ForestTrainConfig, Prepared, TrainReport};

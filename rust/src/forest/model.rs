@@ -1,0 +1,334 @@
+//! The trained model: a `(t, y)` grid of boosted ensembles plus the
+//! preprocessing state needed for generation.
+
+use super::scaler::ClassScalers;
+use super::schedule::{TimeGrid, VpSchedule};
+use crate::gbt::{serialize, Booster};
+use std::path::Path;
+
+/// Which generative method the ensembles were trained for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// ForestFlow: conditional flow matching, ODE sampling.
+    Flow,
+    /// ForestDiffusion: VP-SDE score matching, reverse-SDE sampling.
+    Diffusion,
+}
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Flow => "flow",
+            ModelKind::Diffusion => "diffusion",
+        }
+    }
+}
+
+/// A trained ForestFlow / ForestDiffusion model.
+#[derive(Clone, Debug)]
+pub struct ForestModel {
+    pub kind: ModelKind,
+    pub grid: TimeGrid,
+    pub schedule: VpSchedule,
+    pub scalers: ClassScalers,
+    /// Training-set rows per class (drives label conditioning at
+    /// generation; `[n]` with one pseudo-class when unconditional).
+    pub label_counts: Vec<usize>,
+    /// Feature dimension.
+    pub p: usize,
+    /// Ensemble grid, row-major `[n_t × n_y]`; `None` until trained (allows
+    /// checkpoint-resume to fill holes).
+    pub ensembles: Vec<Option<Booster>>,
+}
+
+impl ForestModel {
+    pub fn empty(
+        kind: ModelKind,
+        grid: TimeGrid,
+        schedule: VpSchedule,
+        scalers: ClassScalers,
+        label_counts: Vec<usize>,
+        p: usize,
+    ) -> ForestModel {
+        let slots = grid.n_t() * label_counts.len();
+        ForestModel {
+            kind,
+            grid,
+            schedule,
+            scalers,
+            label_counts,
+            p,
+            ensembles: vec![None; slots],
+        }
+    }
+
+    pub fn n_t(&self) -> usize {
+        self.grid.n_t()
+    }
+
+    pub fn n_y(&self) -> usize {
+        self.label_counts.len()
+    }
+
+    #[inline]
+    pub fn slot(&self, t_idx: usize, y: usize) -> usize {
+        t_idx * self.n_y() + y
+    }
+
+    pub fn ensemble(&self, t_idx: usize, y: usize) -> &Booster {
+        self.ensembles[self.slot(t_idx, y)]
+            .as_ref()
+            .unwrap_or_else(|| panic!("ensemble (t={t_idx}, y={y}) not trained"))
+    }
+
+    pub fn set_ensemble(&mut self, t_idx: usize, y: usize, booster: Booster) {
+        let slot = self.slot(t_idx, y);
+        self.ensembles[slot] = Some(booster);
+    }
+
+    /// True when every grid slot has a trained ensemble.
+    pub fn is_complete(&self) -> bool {
+        self.ensembles.iter().all(|e| e.is_some())
+    }
+
+    /// Untrained `(t_idx, y)` slots, for checkpoint-resume.
+    pub fn missing(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for t in 0..self.n_t() {
+            for y in 0..self.n_y() {
+                if self.ensembles[self.slot(t, y)].is_none() {
+                    out.push((t, y));
+                }
+            }
+        }
+        out
+    }
+
+    /// Total ensembles trained so far.
+    pub fn n_trained(&self) -> usize {
+        self.ensembles.iter().filter(|e| e.is_some()).count()
+    }
+
+    /// Total tree nodes across the grid (the paper's §4.3 model-size story).
+    pub fn n_nodes(&self) -> usize {
+        self.ensembles
+            .iter()
+            .filter_map(|e| e.as_ref().map(|b| b.n_nodes()))
+            .sum()
+    }
+
+    /// Logical serialized size in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.ensembles
+            .iter()
+            .filter_map(|e| e.as_ref().map(|b| b.nbytes()))
+            .sum()
+    }
+
+    /// Evaluate the learned vector field at grid point `t_idx` for class `y`
+    /// on a batch `x` (scaled space), writing `[n × p]` into `out`.
+    pub fn eval_field(&self, t_idx: usize, y: usize, x: &crate::tensor::MatrixView<'_>, out: &mut [f32]) {
+        crate::gbt::predict::predict_batch(self.ensemble(t_idx, y), x, out);
+    }
+
+    /// Persist the full model as a directory: `meta.json` + one `.fbj` per
+    /// grid slot (the on-disk layout the streaming model store produces).
+    pub fn save_dir(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut meta = crate::util::Json::obj();
+        meta.set("kind", self.kind.name())
+            .set("n_t", self.n_t())
+            .set("n_y", self.n_y())
+            .set("p", self.p)
+            .set("eps", self.grid.eps as f64)
+            .set(
+                "ts",
+                crate::util::Json::Arr(
+                    self.grid.ts.iter().map(|&t| crate::util::Json::Num(t as f64)).collect(),
+                ),
+            )
+            .set(
+                "label_counts",
+                crate::util::Json::Arr(
+                    self.label_counts.iter().map(|&c| crate::util::Json::from(c)).collect(),
+                ),
+            )
+            .set("per_class_scaler", self.scalers.per_class)
+            .set("beta_min", self.schedule.beta_min as f64)
+            .set("beta_max", self.schedule.beta_max as f64)
+            .set(
+                "scalers",
+                crate::util::Json::Arr(
+                    self.scalers
+                        .scalers
+                        .iter()
+                        .map(|s| {
+                            let mut o = crate::util::Json::obj();
+                            o.set(
+                                "mins",
+                                crate::util::Json::Arr(
+                                    s.mins.iter().map(|&v| crate::util::Json::Num(v as f64)).collect(),
+                                ),
+                            )
+                            .set(
+                                "maxs",
+                                crate::util::Json::Arr(
+                                    s.maxs.iter().map(|&v| crate::util::Json::Num(v as f64)).collect(),
+                                ),
+                            );
+                            o
+                        })
+                        .collect(),
+                ),
+            );
+        std::fs::write(dir.join("meta.json"), meta.pretty())?;
+        for t in 0..self.n_t() {
+            for y in 0..self.n_y() {
+                if let Some(b) = &self.ensembles[self.slot(t, y)] {
+                    serialize::save(b, &dir.join(format!("t{t:04}_y{y:03}.fbj")))?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a model directory written by [`save_dir`](Self::save_dir).
+    pub fn load_dir(dir: &Path) -> std::io::Result<ForestModel> {
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))?;
+        let meta = crate::util::Json::parse(&meta_text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        let kind = match meta.get("kind").and_then(|k| k.as_str()) {
+            Some("flow") => ModelKind::Flow,
+            Some("diffusion") => ModelKind::Diffusion,
+            _ => return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad kind")),
+        };
+        let get = |k: &str| meta.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+        let n_t = get("n_t");
+        let n_y = get("n_y");
+        let p = get("p");
+        let eps = meta.get("eps").and_then(|v| v.as_f64()).unwrap_or(0.0) as f32;
+        let ts: Vec<f32> = meta
+            .get("ts")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect())
+            .unwrap_or_default();
+        let label_counts: Vec<usize> = meta
+            .get("label_counts")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default();
+        let per_class = meta
+            .get("per_class_scaler")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
+        let scalers: Vec<super::scaler::MinMaxScaler> = meta
+            .get("scalers")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .map(|o| super::scaler::MinMaxScaler {
+                        mins: o
+                            .get("mins")
+                            .and_then(|v| v.as_arr())
+                            .map(|xs| xs.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect())
+                            .unwrap_or_default(),
+                        maxs: o
+                            .get("maxs")
+                            .and_then(|v| v.as_arr())
+                            .map(|xs| xs.iter().filter_map(|x| x.as_f64()).map(|x| x as f32).collect())
+                            .unwrap_or_default(),
+                        lo: -1.0,
+                        hi: 1.0,
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let schedule = VpSchedule {
+            beta_min: meta.get("beta_min").and_then(|v| v.as_f64()).unwrap_or(0.1) as f32,
+            beta_max: meta.get("beta_max").and_then(|v| v.as_f64()).unwrap_or(20.0) as f32,
+        };
+        assert_eq!(ts.len(), n_t, "meta.json grid mismatch");
+        let mut model = ForestModel::empty(
+            kind,
+            TimeGrid { ts, eps },
+            schedule,
+            ClassScalers { scalers, per_class },
+            label_counts,
+            p,
+        );
+        for t in 0..n_t {
+            for y in 0..n_y {
+                let path = dir.join(format!("t{t:04}_y{y:03}.fbj"));
+                if path.exists() {
+                    model.set_ensemble(t, y, serialize::load(&path)?);
+                }
+            }
+        }
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::scaler::MinMaxScaler;
+
+    fn dummy_model() -> ForestModel {
+        let grid = TimeGrid::uniform(3, 0.0);
+        let scalers = ClassScalers {
+            scalers: vec![MinMaxScaler { mins: vec![0.0], maxs: vec![1.0], lo: -1.0, hi: 1.0 }],
+            per_class: false,
+        };
+        ForestModel::empty(ModelKind::Flow, grid, VpSchedule::default(), scalers, vec![4, 6], 1)
+    }
+
+    #[test]
+    fn slots_and_missing_tracking() {
+        let mut m = dummy_model();
+        assert_eq!(m.ensembles.len(), 6);
+        assert_eq!(m.missing().len(), 6);
+        assert!(!m.is_complete());
+        // Fill one slot with a trivial trained booster.
+        let x = crate::tensor::Matrix::from_vec(4, 1, vec![0.0, 0.3, 0.6, 1.0]);
+        let y = crate::tensor::Matrix::from_vec(4, 1, vec![1.0, 1.0, -1.0, -1.0]);
+        let b = Booster::train(
+            &x.view(),
+            &y.view(),
+            crate::gbt::TrainParams { n_trees: 2, max_depth: 2, ..Default::default() },
+            None,
+        );
+        m.set_ensemble(1, 0, b);
+        assert_eq!(m.n_trained(), 1);
+        assert_eq!(m.missing().len(), 5);
+        assert!(m.missing().iter().all(|&(t, y)| !(t == 1 && y == 0)));
+    }
+
+    #[test]
+    fn save_load_roundtrip_with_holes() {
+        let mut m = dummy_model();
+        let x = crate::tensor::Matrix::from_vec(4, 1, vec![0.0, 0.3, 0.6, 1.0]);
+        let y = crate::tensor::Matrix::from_vec(4, 1, vec![1.0, 1.0, -1.0, -1.0]);
+        let b = Booster::train(
+            &x.view(),
+            &y.view(),
+            crate::gbt::TrainParams { n_trees: 2, max_depth: 2, ..Default::default() },
+            None,
+        );
+        m.set_ensemble(0, 1, b);
+        let dir = std::env::temp_dir().join("caloforest_test_modeldir");
+        let _ = std::fs::remove_dir_all(&dir);
+        m.save_dir(&dir).unwrap();
+        let m2 = ForestModel::load_dir(&dir).unwrap();
+        assert_eq!(m2.kind, ModelKind::Flow);
+        assert_eq!(m2.n_t(), 3);
+        assert_eq!(m2.n_y(), 2);
+        assert_eq!(m2.n_trained(), 1);
+        assert_eq!(m2.missing().len(), 5);
+        assert_eq!(m2.label_counts, vec![4, 6]);
+        // The filled slot predicts identically.
+        let p1 = m.ensemble(0, 1).predict(&x.view());
+        let p2 = m2.ensemble(0, 1).predict(&x.view());
+        assert_eq!(p1.data, p2.data);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,156 @@
+//! Forward corruption and regression-target construction.
+//!
+//! The on-the-fly construction of `x_t` inside each training job is the
+//! paper's Issue-1 fix: nothing of shape `[n_t, n·K, p]` ever exists. These
+//! routines are the Rust mirror of the L1 Pallas kernel
+//! (`python/compile/kernels/noising.py`); a parity test lives in
+//! `python/tests/` via the shared HLO artifact and in
+//! `rust/tests/xla_parity.rs`.
+
+use super::schedule::VpSchedule;
+use crate::tensor::{Matrix, MatrixView};
+
+/// Conditional flow matching (Eq. 5): `x_t = t·x1 + (1−t)·x0` (σ = 0).
+/// The regression target `x1 − x0` is time-independent.
+pub fn cfm_inputs(x0: &MatrixView<'_>, x1: &MatrixView<'_>, t: f32, out: &mut Matrix) {
+    debug_assert_eq!(x0.rows, x1.rows);
+    debug_assert_eq!(x0.cols, x1.cols);
+    debug_assert_eq!(out.rows, x0.rows);
+    for i in 0..x0.data.len() {
+        out.data[i] = t * x1.data[i] + (1.0 - t) * x0.data[i];
+    }
+}
+
+/// CFM regression target (Eq. 5): `μ_t = x1 − x0`.
+pub fn cfm_targets(x0: &MatrixView<'_>, x1: &MatrixView<'_>, out: &mut Matrix) {
+    for i in 0..x0.data.len() {
+        out.data[i] = x1.data[i] - x0.data[i];
+    }
+}
+
+/// VP-SDE corruption (Eq. 2): `x_t = α_t·x0 + σ_t·ε` where `ε` is the
+/// supplied standard normal draw (reusing the same `x1` buffer the flow path
+/// uses keeps the duplication-K bookkeeping identical for both methods).
+pub fn diffusion_inputs(
+    x0: &MatrixView<'_>,
+    eps: &MatrixView<'_>,
+    t: f32,
+    schedule: &VpSchedule,
+    out: &mut Matrix,
+) {
+    let alpha = schedule.alpha(t);
+    let sigma = schedule.sigma(t);
+    for i in 0..x0.data.len() {
+        out.data[i] = alpha * x0.data[i] + sigma * eps.data[i];
+    }
+}
+
+/// Denoising score target (Eq. 1): `∇ log p_t(x_t|x0) = −ε/σ_t`.
+pub fn diffusion_targets(
+    eps: &MatrixView<'_>,
+    t: f32,
+    schedule: &VpSchedule,
+    out: &mut Matrix,
+) {
+    let sigma = schedule.sigma(t).max(1e-5);
+    let inv = -1.0 / sigma;
+    for i in 0..eps.data.len() {
+        out.data[i] = inv * eps.data[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, forall, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cfm_endpoints() {
+        let mut rng = Rng::new(1);
+        let x0 = Matrix::randn(10, 4, &mut rng);
+        let x1 = Matrix::randn(10, 4, &mut rng);
+        let mut out = Matrix::zeros(10, 4);
+        cfm_inputs(&x0.view(), &x1.view(), 0.0, &mut out);
+        assert_close(&out.data, &x0.data, 1e-7, 0.0).unwrap();
+        cfm_inputs(&x0.view(), &x1.view(), 1.0, &mut out);
+        assert_close(&out.data, &x1.data, 1e-7, 0.0).unwrap();
+    }
+
+    #[test]
+    fn cfm_target_is_difference() {
+        let x0 = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let x1 = Matrix::from_vec(1, 2, vec![4.0, 0.0]);
+        let mut z = Matrix::zeros(1, 2);
+        cfm_targets(&x0.view(), &x1.view(), &mut z);
+        assert_eq!(z.data, vec![3.0, -2.0]);
+    }
+
+    #[test]
+    fn cfm_linearity_property() {
+        forall("x_t is on the segment x0→x1", Config::default(), |rng, _| {
+            let x0 = Matrix::randn(5, 3, rng);
+            let x1 = Matrix::randn(5, 3, rng);
+            let t = rng.uniform_f32();
+            let mut out = Matrix::zeros(5, 3);
+            cfm_inputs(&x0.view(), &x1.view(), t, &mut out);
+            for i in 0..out.data.len() {
+                let lo = x0.data[i].min(x1.data[i]) - 1e-5;
+                let hi = x0.data[i].max(x1.data[i]) + 1e-5;
+                if out.data[i] < lo || out.data[i] > hi {
+                    return Err(format!("x_t[{i}] off-segment"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn diffusion_variance_preserving() {
+        // Marginal variance of x_t for unit-variance data stays ≈ 1.
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let x0 = Matrix::randn(n, 1, &mut rng);
+        let eps = Matrix::randn(n, 1, &mut rng);
+        let sched = VpSchedule::default();
+        for &t in &[0.1f32, 0.5, 0.9] {
+            let mut out = Matrix::zeros(n, 1);
+            diffusion_inputs(&x0.view(), &eps.view(), t, &sched, &mut out);
+            let var: f64 = out.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+                / n as f64;
+            assert!((var - 1.0).abs() < 0.05, "t={t}: var={var}");
+        }
+    }
+
+    #[test]
+    fn score_target_scales_inverse_sigma() {
+        let eps = Matrix::from_vec(1, 1, vec![1.0]);
+        let sched = VpSchedule::default();
+        let mut z_early = Matrix::zeros(1, 1);
+        let mut z_late = Matrix::zeros(1, 1);
+        diffusion_targets(&eps.view(), 0.05, &sched, &mut z_early);
+        diffusion_targets(&eps.view(), 1.0, &sched, &mut z_late);
+        // Near data (small t) the score is much larger in magnitude.
+        assert!(z_early.data[0].abs() > z_late.data[0].abs() * 3.0);
+        assert!(z_late.data[0] < 0.0);
+    }
+
+    #[test]
+    fn score_identity_recovers_eps() {
+        // x_t = α x0 + σ ε  ⇒  score = -(x_t - α x0)/σ² = -ε/σ.
+        let mut rng = Rng::new(3);
+        let x0 = Matrix::randn(50, 2, &mut rng);
+        let eps = Matrix::randn(50, 2, &mut rng);
+        let sched = VpSchedule::default();
+        let t = 0.6;
+        let mut xt = Matrix::zeros(50, 2);
+        let mut z = Matrix::zeros(50, 2);
+        diffusion_inputs(&x0.view(), &eps.view(), t, &sched, &mut xt);
+        diffusion_targets(&eps.view(), t, &sched, &mut z);
+        let (a, s) = (sched.alpha(t), sched.sigma(t));
+        for i in 0..z.data.len() {
+            let direct = -(xt.data[i] - a * x0.data[i]) / (s * s);
+            assert!((z.data[i] - direct).abs() < 1e-4, "i={i}");
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! Generation: Euler ODE (flow) and Euler–Maruyama reverse SDE (diffusion).
+//!
+//! Implements the paper's improved generation pipeline (Issues 8/9): classes
+//! are iterated in the *outer* loop so each class's batch stays contiguous
+//! through every timestep and results are concatenated once at the end; the
+//! whole `[n_i × p]` vector field is produced by a single ensemble call per
+//! step.
+//!
+//! The vector-field evaluation is abstracted behind [`FieldEval`] so the
+//! sampler runs identically over the native Rust predictor and the AOT XLA
+//! backend ([`crate::runtime::xla_sampler`]); a parity test pins them
+//! together.
+
+use super::model::{ForestModel, ModelKind};
+use crate::tensor::{Matrix, MatrixView};
+use crate::util::rng::Rng;
+
+/// How class labels are drawn for conditional generation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LabelSampler {
+    /// Multinomial draw with training-set frequencies (the original
+    /// implementation).
+    Multinomial,
+    /// Deterministic proportional allocation matching the empirical label
+    /// distribution (§C.4; also mandated by the CaloChallenge).
+    Empirical,
+}
+
+/// Generation configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct GenerateConfig {
+    /// Number of rows to generate.
+    pub n: usize,
+    pub seed: u64,
+    pub label_sampler: LabelSampler,
+    /// Clip scaled samples to the training range [-1, 1] before inverse
+    /// scaling.
+    pub clip: bool,
+}
+
+impl GenerateConfig {
+    pub fn new(n: usize, seed: u64) -> GenerateConfig {
+        GenerateConfig { n, seed, label_sampler: LabelSampler::Empirical, clip: true }
+    }
+}
+
+/// Pluggable vector-field backend.
+pub trait FieldEval {
+    /// Evaluate the field at grid index `t_idx` for class `y` over batch `x`
+    /// (scaled space), writing row-major `[n × p]` into `out`.
+    fn eval(&self, t_idx: usize, y: usize, x: &MatrixView<'_>, out: &mut [f32]);
+}
+
+/// Native backend: direct booster traversal.
+pub struct NativeField<'a>(pub &'a ForestModel);
+
+impl<'a> FieldEval for NativeField<'a> {
+    fn eval(&self, t_idx: usize, y: usize, x: &MatrixView<'_>, out: &mut [f32]) {
+        self.0.eval_field(t_idx, y, x, out);
+    }
+}
+
+/// Allocate per-class generation counts.
+pub fn sample_labels(
+    counts: &[usize],
+    n: usize,
+    sampler: LabelSampler,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let total: usize = counts.iter().sum();
+    assert!(total > 0, "empty training label counts");
+    match sampler {
+        LabelSampler::Multinomial => {
+            let probs: Vec<f64> = counts.iter().map(|&c| c as f64 / total as f64).collect();
+            rng.multinomial(n, &probs)
+        }
+        LabelSampler::Empirical => {
+            // Largest-remainder proportional allocation.
+            let mut alloc: Vec<usize> = counts
+                .iter()
+                .map(|&c| c * n / total)
+                .collect();
+            let mut assigned: usize = alloc.iter().sum();
+            // Distribute the remainder by descending fractional part.
+            let mut fracs: Vec<(usize, f64)> = counts
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| (i, (c * n % total) as f64 / total as f64))
+                .collect();
+            fracs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut i = 0;
+            while assigned < n {
+                alloc[fracs[i % fracs.len()].0] += 1;
+                assigned += 1;
+                i += 1;
+            }
+            alloc
+        }
+    }
+}
+
+/// Generate `cfg.n` samples with the native backend.
+pub fn generate(model: &ForestModel, cfg: &GenerateConfig) -> (Matrix, Vec<u32>) {
+    generate_with(model, &NativeField(model), cfg)
+}
+
+/// Generate with an arbitrary vector-field backend.
+pub fn generate_with(
+    model: &ForestModel,
+    field: &dyn FieldEval,
+    cfg: &GenerateConfig,
+) -> (Matrix, Vec<u32>) {
+    let mut rng = Rng::new(cfg.seed);
+    let per_class = sample_labels(&model.label_counts, cfg.n, cfg.label_sampler, &mut rng);
+    let p = model.p;
+
+    let mut parts: Vec<Matrix> = Vec::with_capacity(per_class.len());
+    let mut labels: Vec<u32> = Vec::with_capacity(cfg.n);
+    for (y, &n_y) in per_class.iter().enumerate() {
+        if n_y == 0 {
+            parts.push(Matrix::zeros(0, p));
+            continue;
+        }
+        let mut x = Matrix::randn(n_y, p, &mut rng);
+        match model.kind {
+            ModelKind::Flow => flow_solve(model, field, y, &mut x),
+            ModelKind::Diffusion => diffusion_solve(model, field, y, &mut x, &mut rng),
+        }
+        if cfg.clip {
+            for v in x.data.iter_mut() {
+                *v = v.clamp(-1.0, 1.0);
+            }
+        }
+        model.scalers.scaler_for(y).inverse(&mut x);
+        labels.extend(std::iter::repeat(y as u32).take(n_y));
+        parts.push(x);
+    }
+    let refs: Vec<&Matrix> = parts.iter().collect();
+    (Matrix::concat_rows(&refs), labels)
+}
+
+/// Euler ODE for the probability-flow: `x ← x − h·ν(x, t)` from t=1 down the
+/// grid (the paper's generation loop, class-outer ordering).
+fn flow_solve(model: &ForestModel, field: &dyn FieldEval, y: usize, x: &mut Matrix) {
+    let n_t = model.n_t();
+    let h = model.grid.step();
+    let mut v = vec![0.0f32; x.data.len()];
+    for t_idx in (0..n_t).rev() {
+        field.eval(t_idx, y, &x.view(), &mut v);
+        for i in 0..x.data.len() {
+            x.data[i] -= h * v[i];
+        }
+    }
+}
+
+/// Euler–Maruyama for the reverse VP-SDE:
+/// `x ← x + [½β x + β·s(x,t)]·h + √(β h)·z`, integrating t: 1 → ε.
+/// The final step adds no noise (standard practice).
+fn diffusion_solve(
+    model: &ForestModel,
+    field: &dyn FieldEval,
+    y: usize,
+    x: &mut Matrix,
+    rng: &mut Rng,
+) {
+    let n_t = model.n_t();
+    let h = model.grid.step();
+    let sched = &model.schedule;
+    let mut s = vec![0.0f32; x.data.len()];
+    for (step, t_idx) in (0..n_t).rev().enumerate() {
+        let t = model.grid.ts[t_idx];
+        let beta = sched.beta(t);
+        field.eval(t_idx, y, &x.view(), &mut s);
+        let noise_scale = if step + 1 == n_t { 0.0 } else { (beta * h).sqrt() };
+        for i in 0..x.data.len() {
+            let drift = 0.5 * beta * x.data[i] + beta * s[i];
+            let z = if noise_scale > 0.0 { rng.normal_f32() } else { 0.0 };
+            x.data[i] += drift * h + noise_scale * z;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::trainer::{train_forest, ForestTrainConfig};
+    use crate::gbt::{TrainParams, TreeKind};
+    use crate::util::stats;
+
+    fn blob_data(n: usize, centers: &[(f32, f32)], seed: u64) -> (Matrix, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, 2);
+        let mut y = Vec::with_capacity(n);
+        for r in 0..n {
+            let c = r % centers.len();
+            x.set(r, 0, centers[c].0 + 0.2 * rng.normal_f32());
+            x.set(r, 1, centers[c].1 + 0.2 * rng.normal_f32());
+            y.push(c as u32);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn label_allocation_empirical_is_exact() {
+        let mut rng = Rng::new(1);
+        let alloc = sample_labels(&[30, 60, 10], 200, LabelSampler::Empirical, &mut rng);
+        assert_eq!(alloc.iter().sum::<usize>(), 200);
+        assert_eq!(alloc, vec![60, 120, 20]);
+    }
+
+    #[test]
+    fn label_allocation_multinomial_sums() {
+        let mut rng = Rng::new(2);
+        let alloc = sample_labels(&[50, 50], 100, LabelSampler::Multinomial, &mut rng);
+        assert_eq!(alloc.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn flow_generates_near_training_distribution() {
+        // A tight 1-D cluster must be recovered in mean by the flow.
+        let (x, _) = blob_data(200, &[(2.0, -1.0)], 3);
+        let cfg = ForestTrainConfig {
+            n_t: 12,
+            k_dup: 10,
+            params: TrainParams { n_trees: 25, max_depth: 4, ..Default::default() },
+            seed: 4,
+            ..Default::default()
+        };
+        let (model, _) = train_forest(&cfg, &x, None);
+        let (gen, labels) = generate(&model, &GenerateConfig::new(300, 99));
+        assert_eq!(gen.rows, 300);
+        assert_eq!(labels.len(), 300);
+        let m0 = stats::mean(&gen.col(0).iter().map(|&v| v as f64).collect::<Vec<_>>());
+        let m1 = stats::mean(&gen.col(1).iter().map(|&v| v as f64).collect::<Vec<_>>());
+        assert!((m0 - 2.0).abs() < 0.4, "mean0={m0}");
+        assert!((m1 + 1.0).abs() < 0.4, "mean1={m1}");
+    }
+
+    #[test]
+    fn conditional_generation_respects_classes() {
+        let (x, y) = blob_data(300, &[(-3.0, 0.0), (3.0, 0.0)], 5);
+        let cfg = ForestTrainConfig {
+            n_t: 10,
+            k_dup: 8,
+            params: TrainParams { n_trees: 20, max_depth: 4, ..Default::default() },
+            seed: 6,
+            ..Default::default()
+        };
+        let (model, _) = train_forest(&cfg, &x, Some(&y));
+        let (gen, labels) = generate(&model, &GenerateConfig::new(200, 7));
+        // Class 0 samples should sit near x=-3, class 1 near x=+3.
+        let mut sums = [0.0f64; 2];
+        let mut counts = [0usize; 2];
+        for (r, &l) in labels.iter().enumerate() {
+            sums[l as usize] += gen.at(r, 0) as f64;
+            counts[l as usize] += 1;
+        }
+        assert_eq!(counts[0] + counts[1], 200);
+        assert!(counts[0] > 50 && counts[1] > 50);
+        let mean0 = sums[0] / counts[0] as f64;
+        let mean1 = sums[1] / counts[1] as f64;
+        assert!(mean0 < -1.5, "class 0 mean {mean0}");
+        assert!(mean1 > 1.5, "class 1 mean {mean1}");
+    }
+
+    #[test]
+    fn diffusion_sampler_runs_and_stays_finite() {
+        let (x, _) = blob_data(150, &[(1.0, 1.0)], 8);
+        let cfg = ForestTrainConfig {
+            kind: ModelKind::Diffusion,
+            eps: 0.01,
+            n_t: 15,
+            k_dup: 8,
+            params: TrainParams { n_trees: 20, max_depth: 4, ..Default::default() },
+            seed: 9,
+            ..Default::default()
+        };
+        let (model, _) = train_forest(&cfg, &x, None);
+        let (gen, _) = generate(&model, &GenerateConfig::new(100, 10));
+        assert!(gen.data.iter().all(|v| v.is_finite()));
+        let m0 = stats::mean(&gen.col(0).iter().map(|&v| v as f64).collect::<Vec<_>>());
+        assert!((m0 - 1.0).abs() < 0.6, "diffusion mean {m0}");
+    }
+
+    #[test]
+    fn multi_output_trees_generate() {
+        let (x, y) = blob_data(120, &[(-2.0, 2.0), (2.0, -2.0)], 11);
+        let cfg = ForestTrainConfig {
+            n_t: 8,
+            k_dup: 6,
+            params: TrainParams {
+                n_trees: 15,
+                max_depth: 4,
+                kind: TreeKind::Multi,
+                ..Default::default()
+            },
+            seed: 12,
+            ..Default::default()
+        };
+        let (model, _) = train_forest(&cfg, &x, Some(&y));
+        let (gen, labels) = generate(&model, &GenerateConfig::new(80, 13));
+        assert_eq!(gen.rows, 80);
+        assert!(gen.data.iter().all(|v| v.is_finite()));
+        assert!(labels.iter().any(|&l| l == 0) && labels.iter().any(|&l| l == 1));
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let (x, _) = blob_data(60, &[(0.0, 0.0)], 14);
+        let cfg = ForestTrainConfig {
+            n_t: 5,
+            k_dup: 4,
+            params: TrainParams { n_trees: 8, max_depth: 3, ..Default::default() },
+            seed: 15,
+            ..Default::default()
+        };
+        let (model, _) = train_forest(&cfg, &x, None);
+        let g1 = generate(&model, &GenerateConfig::new(50, 42));
+        let g2 = generate(&model, &GenerateConfig::new(50, 42));
+        let g3 = generate(&model, &GenerateConfig::new(50, 43));
+        assert_eq!(g1.0.data, g2.0.data);
+        assert_ne!(g1.0.data, g3.0.data);
+    }
+}

@@ -1,0 +1,203 @@
+//! Min-max scaling to the noise range `[-1, 1]`.
+//!
+//! ForestFlow/ForestDiffusion require data on the scale of the standard
+//! normal noise (§3.2). The paper's §C.3 improvement fits a *separate*
+//! scaler per class: calorimeter classes span exponentially different
+//! energies, and a single global scaler leaves most classes squeezed into a
+//! tiny slice of `[-1, 1]`.
+
+use crate::tensor::Matrix;
+
+/// Per-feature affine scaler mapping observed `[min, max]` to `[lo, hi]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MinMaxScaler {
+    pub mins: Vec<f32>,
+    pub maxs: Vec<f32>,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl MinMaxScaler {
+    /// Fit on data (NaNs ignored). Constant features map to the midpoint.
+    pub fn fit(x: &Matrix, lo: f32, hi: f32) -> MinMaxScaler {
+        let (mins, maxs) = x.col_min_max();
+        MinMaxScaler { mins, maxs, lo, hi }
+    }
+
+    /// Fit over the default `[-1, 1]` range.
+    pub fn fit_default(x: &Matrix) -> MinMaxScaler {
+        Self::fit(x, -1.0, 1.0)
+    }
+
+    #[inline]
+    fn scale_of(&self, c: usize) -> (f32, f32) {
+        let span = self.maxs[c] - self.mins[c];
+        if !span.is_finite() || span <= 0.0 {
+            // Constant or all-missing feature: map to midpoint.
+            (0.0, 0.5 * (self.lo + self.hi))
+        } else {
+            let a = (self.hi - self.lo) / span;
+            (a, self.lo - a * self.mins[c])
+        }
+    }
+
+    /// Transform in place (NaN passes through — XGBoost handles missing).
+    pub fn transform(&self, x: &mut Matrix) {
+        assert_eq!(x.cols, self.mins.len());
+        for c in 0..x.cols {
+            let (a, b) = self.scale_of(c);
+            for r in 0..x.rows {
+                let v = x.at(r, c);
+                if !v.is_nan() {
+                    x.set(r, c, a * v + b);
+                }
+            }
+        }
+    }
+
+    /// Inverse transform in place.
+    pub fn inverse(&self, x: &mut Matrix) {
+        assert_eq!(x.cols, self.mins.len());
+        for c in 0..x.cols {
+            let (a, b) = self.scale_of(c);
+            for r in 0..x.rows {
+                let v = x.at(r, c);
+                if v.is_nan() {
+                    continue;
+                }
+                if a == 0.0 {
+                    // Constant feature: restore the constant.
+                    x.set(r, c, self.mins[c]);
+                } else {
+                    x.set(r, c, (v - b) / a);
+                }
+            }
+        }
+    }
+}
+
+/// One scaler per class (or a single global one).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassScalers {
+    pub scalers: Vec<MinMaxScaler>,
+    pub per_class: bool,
+}
+
+impl ClassScalers {
+    /// Fit per-class scalers on class-sorted data given contiguous row
+    /// ranges per class.
+    pub fn fit_per_class(x: &Matrix, class_ranges: &[(usize, usize)]) -> ClassScalers {
+        let scalers = class_ranges
+            .iter()
+            .map(|&(s, e)| MinMaxScaler::fit_default(&x.row_slice(s, e).to_matrix()))
+            .collect();
+        ClassScalers { scalers, per_class: true }
+    }
+
+    /// Fit a single global scaler (the original implementation's behaviour).
+    pub fn fit_global(x: &Matrix) -> ClassScalers {
+        ClassScalers { scalers: vec![MinMaxScaler::fit_default(x)], per_class: false }
+    }
+
+    pub fn scaler_for(&self, class: usize) -> &MinMaxScaler {
+        if self.per_class {
+            &self.scalers[class]
+        } else {
+            &self.scalers[0]
+        }
+    }
+
+    /// Transform class-sorted data in place.
+    pub fn transform(&self, x: &mut Matrix, class_ranges: &[(usize, usize)]) {
+        if !self.per_class {
+            self.scalers[0].transform(x);
+            return;
+        }
+        for (class, &(s, e)) in class_ranges.iter().enumerate() {
+            let mut sub = x.row_slice(s, e).to_matrix();
+            self.scalers[class].transform(&mut sub);
+            x.data[s * x.cols..e * x.cols].copy_from_slice(&sub.data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn transform_maps_to_range_and_inverts() {
+        let mut rng = Rng::new(1);
+        let mut x = Matrix::randn(100, 3, &mut rng);
+        for v in x.data.iter_mut() {
+            *v = *v * 13.0 + 5.0;
+        }
+        let orig = x.clone();
+        let s = MinMaxScaler::fit_default(&x);
+        s.transform(&mut x);
+        let (mins, maxs) = x.col_min_max();
+        for c in 0..3 {
+            assert!((mins[c] + 1.0).abs() < 1e-5);
+            assert!((maxs[c] - 1.0).abs() < 1e-5);
+        }
+        s.inverse(&mut x);
+        for i in 0..x.data.len() {
+            assert!((x.data[i] - orig.data[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn constant_feature_roundtrip() {
+        let mut x = Matrix::full(10, 1, 42.0);
+        let s = MinMaxScaler::fit_default(&x);
+        s.transform(&mut x);
+        assert!(x.data.iter().all(|&v| v.abs() < 1e-6), "constant maps to midpoint 0");
+        s.inverse(&mut x);
+        assert!(x.data.iter().all(|&v| (v - 42.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn nan_passthrough() {
+        let mut x = Matrix::from_vec(3, 1, vec![0.0, f32::NAN, 10.0]);
+        let s = MinMaxScaler::fit_default(&x);
+        s.transform(&mut x);
+        assert!(x.at(1, 0).is_nan());
+        assert!((x.at(0, 0) + 1.0).abs() < 1e-6);
+        assert!((x.at(2, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_class_scalers_center_each_class() {
+        // Two classes with wildly different scales (the calorimeter story).
+        let mut x = Matrix::zeros(8, 1);
+        for r in 0..4 {
+            x.set(r, 0, r as f32); // class 0: 0..3
+        }
+        for r in 4..8 {
+            x.set(r, 0, 1000.0 + r as f32 * 100.0); // class 1: huge
+        }
+        let ranges = vec![(0, 4), (4, 8)];
+        let cs = ClassScalers::fit_per_class(&x, &ranges);
+        cs.transform(&mut x, &ranges);
+        // Each class occupies the full [-1, 1] range.
+        for &(s, e) in &ranges {
+            let sub = x.row_slice(s, e).to_matrix();
+            let (mins, maxs) = sub.col_min_max();
+            assert!((mins[0] + 1.0).abs() < 1e-5);
+            assert!((maxs[0] - 1.0).abs() < 1e-5);
+        }
+        // A global scaler would squeeze class 0 near -1.
+        let mut x2 = Matrix::zeros(8, 1);
+        for r in 0..4 {
+            x2.set(r, 0, r as f32);
+        }
+        for r in 4..8 {
+            x2.set(r, 0, 1000.0 + r as f32 * 100.0);
+        }
+        let gs = ClassScalers::fit_global(&x2);
+        gs.transform(&mut x2, &ranges);
+        let class0_max = (0..4).map(|r| x2.at(r, 0)).fold(f32::MIN, f32::max);
+        assert!(class0_max < -0.99, "global scaler squeezes class 0: {class0_max}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Time discretization and noise schedules.
+//!
+//! ForestFlow uses a uniform grid on `[0, 1]`; ForestDiffusion additionally
+//! needs the VP-SDE marginal standard deviation `σ_t` (Eq. 2) with the
+//! linear β-schedule of Song et al. (β_min = 0.1, β_max = 20). Time is
+//! clipped below at `eps` (the paper's ε hyperparameter, Table 9) to avoid
+//! the score target `−ε_noise/σ_t` diverging at t→0.
+
+/// Discrete time grid shared by training and sampling.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimeGrid {
+    /// Grid values, ascending in `[eps, 1]`, length `n_t`.
+    pub ts: Vec<f32>,
+    pub eps: f32,
+}
+
+impl TimeGrid {
+    /// Uniform grid of `n_t` points from `eps` to 1 inclusive.
+    pub fn uniform(n_t: usize, eps: f32) -> TimeGrid {
+        assert!(n_t >= 2, "need at least two timesteps");
+        let ts = (0..n_t)
+            .map(|i| eps + (1.0 - eps) * i as f32 / (n_t - 1) as f32)
+            .collect();
+        TimeGrid { ts, eps }
+    }
+
+    /// Cosine-warped grid concentrating points near t=0 (data side), the
+    /// §C.2 "non-uniform partitioning" extension the paper leaves as future
+    /// work: early-stopping showed SO models only need capacity near data.
+    pub fn cosine(n_t: usize, eps: f32) -> TimeGrid {
+        assert!(n_t >= 2);
+        let ts = (0..n_t)
+            .map(|i| {
+                let u = i as f32 / (n_t - 1) as f32;
+                let warped = 1.0 - (std::f32::consts::FRAC_PI_2 * (1.0 - u)).sin();
+                eps + (1.0 - eps) * warped.clamp(0.0, 1.0)
+            })
+            .collect();
+        TimeGrid { ts, eps }
+    }
+
+    pub fn n_t(&self) -> usize {
+        self.ts.len()
+    }
+
+    /// Step size between consecutive grid points (uniform grid).
+    pub fn step(&self) -> f32 {
+        (1.0 - self.eps) / (self.n_t() - 1) as f32
+    }
+}
+
+/// VP-SDE linear β-schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct VpSchedule {
+    pub beta_min: f32,
+    pub beta_max: f32,
+}
+
+impl Default for VpSchedule {
+    fn default() -> Self {
+        VpSchedule { beta_min: 0.1, beta_max: 20.0 }
+    }
+}
+
+impl VpSchedule {
+    /// β(t).
+    #[inline]
+    pub fn beta(&self, t: f32) -> f32 {
+        self.beta_min + t * (self.beta_max - self.beta_min)
+    }
+
+    /// ∫₀ᵗ β(s) ds.
+    #[inline]
+    pub fn beta_integral(&self, t: f32) -> f32 {
+        self.beta_min * t + 0.5 * (self.beta_max - self.beta_min) * t * t
+    }
+
+    /// Signal coefficient α_t = √(1 − σ_t²) = exp(−½∫β).
+    #[inline]
+    pub fn alpha(&self, t: f32) -> f32 {
+        (-0.5 * self.beta_integral(t)).exp()
+    }
+
+    /// Marginal standard deviation σ_t of Eq. (2).
+    #[inline]
+    pub fn sigma(&self, t: f32) -> f32 {
+        let a = self.alpha(t);
+        (1.0 - a * a).max(1e-12).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_grid_endpoints_and_spacing() {
+        let g = TimeGrid::uniform(5, 0.0);
+        assert_eq!(g.ts, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+        assert!((g.step() - 0.25).abs() < 1e-7);
+        let ge = TimeGrid::uniform(50, 0.001);
+        assert!((ge.ts[0] - 0.001).abs() < 1e-7);
+        assert!((ge.ts[49] - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn cosine_grid_is_monotone_and_denser_near_zero() {
+        let g = TimeGrid::cosine(11, 0.0);
+        assert!(g.ts.windows(2).all(|w| w[1] > w[0]));
+        assert!((g.ts[0]).abs() < 1e-6);
+        assert!((g.ts[10] - 1.0).abs() < 1e-6);
+        // First gap smaller than last gap.
+        assert!(g.ts[1] - g.ts[0] < g.ts[10] - g.ts[9]);
+    }
+
+    #[test]
+    fn vp_schedule_limits() {
+        let s = VpSchedule::default();
+        assert!(s.sigma(0.0) < 1e-5, "no noise at t=0");
+        assert!(s.sigma(1.0) > 0.99, "fully noised at t=1");
+        assert!((s.alpha(0.0) - 1.0).abs() < 1e-6);
+        // σ monotone increasing.
+        let sig: Vec<f32> = (0..=10).map(|i| s.sigma(i as f32 / 10.0)).collect();
+        assert!(sig.windows(2).all(|w| w[1] >= w[0]));
+        // α² + σ² = 1 (variance preserving).
+        for i in 0..=10 {
+            let t = i as f32 / 10.0;
+            let a = s.alpha(t);
+            let sg = s.sigma(t);
+            assert!((a * a + sg * sg - 1.0).abs() < 1e-5);
+        }
+    }
+}

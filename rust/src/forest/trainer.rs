@@ -1,0 +1,448 @@
+//! Training-job construction and the sequential trainer.
+//!
+//! [`Prepared`] holds exactly the state the paper's improved implementation
+//! keeps in (shared) memory: the class-sorted, per-class-scaled, K-duplicated
+//! `X0'`, the matching noise draw `X1`, and per-class row *slices* (Issue 5:
+//! no Boolean masks, no advanced-indexing copies). Each `(t, y)` job builds
+//! its regression inputs on the fly (Issue 1), bins them once for all `p`
+//! outputs (Issue 6), and everything stays `f32` (Issue 7).
+//!
+//! Parallel execution with the shared-memory policy (Issue 2) and streaming
+//! model store (Issue 3) is the coordinator's job
+//! ([`crate::coordinator::run_training`]); this module exposes the pure
+//! per-job function [`train_job`] it schedules.
+
+use super::model::{ForestModel, ModelKind};
+use super::noising;
+use super::scaler::ClassScalers;
+use super::schedule::{TimeGrid, VpSchedule};
+use crate::gbt::{Booster, TrainParams};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Time-grid shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GridKind {
+    Uniform,
+    /// §C.2 extension: denser near the data side.
+    Cosine,
+}
+
+/// Full training configuration.
+#[derive(Clone, Debug)]
+pub struct ForestTrainConfig {
+    pub kind: ModelKind,
+    /// Per-ensemble GBT hyperparameters (tree kind, n_tree, depth, η, λ,
+    /// early stopping...).
+    pub params: TrainParams,
+    /// Number of time discretization steps n_t.
+    pub n_t: usize,
+    /// Duplication factor K.
+    pub k_dup: usize,
+    /// Minimum time ε (Table 9: 0.001 for FD, 0 for FF).
+    pub eps: f32,
+    /// Per-class min-max scalers (§C.3) vs a single global scaler.
+    pub per_class_scaler: bool,
+    /// Validate with fresh noise on the training set (enables the §3.4
+    /// early-stopping scheme; requires `params.early_stopping_rounds > 0`).
+    pub fresh_noise_validation: bool,
+    pub grid_kind: GridKind,
+    pub seed: u64,
+}
+
+impl Default for ForestTrainConfig {
+    fn default() -> Self {
+        ForestTrainConfig {
+            kind: ModelKind::Flow,
+            params: TrainParams::default(),
+            n_t: 50,
+            k_dup: 100,
+            eps: 0.0,
+            per_class_scaler: true,
+            fresh_noise_validation: false,
+            grid_kind: GridKind::Uniform,
+            seed: 0,
+        }
+    }
+}
+
+/// Read-only state shared by every training job.
+#[derive(Debug)]
+pub struct Prepared {
+    /// Scaled, class-sorted, K-duplicated data `[n·K × p]`.
+    pub x0: Matrix,
+    /// Standard-normal noise, same shape.
+    pub x1: Matrix,
+    /// Undup'd scaled data for fresh-noise validation.
+    pub x0_val: Option<Matrix>,
+    /// Fresh noise for validation.
+    pub x1_val: Option<Matrix>,
+    pub grid: TimeGrid,
+    pub schedule: VpSchedule,
+    /// Contiguous `[start, end)` per class in the *duplicated* rows.
+    pub class_ranges_dup: Vec<(usize, usize)>,
+    /// Contiguous `[start, end)` per class in the *original* rows.
+    pub class_ranges: Vec<(usize, usize)>,
+    pub scalers: ClassScalers,
+    pub label_counts: Vec<usize>,
+    pub n: usize,
+    pub p: usize,
+}
+
+impl Prepared {
+    /// Logical bytes of the shared arrays (feeds the memory model).
+    pub fn nbytes(&self) -> usize {
+        self.x0.nbytes()
+            + self.x1.nbytes()
+            + self.x0_val.as_ref().map(|m| m.nbytes()).unwrap_or(0)
+            + self.x1_val.as_ref().map(|m| m.nbytes()).unwrap_or(0)
+    }
+}
+
+/// Sort rows by label, fit scalers, duplicate K-fold, and draw noise.
+///
+/// `y = None` trains unconditionally (a single pseudo-class).
+pub fn prepare(cfg: &ForestTrainConfig, x_raw: &Matrix, y: Option<&[u32]>) -> Prepared {
+    let n = x_raw.rows;
+    let p = x_raw.cols;
+    let mut rng = Rng::new(cfg.seed);
+
+    // Class-sort (Issue 5): stable argsort by label.
+    let (x_sorted, label_counts, class_ranges) = match y {
+        Some(labels) => {
+            assert_eq!(labels.len(), n, "label/row mismatch");
+            let order = crate::util::stats::argsort_u32(labels);
+            let x_sorted = x_raw.take_rows(&order);
+            let n_y = labels.iter().map(|&l| l as usize).max().unwrap_or(0) + 1;
+            let mut counts = vec![0usize; n_y];
+            for &l in labels {
+                counts[l as usize] += 1;
+            }
+            let mut ranges = Vec::with_capacity(n_y);
+            let mut cum = 0;
+            for &c in &counts {
+                ranges.push((cum, cum + c));
+                cum += c;
+            }
+            (x_sorted, counts, ranges)
+        }
+        None => (x_raw.clone(), vec![n], vec![(0, n)]),
+    };
+
+    // Per-class (or global) scaling to [-1, 1] (§C.3).
+    let mut x_scaled = x_sorted;
+    let scalers = if cfg.per_class_scaler {
+        ClassScalers::fit_per_class(&x_scaled, &class_ranges)
+    } else {
+        ClassScalers::fit_global(&x_scaled)
+    };
+    scalers.transform(&mut x_scaled, &class_ranges);
+
+    // K-fold duplication with class contiguity preserved.
+    let k = cfg.k_dup.max(1);
+    let x0 = x_scaled.repeat_rows(k);
+    let class_ranges_dup: Vec<(usize, usize)> =
+        class_ranges.iter().map(|&(s, e)| (s * k, e * k)).collect();
+    let mut x1 = Matrix::zeros(x0.rows, p);
+    rng.fill_normal(&mut x1.data);
+
+    // Fresh-noise validation arrays (§3.4): reuse X0 (undup'd), new X1.
+    let (x0_val, x1_val) = if cfg.fresh_noise_validation {
+        let mut noise = Matrix::zeros(n, p);
+        rng.fill_normal(&mut noise.data);
+        (Some(x_scaled), Some(noise))
+    } else {
+        (None, None)
+    };
+
+    let grid = match cfg.grid_kind {
+        GridKind::Uniform => TimeGrid::uniform(cfg.n_t, cfg.eps),
+        GridKind::Cosine => TimeGrid::cosine(cfg.n_t, cfg.eps),
+    };
+
+    Prepared {
+        x0,
+        x1,
+        x0_val,
+        x1_val,
+        grid,
+        schedule: VpSchedule::default(),
+        class_ranges_dup,
+        class_ranges,
+        scalers,
+        label_counts,
+        n,
+        p,
+    }
+}
+
+/// Per-job training record (Fig 3/10: best iteration by timestep).
+#[derive(Clone, Copy, Debug)]
+pub struct JobRecord {
+    pub t_idx: usize,
+    pub y: usize,
+    /// Best boosting round (0-based).
+    pub best_round: usize,
+    /// Rounds actually trained before stopping.
+    pub rounds_trained: usize,
+    pub final_train_loss: f64,
+    pub final_valid_loss: Option<f64>,
+    pub seconds: f64,
+    /// Serialized ensemble size.
+    pub nbytes: usize,
+}
+
+/// Aggregate training report.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub jobs: Vec<JobRecord>,
+    pub total_seconds: f64,
+}
+
+impl TrainReport {
+    /// Mean best-round per timestep (averaged over classes) — the Fig 3/10
+    /// series.
+    pub fn best_rounds_by_timestep(&self, n_t: usize) -> Vec<f64> {
+        let mut sums = vec![0.0; n_t];
+        let mut counts = vec![0usize; n_t];
+        for j in &self.jobs {
+            sums[j.t_idx] += (j.best_round + 1) as f64;
+            counts[j.t_idx] += 1;
+        }
+        sums.iter()
+            .zip(&counts)
+            .map(|(&s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+            .collect()
+    }
+
+    pub fn total_nbytes(&self) -> usize {
+        self.jobs.iter().map(|j| j.nbytes).sum()
+    }
+}
+
+/// Train the ensemble for one `(t_idx, y)` grid point.
+///
+/// This is the unit the coordinator schedules. It allocates only
+/// `O(n_y_rows·K·p)` transient state and returns the trained booster.
+pub fn train_job(prep: &Prepared, cfg: &ForestTrainConfig, t_idx: usize, y: usize) -> Booster {
+    let t = prep.grid.ts[t_idx];
+    let (s, e) = prep.class_ranges_dup[y];
+    let x0 = prep.x0.row_slice(s, e);
+    let x1 = prep.x1.row_slice(s, e);
+    let rows = e - s;
+    let p = prep.p;
+
+    // Regression inputs and targets, built on the fly (Issue 1).
+    let mut xt = Matrix::zeros(rows, p);
+    let mut z = Matrix::zeros(rows, p);
+    match cfg.kind {
+        ModelKind::Flow => {
+            noising::cfm_inputs(&x0, &x1, t, &mut xt);
+            noising::cfm_targets(&x0, &x1, &mut z);
+        }
+        ModelKind::Diffusion => {
+            noising::diffusion_inputs(&x0, &x1, t, &prep.schedule, &mut xt);
+            noising::diffusion_targets(&x1, t, &prep.schedule, &mut z);
+        }
+    }
+
+    // Fresh-noise validation set at the same timestep.
+    let val = match (&prep.x0_val, &prep.x1_val) {
+        (Some(x0v), Some(x1v)) => {
+            let (vs, ve) = prep.class_ranges[y];
+            let x0v = x0v.row_slice(vs, ve);
+            let x1v = x1v.row_slice(vs, ve);
+            let vrows = ve - vs;
+            let mut xtv = Matrix::zeros(vrows, p);
+            let mut zv = Matrix::zeros(vrows, p);
+            match cfg.kind {
+                ModelKind::Flow => {
+                    noising::cfm_inputs(&x0v, &x1v, t, &mut xtv);
+                    noising::cfm_targets(&x0v, &x1v, &mut zv);
+                }
+                ModelKind::Diffusion => {
+                    noising::diffusion_inputs(&x0v, &x1v, t, &prep.schedule, &mut xtv);
+                    noising::diffusion_targets(&x1v, t, &prep.schedule, &mut zv);
+                }
+            }
+            Some((xtv, zv))
+        }
+        _ => None,
+    };
+
+    match &val {
+        Some((xtv, zv)) => Booster::train(&xt.view(), &z.view(), cfg.params, Some((&xtv.view(), &zv.view()))),
+        None => Booster::train(&xt.view(), &z.view(), cfg.params, None),
+    }
+}
+
+/// Sequential trainer: prepare, loop the `(t, y)` grid, assemble the model.
+/// (The coordinator offers the parallel/streaming version.)
+pub fn train_forest(
+    cfg: &ForestTrainConfig,
+    x_raw: &Matrix,
+    y: Option<&[u32]>,
+) -> (ForestModel, TrainReport) {
+    let t_start = std::time::Instant::now();
+    let prep = prepare(cfg, x_raw, y);
+    let mut model = ForestModel::empty(
+        cfg.kind,
+        prep.grid.clone(),
+        prep.schedule,
+        prep.scalers.clone(),
+        prep.label_counts.clone(),
+        prep.p,
+    );
+    let mut report = TrainReport::default();
+    for t_idx in 0..prep.grid.n_t() {
+        for y_idx in 0..prep.label_counts.len() {
+            let t0 = std::time::Instant::now();
+            let booster = train_job(&prep, cfg, t_idx, y_idx);
+            let rec = JobRecord {
+                t_idx,
+                y: y_idx,
+                best_round: booster.best_round,
+                rounds_trained: booster.history.len(),
+                final_train_loss: booster.history.last().map(|h| h.train_loss).unwrap_or(0.0),
+                final_valid_loss: booster.history.last().and_then(|h| h.valid_loss),
+                seconds: t0.elapsed().as_secs_f64(),
+                nbytes: booster.nbytes(),
+            };
+            report.jobs.push(rec);
+            model.set_ensemble(t_idx, y_idx, booster);
+        }
+    }
+    report.total_seconds = t_start.elapsed().as_secs_f64();
+    (model, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbt::TreeKind;
+
+    fn two_cluster_data(n: usize, seed: u64) -> (Matrix, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::zeros(n, 2);
+        let mut y = Vec::with_capacity(n);
+        for r in 0..n {
+            let label = (r % 2) as u32;
+            let center = if label == 0 { -2.0 } else { 3.0 };
+            x.set(r, 0, center + 0.3 * rng.normal_f32());
+            x.set(r, 1, -center + 0.3 * rng.normal_f32());
+            y.push(label);
+        }
+        (x, y)
+    }
+
+    fn tiny_cfg() -> ForestTrainConfig {
+        ForestTrainConfig {
+            n_t: 4,
+            k_dup: 3,
+            params: TrainParams { n_trees: 5, max_depth: 3, ..Default::default() },
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prepare_sorts_scales_duplicates() {
+        let (x, y) = two_cluster_data(20, 1);
+        let cfg = tiny_cfg();
+        let prep = prepare(&cfg, &x, Some(&y));
+        assert_eq!(prep.x0.rows, 20 * 3);
+        assert_eq!(prep.x1.rows, 20 * 3);
+        assert_eq!(prep.label_counts, vec![10, 10]);
+        assert_eq!(prep.class_ranges, vec![(0, 10), (10, 20)]);
+        assert_eq!(prep.class_ranges_dup, vec![(0, 30), (30, 60)]);
+        // Scaled data within [-1, 1].
+        let (mins, maxs) = prep.x0.col_min_max();
+        for c in 0..2 {
+            assert!(mins[c] >= -1.0 - 1e-5 && maxs[c] <= 1.0 + 1e-5);
+        }
+        // Class contiguity after duplication: every row in [0, 30) belongs
+        // to class 0 (feature-0 values all below class 1's).
+        let c0_max = (0..30).map(|r| prep.x0.at(r, 0)).fold(f32::MIN, f32::max);
+        assert!(c0_max <= 1.0);
+    }
+
+    #[test]
+    fn unconditional_single_pseudo_class() {
+        let (x, _) = two_cluster_data(12, 2);
+        let cfg = tiny_cfg();
+        let prep = prepare(&cfg, &x, None);
+        assert_eq!(prep.label_counts, vec![12]);
+        assert_eq!(prep.class_ranges_dup, vec![(0, 36)]);
+    }
+
+    #[test]
+    fn train_forest_fills_grid_and_reports() {
+        let (x, y) = two_cluster_data(24, 3);
+        let cfg = tiny_cfg();
+        let (model, report) = train_forest(&cfg, &x, Some(&y));
+        assert!(model.is_complete());
+        assert_eq!(model.n_t(), 4);
+        assert_eq!(model.n_y(), 2);
+        assert_eq!(report.jobs.len(), 8);
+        assert!(report.total_seconds > 0.0);
+        assert!(report.total_nbytes() > 0);
+        // Every ensemble predicts p outputs.
+        assert_eq!(model.ensemble(0, 0).m, 2);
+    }
+
+    #[test]
+    fn early_stopping_stops_sooner_at_noise_side() {
+        // The paper's Fig 3: ensembles near t=1 (noise) converge in fewer
+        // rounds than ensembles near t=0 (data).
+        let (x, _) = two_cluster_data(150, 4);
+        let cfg = ForestTrainConfig {
+            n_t: 6,
+            k_dup: 8,
+            fresh_noise_validation: true,
+            params: TrainParams {
+                n_trees: 60,
+                max_depth: 3,
+                early_stopping_rounds: 5,
+                ..Default::default()
+            },
+            seed: 5,
+            ..Default::default()
+        };
+        let (_, report) = train_forest(&cfg, &x, None);
+        // Early stopping must actually trigger: some jobs train fewer than
+        // the maximum rounds, and every job records a validation loss.
+        assert!(
+            report.jobs.iter().any(|j| j.rounds_trained < 60),
+            "no job stopped early"
+        );
+        assert!(report.jobs.iter().all(|j| j.final_valid_loss.is_some()));
+        // Truncation: kept rounds == best_round + 1.
+        let by_t = report.best_rounds_by_timestep(6);
+        assert_eq!(by_t.len(), 6);
+        assert!(by_t.iter().all(|&r| r >= 1.0 && r <= 60.0), "{by_t:?}");
+    }
+
+    #[test]
+    fn multi_output_trains_one_tree_per_round() {
+        let (x, y) = two_cluster_data(20, 6);
+        let mut cfg = tiny_cfg();
+        cfg.params.kind = TreeKind::Multi;
+        let (model, _) = train_forest(&cfg, &x, Some(&y));
+        let b = model.ensemble(0, 0);
+        assert_eq!(b.trees.len(), 5); // n_trees rounds × 1 tree
+        assert_eq!(b.trees[0].m, 2);
+    }
+
+    #[test]
+    fn diffusion_kind_trains() {
+        let (x, _) = two_cluster_data(30, 7);
+        let cfg = ForestTrainConfig {
+            kind: ModelKind::Diffusion,
+            eps: 0.001,
+            ..tiny_cfg()
+        };
+        let (model, _) = train_forest(&cfg, &x, None);
+        assert!(model.is_complete());
+        assert!((model.grid.ts[0] - 0.001).abs() < 1e-6);
+    }
+}

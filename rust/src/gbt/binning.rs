@@ -1,0 +1,415 @@
+//! Quantile-sketch feature binning (XGBoost's `hist` method).
+//!
+//! Training data is converted once into per-feature bin codes (`u8`); tree
+//! growth then operates purely on codes, which is what makes training memory
+//! linear in `n·p` regardless of tree count. Missing values (NaN) get the
+//! reserved code [`MISSING_BIN`] and are routed by learned default
+//! directions.
+//!
+//! Two construction paths are provided, mirroring XGBoost:
+//!
+//! * [`BinCuts::fit`] — single-shot over an in-memory matrix;
+//! * [`BinCuts::fit_iterator`] / [`BinnedMatrix::from_iterator`] — multi-pass
+//!   construction from a [`BatchIterator`], the `QuantileDMatrix` data
+//!   iterator analysed in the paper's Appendix B.3. The iterator is consumed
+//!   **multiple times** (shape pass, sketch pass, index pass) exactly like
+//!   XGBoost consumes its iterator four times; an iterator whose batches are
+//!   not reproducible across passes therefore produces inconsistent
+//!   bin indices — the bug the paper found in the upstream codebase.
+
+use crate::tensor::MatrixView;
+
+/// Reserved bin code for missing values.
+pub const MISSING_BIN: u8 = u8::MAX;
+
+/// Maximum number of real (non-missing) bins.
+pub const MAX_BINS: usize = 255;
+
+/// Per-feature quantile cut points.
+///
+/// Feature value `x` maps to the smallest bin `b` with `x < cuts[b]`; values
+/// `>= cuts.last()` map to the last bin. The recorded cut for bin `b` is the
+/// *upper* edge, which is also the split threshold written into trees.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BinCuts {
+    /// `cuts[f]` = ascending upper edges for feature `f` (possibly empty if
+    /// the feature is constant/all-missing — such features are unsplittable).
+    pub cuts: Vec<Vec<f32>>,
+}
+
+impl BinCuts {
+    /// Build cuts from an in-memory dataset with at most `max_bins` bins per
+    /// feature (`max_bins <= 255`).
+    pub fn fit(x: &MatrixView<'_>, max_bins: usize) -> BinCuts {
+        let max_bins = max_bins.min(MAX_BINS);
+        let mut cuts = Vec::with_capacity(x.cols);
+        let mut col = Vec::with_capacity(x.rows);
+        for f in 0..x.cols {
+            col.clear();
+            for r in 0..x.rows {
+                let v = x.at(r, f);
+                if !v.is_nan() {
+                    col.push(v);
+                }
+            }
+            cuts.push(cuts_for_column(&mut col, max_bins));
+        }
+        BinCuts { cuts }
+    }
+
+    /// Build cuts from a multi-pass batch iterator (out-of-core path).
+    ///
+    /// Consumes the iterator twice: once to learn shapes, once to sketch.
+    /// (The in-memory fit sorts whole columns; here we concatenate batch
+    /// columns, which is equivalent since the sketch is exact for datasets
+    /// that fit the sketch buffer.)
+    pub fn fit_iterator<I: BatchIterator>(it: &mut I, max_bins: usize) -> BinCuts {
+        let max_bins = max_bins.min(MAX_BINS);
+        // Pass 1: shape discovery.
+        it.reset();
+        let mut cols = 0usize;
+        while let Some(batch) = it.next_batch() {
+            cols = batch.cols;
+        }
+        // Pass 2: per-feature value collection (exact sketch).
+        let mut values: Vec<Vec<f32>> = vec![Vec::new(); cols];
+        it.reset();
+        while let Some(batch) = it.next_batch() {
+            for f in 0..cols {
+                for r in 0..batch.rows {
+                    let v = batch.at(r, f);
+                    if !v.is_nan() {
+                        values[f].push(v);
+                    }
+                }
+            }
+        }
+        let cuts = values
+            .iter_mut()
+            .map(|col| cuts_for_column(col, max_bins))
+            .collect();
+        BinCuts { cuts }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.cuts.len()
+    }
+
+    /// Number of real bins for feature `f` (cut count).
+    pub fn n_bins(&self, f: usize) -> usize {
+        self.cuts[f].len()
+    }
+
+    /// Map a raw value to its bin code.
+    #[inline]
+    pub fn bin_value(&self, f: usize, v: f32) -> u8 {
+        if v.is_nan() {
+            return MISSING_BIN;
+        }
+        let cuts = &self.cuts[f];
+        if cuts.is_empty() {
+            return 0;
+        }
+        // Binary search for the first cut > v  (go-left rule: x < cut).
+        let mut lo = 0usize;
+        let mut hi = cuts.len(); // exclusive
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if v < cuts[mid] {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo.min(cuts.len() - 1) as u8
+    }
+
+    /// Split threshold for (feature, bin): the bin's upper edge. Rows with
+    /// `x < threshold` go left when splitting after bin `b`.
+    #[inline]
+    pub fn threshold(&self, f: usize, bin: u8) -> f32 {
+        self.cuts[f][bin as usize]
+    }
+}
+
+/// Compute ascending upper-edge cuts for one column (values get sorted).
+fn cuts_for_column(col: &mut [f32], max_bins: usize) -> Vec<f32> {
+    if col.is_empty() {
+        return Vec::new();
+    }
+    col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Distinct values.
+    let mut distinct: Vec<f32> = Vec::new();
+    for &v in col.iter() {
+        if distinct.last() != Some(&v) {
+            distinct.push(v);
+        }
+    }
+    if distinct.len() <= 1 {
+        // Constant feature: unsplittable.
+        return Vec::new();
+    }
+    if distinct.len() <= max_bins {
+        // One bin per distinct value; cut between consecutive values, final
+        // cut above the max so every value maps inside.
+        let mut cuts: Vec<f32> = distinct
+            .windows(2)
+            .map(|w| midpoint(w[0], w[1]))
+            .collect();
+        cuts.push(next_up(*distinct.last().unwrap()));
+        return cuts;
+    }
+    // Quantile cuts over the (sorted, with multiplicity) column.
+    let n = col.len();
+    let mut cuts: Vec<f32> = Vec::with_capacity(max_bins);
+    for b in 1..max_bins {
+        let idx = (b * n) / max_bins;
+        let q = col[idx.min(n - 1)];
+        if cuts.last().map(|&c| q > c).unwrap_or(true) {
+            cuts.push(q);
+        }
+    }
+    cuts.push(next_up(*distinct.last().unwrap()));
+    cuts
+}
+
+#[inline]
+fn midpoint(a: f32, b: f32) -> f32 {
+    let m = 0.5 * (a + b);
+    // Guard against midpoint rounding onto `a` for adjacent floats.
+    if m > a {
+        m
+    } else {
+        b
+    }
+}
+
+#[inline]
+fn next_up(v: f32) -> f32 {
+    // Smallest float strictly greater than v.
+    if v.is_infinite() {
+        return v;
+    }
+    let bits = v.to_bits();
+    let next = if v >= 0.0 { bits + 1 } else { bits - 1 };
+    f32::from_bits(next).max(v + v.abs() * 1e-6 + f32::MIN_POSITIVE)
+}
+
+/// Column-major binned dataset: `codes[f * n + r]` is the bin of row `r`,
+/// feature `f`. Column-major makes histogram accumulation sequential.
+#[derive(Clone, Debug)]
+pub struct BinnedMatrix {
+    pub n: usize,
+    pub p: usize,
+    pub codes: Vec<u8>,
+    pub cuts: BinCuts,
+}
+
+impl BinnedMatrix {
+    /// Bin an in-memory dataset with precomputed cuts.
+    pub fn bin(x: &MatrixView<'_>, cuts: &BinCuts) -> BinnedMatrix {
+        assert_eq!(x.cols, cuts.n_features());
+        let mut codes = vec![0u8; x.rows * x.cols];
+        for f in 0..x.cols {
+            let base = f * x.rows;
+            for r in 0..x.rows {
+                codes[base + r] = cuts.bin_value(f, x.at(r, f));
+            }
+        }
+        BinnedMatrix { n: x.rows, p: x.cols, codes, cuts: cuts.clone() }
+    }
+
+    /// Fit cuts and bin in one step.
+    pub fn fit_bin(x: &MatrixView<'_>, max_bins: usize) -> BinnedMatrix {
+        let cuts = BinCuts::fit(x, max_bins);
+        BinnedMatrix::bin(x, &cuts)
+    }
+
+    /// Build from a multi-pass iterator: one pass for cuts (inside
+    /// [`BinCuts::fit_iterator`]), one more pass for codes. Total iterator
+    /// consumption: 3 passes (XGBoost uses 4: shape / sketch / row-major
+    /// index / col-major index — we store one layout, so 3).
+    pub fn from_iterator<I: BatchIterator>(it: &mut I, max_bins: usize) -> BinnedMatrix {
+        let cuts = BinCuts::fit_iterator(it, max_bins);
+        it.reset();
+        let mut per_feature: Vec<Vec<u8>> = vec![Vec::new(); cuts.n_features()];
+        let mut n = 0usize;
+        while let Some(batch) = it.next_batch() {
+            n += batch.rows;
+            for f in 0..batch.cols {
+                for r in 0..batch.rows {
+                    per_feature[f].push(cuts.bin_value(f, batch.at(r, f)));
+                }
+            }
+        }
+        let p = cuts.n_features();
+        let mut codes = Vec::with_capacity(n * p);
+        for f in 0..p {
+            codes.extend_from_slice(&per_feature[f]);
+        }
+        BinnedMatrix { n, p, codes, cuts }
+    }
+
+    /// Bin code for (row, feature).
+    #[inline]
+    pub fn code(&self, r: usize, f: usize) -> u8 {
+        self.codes[f * self.n + r]
+    }
+
+    /// Column of codes for feature `f`.
+    #[inline]
+    pub fn feature_codes(&self, f: usize) -> &[u8] {
+        &self.codes[f * self.n..(f + 1) * self.n]
+    }
+
+    /// Logical memory footprint in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.codes.len()
+            + self
+                .cuts
+                .cuts
+                .iter()
+                .map(|c| c.len() * std::mem::size_of::<f32>())
+                .sum::<usize>()
+    }
+}
+
+/// Multi-pass batch iterator over row blocks of a dataset.
+///
+/// Implementors must produce **identical batches on every pass** after
+/// `reset()` for correct quantile construction — the contract the upstream
+/// ForestDiffusion iterator violated (fresh noise per pass; see Appendix
+/// B.3). [`crate::forest::trainer`] provides both a *corrected* (seeded) and
+/// a deliberately *flawed* implementation so the bug is reproducible.
+pub trait BatchIterator {
+    /// Rewind to the first batch.
+    fn reset(&mut self);
+    /// Next row block, or `None` at the end of a pass.
+    fn next_batch(&mut self) -> Option<MatrixView<'_>>;
+}
+
+/// Iterator over contiguous row blocks of an in-memory matrix.
+pub struct SliceBatches<'a> {
+    data: MatrixView<'a>,
+    batch_rows: usize,
+    pos: usize,
+}
+
+impl<'a> SliceBatches<'a> {
+    pub fn new(data: MatrixView<'a>, batch_rows: usize) -> Self {
+        assert!(batch_rows > 0);
+        SliceBatches { data, batch_rows, pos: 0 }
+    }
+}
+
+impl<'a> BatchIterator for SliceBatches<'a> {
+    fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    fn next_batch(&mut self) -> Option<MatrixView<'_>> {
+        if self.pos >= self.data.rows {
+            return None;
+        }
+        let end = (self.pos + self.batch_rows).min(self.data.rows);
+        let view = MatrixView {
+            rows: end - self.pos,
+            cols: self.data.cols,
+            data: &self.data.data[self.pos * self.data.cols..end * self.data.cols],
+        };
+        self.pos = end;
+        Some(view)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn few_distinct_values_get_exact_bins() {
+        let x = Matrix::from_vec(6, 1, vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        let cuts = BinCuts::fit(&x.view(), 255);
+        assert_eq!(cuts.n_bins(0), 3);
+        let b = BinnedMatrix::bin(&x.view(), &cuts);
+        assert_eq!(b.feature_codes(0), &[0, 0, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn constant_feature_unsplittable() {
+        let x = Matrix::full(5, 1, 7.0);
+        let cuts = BinCuts::fit(&x.view(), 255);
+        assert_eq!(cuts.n_bins(0), 0);
+        let b = BinnedMatrix::bin(&x.view(), &cuts);
+        assert!(b.feature_codes(0).iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn nan_maps_to_missing() {
+        let x = Matrix::from_vec(3, 1, vec![1.0, f32::NAN, 2.0]);
+        let b = BinnedMatrix::fit_bin(&x.view(), 255);
+        assert_eq!(b.code(1, 0), MISSING_BIN);
+        assert_ne!(b.code(0, 0), MISSING_BIN);
+    }
+
+    #[test]
+    fn bin_codes_are_monotone_in_value() {
+        let mut rng = Rng::new(17);
+        let mut vals: Vec<f32> = (0..500).map(|_| rng.normal_f32()).collect();
+        let x = Matrix::from_vec(500, 1, vals.clone());
+        let b = BinnedMatrix::fit_bin(&x.view(), 32);
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut last = 0u8;
+        for v in vals {
+            let c = b.cuts.bin_value(0, v);
+            assert!(c >= last, "codes must be monotone");
+            last = c;
+        }
+        assert!(b.cuts.n_bins(0) <= 32);
+    }
+
+    #[test]
+    fn threshold_separates_bins() {
+        let mut rng = Rng::new(3);
+        let vals: Vec<f32> = (0..200).map(|_| rng.normal_f32()).collect();
+        let x = Matrix::from_vec(200, 1, vals.clone());
+        let b = BinnedMatrix::fit_bin(&x.view(), 16);
+        for (r, &v) in vals.iter().enumerate() {
+            let code = b.code(r, 0);
+            let thr = b.cuts.threshold(0, code);
+            assert!(v < thr, "value must be below its bin's upper edge");
+            if code > 0 {
+                assert!(v >= b.cuts.threshold(0, code - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn iterator_path_matches_in_memory() {
+        let mut rng = Rng::new(5);
+        let x = Matrix::randn(257, 4, &mut rng);
+        let direct = BinnedMatrix::fit_bin(&x.view(), 64);
+        let mut it = SliceBatches::new(x.view(), 50);
+        let via_iter = BinnedMatrix::from_iterator(&mut it, 64);
+        assert_eq!(direct.cuts, via_iter.cuts);
+        assert_eq!(direct.codes, via_iter.codes);
+    }
+
+    #[test]
+    fn max_bins_respected_on_continuous_data() {
+        let mut rng = Rng::new(6);
+        let x = Matrix::randn(10_000, 2, &mut rng);
+        let b = BinnedMatrix::fit_bin(&x.view(), 255);
+        assert!(b.cuts.n_bins(0) <= 255);
+        assert!(b.cuts.n_bins(1) <= 255);
+        // Bins should be roughly balanced for continuous data.
+        let mut counts = vec![0usize; b.cuts.n_bins(0)];
+        for &c in b.feature_codes(0) {
+            counts[c as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        assert!(max < 10_000 / counts.len() * 5, "bins badly unbalanced: {max}");
+    }
+}

@@ -1,0 +1,40 @@
+//! Gradient-boosted decision trees — the "XGBoost" substrate.
+//!
+//! The paper's method trains `n_t · n_y` (single-output: `· p`) XGBoost
+//! regressors; since the real XGBoost C++ library is not available here, this
+//! module reimplements the parts the paper depends on with the same training
+//! interface and asymptotics:
+//!
+//! * histogram (`hist`) training: per-feature quantile-sketch binning into
+//!   at most 256 bins ([`binning`]), gradient/hessian histograms
+//!   ([`histogram`]) and greedy split search with L2 regularization `λ`,
+//!   learned default directions for missing values ([`split`]);
+//! * depth-wise tree growth with single-output **and** multi-output
+//!   ("vector-leaf", Zhang & Jung 2021) trees ([`tree`]);
+//! * the boosting loop with learning rate `η`, optional evaluation set and
+//!   early stopping, squared-error and logistic objectives ([`booster`],
+//!   [`objective`]);
+//! * a batched, allocation-free prediction path ([`predict`]);
+//! * a compact binary model format with save/load for the streaming model
+//!   store — the stand-in for XGBoost's UBJ ([`serialize`]);
+//! * a multi-pass *data iterator* for out-of-core quantile construction,
+//!   mirroring XGBoost's `QuantileDMatrix` iterator including the
+//!   multiple-consumption semantics that the paper's Appendix B.3 analyses
+//!   ([`binning::BatchIterator`]).
+
+pub mod binning;
+pub mod histogram;
+pub mod split;
+pub mod tree;
+pub mod booster;
+pub mod objective;
+pub mod predict;
+pub mod serialize;
+
+pub use binning::{BinCuts, BinnedMatrix, BatchIterator, MISSING_BIN};
+pub use booster::{Booster, EvalRecord, TrainParams};
+pub use objective::Objective;
+pub use tree::{Tree, TreeKind};
+
+/// Kind of tree ensembles, re-exported at the crate root.
+pub use tree::TreeKind as Kind;

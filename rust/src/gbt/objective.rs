@@ -1,0 +1,141 @@
+//! Training objectives: gradients/hessians and evaluation losses.
+
+/// Supported objectives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Squared error `(pred − target)²/2`: the vector-field regression loss
+    /// of Eq. (1)/(6). Hessian ≡ 1 (uniform).
+    SquaredError,
+    /// Binary logistic (targets in {0,1}); used by the calorimeter AUC
+    /// classifier metric. Predictions are margins; hessian = p(1−p).
+    Logistic,
+}
+
+impl Objective {
+    /// Whether the hessian is identically 1 (enables count-as-hessian).
+    pub fn uniform_hess(&self) -> bool {
+        matches!(self, Objective::SquaredError)
+    }
+
+    /// Fill per-row gradients (and hessians for non-uniform objectives).
+    ///
+    /// `preds` and `targets` are row-major `[n × m]`; `grads` likewise;
+    /// `hess` is `[n]` and only written when not uniform.
+    pub fn gradients(
+        &self,
+        preds: &[f32],
+        targets: &[f32],
+        m: usize,
+        grads: &mut [f64],
+        hess: &mut Vec<f64>,
+    ) {
+        debug_assert_eq!(preds.len(), targets.len());
+        debug_assert_eq!(grads.len(), preds.len());
+        match self {
+            Objective::SquaredError => {
+                hess.clear();
+                for i in 0..preds.len() {
+                    let t = targets[i];
+                    // Missing targets (rows with NaN features produce NaN
+                    // regression targets) contribute no gradient — the
+                    // per-output row-masking XGBoost applies.
+                    grads[i] = if t.is_nan() { 0.0 } else { (preds[i] - t) as f64 };
+                }
+            }
+            Objective::Logistic => {
+                assert_eq!(m, 1, "logistic objective is single-output");
+                hess.resize(preds.len(), 0.0);
+                for i in 0..preds.len() {
+                    let p = sigmoid(preds[i] as f64);
+                    grads[i] = p - targets[i] as f64;
+                    hess[i] = (p * (1.0 - p)).max(1e-16);
+                }
+            }
+        }
+    }
+
+    /// Evaluation loss (lower is better): RMSE or log-loss.
+    pub fn eval_loss(&self, preds: &[f32], targets: &[f32]) -> f64 {
+        match self {
+            Objective::SquaredError => {
+                let mut count = 0usize;
+                let sum: f64 = preds
+                    .iter()
+                    .zip(targets)
+                    .filter(|(_, &t)| !t.is_nan())
+                    .map(|(&p, &t)| {
+                        count += 1;
+                        let d = (p - t) as f64;
+                        d * d
+                    })
+                    .sum();
+                (sum / count.max(1) as f64).sqrt()
+            }
+            Objective::Logistic => {
+                preds
+                    .iter()
+                    .zip(targets)
+                    .map(|(&margin, &t)| {
+                        let p = sigmoid(margin as f64).clamp(1e-12, 1.0 - 1e-12);
+                        let t = t as f64;
+                        -(t * p.ln() + (1.0 - t) * (1.0 - p).ln())
+                    })
+                    .sum::<f64>()
+                    / preds.len().max(1) as f64
+            }
+        }
+    }
+
+    /// Transform raw margins into response space (identity / sigmoid).
+    pub fn transform(&self, margin: f32) -> f32 {
+        match self {
+            Objective::SquaredError => margin,
+            Objective::Logistic => sigmoid(margin as f64) as f32,
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sqerr_gradients() {
+        let mut g = vec![0.0; 4];
+        let mut h = Vec::new();
+        Objective::SquaredError.gradients(
+            &[1.0, 2.0, 3.0, 4.0],
+            &[0.0, 2.0, 5.0, 3.0],
+            2,
+            &mut g,
+            &mut h,
+        );
+        assert_eq!(g, vec![1.0, 0.0, -2.0, 1.0]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn logistic_gradients_bounded() {
+        let mut g = vec![0.0; 2];
+        let mut h = Vec::new();
+        Objective::Logistic.gradients(&[0.0, 10.0], &[1.0, 0.0], 1, &mut g, &mut h);
+        assert!((g[0] + 0.5).abs() < 1e-9); // sigmoid(0) - 1 = -0.5
+        assert!(g[1] > 0.99); // sigmoid(10) - 0 ≈ 1
+        assert_eq!(h.len(), 2);
+        assert!(h.iter().all(|&x| x > 0.0 && x <= 0.25));
+    }
+
+    #[test]
+    fn eval_losses() {
+        let rmse = Objective::SquaredError.eval_loss(&[1.0, 3.0], &[0.0, 0.0]);
+        assert!((rmse - 5.0f64.sqrt()).abs() < 1e-9); // sqrt((1+9)/2)
+        let ll_good = Objective::Logistic.eval_loss(&[5.0], &[1.0]);
+        let ll_bad = Objective::Logistic.eval_loss(&[-5.0], &[1.0]);
+        assert!(ll_good < ll_bad);
+    }
+}

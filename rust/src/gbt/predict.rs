@@ -1,0 +1,279 @@
+//! Batched, allocation-free ensemble prediction — the generation hot path.
+//!
+//! During sampling the forest is evaluated `n_t` times over the whole batch,
+//! so per-row overhead matters. The batch loop is tree-outer/row-inner,
+//! which keeps each tree's node arrays hot in cache while streaming rows —
+//! the same cache-locality argument the paper makes for XGBoost's C++
+//! inference (Issue 8).
+
+use super::booster::Booster;
+use super::tree::TreeKind;
+use crate::tensor::MatrixView;
+
+/// Predict margins for all rows of `x` into `out` (row-major `[n × m]`).
+pub fn predict_batch(booster: &Booster, x: &MatrixView<'_>, out: &mut [f32]) {
+    let n = x.rows;
+    let m = booster.m;
+    assert_eq!(out.len(), n * m, "output buffer shape mismatch");
+    assert_eq!(x.cols, booster.n_features, "feature count mismatch");
+
+    // Initialize with the base score.
+    for r in 0..n {
+        out[r * m..(r + 1) * m].copy_from_slice(&booster.base_score);
+    }
+
+    let eta = booster.params.eta;
+    match booster.params.kind {
+        TreeKind::Multi => {
+            for tree in &booster.trees {
+                for r in 0..n {
+                    let leaf = tree.leaf_for(x.row(r));
+                    let vals = &tree.values[leaf * m..(leaf + 1) * m];
+                    let o = &mut out[r * m..(r + 1) * m];
+                    for j in 0..m {
+                        o[j] += eta * vals[j];
+                    }
+                }
+            }
+        }
+        TreeKind::Single => {
+            for (i, tree) in booster.trees.iter().enumerate() {
+                let j = i % m;
+                for r in 0..n {
+                    let leaf = tree.leaf_for(x.row(r));
+                    out[r * m + j] += eta * tree.values[leaf];
+                }
+            }
+        }
+    }
+}
+
+/// Flattened forest tensors for the XLA backend and for cheap traversal.
+///
+/// All trees are padded to a common node count; `feature` is `-1` padded.
+/// Layout matches `python/compile/kernels/forest_predict.py`.
+#[derive(Clone, Debug)]
+pub struct PackedForest {
+    pub n_trees: usize,
+    pub max_nodes: usize,
+    pub m: usize,
+    pub n_features: usize,
+    pub eta: f32,
+    pub base_score: Vec<f32>,
+    /// `[n_trees × max_nodes]` split feature (or 0 for padding/leaves).
+    pub feature: Vec<i32>,
+    /// `[n_trees × max_nodes]` split threshold.
+    pub threshold: Vec<f32>,
+    /// `[n_trees × max_nodes]` left child (self-loop for leaves → fixed-depth
+    /// iteration converges).
+    pub left: Vec<i32>,
+    /// `[n_trees × max_nodes]` right child (self-loop for leaves).
+    pub right: Vec<i32>,
+    /// `[n_trees × max_nodes]` 1.0 where missing defaults left else 0.0.
+    pub default_left: Vec<f32>,
+    /// `[n_trees × max_nodes × m]` leaf values (0 for internal nodes, but
+    /// every node's value is its own: self-loops land on leaves only).
+    pub values: Vec<f32>,
+    /// Iterations needed for any row to reach a leaf.
+    pub depth: usize,
+    /// Which output a tree writes to (Single mode); all outputs in Multi.
+    pub out_index: Vec<i32>,
+}
+
+impl PackedForest {
+    /// Pack a booster into fixed-shape tensors.
+    pub fn pack(booster: &Booster) -> PackedForest {
+        let n_trees = booster.trees.len();
+        let max_nodes = booster.trees.iter().map(|t| t.n_nodes()).max().unwrap_or(1);
+        let depth = booster
+            .trees
+            .iter()
+            .map(|t| t.max_depth())
+            .max()
+            .unwrap_or(0);
+        let m = booster.m;
+        let mut pf = PackedForest {
+            n_trees,
+            max_nodes,
+            m,
+            n_features: booster.n_features,
+            eta: booster.params.eta,
+            base_score: booster.base_score.clone(),
+            feature: vec![0; n_trees * max_nodes],
+            threshold: vec![0.0; n_trees * max_nodes],
+            left: vec![0; n_trees * max_nodes],
+            right: vec![0; n_trees * max_nodes],
+            default_left: vec![0.0; n_trees * max_nodes],
+            values: vec![0.0; n_trees * max_nodes * m],
+            depth,
+            out_index: Vec::with_capacity(n_trees),
+        };
+        for (ti, tree) in booster.trees.iter().enumerate() {
+            let base = ti * max_nodes;
+            // Which output slot a Single tree writes to; Multi writes all.
+            let out_slot = match booster.params.kind {
+                TreeKind::Multi => -1,
+                TreeKind::Single => (ti % m) as i32,
+            };
+            for node in 0..max_nodes {
+                let idx = base + node;
+                if node < tree.n_nodes() {
+                    let is_leaf = tree.left[node] < 0;
+                    pf.feature[idx] = tree.feature[node] as i32;
+                    pf.threshold[idx] = tree.threshold[node];
+                    pf.left[idx] = if is_leaf { node as i32 } else { tree.left[node] };
+                    pf.right[idx] = if is_leaf { node as i32 } else { tree.right[node] };
+                    pf.default_left[idx] = if tree.default_left[node] { 1.0 } else { 0.0 };
+                    if out_slot < 0 {
+                        for j in 0..tree.m {
+                            pf.values[idx * m + j] = tree.values[node * tree.m + j];
+                        }
+                    } else {
+                        pf.values[idx * m + out_slot as usize] = tree.values[node];
+                    }
+                } else {
+                    // Padding: self-loop leaf with zero value.
+                    pf.left[idx] = node as i32;
+                    pf.right[idx] = node as i32;
+                }
+            }
+            pf.out_index.push(out_slot);
+        }
+        pf
+    }
+
+    /// Reference traversal over the packed representation (oracle for the
+    /// Pallas kernel and the XLA backend).
+    pub fn predict(&self, x: &MatrixView<'_>) -> crate::tensor::Matrix {
+        let n = x.rows;
+        let m = self.m;
+        let mut out = crate::tensor::Matrix::zeros(n, m);
+        for r in 0..n {
+            out.row_mut(r).copy_from_slice(&self.base_score);
+        }
+        for ti in 0..self.n_trees {
+            let base = ti * self.max_nodes;
+            for r in 0..n {
+                let row = x.row(r);
+                let mut node = 0usize;
+                for _ in 0..=self.depth {
+                    let idx = base + node;
+                    let v = row[self.feature[idx].max(0) as usize];
+                    let go_left = if v.is_nan() {
+                        self.default_left[idx] > 0.5
+                    } else {
+                        v < self.threshold[idx]
+                    };
+                    node = if go_left {
+                        self.left[idx] as usize
+                    } else {
+                        self.right[idx] as usize
+                    };
+                }
+                let idx = base + node;
+                match self.out_index[ti] {
+                    -1 => {
+                        for j in 0..m {
+                            out.data[r * m + j] += self.eta * self.values[idx * m + j];
+                        }
+                    }
+                    j => {
+                        out.data[r * m + j as usize] +=
+                            self.eta * self.values[idx * m + j as usize];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbt::booster::TrainParams;
+    use crate::gbt::objective::Objective;
+    use crate::tensor::Matrix;
+    use crate::util::prop::{assert_close, forall, Config};
+    use crate::util::rng::Rng;
+
+    fn toy_booster(kind: TreeKind, seed: u64) -> (Matrix, Booster) {
+        let mut rng = Rng::new(seed);
+        let n = 150;
+        let x = Matrix::randn(n, 3, &mut rng);
+        let mut y = Matrix::zeros(n, 2);
+        for r in 0..n {
+            y.set(r, 0, x.at(r, 0) * 1.5 - x.at(r, 2));
+            y.set(r, 1, (x.at(r, 1)).max(0.0));
+        }
+        let params = TrainParams {
+            n_trees: 12,
+            max_depth: 4,
+            kind,
+            objective: Objective::SquaredError,
+            ..Default::default()
+        };
+        let b = Booster::train(&x.view(), &y.view(), params, None);
+        (x, b)
+    }
+
+    #[test]
+    fn batch_matches_row_by_row() {
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (x, b) = toy_booster(kind, 7);
+            let batch = b.predict(&x.view());
+            for r in 0..x.rows {
+                let mut row_out = vec![0.0f32; b.m];
+                b.predict_row_into(x.row(r), &mut row_out);
+                assert_close(&batch.row(r).to_vec(), &row_out, 1e-6, 1e-6).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn packed_forest_matches_native_prediction() {
+        forall("packed == native", Config { cases: 8, seed: 0xF00D }, |rng, case| {
+            let kind = if case % 2 == 0 { TreeKind::Single } else { TreeKind::Multi };
+            let (x, b) = toy_booster(kind, 100 + case as u64);
+            let packed = PackedForest::pack(&b);
+            let native = b.predict(&x.view());
+            let viapack = packed.predict(&x.view());
+            // Also exercise unseen data.
+            let x2 = Matrix::randn(40, 3, rng);
+            let n2 = b.predict(&x2.view());
+            let p2 = packed.predict(&x2.view());
+            assert_close(&native.data, &viapack.data, 1e-5, 1e-5)?;
+            assert_close(&n2.data, &p2.data, 1e-5, 1e-5)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_handles_nan_default_direction() {
+        let (_, b) = toy_booster(TreeKind::Single, 9);
+        let packed = PackedForest::pack(&b);
+        let x = Matrix::from_vec(1, 3, vec![f32::NAN, 0.5, f32::NAN]);
+        let native = b.predict(&x.view());
+        let viapack = packed.predict(&x.view());
+        assert_close(&native.data, &viapack.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn padding_trees_are_inert() {
+        // A booster whose trees have different node counts must still match.
+        let mut rng = Rng::new(33);
+        let x = Matrix::randn(100, 2, &mut rng);
+        let mut y = Matrix::zeros(100, 1);
+        for r in 0..100 {
+            y.set(r, 0, if x.at(r, 0) > 0.0 { 1.0 } else { -1.0 });
+        }
+        let params = TrainParams { n_trees: 5, max_depth: 6, ..Default::default() };
+        let b = Booster::train(&x.view(), &y.view(), params, None);
+        let sizes: Vec<usize> = b.trees.iter().map(|t| t.n_nodes()).collect();
+        let packed = PackedForest::pack(&b);
+        let native = b.predict(&x.view());
+        let viapack = packed.predict(&x.view());
+        assert_close(&native.data, &viapack.data, 1e-5, 1e-5)
+            .unwrap_or_else(|e| panic!("sizes {sizes:?}: {e}"));
+    }
+}

@@ -1,0 +1,268 @@
+//! Compact binary model format ("FBJ" — Forest Binary JSON-free).
+//!
+//! The stand-in for XGBoost's Universal Binary JSON format (the paper's
+//! Issue 3 solution): trained boosters are streamed to disk as soon as a
+//! training job finishes, freeing their memory and doubling as resumable
+//! checkpoints. Little-endian, versioned, with a magic header.
+
+use super::booster::{Booster, TrainParams};
+use super::objective::Objective;
+use super::tree::{Tree, TreeKind};
+use std::io::{self, Read, Write};
+
+const MAGIC: &[u8; 4] = b"FBJ1";
+
+/// Serialize a booster into a byte buffer.
+pub fn to_bytes(b: &Booster) -> Vec<u8> {
+    let mut out = Vec::with_capacity(b.nbytes());
+    out.extend_from_slice(MAGIC);
+    write_u32(&mut out, 1); // version
+    write_u32(&mut out, b.n_features as u32);
+    write_u32(&mut out, b.m as u32);
+    write_u32(&mut out, match b.params.kind {
+        TreeKind::Single => 0,
+        TreeKind::Multi => 1,
+    });
+    write_u32(&mut out, match b.params.objective {
+        Objective::SquaredError => 0,
+        Objective::Logistic => 1,
+    });
+    write_f32(&mut out, b.params.eta);
+    write_f32(&mut out, b.params.lambda as f32);
+    write_u32(&mut out, b.params.max_depth as u32);
+    write_u32(&mut out, b.best_round as u32);
+    write_u32(&mut out, b.base_score.len() as u32);
+    for &v in &b.base_score {
+        write_f32(&mut out, v);
+    }
+    write_u32(&mut out, b.trees.len() as u32);
+    for t in &b.trees {
+        write_u32(&mut out, t.m as u32);
+        write_u32(&mut out, t.n_nodes() as u32);
+        for i in 0..t.n_nodes() {
+            write_u32(&mut out, t.feature[i]);
+            write_f32(&mut out, t.threshold[i]);
+            write_i32(&mut out, t.left[i]);
+            write_i32(&mut out, t.right[i]);
+            out.push(if t.default_left[i] { 1 } else { 0 });
+        }
+        for &v in &t.values {
+            write_f32(&mut out, v);
+        }
+    }
+    out
+}
+
+/// Deserialize a booster.
+pub fn from_bytes(buf: &[u8]) -> io::Result<Booster> {
+    let mut r = Cursor { buf, pos: 0 };
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("bad magic"));
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        return Err(bad("unsupported version"));
+    }
+    let n_features = read_u32(&mut r)? as usize;
+    let m = read_u32(&mut r)? as usize;
+    let kind = match read_u32(&mut r)? {
+        0 => TreeKind::Single,
+        1 => TreeKind::Multi,
+        _ => return Err(bad("bad kind")),
+    };
+    let objective = match read_u32(&mut r)? {
+        0 => Objective::SquaredError,
+        1 => Objective::Logistic,
+        _ => return Err(bad("bad objective")),
+    };
+    let eta = read_f32(&mut r)?;
+    let lambda = read_f32(&mut r)? as f64;
+    let max_depth = read_u32(&mut r)? as usize;
+    let best_round = read_u32(&mut r)? as usize;
+    let n_base = read_u32(&mut r)? as usize;
+    let mut base_score = Vec::with_capacity(n_base);
+    for _ in 0..n_base {
+        base_score.push(read_f32(&mut r)?);
+    }
+    let n_trees = read_u32(&mut r)? as usize;
+    let mut trees = Vec::with_capacity(n_trees);
+    for _ in 0..n_trees {
+        let tm = read_u32(&mut r)? as usize;
+        let n_nodes = read_u32(&mut r)? as usize;
+        let mut t = Tree {
+            m: tm,
+            feature: Vec::with_capacity(n_nodes),
+            threshold: Vec::with_capacity(n_nodes),
+            left: Vec::with_capacity(n_nodes),
+            right: Vec::with_capacity(n_nodes),
+            default_left: Vec::with_capacity(n_nodes),
+            values: Vec::with_capacity(n_nodes * tm),
+        };
+        for _ in 0..n_nodes {
+            t.feature.push(read_u32(&mut r)?);
+            t.threshold.push(read_f32(&mut r)?);
+            t.left.push(read_i32(&mut r)?);
+            t.right.push(read_i32(&mut r)?);
+            let mut byte = [0u8; 1];
+            r.read_exact(&mut byte)?;
+            t.default_left.push(byte[0] != 0);
+        }
+        for _ in 0..n_nodes * tm {
+            t.values.push(read_f32(&mut r)?);
+        }
+        trees.push(t);
+    }
+    let params = TrainParams {
+        n_trees,
+        max_depth,
+        eta,
+        lambda,
+        kind,
+        objective,
+        ..Default::default()
+    };
+    Ok(Booster {
+        params,
+        n_features,
+        m,
+        base_score,
+        trees,
+        best_round,
+        history: Vec::new(),
+    })
+}
+
+/// Save to a file (atomic via temp + rename so crashes never leave partial
+/// checkpoints the resume path would trip on).
+pub fn save(b: &Booster, path: &std::path::Path) -> io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&to_bytes(b))?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+/// Load from a file.
+pub fn load(path: &std::path::Path) -> io::Result<Booster> {
+    let buf = std::fs::read(path)?;
+    from_bytes(&buf)
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Read for Cursor<'a> {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        let n = out.len().min(self.buf.len() - self.pos);
+        out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+fn write_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn write_i32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn write_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn read_i32<R: Read>(r: &mut R) -> io::Result<i32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(i32::from_le_bytes(b))
+}
+fn read_f32<R: Read>(r: &mut R) -> io::Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    fn trained(kind: TreeKind) -> (Matrix, Booster) {
+        let mut rng = Rng::new(50);
+        let x = Matrix::randn(120, 3, &mut rng);
+        let mut y = Matrix::zeros(120, 2);
+        for r in 0..120 {
+            y.set(r, 0, x.at(r, 0));
+            y.set(r, 1, -x.at(r, 1));
+        }
+        let params = TrainParams { n_trees: 6, max_depth: 3, kind, ..Default::default() };
+        let b = Booster::train(&x.view(), &y.view(), params, None);
+        (x, b)
+    }
+
+    #[test]
+    fn roundtrip_preserves_predictions() {
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (x, b) = trained(kind);
+            let bytes = to_bytes(&b);
+            let b2 = from_bytes(&bytes).unwrap();
+            let p1 = b.predict(&x.view());
+            let p2 = b2.predict(&x.view());
+            assert_close(&p1.data, &p2.data, 0.0, 0.0).unwrap();
+            assert_eq!(b.best_round, b2.best_round);
+            assert_eq!(b.m, b2.m);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let (x, b) = trained(TreeKind::Multi);
+        let dir = std::env::temp_dir().join("caloforest_test_serialize");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.fbj");
+        save(&b, &path).unwrap();
+        let b2 = load(&path).unwrap();
+        assert_close(
+            &b.predict(&x.view()).data,
+            &b2.predict(&x.view()).data,
+            0.0,
+            0.0,
+        )
+        .unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_corrupt_data() {
+        let (_, b) = trained(TreeKind::Single);
+        let mut bytes = to_bytes(&b);
+        bytes[0] = b'X';
+        assert!(from_bytes(&bytes).is_err());
+        assert!(from_bytes(&bytes[..10]).is_err());
+        assert!(from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_errors_not_panics() {
+        let (_, b) = trained(TreeKind::Single);
+        let bytes = to_bytes(&b);
+        for cut in [5usize, 20, 40, bytes.len() - 3] {
+            assert!(from_bytes(&bytes[..cut]).is_err(), "cut at {cut} must error");
+        }
+    }
+}

@@ -1,0 +1,440 @@
+//! Decision-tree structure and the depth-wise grower.
+//!
+//! Trees are stored struct-of-arrays so the prediction hot path and the
+//! XLA packing (runtime::pack) can address nodes as flat tensors. A tree is
+//! either single-output (`m == 1`) or multi-output / "vector-leaf"
+//! (`m == p_out`), where each leaf holds `m` values fitted jointly.
+
+use super::binning::{BinnedMatrix, MISSING_BIN};
+use super::histogram::{HistLayout, HistPool, Histogram};
+use super::split::{best_split, NodeStats};
+
+/// Tree family: one ensemble per output feature (the original
+/// ForestDiffusion design) or one multi-output ensemble for all features
+/// (the paper's §3.4 proposal).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TreeKind {
+    Single,
+    Multi,
+}
+
+/// A grown regression tree (SoA layout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tree {
+    /// Number of output values per leaf.
+    pub m: usize,
+    /// Split feature per node (unused for leaves).
+    pub feature: Vec<u32>,
+    /// Split threshold (raw feature value; `x < threshold` goes left).
+    pub threshold: Vec<f32>,
+    /// Left child id, or `-1` for leaves.
+    pub left: Vec<i32>,
+    /// Right child id, or `-1` for leaves.
+    pub right: Vec<i32>,
+    /// Default direction for missing values.
+    pub default_left: Vec<bool>,
+    /// Leaf values, `[n_nodes × m]`; zero for internal nodes.
+    pub values: Vec<f32>,
+}
+
+impl Tree {
+    fn new(m: usize) -> Tree {
+        Tree {
+            m,
+            feature: Vec::new(),
+            threshold: Vec::new(),
+            left: Vec::new(),
+            right: Vec::new(),
+            default_left: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    fn push_node(&mut self) -> usize {
+        let id = self.feature.len();
+        self.feature.push(0);
+        self.threshold.push(0.0);
+        self.left.push(-1);
+        self.right.push(-1);
+        self.default_left.push(true);
+        self.values.extend(std::iter::repeat(0.0).take(self.m));
+        id
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.feature.len()
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.left.iter().filter(|&&l| l < 0).count()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        fn depth(t: &Tree, id: usize) -> usize {
+            if t.left[id] < 0 {
+                0
+            } else {
+                1 + depth(t, t.left[id] as usize).max(depth(t, t.right[id] as usize))
+            }
+        }
+        if self.n_nodes() == 0 {
+            0
+        } else {
+            depth(self, 0)
+        }
+    }
+
+    /// Leaf id reached by a feature row (NaN-aware default directions).
+    #[inline]
+    pub fn leaf_for(&self, row: &[f32]) -> usize {
+        let mut id = 0usize;
+        loop {
+            let l = self.left[id];
+            if l < 0 {
+                return id;
+            }
+            let v = row[self.feature[id] as usize];
+            let go_left = if v.is_nan() {
+                self.default_left[id]
+            } else {
+                v < self.threshold[id]
+            };
+            id = if go_left { l as usize } else { self.right[id] as usize };
+        }
+    }
+
+    /// Add this tree's (scaled) prediction for `row` into `out[..m]`.
+    #[inline]
+    pub fn predict_into(&self, row: &[f32], scale: f32, out: &mut [f32]) {
+        let leaf = self.leaf_for(row);
+        let vals = &self.values[leaf * self.m..(leaf + 1) * self.m];
+        for j in 0..self.m {
+            out[j] += scale * vals[j];
+        }
+    }
+
+    /// Logical size in bytes (model-store accounting; the paper §3.3 charges
+    /// 53 bytes/node for XGBoost — ours is close: 4+4+4+4+1+4m).
+    pub fn nbytes(&self) -> usize {
+        self.n_nodes() * (4 + 4 + 4 + 4 + 1) + self.values.len() * 4
+    }
+}
+
+/// Parameters consumed by the grower (a subset of [`super::TrainParams`]).
+#[derive(Clone, Copy, Debug)]
+pub struct GrowParams {
+    pub max_depth: usize,
+    pub lambda: f64,
+    pub min_child_weight: f64,
+    pub min_split_gain: f64,
+    /// Use the histogram-subtraction trick (build the smaller child's
+    /// histogram, derive the sibling's by subtraction).
+    pub hist_subtraction: bool,
+}
+
+/// Grow one tree on (a subset of) the binned training data.
+///
+/// `grads`: row-major `[n × m]` gradients; `hess`: per-row hessians or empty
+/// for the uniform (squared-error) case.
+pub fn grow_tree(
+    binned: &BinnedMatrix,
+    layout: &HistLayout,
+    rows: &[u32],
+    grads: &[f64],
+    hess: &[f64],
+    m: usize,
+    params: &GrowParams,
+) -> Tree {
+    let mut pool = HistPool::new();
+    grow_tree_pooled(binned, layout, rows, grads, hess, m, params, &mut pool)
+}
+
+/// [`grow_tree`] with an external histogram-buffer pool — the boosting loop
+/// passes one pool across all trees so steady-state tree growth performs no
+/// heap allocation for histograms (§Perf, L3 iteration 3).
+#[allow(clippy::too_many_arguments)]
+pub fn grow_tree_pooled(
+    binned: &BinnedMatrix,
+    layout: &HistLayout,
+    rows: &[u32],
+    grads: &[f64],
+    hess: &[f64],
+    m: usize,
+    params: &GrowParams,
+    pool: &mut HistPool,
+) -> Tree {
+    let uniform_hess = hess.is_empty();
+    let mut tree = Tree::new(m);
+    let root = tree.push_node();
+
+    // Frontier entry: node id, rows, depth, optional pre-computed histogram.
+    struct Item {
+        node: usize,
+        rows: Vec<u32>,
+        depth: usize,
+        hist: Option<Histogram>,
+    }
+    let mut frontier = vec![Item { node: root, rows: rows.to_vec(), depth: 0, hist: None }];
+
+    while let Some(Item { node, rows, depth, hist }) = frontier.pop() {
+        // Build (or reuse) this node's histogram.
+        let hist = match hist {
+            Some(h) => h,
+            None => {
+                let mut h = pool.take(layout, m, uniform_hess);
+                h.build(binned, layout, &rows, grads, hess);
+                h
+            }
+        };
+        let stats = NodeStats::from_histogram(&hist, layout, 0.max(first_live_feature(layout)));
+        let make_leaf = |tree: &mut Tree| {
+            let w = stats.leaf_weights(params.lambda);
+            tree.values[node * m..(node + 1) * m].copy_from_slice(&w);
+        };
+
+        if depth >= params.max_depth || rows.len() < 2 {
+            make_leaf(&mut tree);
+            pool.put(hist);
+            continue;
+        }
+        let split = match best_split(
+            &hist,
+            layout,
+            &stats,
+            params.lambda,
+            params.min_child_weight,
+            params.min_split_gain,
+        ) {
+            Some(s) => s,
+            None => {
+                make_leaf(&mut tree);
+                pool.put(hist);
+                continue;
+            }
+        };
+
+        // Partition rows.
+        let f = split.feature;
+        let codes = binned.feature_codes(f);
+        let mut left_rows = Vec::with_capacity(rows.len() / 2);
+        let mut right_rows = Vec::with_capacity(rows.len() / 2);
+        for &r in &rows {
+            let code = codes[r as usize];
+            let go_left = if code == MISSING_BIN {
+                split.default_left
+            } else {
+                code <= split.bin
+            };
+            if go_left {
+                left_rows.push(r);
+            } else {
+                right_rows.push(r);
+            }
+        }
+        if left_rows.is_empty() || right_rows.is_empty() {
+            // Degenerate (can happen when all non-missing mass is on one
+            // side and missing follows it): finalize as leaf.
+            make_leaf(&mut tree);
+            pool.put(hist);
+            continue;
+        }
+
+        let l = tree.push_node();
+        let rgt = tree.push_node();
+        tree.feature[node] = f as u32;
+        tree.threshold[node] = binned.cuts.threshold(f, split.bin);
+        tree.left[node] = l as i32;
+        tree.right[node] = rgt as i32;
+        tree.default_left[node] = split.default_left;
+
+        // Histogram subtraction costs O(total_slots) while a direct build
+        // costs O(|big| · p): only subtract when the big child has enough
+        // rows to amortize the dense pass (§Perf, L3 iteration 6).
+        let big_len = left_rows.len().max(right_rows.len());
+        let use_subtraction =
+            params.hist_subtraction && big_len * layout.offsets.len() > layout.total_slots;
+        if use_subtraction {
+            // Build the smaller child's histogram; derive the sibling's.
+            let (small_rows, small_node, big_rows, big_node) =
+                if left_rows.len() <= right_rows.len() {
+                    (left_rows, l, right_rows, rgt)
+                } else {
+                    (right_rows, rgt, left_rows, l)
+                };
+            let mut small_hist = pool.take(layout, m, uniform_hess);
+            small_hist.build(binned, layout, &small_rows, grads, hess);
+            let mut big_hist = pool.take_uncleared(layout, m, uniform_hess);
+            big_hist.subtract_from(&hist, &small_hist);
+            pool.put(hist);
+            frontier.push(Item {
+                node: small_node,
+                rows: small_rows,
+                depth: depth + 1,
+                hist: Some(small_hist),
+            });
+            frontier.push(Item {
+                node: big_node,
+                rows: big_rows,
+                depth: depth + 1,
+                hist: Some(big_hist),
+            });
+        } else {
+            pool.put(hist);
+            frontier.push(Item { node: l, rows: left_rows, depth: depth + 1, hist: None });
+            frontier.push(Item { node: rgt, rows: right_rows, depth: depth + 1, hist: None });
+        }
+    }
+    tree
+}
+
+/// First feature with at least one bin (for recovering node totals).
+fn first_live_feature(layout: &HistLayout) -> usize {
+    layout
+        .n_bins
+        .iter()
+        .position(|&nb| nb > 0)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::util::prop::{forall, Config, Gen};
+
+    fn grow_on(x: &Matrix, targets: &[f64], m: usize, depth: usize) -> (BinnedMatrix, Tree) {
+        let binned = BinnedMatrix::fit_bin(&x.view(), 255);
+        let layout = HistLayout::new(&binned);
+        let rows: Vec<u32> = (0..x.rows as u32).collect();
+        // Squared error from zero prediction: grad = pred - target = -target.
+        let grads: Vec<f64> = targets.iter().map(|&t| -t).collect();
+        let params = GrowParams {
+            max_depth: depth,
+            lambda: 0.0,
+            min_child_weight: 1.0,
+            min_split_gain: 0.0,
+            hist_subtraction: false,
+        };
+        let tree = grow_tree(&binned, &layout, &rows, &grads, &[], m, &params);
+        (binned, tree)
+    }
+
+    #[test]
+    fn fits_step_function_exactly() {
+        let x = Matrix::from_vec(6, 1, vec![1.0, 2.0, 3.0, 10.0, 11.0, 12.0]);
+        let targets = vec![-5.0, -5.0, -5.0, 5.0, 5.0, 5.0];
+        let (_b, tree) = grow_on(&x, &targets, 1, 3);
+        for (i, &t) in targets.iter().enumerate() {
+            let mut out = [0.0f32];
+            tree.predict_into(x.row(i), 1.0, &mut out);
+            assert!((out[0] - t as f32).abs() < 1e-4, "row {i}: {} vs {t}", out[0]);
+        }
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        let x = Matrix::randn(200, 3, &mut rng);
+        let targets: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
+        let (_b, tree) = grow_on(&x, &targets, 1, 3);
+        assert!(tree.max_depth() <= 3, "depth {}", tree.max_depth());
+        assert!(tree.n_nodes() <= 2usize.pow(4) - 1);
+    }
+
+    #[test]
+    fn leaf_mean_property() {
+        // With λ=0 and squared error, each leaf value must equal the mean
+        // target of the rows routed to it.
+        forall("leaf = mean(targets)", Config { cases: 25, seed: 0xABC }, |rng, _| {
+            let n = 10 + rng.below(80);
+            let p = 1 + rng.below(4);
+            let mut x = Matrix::zeros(n, p);
+            for v in x.data.iter_mut() {
+                *v = Gen::vec_f32(rng, 1, 4.0)[0];
+            }
+            let targets: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let (_b, tree) = grow_on(&x, &targets, 1, 4);
+            // Group rows by leaf.
+            let mut sums: std::collections::HashMap<usize, (f64, usize)> = Default::default();
+            for r in 0..n {
+                let leaf = tree.leaf_for(x.row(r));
+                let e = sums.entry(leaf).or_insert((0.0, 0));
+                e.0 += targets[r];
+                e.1 += 1;
+            }
+            for (leaf, (sum, count)) in sums {
+                let expect = sum / count as f64;
+                let got = tree.values[leaf] as f64;
+                if (got - expect).abs() > 1e-4 {
+                    return Err(format!("leaf {leaf}: {got} vs mean {expect}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn subtraction_trick_grows_identical_tree() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        let x = Matrix::randn(300, 5, &mut rng);
+        let targets: Vec<f64> = (0..300).map(|_| rng.normal()).collect();
+        let binned = BinnedMatrix::fit_bin(&x.view(), 64);
+        let layout = HistLayout::new(&binned);
+        let rows: Vec<u32> = (0..300).collect();
+        let grads: Vec<f64> = targets.iter().map(|&t| -t).collect();
+        let base = GrowParams {
+            max_depth: 5,
+            lambda: 1.0,
+            min_child_weight: 1.0,
+            min_split_gain: 0.0,
+            hist_subtraction: false,
+        };
+        let with_sub = GrowParams { hist_subtraction: true, ..base };
+        let t1 = grow_tree(&binned, &layout, &rows, &grads, &[], 1, &base);
+        let t2 = grow_tree(&binned, &layout, &rows, &grads, &[], 1, &with_sub);
+        // Same structure and values regardless of frontier ordering: compare
+        // predictions (node ids may differ).
+        for r in 0..300 {
+            let mut o1 = [0.0f32];
+            let mut o2 = [0.0f32];
+            t1.predict_into(x.row(r), 1.0, &mut o1);
+            t2.predict_into(x.row(r), 1.0, &mut o2);
+            assert!((o1[0] - o2[0]).abs() < 1e-5, "row {r}: {} vs {}", o1[0], o2[0]);
+        }
+    }
+
+    #[test]
+    fn multi_output_leaf_is_vector_mean() {
+        let x = Matrix::from_vec(4, 1, vec![1.0, 1.1, 9.0, 9.1]);
+        // Two outputs; clusters have different vector means.
+        let targets: Vec<f64> = vec![1.0, -1.0, 1.0, -1.0, 5.0, 3.0, 5.0, 3.0];
+        let binned = BinnedMatrix::fit_bin(&x.view(), 255);
+        let layout = HistLayout::new(&binned);
+        let grads: Vec<f64> = targets.iter().map(|&t| -t).collect();
+        let params = GrowParams {
+            max_depth: 2,
+            lambda: 0.0,
+            min_child_weight: 1.0,
+            min_split_gain: 0.0,
+            hist_subtraction: false,
+        };
+        let tree = grow_tree(&binned, &layout, &[0, 1, 2, 3], &grads, &[], 2, &params);
+        let mut out = [0.0f32; 2];
+        tree.predict_into(&[1.05], 1.0, &mut out);
+        assert!((out[0] - 1.0).abs() < 1e-5 && (out[1] + 1.0).abs() < 1e-5, "{out:?}");
+        out = [0.0; 2];
+        tree.predict_into(&[9.05], 1.0, &mut out);
+        assert!((out[0] - 5.0).abs() < 1e-5 && (out[1] - 3.0).abs() < 1e-5, "{out:?}");
+    }
+
+    #[test]
+    fn nan_rows_follow_default_direction() {
+        let x = Matrix::from_vec(6, 1, vec![1.0, 1.1, 1.2, 9.0, 9.1, f32::NAN]);
+        let targets = vec![-1.0, -1.0, -1.0, 1.0, 1.0, 1.0];
+        let (_b, tree) = grow_on(&x, &targets, 1, 2);
+        let mut out = [0.0f32];
+        tree.predict_into(&[f32::NAN], 1.0, &mut out);
+        // NaN row had target 1.0, should be routed with the right cluster.
+        assert!(out[0] > 0.0, "NaN routed badly: {}", out[0]);
+    }
+}

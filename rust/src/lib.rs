@@ -1,0 +1,40 @@
+//! # CaloForest
+//!
+//! A production-scale reproduction of *"Scaling Up Diffusion and Flow-based
+//! XGBoost Models"* (Cresswell & Kim, 2024): memory-efficient diffusion and
+//! flow-matching generative models for tabular data whose vector fields are
+//! parameterized by gradient-boosted trees instead of neural networks.
+//!
+//! The crate is organized as a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — the Rust coordinator: the paper's system
+//!   contribution. Parallel training orchestration over the `(t, y)` ensemble
+//!   grid with explicit memory policies ([`coordinator`]), the gradient-boosted
+//!   tree substrate ([`gbt`]), the ForestFlow / ForestDiffusion algorithms
+//!   ([`forest`]), evaluation metrics ([`eval`]), dataset substrates ([`data`],
+//!   [`sim`]), and baseline generative models ([`baselines`]).
+//! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
+//!   noising forward process and the sampler integration step, lowered
+//!   once to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot spots (batched forest traversal, fused conditional-flow-matching
+//!   noising), lowered into the same HLO and executed from Rust through the
+//!   PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the L1/L2
+//! graphs once; the Rust binary is self-contained afterwards.
+
+pub mod util;
+pub mod tensor;
+pub mod gbt;
+pub mod forest;
+pub mod coordinator;
+pub mod data;
+pub mod sim;
+pub mod eval;
+pub mod baselines;
+pub mod runtime;
+pub mod original;
+pub mod experiments;
+
+pub use gbt::{Booster, TrainParams, TreeKind};

@@ -1,0 +1,297 @@
+//! `caloforest` — the launcher.
+//!
+//! Subcommands:
+//! * `train`     — train a ForestFlow/ForestDiffusion model on a benchmark
+//!                 stand-in or synthetic data, streaming to a model store.
+//! * `generate`  — load a model store and generate samples to CSV.
+//! * `calo`      — the end-to-end CaloForest pipeline (train → generate →
+//!                 χ²/AUC report).
+//! * `resources` — one resource sweep point (Fig 1/4 style).
+//! * `quality`   — Table-2-style evaluation on selected datasets.
+//!
+//! Run `caloforest <cmd> --help` for options.
+
+use caloforest::coordinator::memory::{fmt_bytes, TrackingAlloc};
+use caloforest::util::cli::Args;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, rest)) => (c.as_str(), rest.to_vec()),
+        None => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd {
+        "train" => cmd_train(&rest),
+        "generate" => cmd_generate(&rest),
+        "calo" => cmd_calo(&rest),
+        "resources" => cmd_resources(&rest),
+        "quality" => cmd_quality(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n\n{USAGE}")),
+    };
+    if let Err(msg) = result {
+        eprintln!("{msg}");
+        std::process::exit(2);
+    }
+}
+
+const USAGE: &str = "caloforest — diffusion & flow-matching generative trees at scale
+
+Commands:
+  train       train a model (streaming store, resumable)
+  generate    sample from a trained model store
+  calo        end-to-end calorimeter pipeline (Tables 3/4/5)
+  resources   one resource-scaling point (Figs 1/2/4)
+  quality     benchmark-quality evaluation (Tables 2/7)";
+
+fn cmd_train(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("caloforest train", "train ForestFlow/ForestDiffusion")
+        .opt("dataset", "iris", "benchmark stand-in name, or 'synthetic'")
+        .opt("n", "1000", "rows (synthetic only)")
+        .opt("p", "10", "features (synthetic only)")
+        .opt("n-y", "1", "classes (synthetic only)")
+        .opt("method", "flow", "flow | diffusion")
+        .opt("trees", "multi", "single | multi")
+        .opt("n-t", "10", "timesteps n_t")
+        .opt("k", "10", "duplication factor K")
+        .opt("n-tree", "50", "max boosting rounds per ensemble")
+        .opt("depth", "7", "max tree depth")
+        .opt("eta", "0.3", "learning rate")
+        .opt("es", "0", "early-stopping rounds (0 = off)")
+        .opt("workers", "1", "parallel training jobs")
+        .opt("seed", "0", "seed")
+        .opt("store", "results/model_store", "model store directory")
+        .flag("resume", "resume from existing store")
+        .parse(argv)?;
+
+    let (x, y) = load_dataset(&args)?;
+    let cfg = forest_cfg_from(&args);
+    let opts = caloforest::coordinator::RunOptions {
+        workers: args.get_usize("workers"),
+        store_dir: Some(std::path::PathBuf::from(args.get("store"))),
+        resume: args.get_bool("resume"),
+        track_memory: true,
+    };
+    let out = caloforest::coordinator::run_training(&cfg, &x, y.as_deref(), &opts);
+    println!(
+        "trained {} ensembles in {:.2}s (peak heap {}), store: {}",
+        out.report.jobs.len(),
+        out.report.total_seconds,
+        fmt_bytes(out.peak_alloc_bytes),
+        args.get("store"),
+    );
+    Ok(())
+}
+
+fn cmd_generate(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("caloforest generate", "sample from a trained store")
+        .opt("store", "results/model_store", "model store directory")
+        .opt("n", "1000", "samples to generate")
+        .opt("seed", "0", "seed")
+        .opt("out", "results/generated.csv", "output CSV")
+        .flag("xla", "use the AOT PJRT backend when an artifact fits")
+        .parse(argv)?;
+    let store =
+        caloforest::coordinator::store::ModelStore::open(std::path::Path::new(&args.get("store")))
+            .map_err(|e| format!("open store: {e}"))?;
+    let model = store.load_model().map_err(|e| format!("load model: {e}"))?;
+    let cfg = caloforest::forest::GenerateConfig::new(args.get_usize("n"), args.get_u64("seed"));
+    let t0 = std::time::Instant::now();
+    let (gen, labels) = if args.get_bool("xla") {
+        let runtime = caloforest::runtime::PjrtRuntime::cpu(std::path::Path::new("artifacts"))
+            .map_err(|e| format!("PJRT: {e}"))?;
+        let field = caloforest::runtime::xla_sampler::XlaField::prepare(&runtime, &model)
+            .map_err(|e| format!("XLA backend: {e}"))?;
+        caloforest::forest::sampler::generate_with(&model, &field, &cfg)
+    } else {
+        caloforest::forest::generate(&model, &cfg)
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    write_csv(&args.get("out"), &gen, Some(&labels))?;
+    println!(
+        "generated {} rows in {:.3}s ({:.3} ms/row) -> {}",
+        gen.rows,
+        secs,
+        secs * 1000.0 / gen.rows as f64,
+        args.get("out")
+    );
+    Ok(())
+}
+
+fn cmd_calo(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("caloforest calo", "end-to-end calorimeter pipeline")
+        .opt("particle", "photons", "photons | pions")
+        .opt("n-per-class", "30", "showers per incident energy")
+        .opt("n-t", "6", "timesteps")
+        .opt("k", "5", "duplication factor")
+        .opt("n-tree", "12", "trees per ensemble")
+        .opt("workers", "1", "parallel jobs")
+        .opt("seed", "0", "seed")
+        .flag("full-geometry", "use the Challenge's full 368/533 voxels")
+        .parse(argv)?;
+    let geometry = match (args.get("particle").as_str(), args.get_bool("full-geometry")) {
+        ("photons", true) => caloforest::sim::CaloGeometry::photons(),
+        ("photons", false) => caloforest::experiments::calo::photons_mini(),
+        ("pions", true) => caloforest::sim::CaloGeometry::pions(),
+        ("pions", false) => caloforest::experiments::calo::pions_mini(),
+        (other, _) => return Err(format!("unknown particle '{other}'")),
+    };
+    let cfg = caloforest::experiments::calo::CaloConfig {
+        n_per_class: args.get_usize("n-per-class"),
+        n_t: args.get_usize("n-t"),
+        k_dup: args.get_usize("k"),
+        n_trees: args.get_usize("n-tree"),
+        workers: args.get_usize("workers"),
+        seed: args.get_u64("seed"),
+        ..Default::default()
+    };
+    let out = caloforest::experiments::calo::run_caloforest(&geometry, &cfg);
+    println!("== CaloForest ({}) ==", args.get("particle"));
+    println!("AUC: {:.4}", out.auc);
+    for (name, chi2) in &out.chi2 {
+        println!("  chi2 {:<16} {:.4}", name, chi2);
+    }
+    println!(
+        "train {:.1}s | gen {:.2}s ({:.3} ms/shower) | {} ensembles",
+        out.train_secs, out.gen_secs, out.ms_per_datapoint, out.ensembles_trained
+    );
+    Ok(())
+}
+
+fn cmd_resources(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("caloforest resources", "one resource sweep point")
+        .opt("variant", "SO", "Original | SO | MO | SO-ES | MO-ES | Ours-Iterator")
+        .opt("n", "1000", "rows")
+        .opt("p", "10", "features")
+        .opt("n-y", "10", "classes")
+        .opt("k", "10", "duplication")
+        .opt("n-t", "10", "timesteps")
+        .parse(argv)?;
+    use caloforest::experiments::resource::{run_point, SweepConfig, Variant};
+    let variant = match args.get("variant").as_str() {
+        "Original" => Variant::Original,
+        "SO" => Variant::So,
+        "MO" => Variant::Mo,
+        "SO-ES" => Variant::SoEs,
+        "MO-ES" => Variant::MoEs,
+        "Ours-Iterator" => Variant::OursIterator,
+        other => return Err(format!("unknown variant '{other}'")),
+    };
+    let cfg = SweepConfig {
+        k_dup: args.get_usize("k"),
+        n_t: args.get_usize("n-t"),
+        ..Default::default()
+    };
+    let r = run_point(variant, args.get_usize("n"), args.get_usize("p"), args.get_usize("n-y"), &cfg);
+    println!(
+        "{}: train {:.2}s | peak {} | gen(5x) {} | failed={}",
+        r.variant,
+        r.train_secs,
+        fmt_bytes(r.peak_bytes),
+        r.gen_secs.map(|g| format!("{g:.2}s")).unwrap_or_else(|| "—".into()),
+        r.failed
+    );
+    Ok(())
+}
+
+fn cmd_quality(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("caloforest quality", "Table-2-style evaluation")
+        .opt("datasets", "iris,seeds,wine", "comma-separated stand-in names")
+        .opt("row-cap", "200", "training-row cap")
+        .parse(argv)?;
+    use caloforest::experiments::quality::{evaluate_method, Method, Metrics, QualityConfig};
+    let registry = caloforest::data::benchmark::benchmark_registry();
+    let cfg = QualityConfig { row_cap: args.get_usize("row-cap"), ..Default::default() };
+    let methods = [Method::GaussianCopula, Method::FfSoScaled, Method::FfMoScaled];
+    println!("{:<24} {:<16} {}", "dataset", "method", Metrics::NAMES.join("  "));
+    for name in args.get("datasets").split(',') {
+        let Some(spec) = registry.iter().find(|r| r.name == name.trim()) else {
+            eprintln!("unknown dataset '{name}', skipping");
+            continue;
+        };
+        for method in methods {
+            let m = evaluate_method(method, spec, &cfg);
+            let row: Vec<String> = m.values().iter().map(|v| format!("{v:.3}")).collect();
+            println!("{:<24} {:<16} {}", spec.name, method.name(), row.join("  "));
+        }
+    }
+    Ok(())
+}
+
+fn load_dataset(args: &Args) -> Result<(caloforest::tensor::Matrix, Option<Vec<u32>>), String> {
+    let name = args.get("dataset");
+    if name == "synthetic" {
+        let (x, y) = caloforest::data::synthetic::synthetic_dataset(
+            args.get_usize("n"),
+            args.get_usize("p"),
+            args.get_usize("n-y"),
+            args.get_u64("seed"),
+        );
+        let y = if args.get_usize("n-y") > 1 { Some(y) } else { None };
+        return Ok((x, y));
+    }
+    let registry = caloforest::data::benchmark::benchmark_registry();
+    let spec = registry
+        .iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| format!("unknown dataset '{name}'"))?;
+    let data = caloforest::data::benchmark::load_benchmark(spec);
+    Ok((data.x, data.y))
+}
+
+fn forest_cfg_from(args: &Args) -> caloforest::forest::ForestTrainConfig {
+    use caloforest::forest::model::ModelKind;
+    use caloforest::gbt::{TrainParams, TreeKind};
+    let kind = if args.get("method") == "diffusion" {
+        ModelKind::Diffusion
+    } else {
+        ModelKind::Flow
+    };
+    let es = args.get_usize("es");
+    caloforest::forest::ForestTrainConfig {
+        kind,
+        eps: if kind == ModelKind::Diffusion { 0.001 } else { 0.0 },
+        params: TrainParams {
+            n_trees: args.get_usize("n-tree"),
+            max_depth: args.get_usize("depth"),
+            eta: args.get_f32("eta"),
+            kind: if args.get("trees") == "single" { TreeKind::Single } else { TreeKind::Multi },
+            early_stopping_rounds: es,
+            ..Default::default()
+        },
+        n_t: args.get_usize("n-t"),
+        k_dup: args.get_usize("k"),
+        fresh_noise_validation: es > 0,
+        seed: args.get_u64("seed"),
+        ..Default::default()
+    }
+}
+
+fn write_csv(
+    path: &str,
+    m: &caloforest::tensor::Matrix,
+    labels: Option<&[u32]>,
+) -> Result<(), String> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    let mut out = String::new();
+    for r in 0..m.rows {
+        let mut fields: Vec<String> = m.row(r).iter().map(|v| format!("{v}")).collect();
+        if let Some(l) = labels {
+            fields.push(format!("{}", l[r]));
+        }
+        out.push_str(&fields.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out).map_err(|e| format!("write {path}: {e}"))
+}

@@ -1,0 +1,248 @@
+//! PJRT CPU client wrapper with an executable cache and the artifact index.
+
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Pinned shapes of one AOT entry point (from `artifacts/index.json`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Batch rows the executable was lowered for.
+    pub n: usize,
+    /// Feature dimension.
+    pub p: usize,
+    /// Padded tree count (0 for non-forest kernels).
+    pub n_trees: usize,
+    /// Padded nodes per tree.
+    pub max_nodes: usize,
+    /// Traversal iterations.
+    pub depth: usize,
+}
+
+/// Parsed `artifacts/index.json`.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactIndex {
+    pub specs: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactIndex {
+    /// Load the index; returns an empty index when artifacts are not built
+    /// (callers fall back to the native backend).
+    pub fn load(dir: &Path) -> ArtifactIndex {
+        let path = dir.join("index.json");
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return ArtifactIndex { specs: Vec::new(), dir: dir.to_path_buf() };
+        };
+        let Ok(json) = Json::parse(&text) else {
+            return ArtifactIndex { specs: Vec::new(), dir: dir.to_path_buf() };
+        };
+        let mut specs = Vec::new();
+        if let Some(entries) = json.get("artifacts").and_then(|a| a.as_arr()) {
+            for e in entries {
+                let get = |k: &str| e.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+                specs.push(ArtifactSpec {
+                    name: e.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    file: e.get("file").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    n: get("n"),
+                    p: get("p"),
+                    n_trees: get("n_trees"),
+                    max_nodes: get("max_nodes"),
+                    depth: get("depth"),
+                });
+            }
+        }
+        ArtifactIndex { specs, dir: dir.to_path_buf() }
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// Smallest forest artifact that fits a model of the given dims.
+    pub fn find_forest_fit(&self, p: usize, n_trees: usize, max_nodes: usize, depth: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| {
+                s.name.starts_with("flow_step")
+                    && s.p == p
+                    && s.n_trees >= n_trees
+                    && s.max_nodes >= max_nodes
+                    && s.depth >= depth
+            })
+            .min_by_key(|s| s.n_trees * s.max_nodes)
+    }
+}
+
+/// A compiled executable plus its spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Run with f32 row-major inputs; returns the flat f32 outputs of the
+    /// result tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape failed: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute failed: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal failed: {e:?}"))?;
+        // Entry points are lowered with return_tuple=True.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("tuple decode failed: {e:?}"))?;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for part in parts {
+            vecs.push(
+                part.to_vec::<f32>()
+                    .map_err(|e| anyhow!("output not f32: {e:?}"))?,
+            );
+        }
+        Ok(vecs)
+    }
+
+    /// Run with mixed f32/i32 inputs.
+    pub fn run_mixed(&self, inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            let lit = match input {
+                Input::F32(data, dims) => xla::Literal::vec1(*data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape failed: {e:?}"))?,
+                Input::I32(data, dims) => xla::Literal::vec1(*data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape failed: {e:?}"))?,
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute failed: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal failed: {e:?}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("tuple decode failed: {e:?}"))?;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for part in parts {
+            vecs.push(
+                part.to_vec::<f32>()
+                    .map_err(|e| anyhow!("output not f32: {e:?}"))?,
+            );
+        }
+        Ok(vecs)
+    }
+}
+
+/// A typed executable input.
+pub enum Input<'a> {
+    F32(&'a [f32], Vec<i64>),
+    I32(&'a [i32], Vec<i64>),
+}
+
+/// The PJRT CPU runtime with a compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub index: ArtifactIndex,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU runtime over an artifact directory.
+    pub fn cpu(artifact_dir: &Path) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            index: ArtifactIndex::load(artifact_dir),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .index
+            .find(name)
+            .with_context(|| format!("artifact '{name}' not in index (run `make artifacts`)"))?
+            .clone();
+        let exe = self.compile_spec(&spec)?;
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile a specific spec (bypassing the name cache key).
+    pub fn compile_spec(&self, spec: &ArtifactSpec) -> Result<Arc<Executable>> {
+        let path = self.index.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("HLO parse failed for {}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile failed for {}: {e:?}", spec.file))?;
+        Ok(Arc::new(Executable { spec: spec.clone(), exe }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_index_is_empty_not_error() {
+        let idx = ArtifactIndex::load(Path::new("/nonexistent/dir"));
+        assert!(idx.specs.is_empty());
+        assert!(idx.find("anything").is_none());
+    }
+
+    #[test]
+    fn index_parsing() {
+        let dir = std::env::temp_dir().join("caloforest_test_index");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("index.json"),
+            r#"{"artifacts": [{"name": "flow_step_p8", "file": "flow_step_p8.hlo.txt",
+                 "n": 256, "p": 8, "n_trees": 128, "max_nodes": 255, "depth": 7}]}"#,
+        )
+        .unwrap();
+        let idx = ArtifactIndex::load(&dir);
+        assert_eq!(idx.specs.len(), 1);
+        let s = idx.find("flow_step_p8").unwrap();
+        assert_eq!(s.p, 8);
+        assert_eq!(s.n, 256);
+        // Fit lookup: a smaller model fits, a larger one does not.
+        assert!(idx.find_forest_fit(8, 100, 200, 6).is_some());
+        assert!(idx.find_forest_fit(8, 500, 200, 6).is_none());
+        assert!(idx.find_forest_fit(9, 100, 200, 6).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

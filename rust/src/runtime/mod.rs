@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust hot path.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, lowering the L2 JAX
+//! graphs (which call the L1 Pallas kernels) to **HLO text** under
+//! `artifacts/` together with an `index.json` describing each entry point's
+//! pinned shapes. This module loads those artifacts through the `xla` crate
+//! (PJRT CPU client), caches compiled executables, and exposes the
+//! [`xla_sampler::XlaField`] backend that plugs into the shared sampler.
+//!
+//! HLO *text* (not serialized protos) is the interchange format: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod xla_sampler;
+
+pub use client::{ArtifactIndex, PjrtRuntime};

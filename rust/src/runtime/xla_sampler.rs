@@ -1,0 +1,225 @@
+//! XLA vector-field backend: the sampler's Euler step runs through the AOT
+//! `flow_step_*` executable (L2 graph + L1 Pallas traversal kernel).
+//!
+//! Models are packed to node tensors ([`crate::gbt::predict::PackedForest`])
+//! and padded up to the artifact's pinned `(n_trees, max_nodes)`; padding
+//! trees are self-loop leaves with zero values, so they are inert. Batches
+//! are padded to the artifact's row count and sliced back.
+
+use super::client::{Executable, Input, PjrtRuntime};
+use crate::forest::model::ForestModel;
+use crate::forest::sampler::FieldEval;
+use crate::gbt::predict::PackedForest;
+use crate::tensor::MatrixView;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// One packed + padded ensemble's tensors.
+struct PackedSlot {
+    feature: Vec<i32>,
+    threshold: Vec<f32>,
+    left: Vec<i32>,
+    right: Vec<i32>,
+    values: Vec<f32>,
+    base: Vec<f32>,
+    eta: f32,
+}
+
+/// A `FieldEval` backend that evaluates the learned field via PJRT.
+pub struct XlaField {
+    exe: Arc<Executable>,
+    /// `[n_t × n_y]` packed ensembles.
+    slots: Vec<PackedSlot>,
+    n_y: usize,
+    p: usize,
+}
+
+impl XlaField {
+    /// Pack every ensemble of a model for the given runtime. Fails when no
+    /// artifact fits the model's dimensions (callers fall back to native).
+    pub fn prepare(runtime: &PjrtRuntime, model: &ForestModel) -> Result<XlaField> {
+        let packed: Vec<PackedForest> = model
+            .ensembles
+            .iter()
+            .map(|e| {
+                PackedForest::pack(
+                    e.as_ref()
+                        .ok_or_else(|| anyhow!("model has untrained slots"))?,
+                )
+                .pipe_ok()
+            })
+            .collect::<Result<_>>()?;
+        let need_trees = packed.iter().map(|p| p.n_trees).max().unwrap_or(1);
+        let need_nodes = packed.iter().map(|p| p.max_nodes).max().unwrap_or(1);
+        let need_depth = packed.iter().map(|p| p.depth).max().unwrap_or(1);
+        let spec = runtime
+            .index
+            .find_forest_fit(model.p, need_trees, need_nodes, need_depth)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact fits p={} trees={} nodes={} depth={} (run `make artifacts`)",
+                    model.p,
+                    need_trees,
+                    need_nodes,
+                    need_depth
+                )
+            })?
+            .clone();
+        let exe = runtime.load(&spec.name)?;
+
+        let slots = packed
+            .into_iter()
+            .map(|pf| pad_packed(&pf, spec.n_trees, spec.max_nodes))
+            .collect();
+        Ok(XlaField { exe, slots, n_y: model.n_y(), p: model.p })
+    }
+
+    /// The artifact's pinned batch rows (callers batch generation in this
+    /// size).
+    pub fn batch_rows(&self) -> usize {
+        self.exe.spec.n
+    }
+
+    fn slot(&self, t_idx: usize, y: usize) -> &PackedSlot {
+        &self.slots[t_idx * self.n_y + y]
+    }
+
+    /// Evaluate the field on up to `batch_rows` rows (padding internally).
+    fn eval_padded(&self, slot: &PackedSlot, x: &MatrixView<'_>, out: &mut [f32]) {
+        let n_art = self.exe.spec.n;
+        let p = self.p;
+        assert!(x.rows <= n_art, "batch larger than artifact rows");
+        let mut x_pad = vec![0.0f32; n_art * p];
+        x_pad[..x.rows * p].copy_from_slice(x.data);
+        let spec = &self.exe.spec;
+        let t = spec.n_trees as i64;
+        let nn = spec.max_nodes as i64;
+        let scalars = [slot.eta];
+        let inputs = [
+            Input::F32(&x_pad, vec![n_art as i64, p as i64]),
+            Input::I32(&slot.feature, vec![t, nn]),
+            Input::F32(&slot.threshold, vec![t, nn]),
+            Input::I32(&slot.left, vec![t, nn]),
+            Input::I32(&slot.right, vec![t, nn]),
+            Input::F32(&slot.values, vec![t, nn, p as i64]),
+            Input::F32(&slot.base, vec![p as i64]),
+            Input::F32(&scalars, vec![]),
+        ];
+        let outputs = self
+            .exe
+            .run_mixed(&inputs)
+            .expect("XLA field evaluation failed");
+        out[..x.rows * p].copy_from_slice(&outputs[0][..x.rows * p]);
+    }
+}
+
+impl FieldEval for XlaField {
+    fn eval(&self, t_idx: usize, y: usize, x: &MatrixView<'_>, out: &mut [f32]) {
+        let slot = self.slot(t_idx, y);
+        let n_art = self.exe.spec.n;
+        let p = self.p;
+        // Chunk the batch to the artifact's pinned rows.
+        let mut start = 0usize;
+        while start < x.rows {
+            let end = (start + n_art).min(x.rows);
+            let sub = MatrixView {
+                rows: end - start,
+                cols: p,
+                data: &x.data[start * p..end * p],
+            };
+            self.eval_padded(slot, &sub, &mut out[start * p..end * p]);
+            start = end;
+        }
+    }
+}
+
+/// Pad a packed forest to `(n_trees, max_nodes)`.
+fn pad_packed(pf: &PackedForest, n_trees: usize, max_nodes: usize) -> PackedSlot {
+    let m = pf.m;
+    let mut slot = PackedSlot {
+        feature: vec![0; n_trees * max_nodes],
+        threshold: vec![0.0; n_trees * max_nodes],
+        left: vec![0; n_trees * max_nodes],
+        right: vec![0; n_trees * max_nodes],
+        values: vec![0.0; n_trees * max_nodes * m],
+        base: pf.base_score.clone(),
+        eta: pf.eta,
+    };
+    // Default: every node is a self-loop leaf with zero value.
+    for t in 0..n_trees {
+        for node in 0..max_nodes {
+            let idx = t * max_nodes + node;
+            slot.left[idx] = node as i32;
+            slot.right[idx] = node as i32;
+        }
+    }
+    for t in 0..pf.n_trees {
+        for node in 0..pf.max_nodes {
+            let src = t * pf.max_nodes + node;
+            let dst = t * max_nodes + node;
+            slot.feature[dst] = pf.feature[src];
+            slot.threshold[dst] = pf.threshold[src];
+            slot.left[dst] = pf.left[src];
+            slot.right[dst] = pf.right[src];
+            slot.values[dst * m..(dst + 1) * m]
+                .copy_from_slice(&pf.values[src * m..(src + 1) * m]);
+        }
+    }
+    slot
+}
+
+/// Small helper: wrap a value in Ok for collecting.
+trait PipeOk: Sized {
+    fn pipe_ok(self) -> Result<Self> {
+        Ok(self)
+    }
+}
+impl<T> PipeOk for T {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbt::{Booster, TrainParams};
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn padding_preserves_predictions() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(50, 3, &mut rng);
+        let mut y = Matrix::zeros(50, 3);
+        for r in 0..50 {
+            y.set(r, 0, x.at(r, 0));
+            y.set(r, 1, -x.at(r, 1));
+            y.set(r, 2, x.at(r, 2) * 2.0);
+        }
+        let b = Booster::train(
+            &x.view(),
+            &y.view(),
+            TrainParams { n_trees: 4, max_depth: 3, ..Default::default() },
+            None,
+        );
+        let pf = PackedForest::pack(&b);
+        let padded = pad_packed(&pf, pf.n_trees + 5, pf.max_nodes + 10);
+        // Emulate the padded traversal natively.
+        let mut pf_padded = pf.clone();
+        pf_padded.n_trees = pf.n_trees + 5;
+        pf_padded.max_nodes = pf.max_nodes + 10;
+        pf_padded.feature = padded.feature.clone();
+        pf_padded.threshold = padded.threshold.clone();
+        pf_padded.left = padded.left.clone();
+        pf_padded.right = padded.right.clone();
+        pf_padded.values = padded.values.clone();
+        pf_padded.out_index = vec![-1; pf.n_trees + 5];
+        let native = pf.predict(&x.view());
+        let via_pad = pf_padded.predict(&x.view());
+        for i in 0..native.data.len() {
+            assert!(
+                (native.data[i] - via_pad.data[i]).abs() < 1e-5,
+                "i={i}: {} vs {}",
+                native.data[i],
+                via_pad.data[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! χ² separation power between feature histograms (Eq. 7) — the Challenge's
+//! distributional metric reported in Tables 3/4/5.
+
+use crate::util::stats;
+
+/// χ²(h1, h2) = ½ Σ (h1i − h2i)² / (h1i + h2i) over *normalized* histograms.
+/// 0 iff identical; 1 iff disjoint. Empty bins on both sides are skipped.
+pub fn chi2_separation(h1: &[f64], h2: &[f64]) -> f64 {
+    assert_eq!(h1.len(), h2.len());
+    let mut total = 0.0;
+    for i in 0..h1.len() {
+        let denom = h1[i] + h2[i];
+        if denom > 0.0 {
+            let d = h1[i] - h2[i];
+            total += d * d / denom;
+        }
+    }
+    0.5 * total
+}
+
+/// Histogram two samples over shared bins derived from the reference sample
+/// (1st–99th percentile range, like the Challenge's evaluation script), then
+/// return their χ² separation power.
+pub fn chi2_of_samples(reference: &[f64], generated: &[f64], bins: usize) -> f64 {
+    assert!(!reference.is_empty() && !generated.is_empty());
+    let lo = stats::quantile(reference, 0.005);
+    let hi = stats::quantile(reference, 0.995);
+    let (lo, hi) = if hi > lo { (lo, hi) } else { (lo - 0.5, lo + 0.5) };
+    let h1 = stats::normalize(&stats::histogram(reference, lo, hi, bins));
+    let h2 = stats::normalize(&stats::histogram(generated, lo, hi, bins));
+    chi2_separation(&h1, &h2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_histograms_zero() {
+        let h = vec![0.25, 0.25, 0.5];
+        assert!(chi2_separation(&h, &h).abs() < 1e-15);
+    }
+
+    #[test]
+    fn disjoint_histograms_one() {
+        let h1 = vec![1.0, 0.0];
+        let h2 = vec![0.0, 1.0];
+        assert!((chi2_separation(&h1, &h2) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn same_distribution_small_chi2() {
+        let mut rng = Rng::new(1);
+        let a: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+        let c: Vec<f64> = (0..20_000).map(|_| rng.normal() + 2.0).collect();
+        let same = chi2_of_samples(&a, &b, 50);
+        let diff = chi2_of_samples(&a, &c, 50);
+        assert!(same < 0.01, "same-dist chi2 {same}");
+        assert!(diff > 0.3, "shifted-dist chi2 {diff}");
+        assert!(diff > same * 10.0);
+    }
+
+    #[test]
+    fn degenerate_reference_handled() {
+        let a = vec![1.0; 100];
+        let b = vec![1.0; 100];
+        let v = chi2_of_samples(&a, &b, 10);
+        assert!(v.abs() < 1e-12);
+    }
+}

@@ -1,0 +1,136 @@
+//! The Challenge's classifier metric: train a binary classifier to
+//! distinguish generated from reference showers; report ROC AUC on a
+//! held-out balanced split. AUC → 0.5 means indistinguishable (better).
+//!
+//! The Challenge prescribes a small NN; we use the in-house GBT classifier
+//! (logistic objective), which is at least as strong a discriminator on
+//! tabular features — a conservative substitution (it can only make our
+//! AUC numbers *worse*, not flatter).
+
+use crate::gbt::{Booster, Objective, TrainParams};
+use crate::tensor::{Matrix, MatrixView};
+use crate::util::rng::Rng;
+
+/// ROC AUC from scores and binary labels (probability a random positive
+/// outranks a random negative; ties count half).
+pub fn roc_auc(scores: &[f32], labels: &[u8]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // Rank-sum (Mann–Whitney U) with average ranks for ties.
+    let n = scores.len();
+    let mut rank_sum_pos = 0.0f64;
+    let mut n_pos = 0usize;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for &idx in &order[i..=j] {
+            if labels[idx] == 1 {
+                rank_sum_pos += avg_rank;
+                n_pos += 1;
+            }
+        }
+        i = j + 1;
+    }
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    (rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0) / (n_pos * n_neg) as f64
+}
+
+/// Train the real-vs-generated classifier and return its held-out AUC.
+///
+/// Both sets are truncated to the same size, split 70/30, and the
+/// classifier sees raw features (the Challenge normalizes by E_inc; our
+/// per-class pipeline feeds it the same scaled space both ways).
+pub fn classifier_auc(reference: &Matrix, generated: &Matrix, seed: u64) -> f64 {
+    let n = reference.rows.min(generated.rows);
+    let mut rng = Rng::new(seed);
+    let perm_r = rng.permutation(reference.rows);
+    let perm_g = rng.permutation(generated.rows);
+    let n_train = (n * 7) / 10;
+
+    let build = |src: &Matrix, idx: &[usize]| -> Matrix { src.take_rows(idx) };
+    let x_train = Matrix::concat_rows(&[
+        &build(reference, &perm_r[..n_train]),
+        &build(generated, &perm_g[..n_train]),
+    ]);
+    let mut y_train = Matrix::zeros(2 * n_train, 1);
+    for r in 0..n_train {
+        y_train.set(r, 0, 1.0);
+    }
+    let x_test = Matrix::concat_rows(&[
+        &build(reference, &perm_r[n_train..n]),
+        &build(generated, &perm_g[n_train..n]),
+    ]);
+    let n_test = n - n_train;
+    let labels: Vec<u8> = (0..2 * n_test).map(|i| if i < n_test { 1 } else { 0 }).collect();
+
+    let params = TrainParams {
+        n_trees: 60,
+        max_depth: 5,
+        eta: 0.2,
+        lambda: 1.0,
+        objective: Objective::Logistic,
+        early_stopping_rounds: 0,
+        ..Default::default()
+    };
+    let clf = Booster::train(&x_train.view(), &y_train.view(), params, None);
+    let margins = clf.predict(&x_test.view());
+    let scores: Vec<f32> = margins.data.clone();
+    // AUC of "real" class; symmetric around 0.5, report distance-above.
+    let auc = roc_auc(&scores, &labels);
+    auc.max(1.0 - auc)
+}
+
+/// Convenience: AUC over feature views.
+pub fn classifier_auc_views(reference: &MatrixView<'_>, generated: &MatrixView<'_>, seed: u64) -> f64 {
+    classifier_auc(&reference.to_matrix(), &generated.to_matrix(), seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let scores = vec![0.9, 0.8, 0.2, 0.1];
+        let labels = vec![1, 1, 0, 0];
+        assert!((roc_auc(&scores, &labels) - 1.0).abs() < 1e-12);
+        let inv = vec![0, 0, 1, 1];
+        assert!(roc_auc(&scores, &inv).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_handles_ties() {
+        let scores = vec![0.5, 0.5, 0.5, 0.5];
+        let labels = vec![1, 0, 1, 0];
+        assert!((roc_auc(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identical_distributions_near_half() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(400, 4, &mut rng);
+        let b = Matrix::randn(400, 4, &mut rng);
+        let auc = classifier_auc(&a, &b, 1);
+        assert!(auc < 0.65, "same-dist AUC {auc}");
+    }
+
+    #[test]
+    fn shifted_distributions_high_auc() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(300, 4, &mut rng);
+        let mut b = Matrix::randn(300, 4, &mut rng);
+        for v in b.data.iter_mut() {
+            *v += 1.5;
+        }
+        let auc = classifier_auc(&a, &b, 1);
+        assert!(auc > 0.9, "shifted AUC {auc}");
+    }
+}

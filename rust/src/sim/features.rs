@@ -1,0 +1,191 @@
+//! The Challenge's high-level ("domain expert") features.
+//!
+//! From a voxel matrix the evaluation derives, per shower: the total
+//! sampling fraction `E_dep/E_inc`, the deposited energy per layer, and for
+//! every layer with angular segmentation the centers of energy in η and φ
+//! and their widths (App. A.1). Tables 4/5 and Figs 5/8 are histograms of
+//! these features.
+
+use super::geometry::CaloGeometry;
+use super::shower::CaloDataset;
+
+/// Feature kinds, matching the rows of Tables 4/5.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Feature {
+    /// E_dep / E_inc.
+    SamplingFraction,
+    /// Deposited energy in one layer (MeV), log-scaled histogramming.
+    LayerEnergy { layer_id: u32 },
+    /// Center of energy in η for a layer.
+    CenterEta { layer_id: u32 },
+    /// Center of energy in φ for a layer.
+    CenterPhi { layer_id: u32 },
+    /// Width of the center of energy in η.
+    WidthEta { layer_id: u32 },
+    /// Width of the center of energy in φ.
+    WidthPhi { layer_id: u32 },
+}
+
+impl Feature {
+    pub fn name(&self) -> String {
+        match self {
+            Feature::SamplingFraction => "E_dep/E_inc".to_string(),
+            Feature::LayerEnergy { layer_id } => format!("E_dep_L{layer_id}"),
+            Feature::CenterEta { layer_id } => format!("CE_eta_L{layer_id}"),
+            Feature::CenterPhi { layer_id } => format!("CE_phi_L{layer_id}"),
+            Feature::WidthEta { layer_id } => format!("Width_eta_L{layer_id}"),
+            Feature::WidthPhi { layer_id } => format!("Width_phi_L{layer_id}"),
+        }
+    }
+}
+
+/// The full feature list evaluated for a geometry: sampling fraction, every
+/// layer's energy, and CE/width for angularly segmented layers — exactly
+/// the rows of Table 4 (Photons) / Table 5 (Pions).
+pub fn feature_list(geometry: &CaloGeometry) -> Vec<Feature> {
+    let mut feats = vec![Feature::SamplingFraction];
+    for l in &geometry.layers {
+        feats.push(Feature::LayerEnergy { layer_id: l.id });
+    }
+    for l in &geometry.layers {
+        if l.n_alpha > 1 {
+            feats.push(Feature::CenterEta { layer_id: l.id });
+            feats.push(Feature::CenterPhi { layer_id: l.id });
+        }
+    }
+    for l in &geometry.layers {
+        if l.n_alpha > 1 {
+            feats.push(Feature::WidthEta { layer_id: l.id });
+            feats.push(Feature::WidthPhi { layer_id: l.id });
+        }
+    }
+    feats
+}
+
+/// Evaluate one feature over every shower of a dataset.
+pub fn compute_feature(ds: &CaloDataset, feature: &Feature) -> Vec<f64> {
+    let g = &ds.geometry;
+    (0..ds.voxels.rows)
+        .map(|r| {
+            let row = ds.voxels.row(r);
+            match feature {
+                Feature::SamplingFraction => {
+                    let dep: f32 = row.iter().sum();
+                    (dep / ds.e_inc(r)) as f64
+                }
+                Feature::LayerEnergy { layer_id } => layer_sum(g, row, *layer_id) as f64,
+                Feature::CenterEta { layer_id } => layer_moments(g, row, *layer_id).0,
+                Feature::CenterPhi { layer_id } => layer_moments(g, row, *layer_id).1,
+                Feature::WidthEta { layer_id } => layer_moments(g, row, *layer_id).2,
+                Feature::WidthPhi { layer_id } => layer_moments(g, row, *layer_id).3,
+            }
+        })
+        .collect()
+}
+
+fn layer_index(g: &CaloGeometry, id: u32) -> usize {
+    g.layers.iter().position(|l| l.id == id).expect("unknown layer id")
+}
+
+fn layer_sum(g: &CaloGeometry, row: &[f32], id: u32) -> f32 {
+    let li = layer_index(g, id);
+    let off = g.layer_offset(li);
+    row[off..off + g.layers[li].n_voxels()].iter().sum()
+}
+
+/// (CE_η, CE_φ, Width_η, Width_φ) of one layer for one shower.
+fn layer_moments(g: &CaloGeometry, row: &[f32], id: u32) -> (f64, f64, f64, f64) {
+    let li = layer_index(g, id);
+    let layer = g.layers[li];
+    let off = g.layer_offset(li);
+    let mut e_sum = 0.0f64;
+    let (mut se, mut sp, mut see, mut spp) = (0.0f64, 0.0, 0.0, 0.0);
+    for a in 0..layer.n_alpha {
+        for rr in 0..layer.n_r {
+            let e = row[off + a * layer.n_r + rr] as f64;
+            if e <= 0.0 {
+                continue;
+            }
+            let (eta, phi) = CaloGeometry::voxel_pos(&layer, a, rr);
+            e_sum += e;
+            se += e * eta as f64;
+            sp += e * phi as f64;
+            see += e * (eta as f64) * (eta as f64);
+            spp += e * (phi as f64) * (phi as f64);
+        }
+    }
+    if e_sum <= 0.0 {
+        return (0.0, 0.0, 0.0, 0.0);
+    }
+    let ce_eta = se / e_sum;
+    let ce_phi = sp / e_sum;
+    let w_eta = (see / e_sum - ce_eta * ce_eta).max(0.0).sqrt();
+    let w_phi = (spp / e_sum - ce_phi * ce_phi).max(0.0).sqrt();
+    (ce_eta, ce_phi, w_eta, w_phi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::shower::generate_dataset;
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn feature_list_matches_table4_rows() {
+        let feats = feature_list(&CaloGeometry::photons());
+        // Table 4: 1 sampling + 5 layer energies + 2×2 CE + 2×2 widths = 14.
+        assert_eq!(feats.len(), 14);
+        let names: Vec<String> = feats.iter().map(|f| f.name()).collect();
+        assert!(names.contains(&"CE_eta_L1".to_string()));
+        assert!(names.contains(&"Width_phi_L2".to_string()));
+        // Table 5 (pions): 1 + 7 + 4×2 + 4×2 = 24 rows.
+        assert_eq!(feature_list(&CaloGeometry::pions()).len(), 24);
+    }
+
+    #[test]
+    fn moments_of_point_deposit() {
+        // All energy in one voxel ⇒ CE at that voxel, width 0.
+        let g = CaloGeometry::photons();
+        let mut voxels = Matrix::zeros(1, g.n_voxels());
+        let layer = g.layers[1];
+        let off = g.layer_offset(1);
+        let (a, r) = (3usize, 7usize);
+        voxels.set(0, off + a * layer.n_r + r, 100.0);
+        let ds = CaloDataset { voxels, labels: vec![0], geometry: g.clone() };
+        let (eta, phi) = CaloGeometry::voxel_pos(&layer, a, r);
+        let ce = compute_feature(&ds, &Feature::CenterEta { layer_id: 1 });
+        let cp = compute_feature(&ds, &Feature::CenterPhi { layer_id: 1 });
+        let we = compute_feature(&ds, &Feature::WidthEta { layer_id: 1 });
+        assert!((ce[0] - eta as f64).abs() < 1e-5);
+        assert!((cp[0] - phi as f64).abs() < 1e-5);
+        assert!(we[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn layer_energies_sum_to_total() {
+        let g = CaloGeometry::pions();
+        let ds = generate_dataset(&g, 4, 5);
+        for r in 0..ds.voxels.rows {
+            let total: f32 = ds.voxels.row(r).iter().sum();
+            let by_layer: f32 = g
+                .layers
+                .iter()
+                .map(|l| super::layer_sum(&g, ds.voxels.row(r), l.id))
+                .sum();
+            assert!((total - by_layer).abs() < total.abs() * 1e-5 + 1e-3);
+        }
+    }
+
+    #[test]
+    fn widths_nonnegative_on_real_showers() {
+        let g = CaloGeometry::photons();
+        let ds = generate_dataset(&g, 10, 6);
+        for f in feature_list(&g) {
+            let vals = compute_feature(&ds, &f);
+            assert!(vals.iter().all(|v| v.is_finite()), "{}", f.name());
+            if matches!(f, Feature::WidthEta { .. } | Feature::WidthPhi { .. }) {
+                assert!(vals.iter().all(|&v| v >= 0.0));
+            }
+        }
+    }
+}

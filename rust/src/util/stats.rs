@@ -1,0 +1,146 @@
+//! Descriptive statistics, quantiles, histograms, and sorting helpers used
+//! throughout the evaluation and benchmarking code.
+
+/// Arithmetic mean (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator; 0 if n < 2).
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Standard error of the mean.
+pub fn sem(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    std(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolation quantile of unsorted data, `q` in `[0, 1]`.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Quantile of already-sorted data.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Indices that would sort `xs` ascending (stable).
+pub fn argsort_f32(xs: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Indices that would sort `xs` ascending (stable).
+pub fn argsort_u32(xs: &[u32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by_key(|&a| xs[a]);
+    idx
+}
+
+/// Fixed-width histogram over `[lo, hi]` with `bins` bins; returns counts.
+/// Values outside the range are clamped into the edge bins (matching how the
+/// CaloChallenge evaluation treats over/underflow).
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let b = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        counts[b] += 1;
+    }
+    counts
+}
+
+/// Normalize counts to fractions summing to 1 (uniform if empty).
+pub fn normalize(counts: &[usize]) -> Vec<f64> {
+    let total: usize = counts.iter().sum();
+    if total == 0 {
+        return vec![1.0 / counts.len() as f64; counts.len()];
+    }
+    counts.iter().map(|&c| c as f64 / total as f64).collect()
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..xs.len() {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_quantile() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!((mean(&xs) - 3.0).abs() < 1e-12);
+        assert!((std(&xs) - (2.5f64).sqrt()).abs() < 1e-12);
+        assert!((quantile(&xs, 0.5) - 3.0).abs() < 1e-12);
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 5.0).abs() < 1e-12);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_clamps_overflow() {
+        let h = histogram(&[-10.0, 0.1, 0.9, 10.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]);
+        let p = normalize(&h);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argsort_stable() {
+        let xs = [3.0f32, 1.0, 2.0, 1.0];
+        assert_eq!(argsort_f32(&xs), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let yneg = [3.0, 2.0, 1.0];
+        assert!((pearson(&xs, &yneg) + 1.0).abs() < 1e-12);
+    }
+}

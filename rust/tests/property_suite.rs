@@ -1,0 +1,313 @@
+//! Randomized property suite over the public API: invariants the paper's
+//! method relies on, exercised across random shapes/configs (the offline
+//! stand-in for proptest — failures report a replayable seed).
+
+use caloforest::forest::sampler::sample_labels;
+use caloforest::forest::scaler::MinMaxScaler;
+use caloforest::forest::trainer::{prepare, train_job, ForestTrainConfig};
+use caloforest::forest::LabelSampler;
+use caloforest::gbt::predict::PackedForest;
+use caloforest::gbt::{BinCuts, BinnedMatrix, Booster, Objective, TrainParams, TreeKind};
+use caloforest::tensor::Matrix;
+use caloforest::util::prop::{assert_close, forall, Config, Gen};
+use caloforest::util::rng::Rng;
+
+#[test]
+fn prop_binning_is_order_preserving_and_invertible_by_threshold() {
+    forall("binning order/threshold", Config { cases: 30, seed: 0x11 }, |rng, _| {
+        let (n, p) = Gen::dims(rng, 300, 6);
+        let mut x = Matrix::zeros(n.max(2), p);
+        for v in x.data.iter_mut() {
+            *v = Gen::vec_f32(rng, 1, 10.0)[0];
+        }
+        let bins = 4 + rng.below(200);
+        let cuts = BinCuts::fit(&x.view(), bins);
+        for f in 0..p {
+            for r in 0..x.rows {
+                let v = x.at(r, f);
+                let code = cuts.bin_value(f, v);
+                if cuts.n_bins(f) == 0 {
+                    continue;
+                }
+                let thr = cuts.threshold(f, code);
+                if v >= thr {
+                    return Err(format!("f={f} r={r}: {v} >= its upper edge {thr}"));
+                }
+                if code > 0 && v < cuts.threshold(f, code - 1) {
+                    return Err(format!("f={f} r={r}: below previous edge"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_boosting_train_loss_monotone() {
+    forall("train loss monotone", Config { cases: 12, seed: 0x22 }, |rng, case| {
+        let n = 30 + rng.below(150);
+        let p = 1 + rng.below(4);
+        let m = 1 + rng.below(3);
+        let x = Matrix::randn(n, p, rng);
+        let mut y = Matrix::zeros(n, m);
+        for i in 0..n * m {
+            y.data[i] = rng.normal_f32();
+        }
+        let kind = if case % 2 == 0 { TreeKind::Single } else { TreeKind::Multi };
+        let params = TrainParams {
+            n_trees: 6,
+            max_depth: 3,
+            eta: 0.3,
+            kind,
+            ..Default::default()
+        };
+        let b = Booster::train(&x.view(), &y.view(), params, None);
+        let losses: Vec<f64> = b.history.iter().map(|h| h.train_loss).collect();
+        if !losses.windows(2).all(|w| w[1] <= w[0] + 1e-9) {
+            return Err(format!("non-monotone: {losses:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serialize_roundtrip_any_model() {
+    forall("serialize roundtrip", Config { cases: 15, seed: 0x33 }, |rng, case| {
+        let n = 20 + rng.below(100);
+        let p = 1 + rng.below(5);
+        let m = 1 + rng.below(4);
+        let x = Matrix::randn(n, p, rng);
+        let mut y = Matrix::zeros(n, m);
+        for i in 0..n * m {
+            y.data[i] = rng.normal_f32();
+        }
+        let params = TrainParams {
+            n_trees: 1 + rng.below(5),
+            max_depth: 1 + rng.below(5),
+            kind: if case % 2 == 0 { TreeKind::Single } else { TreeKind::Multi },
+            objective: if m == 1 && case % 3 == 0 {
+                Objective::Logistic
+            } else {
+                Objective::SquaredError
+            },
+            ..Default::default()
+        };
+        let mut yy = y;
+        if params.objective == Objective::Logistic {
+            for v in yy.data.iter_mut() {
+                *v = if *v > 0.0 { 1.0 } else { 0.0 };
+            }
+        }
+        let b = Booster::train(&x.view(), &yy.view(), params, None);
+        let b2 = caloforest::gbt::serialize::from_bytes(&caloforest::gbt::serialize::to_bytes(&b))
+            .map_err(|e| format!("roundtrip failed: {e}"))?;
+        let probe = Matrix::randn(30, p, rng);
+        assert_close(&b.predict(&probe.view()).data, &b2.predict(&probe.view()).data, 0.0, 0.0)
+    });
+}
+
+#[test]
+fn prop_packed_forest_matches_booster_everywhere() {
+    forall("packed == booster", Config { cases: 12, seed: 0x44 }, |rng, case| {
+        let n = 20 + rng.below(80);
+        let p = 1 + rng.below(4);
+        let x = Matrix::randn(n, p, rng);
+        let mut y = Matrix::zeros(n, p);
+        for i in 0..n * p {
+            y.data[i] = rng.normal_f32();
+        }
+        let params = TrainParams {
+            n_trees: 1 + rng.below(6),
+            max_depth: 1 + rng.below(5),
+            kind: if case % 2 == 0 { TreeKind::Single } else { TreeKind::Multi },
+            ..Default::default()
+        };
+        let b = Booster::train(&x.view(), &y.view(), params, None);
+        let packed = PackedForest::pack(&b);
+        let probe = Matrix::randn(40, p, rng);
+        assert_close(
+            &b.predict(&probe.view()).data,
+            &packed.predict(&probe.view()).data,
+            1e-5,
+            1e-5,
+        )
+    });
+}
+
+#[test]
+fn prop_scaler_roundtrip() {
+    forall("scaler roundtrip", Config { cases: 30, seed: 0x55 }, |rng, _| {
+        let (n, p) = Gen::dims(rng, 120, 6);
+        let n = n.max(2);
+        let mut x = Matrix::zeros(n, p);
+        for v in x.data.iter_mut() {
+            *v = (rng.normal() * 50.0 + rng.normal() * 3.0) as f32;
+        }
+        let orig = x.clone();
+        let s = MinMaxScaler::fit_default(&x);
+        s.transform(&mut x);
+        if !x.data.iter().all(|&v| (-1.0 - 1e-4..=1.0 + 1e-4).contains(&v)) {
+            return Err("scaled outside [-1,1]".into());
+        }
+        s.inverse(&mut x);
+        assert_close(&x.data, &orig.data, 1e-2, 1e-3)
+    });
+}
+
+#[test]
+fn prop_label_allocation_sums_and_is_proportional() {
+    forall("label allocation", Config { cases: 40, seed: 0x66 }, |rng, _| {
+        let n_y = 1 + rng.below(8);
+        let counts: Vec<usize> = (0..n_y).map(|_| 1 + rng.below(200)).collect();
+        let n = 1 + rng.below(500);
+        for sampler in [LabelSampler::Empirical, LabelSampler::Multinomial] {
+            let alloc = sample_labels(&counts, n, sampler, rng);
+            if alloc.iter().sum::<usize>() != n {
+                return Err(format!("{sampler:?}: total {} != {n}", alloc.iter().sum::<usize>()));
+            }
+        }
+        // Empirical allocation deviates from exact proportion by < 1 each.
+        let total: usize = counts.iter().sum();
+        let alloc = sample_labels(&counts, n, LabelSampler::Empirical, rng);
+        for (c, &a) in alloc.iter().enumerate() {
+            let exact = counts[c] as f64 * n as f64 / total as f64;
+            if (a as f64 - exact).abs() >= 1.0 + 1e-9 {
+                return Err(format!("class {c}: {a} vs exact {exact}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_train_job_output_dims_and_finite() {
+    forall("train_job shape/finiteness", Config { cases: 8, seed: 0x77 }, |rng, case| {
+        let n = 20 + rng.below(60);
+        let p = 1 + rng.below(4);
+        let n_y = 1 + rng.below(3);
+        let x = Matrix::randn(n, p, rng);
+        let y: Vec<u32> = (0..n).map(|_| rng.below(n_y) as u32).collect();
+        let cfg = ForestTrainConfig {
+            kind: if case % 2 == 0 {
+                caloforest::forest::ModelKind::Flow
+            } else {
+                caloforest::forest::ModelKind::Diffusion
+            },
+            eps: 0.01,
+            n_t: 2 + rng.below(4),
+            k_dup: 1 + rng.below(4),
+            params: TrainParams { n_trees: 2, max_depth: 3, ..Default::default() },
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let prep = prepare(&cfg, &x, Some(&y));
+        let t_idx = rng.below(prep.grid.n_t());
+        let y_idx = rng.below(prep.label_counts.len());
+        let b = train_job(&prep, &cfg, t_idx, y_idx);
+        if b.m != p {
+            return Err(format!("output dim {} != p {p}", b.m));
+        }
+        let probe = Matrix::randn(10, p, rng);
+        let pred = b.predict(&probe.view());
+        if !pred.data.iter().all(|v| v.is_finite()) {
+            return Err("non-finite prediction".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_binned_matrix_iterator_equivalence() {
+    use caloforest::gbt::binning::SliceBatches;
+    forall("iterator == direct binning", Config { cases: 20, seed: 0x88 }, |rng, _| {
+        let (n, p) = Gen::dims(rng, 200, 5);
+        let n = n.max(2);
+        let mut x = Matrix::zeros(n, p);
+        for v in x.data.iter_mut() {
+            *v = Gen::vec_f32(rng, 1, 5.0)[0];
+        }
+        let bins = 8 + rng.below(120);
+        let batch = 1 + rng.below(n);
+        let direct = BinnedMatrix::fit_bin(&x.view(), bins);
+        let mut it = SliceBatches::new(x.view(), batch);
+        let via = BinnedMatrix::from_iterator(&mut it, bins);
+        if direct.codes != via.codes {
+            return Err(format!("codes differ at batch={batch} bins={bins}"));
+        }
+        Ok(())
+    });
+}
+
+/// Early stopping must never keep more rounds than the patience-free best.
+#[test]
+fn prop_early_stopping_never_exceeds_max() {
+    forall("ES bounds", Config { cases: 8, seed: 0x99 }, |rng, _| {
+        let n = 40 + rng.below(100);
+        let x = Matrix::randn(n, 3, rng);
+        let y = Matrix::randn(n, 1, rng);
+        let xv = Matrix::randn(30, 3, rng);
+        let yv = Matrix::randn(30, 1, rng);
+        let max_rounds = 5 + rng.below(40);
+        let params = TrainParams {
+            n_trees: max_rounds,
+            max_depth: 3,
+            early_stopping_rounds: 1 + rng.below(6),
+            ..Default::default()
+        };
+        let b = Booster::train(&x.view(), &y.view(), params, Some((&xv.view(), &yv.view())));
+        if b.n_rounds() > max_rounds {
+            return Err(format!("{} rounds > max {max_rounds}", b.n_rounds()));
+        }
+        if b.best_round + 1 != b.n_rounds() {
+            return Err(format!(
+                "truncation broken: best {} vs kept {}",
+                b.best_round,
+                b.n_rounds()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The whole pipeline respects NaN: training data with missing values
+/// trains, and generation emits finite values.
+#[test]
+fn prop_missing_values_survive_pipeline() {
+    forall("NaN pipeline", Config { cases: 6, seed: 0xAA }, |rng, _| {
+        let n = 60;
+        let p = 3;
+        let mut x = Matrix::randn(n, p, rng);
+        // Poke NaNs into ~10% of entries (never a full column).
+        for r in 0..n {
+            if rng.uniform() < 0.3 {
+                x.set(r, rng.below(p), f32::NAN);
+            }
+        }
+        let cfg = ForestTrainConfig {
+            n_t: 3,
+            k_dup: 2,
+            params: TrainParams { n_trees: 3, max_depth: 3, ..Default::default() },
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let (model, _) = caloforest::forest::trainer::train_forest(&cfg, &x, None);
+        let (gen, _) = caloforest::forest::generate(
+            &model,
+            &caloforest::forest::GenerateConfig::new(30, rng.next_u64()),
+        );
+        if !gen.data.iter().all(|v| v.is_finite()) {
+            return Err("generated NaN/Inf".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_streams_do_not_collide() {
+    let mut seen = std::collections::HashSet::new();
+    for tag in 0..200u64 {
+        let mut r = Rng::new(7).split(tag);
+        let v = (r.next_u64(), r.next_u64());
+        assert!(seen.insert(v), "stream collision at tag {tag}");
+    }
+}

@@ -1,0 +1,137 @@
+//! Integration: the AOT XLA path (L1 Pallas kernels lowered through L2 jax
+//! graphs, executed via PJRT) must agree with the native Rust predictor.
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) when the
+//! artifact index is missing so `cargo test` still passes on a fresh
+//! checkout before the build step.
+
+use caloforest::coordinator::{run_training, RunOptions};
+use caloforest::forest::sampler::{generate, generate_with, FieldEval, GenerateConfig, NativeField};
+use caloforest::forest::trainer::ForestTrainConfig;
+use caloforest::gbt::{TrainParams, TreeKind};
+use caloforest::runtime::xla_sampler::XlaField;
+use caloforest::runtime::PjrtRuntime;
+use caloforest::tensor::Matrix;
+use caloforest::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("index.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/index.json missing — run `make artifacts` first");
+        None
+    }
+}
+
+fn train_p2_model(kind: TreeKind, seed: u64) -> caloforest::forest::ForestModel {
+    let mut rng = Rng::new(seed);
+    let n = 120;
+    let mut x = Matrix::zeros(n, 2);
+    let mut y = Vec::with_capacity(n);
+    for r in 0..n {
+        let c = (r % 2) as u32;
+        let cx = if c == 0 { -2.0 } else { 2.0 };
+        x.set(r, 0, cx + 0.3 * rng.normal_f32());
+        x.set(r, 1, -cx + 0.3 * rng.normal_f32());
+        y.push(c);
+    }
+    let cfg = ForestTrainConfig {
+        n_t: 5,
+        k_dup: 4,
+        params: TrainParams { n_trees: 6, max_depth: 4, kind, ..Default::default() },
+        seed,
+        ..Default::default()
+    };
+    run_training(&cfg, &x, Some(&y), &RunOptions::default()).model
+}
+
+#[test]
+fn field_eval_native_vs_xla() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = PjrtRuntime::cpu(dir).expect("PJRT client");
+    for kind in [TreeKind::Single, TreeKind::Multi] {
+        let model = train_p2_model(kind, 42);
+        let xla = XlaField::prepare(&runtime, &model).expect("artifact must fit p=2 model");
+        let native = NativeField(&model);
+        let mut rng = Rng::new(7);
+        let batch = Matrix::randn(200, 2, &mut rng);
+        let mut out_native = vec![0.0f32; 200 * 2];
+        let mut out_xla = vec![0.0f32; 200 * 2];
+        for t_idx in [0usize, 2, 4] {
+            for y in 0..2 {
+                native.eval(t_idx, y, &batch.view(), &mut out_native);
+                xla.eval(t_idx, y, &batch.view(), &mut out_xla);
+                for i in 0..out_native.len() {
+                    assert!(
+                        (out_native[i] - out_xla[i]).abs() < 1e-4,
+                        "{kind:?} t={t_idx} y={y} i={i}: native {} vs xla {}",
+                        out_native[i],
+                        out_xla[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn full_generation_native_vs_xla() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = PjrtRuntime::cpu(dir).expect("PJRT client");
+    let model = train_p2_model(TreeKind::Single, 11);
+    let xla = XlaField::prepare(&runtime, &model).expect("prepare");
+    let cfg = GenerateConfig::new(150, 99);
+    let (native_out, native_labels) = generate(&model, &cfg);
+    let (xla_out, xla_labels) = generate_with(&model, &xla, &cfg);
+    assert_eq!(native_labels, xla_labels);
+    let mut max_err = 0.0f32;
+    for i in 0..native_out.data.len() {
+        max_err = max_err.max((native_out.data[i] - xla_out.data[i]).abs());
+    }
+    // Errors accumulate over n_t Euler steps; stay within a loose but
+    // meaningful tolerance.
+    assert!(max_err < 1e-2, "max generation divergence {max_err}");
+}
+
+#[test]
+fn noising_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = PjrtRuntime::cpu(dir).expect("PJRT client");
+    let exe = runtime.load("noising_cfm_p8").expect("artifact");
+    let mut rng = Rng::new(3);
+    let n = exe.spec.n;
+    let p = exe.spec.p;
+    let x0 = Matrix::randn(n, p, &mut rng);
+    let x1 = Matrix::randn(n, p, &mut rng);
+    let t = 0.37f32;
+    let outs = exe
+        .run_f32(&[
+            (&x0.data, &[n as i64, p as i64]),
+            (&x1.data, &[n as i64, p as i64]),
+            (&[t], &[]),
+        ])
+        .expect("execute");
+    assert_eq!(outs.len(), 2);
+    // Native mirror.
+    let mut xt = Matrix::zeros(n, p);
+    let mut z = Matrix::zeros(n, p);
+    caloforest::forest::noising::cfm_inputs(&x0.view(), &x1.view(), t, &mut xt);
+    caloforest::forest::noising::cfm_targets(&x0.view(), &x1.view(), &mut z);
+    for i in 0..n * p {
+        assert!((outs[0][i] - xt.data[i]).abs() < 1e-5, "xt[{i}]");
+        assert!((outs[1][i] - z.data[i]).abs() < 1e-5, "z[{i}]");
+    }
+}
+
+#[test]
+fn runtime_reports_platform_and_caches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = PjrtRuntime::cpu(dir).expect("PJRT client");
+    assert!(!runtime.platform().is_empty());
+    let a = runtime.load("flow_step_p2").expect("load");
+    let b = runtime.load("flow_step_p2").expect("cached load");
+    assert_eq!(a.spec, b.spec);
+    assert!(runtime.load("no_such_artifact").is_err());
+}
