@@ -18,7 +18,12 @@ use caloforest::util::rng::Rng;
 static ALLOC: TrackingAlloc = TrackingAlloc;
 
 fn main() {
-    let quick = std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
+    // `cargo bench --bench perf_hotpaths -- --test` runs the smoke-bench
+    // mode used by CI: tiny sizes, but every timed path still executes, so
+    // hot-path regressions (panics, shape mismatches) break the build.
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let quick =
+        test_mode || std::env::var("CALOFOREST_BENCH_QUICK").ok().as_deref() == Some("1");
     let mut bench = Bench::new("Perf hot paths").with_iters(1, if quick { 2 } else { 5 });
     let mut rng = Rng::new(0);
 
@@ -48,6 +53,27 @@ fn main() {
         );
     }
 
+    // Intra-job parallelism: the same booster train with the two-level
+    // engine's feature-parallel histograms / row-block updates engaged.
+    let host = caloforest::coordinator::memory::host_cpus();
+    for threads in [1usize, host.clamp(2, 8)] {
+        let params = TrainParams {
+            n_trees: 8,
+            max_depth: 6,
+            kind: TreeKind::Multi,
+            intra_threads: threads,
+            ..Default::default()
+        };
+        let m = bench.time(&format!("train MO n={n} p={p} [intra_threads={threads}]"), || {
+            let b = Booster::train(&x.view(), &targets.view(), params, None);
+            std::hint::black_box(b.n_nodes());
+        });
+        bench.csv(
+            "path,label,mean_secs",
+            format!("train,intra_threads={threads},{:.6}", m.mean()),
+        );
+    }
+
     // --- Generation hot path: booster vs packed vs XLA. -------------------
     let train_n = 400;
     let xt = Matrix::randn(train_n, 2, &mut rng);
@@ -73,12 +99,18 @@ fn main() {
         let r = packed.predict(&batch.view());
         std::hint::black_box(r.data[0]);
     });
+    let mpar = bench.time(&format!("predict native parallel (workers={host})"), || {
+        caloforest::gbt::predict::predict_batch_par(&booster, &batch.view(), &mut out, host);
+        std::hint::black_box(out[0]);
+    });
     bench.csv("path,label,mean_secs", format!("predict,native,{:.6}", m1.mean()));
     bench.csv("path,label,mean_secs", format!("predict,packed,{:.6}", m2.mean()));
+    bench.csv("path,label,mean_secs", format!("predict,native-par,{:.6}", mpar.mean()));
     println!(
-        "native {:.1} Mrow/s vs packed {:.1} Mrow/s",
+        "native {:.1} Mrow/s vs packed {:.1} Mrow/s vs native-par {:.1} Mrow/s",
         batch.rows as f64 / m1.mean() / 1e6,
-        batch.rows as f64 / m2.mean() / 1e6
+        batch.rows as f64 / m2.mean() / 1e6,
+        batch.rows as f64 / mpar.mean() / 1e6
     );
 
     // XLA path at its pinned batch (per-call latency matters for L3).

@@ -70,6 +70,14 @@ pub fn reset_peak() {
     PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
 }
 
+/// Detected host hardware parallelism (1 when detection fails) — the
+/// default total worker budget for `RunOptions { workers: 0, .. }`.
+pub fn host_cpus() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
 /// VmRSS in bytes from `/proc/self/status` (Linux), 0 elsewhere.
 pub fn rss_bytes() -> usize {
     proc_field("VmRSS:")
@@ -222,6 +230,11 @@ mod tests {
         assert_eq!(fmt_bytes(512), "512 B");
         assert_eq!(fmt_bytes(2 * 1024 * 1024), "2.00 MiB");
         assert!(fmt_bytes(1_250_000_000_000_000).contains("PiB"));
+    }
+
+    #[test]
+    fn host_cpus_is_at_least_one() {
+        assert!(host_cpus() >= 1);
     }
 
     #[test]

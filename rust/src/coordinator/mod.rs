@@ -31,8 +31,15 @@ use std::sync::Mutex;
 /// Options for a coordinated training run.
 #[derive(Clone, Debug)]
 pub struct RunOptions {
-    /// Parallel training jobs (the paper's `n_jobs`).
+    /// Total worker budget (the paper's `n_jobs`); 0 = auto-detect the
+    /// host's hardware parallelism.
     pub workers: usize,
+    /// Threads *inside* each training job (feature-parallel histograms,
+    /// row-chunk binning, row-block prediction updates). 0 = auto: the
+    /// budget left after job-level parallelism, `workers / min(workers,
+    /// n_jobs)` — so the few-jobs/huge-data regime still saturates cores.
+    /// Any split produces bit-identical models.
+    pub intra_job_threads: usize,
     /// Stream trained ensembles to this directory and drop them from memory
     /// (Issue 3). `None` keeps the full model in memory.
     pub store_dir: Option<PathBuf>,
@@ -44,8 +51,31 @@ pub struct RunOptions {
 
 impl Default for RunOptions {
     fn default() -> Self {
-        RunOptions { workers: 1, store_dir: None, resume: false, track_memory: false }
+        RunOptions {
+            workers: 1,
+            intra_job_threads: 0,
+            store_dir: None,
+            resume: false,
+            track_memory: false,
+        }
     }
+}
+
+/// How a total worker budget is split between job-level and intra-job
+/// parallelism for a given job count.
+///
+/// Job-level parallelism is capped by the number of jobs; whatever budget
+/// remains per job worker goes to intra-job threads. An explicit
+/// `intra_override > 0` wins over the derived split.
+pub fn worker_budget(total: usize, n_jobs: usize, intra_override: usize) -> (usize, usize) {
+    let total = if total == 0 { memory::host_cpus() } else { total };
+    let job_workers = total.max(1).min(n_jobs.max(1));
+    let intra = if intra_override > 0 {
+        intra_override
+    } else {
+        (total.max(1) / job_workers).max(1)
+    };
+    (job_workers, intra)
 }
 
 /// Outcome of a coordinated run.
@@ -58,6 +88,10 @@ pub struct RunOutcome {
     pub peak_alloc_bytes: usize,
     /// Memory timeline samples `(seconds, bytes)` when tracking was enabled.
     pub timeline: Vec<(f64, usize)>,
+    /// Job-level workers actually scheduled (the budget split's left half).
+    pub job_workers: usize,
+    /// Intra-job threads each job trained with (the split's right half).
+    pub intra_job_threads: usize,
 }
 
 /// Run the improved training pipeline: prepare shared state once, schedule
@@ -108,14 +142,21 @@ pub fn run_training(
         }
     }
 
+    // Two-level budget: job-level workers × intra-job threads.
+    let (job_workers, intra_threads) =
+        worker_budget(opts.workers, jobs.len(), opts.intra_job_threads);
+    let mut job_cfg = cfg.clone();
+    job_cfg.params.intra_threads = intra_threads;
+    let job_cfg = &job_cfg;
+
     let completed: Mutex<Vec<(usize, usize, Option<crate::gbt::Booster>, JobRecord)>> =
         Mutex::new(Vec::with_capacity(jobs.len()));
     let job_counter = AtomicUsize::new(0);
 
-    pool::run_indexed(opts.workers, jobs.len(), |job_idx| {
+    pool::run_indexed(job_workers, jobs.len(), |job_idx| {
         let (t_idx, y_idx) = jobs[job_idx];
         let jt0 = std::time::Instant::now();
-        let booster = train_job(&prep, cfg, t_idx, y_idx);
+        let booster = train_job(&prep, job_cfg, t_idx, y_idx);
         let rec = JobRecord {
             t_idx,
             y: y_idx,
@@ -168,6 +209,8 @@ pub fn run_training(
         report,
         peak_alloc_bytes: memory::peak_bytes(),
         timeline: timeline.into_inner().unwrap(),
+        job_workers,
+        intra_job_threads: intra_threads,
     }
 }
 
@@ -221,6 +264,7 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let opts = RunOptions {
             workers: 2,
+            intra_job_threads: 0,
             store_dir: Some(dir.clone()),
             resume: false,
             track_memory: false,
@@ -245,6 +289,47 @@ mod tests {
         let g2 = crate::forest::generate(&reloaded, &crate::forest::GenerateConfig::new(20, 5));
         assert_eq!(g1.0.data, g2.0.data);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn worker_budget_splits_job_and_intra_levels() {
+        // Plenty of jobs: all budget goes job-level.
+        assert_eq!(worker_budget(8, 100, 0), (8, 1));
+        // Few jobs, big budget: the remainder goes intra-job.
+        assert_eq!(worker_budget(8, 2, 0), (2, 4));
+        assert_eq!(worker_budget(9, 2, 0), (2, 4));
+        // Single job: everything intra.
+        assert_eq!(worker_budget(6, 1, 0), (1, 6));
+        // Explicit override wins.
+        assert_eq!(worker_budget(8, 8, 3), (8, 3));
+        // Degenerate inputs stay sane.
+        assert_eq!(worker_budget(1, 0, 0), (1, 1));
+        let (jw, it) = worker_budget(0, 4, 0);
+        assert!(jw >= 1 && it >= 1);
+    }
+
+    #[test]
+    fn intra_job_parallel_training_is_bit_identical() {
+        // The acceptance gate: intra_job_threads > 1 must reproduce the
+        // sequential model exactly (same ensembles, byte-for-byte).
+        let (x, y) = data(60, 4);
+        let c = cfg();
+        let seq = run_training(&c, &x, Some(&y), &RunOptions::default());
+        let par = run_training(
+            &c,
+            &x,
+            Some(&y),
+            &RunOptions { workers: 2, intra_job_threads: 4, ..Default::default() },
+        );
+        assert_eq!(par.intra_job_threads, 4);
+        assert_eq!(par.job_workers, 2);
+        for t in 0..seq.model.n_t() {
+            for yy in 0..seq.model.n_y() {
+                let b1 = crate::gbt::serialize::to_bytes(seq.model.ensemble(t, yy));
+                let b2 = crate::gbt::serialize::to_bytes(par.model.ensemble(t, yy));
+                assert_eq!(b1, b2, "ensemble (t={t}, y={yy}) diverges");
+            }
+        }
     }
 
     #[test]

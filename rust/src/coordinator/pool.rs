@@ -1,11 +1,25 @@
-//! A dependency-free worker pool over indexed jobs.
+//! A dependency-free worker pool over indexed jobs and chunked item ranges.
 //!
 //! `rayon` is unavailable offline, so parallelism is scoped threads pulling
 //! job indices from a shared atomic counter (work stealing by construction:
 //! fast workers simply take more indices). Panics in workers propagate to
 //! the caller when the scope joins.
+//!
+//! Two levels of granularity are exposed:
+//!
+//! * **job-level** — [`run_indexed`] / [`map_indexed`] schedule whole
+//!   `(t, y)` training jobs, the paper's `n_jobs` axis;
+//! * **chunk-level** — [`for_each_chunk`], [`for_each_chunk_scratch`],
+//!   [`for_each_mut_chunk`], and [`map_reduce_chunks`] split *one* job's
+//!   item range (rows, features) into fixed-size chunks for intra-job
+//!   parallelism. Chunk boundaries depend only on `(n_items, chunk_size)`
+//!   — never on the worker count — and [`map_reduce_chunks`] folds results
+//!   in chunk-index order, so any determinism argument made for one worker
+//!   holds for any worker count.
 
+use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Run `f(job_index)` for every index in `0..n_jobs` using up to `workers`
 /// threads (`workers == 1` runs inline, no threads spawned).
@@ -42,14 +56,136 @@ where
 {
     let mut slots: Vec<Option<R>> = (0..n_jobs).map(|_| None).collect();
     {
-        let cells: Vec<std::sync::Mutex<&mut Option<R>>> =
-            slots.iter_mut().map(std::sync::Mutex::new).collect();
+        let cells: Vec<Mutex<&mut Option<R>>> =
+            slots.iter_mut().map(Mutex::new).collect();
         run_indexed(workers, n_jobs, |i| {
             let r = f(i);
             **cells[i].lock().unwrap() = Some(r);
         });
     }
     slots.into_iter().map(|s| s.expect("job skipped")).collect()
+}
+
+/// Number of fixed-size chunks covering `0..n_items`.
+#[inline]
+pub fn n_chunks(n_items: usize, chunk_size: usize) -> usize {
+    n_items.div_ceil(chunk_size.max(1))
+}
+
+/// Item range of chunk `chunk_idx`. Boundaries are a pure function of
+/// `(n_items, chunk_size)` so schedules are reproducible across worker
+/// counts.
+#[inline]
+pub fn chunk_range(n_items: usize, chunk_size: usize, chunk_idx: usize) -> Range<usize> {
+    let chunk_size = chunk_size.max(1);
+    let start = chunk_idx * chunk_size;
+    start..(start + chunk_size).min(n_items)
+}
+
+/// Chunked parallel-for: `f(chunk_idx, item_range)` for every chunk of
+/// `0..n_items` (`workers == 1` runs inline in chunk order).
+pub fn for_each_chunk<F>(workers: usize, n_items: usize, chunk_size: usize, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let nc = n_chunks(n_items, chunk_size);
+    run_indexed(workers, nc, |ci| f(ci, chunk_range(n_items, chunk_size, ci)));
+}
+
+/// Chunked parallel-for with one lazily-created scratch value per worker
+/// thread, reused across every chunk that worker processes; all scratches
+/// that were created are returned (in an unspecified order — callers must
+/// only merge state whose per-chunk contributions are disjoint or
+/// commutative; use [`map_reduce_chunks`] when merge *order* matters).
+pub fn for_each_chunk_scratch<S, I, F>(
+    workers: usize,
+    n_items: usize,
+    chunk_size: usize,
+    init: I,
+    f: F,
+) -> Vec<S>
+where
+    S: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, Range<usize>) + Sync,
+{
+    let nc = n_chunks(n_items, chunk_size);
+    if nc == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(nc);
+    if workers == 1 {
+        let mut scratch = init();
+        for ci in 0..nc {
+            f(&mut scratch, ci, chunk_range(n_items, chunk_size, ci));
+        }
+        return vec![scratch];
+    }
+    let counter = AtomicUsize::new(0);
+    let out: Mutex<Vec<S>> = Mutex::new(Vec::with_capacity(workers));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut scratch: Option<S> = None;
+                loop {
+                    let ci = counter.fetch_add(1, Ordering::Relaxed);
+                    if ci >= nc {
+                        break;
+                    }
+                    let s = scratch.get_or_insert_with(&init);
+                    f(s, ci, chunk_range(n_items, chunk_size, ci));
+                }
+                if let Some(s) = scratch {
+                    out.lock().unwrap().push(s);
+                }
+            });
+        }
+    });
+    out.into_inner().unwrap()
+}
+
+/// Split `data` into fixed-size chunks and run `f(chunk_idx, chunk)` over
+/// them in parallel. Chunks are disjoint `&mut` slices, so this is the safe
+/// primitive for writing a shared output buffer from many threads (batched
+/// prediction, training-prediction updates).
+pub fn for_each_mut_chunk<T, F>(workers: usize, data: &mut [T], chunk_size: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk_size = chunk_size.max(1);
+    if workers.max(1) == 1 || data.len() <= chunk_size {
+        for (ci, chunk) in data.chunks_mut(chunk_size).enumerate() {
+            f(ci, chunk);
+        }
+        return;
+    }
+    let cells: Vec<Mutex<&mut [T]>> = data.chunks_mut(chunk_size).map(Mutex::new).collect();
+    run_indexed(workers, cells.len(), |ci| {
+        let mut guard = cells[ci].lock().unwrap();
+        f(ci, &mut **guard);
+    });
+}
+
+/// Map every chunk to a value in parallel, then fold the values **in chunk
+/// order** — the ordered reduction that keeps floating-point merges
+/// bit-reproducible across worker counts.
+pub fn map_reduce_chunks<R, A, M, F>(
+    workers: usize,
+    n_items: usize,
+    chunk_size: usize,
+    map: M,
+    init: A,
+    fold: F,
+) -> A
+where
+    R: Send,
+    M: Fn(usize, Range<usize>) -> R + Sync,
+    F: FnMut(A, R) -> A,
+{
+    let nc = n_chunks(n_items, chunk_size);
+    let parts = map_indexed(workers, nc, |ci| map(ci, chunk_range(n_items, chunk_size, ci)));
+    parts.into_iter().fold(init, fold)
 }
 
 #[cfg(test)]
@@ -88,5 +224,90 @@ mod tests {
     fn more_workers_than_jobs() {
         let out = map_indexed(16, 3, |i| i + 1);
         assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn chunk_boundaries_are_worker_independent() {
+        // Boundaries are a pure function of (n_items, chunk_size).
+        assert_eq!(n_chunks(10, 3), 4);
+        assert_eq!(chunk_range(10, 3, 0), 0..3);
+        assert_eq!(chunk_range(10, 3, 3), 9..10);
+        assert_eq!(n_chunks(0, 3), 0);
+        assert_eq!(n_chunks(5, 100), 1);
+        // chunk_size 0 clamps to 1 instead of dividing by zero.
+        assert_eq!(n_chunks(4, 0), 4);
+    }
+
+    #[test]
+    fn for_each_chunk_covers_all_items_once() {
+        for workers in [1, 2, 8] {
+            for chunk in [1usize, 3, 7, 100] {
+                let hits = AtomicU64::new(0);
+                let sum = AtomicU64::new(0);
+                for_each_chunk(workers, 20, chunk, |_ci, range| {
+                    for i in range {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                        sum.fetch_add(i as u64, Ordering::Relaxed);
+                    }
+                });
+                assert_eq!(hits.load(Ordering::Relaxed), 20, "w={workers} c={chunk}");
+                assert_eq!(sum.load(Ordering::Relaxed), 190);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_variant_partitions_items_across_scratches() {
+        for workers in [1, 2, 8] {
+            let scratches =
+                for_each_chunk_scratch(workers, 100, 7, Vec::new, |s: &mut Vec<usize>, _ci, r| {
+                    s.extend(r);
+                });
+            assert!(!scratches.is_empty() && scratches.len() <= workers);
+            let mut all: Vec<usize> = scratches.into_iter().flatten().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..100).collect::<Vec<_>>());
+        }
+        // Empty item range creates no scratch at all.
+        let none = for_each_chunk_scratch(4, 0, 8, Vec::new, |s: &mut Vec<usize>, _ci, r| {
+            s.extend(r);
+        });
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn mut_chunk_writes_are_disjoint_and_complete() {
+        for workers in [1, 2, 8] {
+            for chunk in [1usize, 4, 9, 64] {
+                let mut data = vec![0usize; 33];
+                for_each_mut_chunk(workers, &mut data, chunk, |ci, slice| {
+                    for (k, v) in slice.iter_mut().enumerate() {
+                        *v = ci * chunk + k + 1;
+                    }
+                });
+                let expect: Vec<usize> = (1..=33).collect();
+                assert_eq!(data, expect, "w={workers} c={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_reduce_folds_in_chunk_order() {
+        for workers in [1, 2, 8] {
+            let concat = map_reduce_chunks(
+                workers,
+                26,
+                4,
+                |ci, range| (ci, range.collect::<Vec<_>>()),
+                Vec::new(),
+                |mut acc: Vec<usize>, (ci, items)| {
+                    // Ordered reduction: chunk ci arrives exactly ci-th.
+                    assert_eq!(items.first().copied(), Some(ci * 4));
+                    acc.extend(items);
+                    acc
+                },
+            );
+            assert_eq!(concat, (0..26).collect::<Vec<_>>());
+        }
     }
 }

@@ -226,6 +226,7 @@ pub fn train_and_generate(
                     LabelSampler::Empirical
                 },
                 clip: true,
+                workers: 1,
             };
             let (gx, gy) = generate(&model, &gen_cfg);
             (gx, y.map(|_| gy))

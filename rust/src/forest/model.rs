@@ -131,6 +131,19 @@ impl ForestModel {
         crate::gbt::predict::predict_batch(self.ensemble(t_idx, y), x, out);
     }
 
+    /// [`eval_field`](Self::eval_field) with row-block-parallel prediction
+    /// over `workers` threads (bit-identical output for any worker count).
+    pub fn eval_field_par(
+        &self,
+        t_idx: usize,
+        y: usize,
+        x: &crate::tensor::MatrixView<'_>,
+        out: &mut [f32],
+        workers: usize,
+    ) {
+        crate::gbt::predict::predict_batch_par(self.ensemble(t_idx, y), x, out, workers);
+    }
+
     /// Persist the full model as a directory: `meta.json` + one `.fbj` per
     /// grid slot (the on-disk layout the streaming model store produces).
     pub fn save_dir(&self, dir: &Path) -> std::io::Result<()> {

@@ -36,11 +36,26 @@ pub struct GenerateConfig {
     /// Clip scaled samples to the training range [-1, 1] before inverse
     /// scaling.
     pub clip: bool,
+    /// Threads for row-block-parallel vector-field evaluation on the
+    /// native backend (1 = sequential; output is identical either way).
+    pub workers: usize,
 }
 
 impl GenerateConfig {
     pub fn new(n: usize, seed: u64) -> GenerateConfig {
-        GenerateConfig { n, seed, label_sampler: LabelSampler::Empirical, clip: true }
+        GenerateConfig {
+            n,
+            seed,
+            label_sampler: LabelSampler::Empirical,
+            clip: true,
+            workers: 1,
+        }
+    }
+
+    /// Builder-style worker override.
+    pub fn with_workers(mut self, workers: usize) -> GenerateConfig {
+        self.workers = workers.max(1);
+        self
     }
 }
 
@@ -57,6 +72,19 @@ pub struct NativeField<'a>(pub &'a ForestModel);
 impl<'a> FieldEval for NativeField<'a> {
     fn eval(&self, t_idx: usize, y: usize, x: &MatrixView<'_>, out: &mut [f32]) {
         self.0.eval_field(t_idx, y, x, out);
+    }
+}
+
+/// Native backend with row-block-parallel batched prediction — identical
+/// output to [`NativeField`] for any worker count.
+pub struct ParNativeField<'a> {
+    pub model: &'a ForestModel,
+    pub workers: usize,
+}
+
+impl<'a> FieldEval for ParNativeField<'a> {
+    fn eval(&self, t_idx: usize, y: usize, x: &MatrixView<'_>, out: &mut [f32]) {
+        self.model.eval_field_par(t_idx, y, x, out, self.workers);
     }
 }
 
@@ -99,9 +127,10 @@ pub fn sample_labels(
     }
 }
 
-/// Generate `cfg.n` samples with the native backend.
+/// Generate `cfg.n` samples with the native backend (`cfg.workers` threads
+/// for field evaluation).
 pub fn generate(model: &ForestModel, cfg: &GenerateConfig) -> (Matrix, Vec<u32>) {
-    generate_with(model, &NativeField(model), cfg)
+    generate_with(model, &ParNativeField { model, workers: cfg.workers.max(1) }, cfg)
 }
 
 /// Generate with an arbitrary vector-field backend.
@@ -302,6 +331,26 @@ mod tests {
         assert_eq!(gen.rows, 80);
         assert!(gen.data.iter().all(|v| v.is_finite()));
         assert!(labels.iter().any(|&l| l == 0) && labels.iter().any(|&l| l == 1));
+    }
+
+    #[test]
+    fn parallel_sampler_output_is_bit_identical() {
+        let (x, y) = blob_data(200, &[(-2.0, 1.0), (2.0, -1.0)], 20);
+        let cfg = ForestTrainConfig {
+            n_t: 6,
+            k_dup: 6,
+            params: TrainParams { n_trees: 10, max_depth: 3, ..Default::default() },
+            seed: 21,
+            ..Default::default()
+        };
+        let (model, _) = train_forest(&cfg, &x, Some(&y));
+        // Batch large enough to span several prediction blocks.
+        let seq = generate(&model, &GenerateConfig::new(3000, 5));
+        for workers in [2usize, 8] {
+            let par = generate(&model, &GenerateConfig::new(3000, 5).with_workers(workers));
+            assert_eq!(seq.0.data, par.0.data, "samples diverge at workers={workers}");
+            assert_eq!(seq.1, par.1);
+        }
     }
 
     #[test]

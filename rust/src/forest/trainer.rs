@@ -10,7 +10,10 @@
 //! Parallel execution with the shared-memory policy (Issue 2) and streaming
 //! model store (Issue 3) is the coordinator's job
 //! ([`crate::coordinator::run_training`]); this module exposes the pure
-//! per-job function [`train_job`] it schedules.
+//! per-job function [`train_job`] it schedules. Intra-job parallelism
+//! (feature-parallel histograms, row-chunk binning, row-block prediction
+//! updates) is carried in `cfg.params.intra_threads` — the coordinator's
+//! worker-budget policy sets it, and any value yields bit-identical models.
 
 use super::model::{ForestModel, ModelKind};
 use super::noising;
@@ -420,6 +423,24 @@ mod tests {
         let by_t = report.best_rounds_by_timestep(6);
         assert_eq!(by_t.len(), 6);
         assert!(by_t.iter().all(|&r| r >= 1.0 && r <= 60.0), "{by_t:?}");
+    }
+
+    #[test]
+    fn intra_threaded_job_matches_sequential_job() {
+        let (x, y) = two_cluster_data(600, 9);
+        let mut cfg = ForestTrainConfig {
+            n_t: 2,
+            k_dup: 8,
+            params: TrainParams { n_trees: 3, max_depth: 4, ..Default::default() },
+            seed: 13,
+            ..Default::default()
+        };
+        let prep = prepare(&cfg, &x, Some(&y));
+        let seq = train_job(&prep, &cfg, 1, 0);
+        cfg.params.intra_threads = 4;
+        let par = train_job(&prep, &cfg, 1, 0);
+        assert_eq!(seq.trees, par.trees);
+        assert_eq!(seq.base_score, par.base_score);
     }
 
     #[test]

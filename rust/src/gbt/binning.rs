@@ -91,6 +91,28 @@ impl BinCuts {
         BinCuts { cuts }
     }
 
+    /// Feature-parallel [`fit`](Self::fit): every feature's quantile sketch
+    /// (collect → sort → cut) is independent, so columns are distributed
+    /// over `workers` threads and collected in feature order. The result is
+    /// identical to the sequential fit for any worker count.
+    pub fn fit_par(x: &MatrixView<'_>, max_bins: usize, workers: usize) -> BinCuts {
+        if workers.max(1) == 1 || x.cols < 2 {
+            return BinCuts::fit(x, max_bins);
+        }
+        let max_bins = max_bins.min(MAX_BINS);
+        let cuts = crate::coordinator::pool::map_indexed(workers, x.cols, |f| {
+            let mut col = Vec::with_capacity(x.rows);
+            for r in 0..x.rows {
+                let v = x.at(r, f);
+                if !v.is_nan() {
+                    col.push(v);
+                }
+            }
+            cuts_for_column(&mut col, max_bins)
+        });
+        BinCuts { cuts }
+    }
+
     pub fn n_features(&self) -> usize {
         self.cuts.len()
     }
@@ -223,6 +245,65 @@ impl BinnedMatrix {
     pub fn fit_bin(x: &MatrixView<'_>, max_bins: usize) -> BinnedMatrix {
         let cuts = BinCuts::fit(x, max_bins);
         BinnedMatrix::bin(x, &cuts)
+    }
+
+    /// Row-block granularity for [`bin_par`](Self::bin_par). Fixed so the
+    /// task decomposition never depends on the worker count.
+    pub const BIN_BLOCK_ROWS: usize = 8192;
+
+    /// Row-chunk-parallel [`bin`](Self::bin): the `(feature, row-block)`
+    /// task grid is scheduled over `workers` threads, each task writing a
+    /// disjoint contiguous span of the column-major code buffer. Each code
+    /// depends on one input value only, so output equals the sequential
+    /// path bit-for-bit.
+    pub fn bin_par(x: &MatrixView<'_>, cuts: &BinCuts, workers: usize) -> BinnedMatrix {
+        BinnedMatrix::bin_par_block(x, cuts, workers, Self::BIN_BLOCK_ROWS)
+    }
+
+    /// [`bin_par`](Self::bin_par) with an explicit row-block size (exposed
+    /// so tests can exercise adversarial block/worker combinations).
+    pub fn bin_par_block(
+        x: &MatrixView<'_>,
+        cuts: &BinCuts,
+        workers: usize,
+        block_rows: usize,
+    ) -> BinnedMatrix {
+        assert_eq!(x.cols, cuts.n_features());
+        let n = x.rows;
+        let p = x.cols;
+        let block = block_rows.max(1);
+        // Guard on *rows per column* (the task grain): a matrix whose
+        // columns each fit one block gains nothing from the task grid.
+        if workers.max(1) == 1 || n <= block {
+            return BinnedMatrix::bin(x, cuts);
+        }
+        let blocks_per_col = crate::coordinator::pool::n_chunks(n, block);
+        let mut codes = vec![0u8; n * p];
+        {
+            // Disjoint destination spans: column f, rows [r0, r0 + len).
+            let cells: Vec<std::sync::Mutex<&mut [u8]>> = codes
+                .chunks_mut(n)
+                .flat_map(|col| col.chunks_mut(block))
+                .map(std::sync::Mutex::new)
+                .collect();
+            crate::coordinator::pool::run_indexed(workers, cells.len(), |i| {
+                let f = i / blocks_per_col;
+                let r0 = (i % blocks_per_col) * block;
+                let mut guard = cells[i].lock().unwrap();
+                let out = &mut **guard;
+                for (k, v) in out.iter_mut().enumerate() {
+                    *v = cuts.bin_value(f, x.at(r0 + k, f));
+                }
+            });
+        }
+        BinnedMatrix { n, p, codes, cuts: cuts.clone() }
+    }
+
+    /// Fit cuts and bin in one step, both parallelized over `workers`
+    /// threads (identical output to [`fit_bin`](Self::fit_bin)).
+    pub fn fit_bin_par(x: &MatrixView<'_>, max_bins: usize, workers: usize) -> BinnedMatrix {
+        let cuts = BinCuts::fit_par(x, max_bins, workers);
+        BinnedMatrix::bin_par(x, &cuts, workers)
     }
 
     /// Build from a multi-pass iterator: one pass for cuts (inside
@@ -395,6 +476,36 @@ mod tests {
         let via_iter = BinnedMatrix::from_iterator(&mut it, 64);
         assert_eq!(direct.cuts, via_iter.cuts);
         assert_eq!(direct.codes, via_iter.codes);
+    }
+
+    #[test]
+    fn parallel_fit_bin_matches_sequential_exactly() {
+        let mut rng = Rng::new(40);
+        let mut x = Matrix::randn(500, 4, &mut rng);
+        // Adversarial columns: NaNs sprinkled, one constant column.
+        for r in (0..500).step_by(13) {
+            x.set(r, 1, f32::NAN);
+        }
+        for r in 0..500 {
+            x.set(r, 3, 2.5);
+        }
+        let seq = BinnedMatrix::fit_bin(&x.view(), 64);
+        for workers in [1usize, 2, 8] {
+            let cuts = BinCuts::fit_par(&x.view(), 64, workers);
+            assert_eq!(seq.cuts, cuts, "cuts diverge at workers={workers}");
+            // Adversarial block sizes: 1 row, non-dividing, bigger than n.
+            for block in [1usize, 64, 77, 10_000] {
+                let par = BinnedMatrix::bin_par_block(&x.view(), &cuts, workers, block);
+                assert_eq!(seq.codes, par.codes, "codes diverge w={workers} b={block}");
+            }
+            let combined = BinnedMatrix::fit_bin_par(&x.view(), 64, workers);
+            assert_eq!(seq.codes, combined.codes);
+        }
+        // Degenerate shapes: single row, single feature.
+        let tiny = Matrix::from_vec(1, 1, vec![0.5]);
+        let a = BinnedMatrix::fit_bin(&tiny.view(), 8);
+        let b = BinnedMatrix::fit_bin_par(&tiny.view(), 8, 8);
+        assert_eq!(a.codes, b.codes);
     }
 
     #[test]

@@ -35,6 +35,12 @@ pub struct TrainParams {
     pub early_stopping_rounds: usize,
     /// Use the histogram-subtraction trick.
     pub hist_subtraction: bool,
+    /// Threads used *inside* this booster's training (feature-parallel
+    /// histograms, row-chunk binning, row-block prediction updates). 1 runs
+    /// fully sequentially; any value produces bit-identical models — the
+    /// coordinator's worker-budget policy sets this for the few-jobs /
+    /// huge-data regime.
+    pub intra_threads: usize,
 }
 
 impl Default for TrainParams {
@@ -51,6 +57,7 @@ impl Default for TrainParams {
             objective: Objective::SquaredError,
             early_stopping_rounds: 0,
             hist_subtraction: true,
+            intra_threads: 1,
         }
     }
 }
@@ -63,6 +70,7 @@ impl TrainParams {
             min_child_weight: self.min_child_weight,
             min_split_gain: self.min_split_gain,
             hist_subtraction: self.hist_subtraction,
+            n_threads: self.intra_threads.max(1),
         }
     }
 }
@@ -115,7 +123,7 @@ impl Booster {
         params: TrainParams,
         eval: Option<(&MatrixView<'_>, &MatrixView<'_>)>,
     ) -> Booster {
-        let binned = BinnedMatrix::fit_bin(x, params.max_bins);
+        let binned = BinnedMatrix::fit_bin_par(x, params.max_bins, params.intra_threads.max(1));
         Booster::train_binned(&binned, targets, params, eval)
     }
 
@@ -217,27 +225,17 @@ impl Booster {
 
             // Update train predictions. (Prediction uses raw thresholds, so
             // we reconstruct rows from bin codes' cut midpoints — instead we
-            // route by codes directly for exactness.)
-            match params.kind {
-                TreeKind::Multi => {
-                    let tree = &round_trees[0];
-                    for r in 0..n {
-                        let leaf = leaf_for_binned(tree, binned, r);
-                        let vals = &tree.values[leaf * m..(leaf + 1) * m];
-                        for j in 0..m {
-                            preds[r * m + j] += params.eta * vals[j];
-                        }
-                    }
-                }
-                TreeKind::Single => {
-                    for (j, tree) in round_trees.iter().enumerate() {
-                        for r in 0..n {
-                            let leaf = leaf_for_binned(tree, binned, r);
-                            preds[r * m + j] += params.eta * tree.values[leaf];
-                        }
-                    }
-                }
-            }
+            // route by codes directly for exactness.) Row blocks are
+            // independent, so the update is scheduled over intra_threads.
+            update_train_preds(
+                &round_trees,
+                binned,
+                &mut preds,
+                m,
+                params.kind,
+                params.eta,
+                params.intra_threads.max(1),
+            );
 
             // Update validation predictions with the new trees.
             if let (Some(ep), Some(xv)) = (eval_preds.as_mut(), eval_x) {
@@ -262,9 +260,13 @@ impl Booster {
 
             booster.trees.extend(round_trees);
 
-            let train_loss = params.objective.eval_loss(&preds, &targets_flat);
+            // Chunk-grouped loss: the grouping is fixed (never depends on
+            // the worker count), so early stopping is bit-identical across
+            // any intra_threads value.
+            let workers = params.intra_threads.max(1);
+            let train_loss = params.objective.eval_loss_par(&preds, &targets_flat, workers);
             let valid_loss = match (&eval_preds, &eval_targets) {
-                (Some(ep), Some(et)) => Some(params.objective.eval_loss(ep, et)),
+                (Some(ep), Some(et)) => Some(params.objective.eval_loss_par(ep, et, workers)),
                 _ => None,
             };
             booster.history.push(EvalRecord { round, train_loss, valid_loss });
@@ -334,6 +336,53 @@ impl Booster {
     pub fn nbytes(&self) -> usize {
         self.trees.iter().map(|t| t.nbytes()).sum::<usize>() + self.base_score.len() * 4 + 64
     }
+}
+
+/// Row-block granularity for the train-prediction update (fixed: block
+/// boundaries never depend on the worker count).
+const UPDATE_BLOCK_ROWS: usize = 2048;
+
+/// Add the round's new trees into the running train predictions, routing
+/// rows by bin codes. Rows are independent; blocks of [`UPDATE_BLOCK_ROWS`]
+/// are scheduled over `workers` threads with bit-identical results.
+fn update_train_preds(
+    round_trees: &[Tree],
+    binned: &BinnedMatrix,
+    preds: &mut [f32],
+    m: usize,
+    kind: TreeKind,
+    eta: f32,
+    workers: usize,
+) {
+    crate::coordinator::pool::for_each_mut_chunk(
+        workers,
+        preds,
+        UPDATE_BLOCK_ROWS * m,
+        |ci, chunk| {
+            let r0 = ci * UPDATE_BLOCK_ROWS;
+            let rows = chunk.len() / m;
+            match kind {
+                TreeKind::Multi => {
+                    let tree = &round_trees[0];
+                    for i in 0..rows {
+                        let leaf = leaf_for_binned(tree, binned, r0 + i);
+                        let vals = &tree.values[leaf * m..(leaf + 1) * m];
+                        for j in 0..m {
+                            chunk[i * m + j] += eta * vals[j];
+                        }
+                    }
+                }
+                TreeKind::Single => {
+                    for (j, tree) in round_trees.iter().enumerate() {
+                        for i in 0..rows {
+                            let leaf = leaf_for_binned(tree, binned, r0 + i);
+                            chunk[i * m + j] += eta * tree.values[leaf];
+                        }
+                    }
+                }
+            }
+        },
+    );
 }
 
 /// Route a training row through a tree using bin codes (exact: the split
@@ -426,6 +475,33 @@ mod tests {
             match kind {
                 TreeKind::Single => assert_eq!(b.trees.len(), 40 * 2),
                 TreeKind::Multi => assert_eq!(b.trees.len(), 40),
+            }
+        }
+    }
+
+    #[test]
+    fn intra_thread_training_is_bit_identical() {
+        // Large enough that binning, histogram builds, and prediction
+        // updates all cross their parallel thresholds.
+        let mut rng = Rng::new(77);
+        let n = 4000;
+        let x = Matrix::randn(n, 5, &mut rng);
+        let mut y = Matrix::zeros(n, 2);
+        for r in 0..n {
+            y.set(r, 0, x.at(r, 0) - 0.5 * x.at(r, 3));
+            y.set(r, 1, (x.at(r, 1) * x.at(r, 2)).tanh());
+        }
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let base = TrainParams { n_trees: 5, max_depth: 5, kind, ..Default::default() };
+            let seq = Booster::train(&x.view(), &y.view(), base, None);
+            for workers in [2usize, 8] {
+                let params = TrainParams { intra_threads: workers, ..base };
+                let par = Booster::train(&x.view(), &y.view(), params, None);
+                assert_eq!(seq.trees, par.trees, "{kind:?} intra={workers}");
+                assert_eq!(seq.base_score, par.base_score);
+                let h1: Vec<f64> = seq.history.iter().map(|h| h.train_loss).collect();
+                let h2: Vec<f64> = par.history.iter().map(|h| h.train_loss).collect();
+                assert_eq!(h1, h2, "loss history diverges at intra={workers}");
             }
         }
     }

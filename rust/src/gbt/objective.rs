@@ -93,7 +93,73 @@ impl Objective {
             Objective::Logistic => sigmoid(margin as f64) as f32,
         }
     }
+
+    /// [`eval_loss`](Self::eval_loss) as a chunked, ordered reduction.
+    ///
+    /// Batches above [`LOSS_CHUNK`] elements are cut into fixed chunks
+    /// whose partial sums are folded **in chunk order**
+    /// ([`crate::coordinator::pool::map_reduce_chunks`]) — the chunk
+    /// grouping never depends on `workers`, so the loss (and therefore
+    /// early stopping) is identical for any worker count. Batches within
+    /// one chunk take the plain sequential path.
+    pub fn eval_loss_par(&self, preds: &[f32], targets: &[f32], workers: usize) -> f64 {
+        let n = preds.len();
+        if n <= LOSS_CHUNK {
+            return self.eval_loss(preds, targets);
+        }
+        match self {
+            Objective::SquaredError => {
+                let (sum, count) = crate::coordinator::pool::map_reduce_chunks(
+                    workers,
+                    n,
+                    LOSS_CHUNK,
+                    |_ci, r| {
+                        let mut count = 0usize;
+                        let sum: f64 = preds[r.clone()]
+                            .iter()
+                            .zip(&targets[r])
+                            .filter(|(_, &t)| !t.is_nan())
+                            .map(|(&p, &t)| {
+                                count += 1;
+                                let d = (p - t) as f64;
+                                d * d
+                            })
+                            .sum();
+                        (sum, count)
+                    },
+                    (0.0f64, 0usize),
+                    |(s, c), (ps, pc)| (s + ps, c + pc),
+                );
+                (sum / count.max(1) as f64).sqrt()
+            }
+            Objective::Logistic => {
+                let sum = crate::coordinator::pool::map_reduce_chunks(
+                    workers,
+                    n,
+                    LOSS_CHUNK,
+                    |_ci, r| {
+                        preds[r.clone()]
+                            .iter()
+                            .zip(&targets[r])
+                            .map(|(&margin, &t)| {
+                                let p = sigmoid(margin as f64).clamp(1e-12, 1.0 - 1e-12);
+                                let t = t as f64;
+                                -(t * p.ln() + (1.0 - t) * (1.0 - p).ln())
+                            })
+                            .sum::<f64>()
+                    },
+                    0.0f64,
+                    |a, b| a + b,
+                );
+                sum / n.max(1) as f64
+            }
+        }
+    }
 }
+
+/// Fixed element-chunk size for the parallel loss reduction (chunk
+/// boundaries must never depend on the worker count).
+pub const LOSS_CHUNK: usize = 8192;
 
 #[inline]
 pub fn sigmoid(x: f64) -> f64 {
@@ -137,5 +203,35 @@ mod tests {
         let ll_good = Objective::Logistic.eval_loss(&[5.0], &[1.0]);
         let ll_bad = Objective::Logistic.eval_loss(&[-5.0], &[1.0]);
         assert!(ll_good < ll_bad);
+    }
+
+    #[test]
+    fn parallel_loss_is_worker_invariant_and_close_to_sequential() {
+        // > LOSS_CHUNK elements so the chunked reduction engages; NaN
+        // targets sprinkled to exercise the masked count.
+        let n = LOSS_CHUNK * 2 + 513;
+        let mut preds = Vec::with_capacity(n);
+        let mut targets = Vec::with_capacity(n);
+        let mut state = 1u64;
+        for i in 0..n {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            preds.push(((state >> 33) as f32 / 2.0e9) - 1.0);
+            targets.push(if i % 97 == 0 { f32::NAN } else { preds[i] * 0.5 + 0.1 });
+        }
+        let obj = Objective::SquaredError;
+        let seq = obj.eval_loss(&preds, &targets);
+        let one = obj.eval_loss_par(&preds, &targets, 1);
+        for workers in [2usize, 8] {
+            let par = obj.eval_loss_par(&preds, &targets, workers);
+            // Fixed chunk grouping: exact equality across worker counts.
+            assert_eq!(one.to_bits(), par.to_bits(), "workers={workers}");
+        }
+        // And the regrouped sum stays numerically indistinguishable.
+        assert!((seq - one).abs() <= 1e-12 * seq.abs().max(1.0));
+        // Logistic path (no NaN masking).
+        let t01: Vec<f32> = targets.iter().map(|t| if t.is_nan() { 1.0 } else { 0.0 }).collect();
+        let one = Objective::Logistic.eval_loss_par(&preds, &t01, 1);
+        let par = Objective::Logistic.eval_loss_par(&preds, &t01, 8);
+        assert_eq!(one.to_bits(), par.to_bits());
     }
 }

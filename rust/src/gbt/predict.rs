@@ -48,6 +48,42 @@ pub fn predict_batch(booster: &Booster, x: &MatrixView<'_>, out: &mut [f32]) {
     }
 }
 
+/// Row-block granularity for [`predict_batch_par`]. Fixed so the block
+/// decomposition never depends on the worker count.
+pub const PREDICT_BLOCK_ROWS: usize = 1024;
+
+/// Row-block-parallel [`predict_batch`]: the batch is cut into fixed
+/// [`PREDICT_BLOCK_ROWS`] blocks scheduled over `workers` threads, each
+/// block running the same tree-outer/row-inner loop into its disjoint slice
+/// of `out`. Rows are independent, so output equals the sequential path
+/// bit-for-bit for any worker count.
+pub fn predict_batch_par(
+    booster: &Booster,
+    x: &MatrixView<'_>,
+    out: &mut [f32],
+    workers: usize,
+) {
+    let n = x.rows;
+    let m = booster.m;
+    assert_eq!(out.len(), n * m, "output buffer shape mismatch");
+    if workers.max(1) == 1 || n <= PREDICT_BLOCK_ROWS {
+        predict_batch(booster, x, out);
+        return;
+    }
+    let p = x.cols;
+    crate::coordinator::pool::for_each_mut_chunk(
+        workers,
+        out,
+        PREDICT_BLOCK_ROWS * m,
+        |ci, chunk| {
+            let r0 = ci * PREDICT_BLOCK_ROWS;
+            let rows = chunk.len() / m;
+            let sub = MatrixView { rows, cols: p, data: &x.data[r0 * p..(r0 + rows) * p] };
+            predict_batch(booster, &sub, chunk);
+        },
+    );
+}
+
 /// Flattened forest tensors for the XLA backend and for cheap traversal.
 ///
 /// All trees are padded to a common node count; `feature` is `-1` padded.
@@ -227,6 +263,30 @@ mod tests {
                 b.predict_row_into(x.row(r), &mut row_out);
                 assert_close(&batch.row(r).to_vec(), &row_out, 1e-6, 1e-6).unwrap();
             }
+        }
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential_exactly() {
+        // Batch spans several PREDICT_BLOCK_ROWS blocks with a ragged tail.
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (_, b) = toy_booster(kind, 21);
+            let mut rng = Rng::new(77);
+            let x = Matrix::randn(2 * PREDICT_BLOCK_ROWS + 137, 3, &mut rng);
+            let mut seq = vec![0.0f32; x.rows * b.m];
+            predict_batch(&b, &x.view(), &mut seq);
+            for workers in [1usize, 2, 8] {
+                let mut par = vec![0.0f32; x.rows * b.m];
+                predict_batch_par(&b, &x.view(), &mut par, workers);
+                assert_eq!(seq, par, "{kind:?} workers={workers}");
+            }
+            // Tiny batch (single block) stays on the sequential path.
+            let x1 = Matrix::randn(3, 3, &mut rng);
+            let mut seq1 = vec![0.0f32; 3 * b.m];
+            let mut par1 = vec![0.0f32; 3 * b.m];
+            predict_batch(&b, &x1.view(), &mut seq1);
+            predict_batch_par(&b, &x1.view(), &mut par1, 8);
+            assert_eq!(seq1, par1);
         }
     }
 

@@ -130,6 +130,24 @@ pub struct GrowParams {
     /// Use the histogram-subtraction trick (build the smaller child's
     /// histogram, derive the sibling's by subtraction).
     pub hist_subtraction: bool,
+    /// Threads for feature-parallel histogram builds inside this tree
+    /// (1 = fully sequential; results are identical either way).
+    pub n_threads: usize,
+}
+
+/// Nodes below this row count build their histogram sequentially even when
+/// `n_threads > 1`: per-thread scratch setup costs more than it saves on
+/// small nodes, and the sibling-subtraction trick already covers them.
+pub const PAR_BUILD_MIN_ROWS: usize = 1024;
+
+/// Effective histogram-build thread count for a node of `n_rows` rows.
+#[inline]
+fn node_threads(params: &GrowParams, n_rows: usize) -> usize {
+    if params.n_threads > 1 && n_rows >= PAR_BUILD_MIN_ROWS {
+        params.n_threads
+    } else {
+        1
+    }
 }
 
 /// Grow one tree on (a subset of) the binned training data.
@@ -182,7 +200,15 @@ pub fn grow_tree_pooled(
             Some(h) => h,
             None => {
                 let mut h = pool.take(layout, m, uniform_hess);
-                h.build(binned, layout, &rows, grads, hess);
+                h.build_par_scratch(
+                    binned,
+                    layout,
+                    &rows,
+                    grads,
+                    hess,
+                    node_threads(params, rows.len()),
+                    Some(pool.par_scratch()),
+                );
                 h
             }
         };
@@ -262,7 +288,15 @@ pub fn grow_tree_pooled(
                     (right_rows, rgt, left_rows, l)
                 };
             let mut small_hist = pool.take(layout, m, uniform_hess);
-            small_hist.build(binned, layout, &small_rows, grads, hess);
+            small_hist.build_par_scratch(
+                binned,
+                layout,
+                &small_rows,
+                grads,
+                hess,
+                node_threads(params, small_rows.len()),
+                Some(pool.par_scratch()),
+            );
             let mut big_hist = pool.take_uncleared(layout, m, uniform_hess);
             big_hist.subtract_from(&hist, &small_hist);
             pool.put(hist);
@@ -314,6 +348,7 @@ mod tests {
             min_child_weight: 1.0,
             min_split_gain: 0.0,
             hist_subtraction: false,
+            n_threads: 1,
         };
         let tree = grow_tree(&binned, &layout, &rows, &grads, &[], m, &params);
         (binned, tree)
@@ -388,6 +423,7 @@ mod tests {
             min_child_weight: 1.0,
             min_split_gain: 0.0,
             hist_subtraction: false,
+            n_threads: 1,
         };
         let with_sub = GrowParams { hist_subtraction: true, ..base };
         let t1 = grow_tree(&binned, &layout, &rows, &grads, &[], 1, &base);
@@ -400,6 +436,37 @@ mod tests {
             t1.predict_into(x.row(r), 1.0, &mut o1);
             t2.predict_into(x.row(r), 1.0, &mut o2);
             assert!((o1[0] - o2[0]).abs() < 1e-5, "row {r}: {} vs {}", o1[0], o2[0]);
+        }
+    }
+
+    #[test]
+    fn parallel_grower_is_bit_identical() {
+        // Enough rows that the root (and first splits) cross
+        // PAR_BUILD_MIN_ROWS, with NaNs and the subtraction trick on.
+        let mut rng = crate::util::rng::Rng::new(31);
+        let n = 3000;
+        let mut x = Matrix::randn(n, 6, &mut rng);
+        for r in (0..n).step_by(11) {
+            x.set(r, 4, f32::NAN);
+        }
+        let targets: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let binned = BinnedMatrix::fit_bin(&x.view(), 64);
+        let layout = HistLayout::new(&binned);
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let grads: Vec<f64> = targets.iter().map(|&t| -t).collect();
+        let seq_params = GrowParams {
+            max_depth: 6,
+            lambda: 0.5,
+            min_child_weight: 1.0,
+            min_split_gain: 0.0,
+            hist_subtraction: true,
+            n_threads: 1,
+        };
+        let t_seq = grow_tree(&binned, &layout, &rows, &grads, &[], 1, &seq_params);
+        for workers in [2usize, 8] {
+            let par_params = GrowParams { n_threads: workers, ..seq_params };
+            let t_par = grow_tree(&binned, &layout, &rows, &grads, &[], 1, &par_params);
+            assert_eq!(t_seq, t_par, "tree diverges at n_threads={workers}");
         }
     }
 
@@ -417,6 +484,7 @@ mod tests {
             min_child_weight: 1.0,
             min_split_gain: 0.0,
             hist_subtraction: false,
+            n_threads: 1,
         };
         let tree = grow_tree(&binned, &layout, &[0, 1, 2, 3], &grads, &[], 2, &params);
         let mut out = [0.0f32; 2];

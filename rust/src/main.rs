@@ -67,7 +67,8 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         .opt("depth", "7", "max tree depth")
         .opt("eta", "0.3", "learning rate")
         .opt("es", "0", "early-stopping rounds (0 = off)")
-        .opt("workers", "1", "parallel training jobs")
+        .opt("workers", "1", "total worker budget (0 = all host CPUs)")
+        .opt("intra", "0", "threads inside each training job (0 = auto split)")
         .opt("seed", "0", "seed")
         .opt("store", "results/model_store", "model store directory")
         .flag("resume", "resume from existing store")
@@ -77,16 +78,19 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     let cfg = forest_cfg_from(&args);
     let opts = caloforest::coordinator::RunOptions {
         workers: args.get_usize("workers"),
+        intra_job_threads: args.get_usize("intra"),
         store_dir: Some(std::path::PathBuf::from(args.get("store"))),
         resume: args.get_bool("resume"),
         track_memory: true,
     };
     let out = caloforest::coordinator::run_training(&cfg, &x, y.as_deref(), &opts);
     println!(
-        "trained {} ensembles in {:.2}s (peak heap {}), store: {}",
+        "trained {} ensembles in {:.2}s (peak heap {}, {} job workers x {} intra threads), store: {}",
         out.report.jobs.len(),
         out.report.total_seconds,
         fmt_bytes(out.peak_alloc_bytes),
+        out.job_workers,
+        out.intra_job_threads,
         args.get("store"),
     );
     Ok(())
@@ -98,13 +102,19 @@ fn cmd_generate(argv: &[String]) -> Result<(), String> {
         .opt("n", "1000", "samples to generate")
         .opt("seed", "0", "seed")
         .opt("out", "results/generated.csv", "output CSV")
+        .opt("workers", "1", "threads for native field evaluation (0 = all host CPUs)")
         .flag("xla", "use the AOT PJRT backend when an artifact fits")
         .parse(argv)?;
     let store =
         caloforest::coordinator::store::ModelStore::open(std::path::Path::new(&args.get("store")))
             .map_err(|e| format!("open store: {e}"))?;
     let model = store.load_model().map_err(|e| format!("load model: {e}"))?;
-    let cfg = caloforest::forest::GenerateConfig::new(args.get_usize("n"), args.get_u64("seed"));
+    let workers = match args.get_usize("workers") {
+        0 => caloforest::coordinator::memory::host_cpus(),
+        w => w,
+    };
+    let cfg = caloforest::forest::GenerateConfig::new(args.get_usize("n"), args.get_u64("seed"))
+        .with_workers(workers);
     let t0 = std::time::Instant::now();
     let (gen, labels) = if args.get_bool("xla") {
         let runtime = caloforest::runtime::PjrtRuntime::cpu(std::path::Path::new("artifacts"))

@@ -1,82 +1,12 @@
 //! PJRT CPU client wrapper with an executable cache and the artifact index.
+//! Only compiled with the `xla` cargo feature (needs the vendored `xla` +
+//! `anyhow` crates); the default build uses `client_stub.rs` instead.
 
-use crate::util::Json;
+pub use super::index::{ArtifactIndex, ArtifactSpec};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::{Arc, Mutex};
-
-/// Pinned shapes of one AOT entry point (from `artifacts/index.json`).
-#[derive(Clone, Debug, PartialEq)]
-pub struct ArtifactSpec {
-    pub name: String,
-    pub file: String,
-    /// Batch rows the executable was lowered for.
-    pub n: usize,
-    /// Feature dimension.
-    pub p: usize,
-    /// Padded tree count (0 for non-forest kernels).
-    pub n_trees: usize,
-    /// Padded nodes per tree.
-    pub max_nodes: usize,
-    /// Traversal iterations.
-    pub depth: usize,
-}
-
-/// Parsed `artifacts/index.json`.
-#[derive(Clone, Debug, Default)]
-pub struct ArtifactIndex {
-    pub specs: Vec<ArtifactSpec>,
-    pub dir: PathBuf,
-}
-
-impl ArtifactIndex {
-    /// Load the index; returns an empty index when artifacts are not built
-    /// (callers fall back to the native backend).
-    pub fn load(dir: &Path) -> ArtifactIndex {
-        let path = dir.join("index.json");
-        let Ok(text) = std::fs::read_to_string(&path) else {
-            return ArtifactIndex { specs: Vec::new(), dir: dir.to_path_buf() };
-        };
-        let Ok(json) = Json::parse(&text) else {
-            return ArtifactIndex { specs: Vec::new(), dir: dir.to_path_buf() };
-        };
-        let mut specs = Vec::new();
-        if let Some(entries) = json.get("artifacts").and_then(|a| a.as_arr()) {
-            for e in entries {
-                let get = |k: &str| e.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
-                specs.push(ArtifactSpec {
-                    name: e.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
-                    file: e.get("file").and_then(|v| v.as_str()).unwrap_or("").to_string(),
-                    n: get("n"),
-                    p: get("p"),
-                    n_trees: get("n_trees"),
-                    max_nodes: get("max_nodes"),
-                    depth: get("depth"),
-                });
-            }
-        }
-        ArtifactIndex { specs, dir: dir.to_path_buf() }
-    }
-
-    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
-        self.specs.iter().find(|s| s.name == name)
-    }
-
-    /// Smallest forest artifact that fits a model of the given dims.
-    pub fn find_forest_fit(&self, p: usize, n_trees: usize, max_nodes: usize, depth: usize) -> Option<&ArtifactSpec> {
-        self.specs
-            .iter()
-            .filter(|s| {
-                s.name.starts_with("flow_step")
-                    && s.p == p
-                    && s.n_trees >= n_trees
-                    && s.max_nodes >= max_nodes
-                    && s.depth >= depth
-            })
-            .min_by_key(|s| s.n_trees * s.max_nodes)
-    }
-}
 
 /// A compiled executable plus its spec.
 pub struct Executable {
@@ -213,36 +143,5 @@ impl PjrtRuntime {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn missing_index_is_empty_not_error() {
-        let idx = ArtifactIndex::load(Path::new("/nonexistent/dir"));
-        assert!(idx.specs.is_empty());
-        assert!(idx.find("anything").is_none());
-    }
-
-    #[test]
-    fn index_parsing() {
-        let dir = std::env::temp_dir().join("caloforest_test_index");
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(
-            dir.join("index.json"),
-            r#"{"artifacts": [{"name": "flow_step_p8", "file": "flow_step_p8.hlo.txt",
-                 "n": 256, "p": 8, "n_trees": 128, "max_nodes": 255, "depth": 7}]}"#,
-        )
-        .unwrap();
-        let idx = ArtifactIndex::load(&dir);
-        assert_eq!(idx.specs.len(), 1);
-        let s = idx.find("flow_step_p8").unwrap();
-        assert_eq!(s.p, 8);
-        assert_eq!(s.n, 256);
-        // Fit lookup: a smaller model fits, a larger one does not.
-        assert!(idx.find_forest_fit(8, 100, 200, 6).is_some());
-        assert!(idx.find_forest_fit(8, 500, 200, 6).is_none());
-        assert!(idx.find_forest_fit(9, 100, 200, 6).is_none());
-        std::fs::remove_dir_all(&dir).unwrap();
-    }
-}
+// The artifact-index tests live in `super::index` (compiled in every
+// build); this module's code paths need a live PJRT client to exercise.

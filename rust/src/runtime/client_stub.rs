@@ -1,0 +1,96 @@
+//! Dependency-free stand-in for the PJRT client, compiled when the `xla`
+//! cargo feature is **off** (the default — the real backend needs the
+//! vendored `xla`/`anyhow` crates, unavailable offline).
+//!
+//! The API mirrors `client.rs` exactly so every call site compiles
+//! unchanged; constructors return an error and callers fall back to the
+//! native predictor, which is what they already do when artifacts are
+//! missing.
+
+pub use super::index::{ArtifactIndex, ArtifactSpec};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Error raised by every stub entry point.
+#[derive(Debug)]
+pub struct XlaUnavailable(String);
+
+impl std::fmt::Display for XlaUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaUnavailable {}
+
+/// Stub result type (the real module uses `anyhow::Result`).
+pub type Result<T> = std::result::Result<T, XlaUnavailable>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaUnavailable(format!(
+        "{what}: built without the `xla` cargo feature (rebuild with \
+         `--features xla` inside the vendored PJRT environment)"
+    )))
+}
+
+/// A compiled executable plus its spec (never constructed in stub mode).
+pub struct Executable {
+    pub spec: ArtifactSpec,
+}
+
+impl Executable {
+    /// Run with f32 row-major inputs.
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        unavailable("run_f32")
+    }
+
+    /// Run with mixed f32/i32 inputs.
+    pub fn run_mixed(&self, _inputs: &[Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        unavailable("run_mixed")
+    }
+}
+
+/// A typed executable input.
+pub enum Input<'a> {
+    F32(&'a [f32], Vec<i64>),
+    I32(&'a [i32], Vec<i64>),
+}
+
+/// The PJRT CPU runtime stub: construction always fails.
+pub struct PjrtRuntime {
+    pub index: ArtifactIndex,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU runtime over an artifact directory — always errors in
+    /// stub mode; callers fall back to the native backend.
+    pub fn cpu(_artifact_dir: &Path) -> Result<PjrtRuntime> {
+        unavailable("PJRT cpu client")
+    }
+
+    pub fn platform(&self) -> String {
+        "xla-unavailable".to_string()
+    }
+
+    /// Load + compile an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        unavailable(name)
+    }
+
+    /// Compile a specific spec.
+    pub fn compile_spec(&self, spec: &ArtifactSpec) -> Result<Arc<Executable>> {
+        unavailable(&spec.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructor_errors_with_readable_message() {
+        let err = PjrtRuntime::cpu(Path::new("artifacts")).err().unwrap();
+        let msg = format!("{err}");
+        assert!(msg.contains("xla"), "message should name the feature: {msg}");
+    }
+}

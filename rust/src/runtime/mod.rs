@@ -11,8 +11,36 @@
 //! HLO *text* (not serialized protos) is the interchange format: jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT client needs the vendored `xla` + `anyhow` crates, which are
+//! not fetchable offline, so the real backend is gated behind the `xla`
+//! cargo feature. The default build substitutes API-identical stubs whose
+//! constructors error — exactly the path callers already take when
+//! artifacts are missing — so `cargo build` works from a fresh checkout
+//! and every call site is oblivious to which backend is present.
 
+pub mod index;
+
+// The real backend cannot build until the vendored crates are wired in as
+// path dependencies (see ROADMAP.md "XLA feature build") — fail with a
+// clear message instead of opaque unresolved-crate errors.
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature needs the vendored `xla` and `anyhow` crates from the \
+     offline PJRT environment: add them as path dependencies in rust/Cargo.toml \
+     (see ROADMAP.md, 'XLA feature build') and remove this guard"
+);
+
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
+pub mod xla_sampler;
+
+#[cfg(not(feature = "xla"))]
+#[path = "client_stub.rs"]
+pub mod client;
+#[cfg(not(feature = "xla"))]
+#[path = "xla_sampler_stub.rs"]
 pub mod xla_sampler;
 
 pub use client::{ArtifactIndex, PjrtRuntime};

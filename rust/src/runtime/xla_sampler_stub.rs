@@ -1,0 +1,33 @@
+//! Stand-in for the XLA vector-field backend when the `xla` feature is off.
+//! [`XlaField::prepare`] always errors, so the type can never be
+//! constructed; call sites keep compiling and fall back to the native
+//! sampler.
+
+use super::client::{PjrtRuntime, Result};
+use crate::forest::model::ForestModel;
+use crate::forest::sampler::FieldEval;
+use crate::tensor::MatrixView;
+
+/// A `FieldEval` backend that evaluates the learned field via PJRT — stub:
+/// never constructible.
+pub struct XlaField {
+    batch_rows: usize,
+}
+
+impl XlaField {
+    /// Always errors in stub mode (callers fall back to native).
+    pub fn prepare(runtime: &PjrtRuntime, _model: &ForestModel) -> Result<XlaField> {
+        runtime.load("flow_step").map(|_| unreachable!("stub load never succeeds"))
+    }
+
+    /// The artifact's pinned batch rows.
+    pub fn batch_rows(&self) -> usize {
+        self.batch_rows
+    }
+}
+
+impl FieldEval for XlaField {
+    fn eval(&self, _t_idx: usize, _y: usize, _x: &MatrixView<'_>, _out: &mut [f32]) {
+        unreachable!("XlaField cannot be constructed without the `xla` feature")
+    }
+}

@@ -1,0 +1,81 @@
+//! Acceptance gate for the two-level parallel training engine: on the
+//! synthetic benchmark dataset, training with `intra_job_threads > 1` (and
+//! any job-level worker count) must produce **bit-identical** models to the
+//! fully sequential path, and the sampler must generate bit-identical
+//! samples for any worker count.
+
+use caloforest::coordinator::{run_training, worker_budget, RunOptions};
+use caloforest::data::synthetic_dataset;
+use caloforest::forest::sampler::GenerateConfig;
+use caloforest::forest::trainer::{train_forest, ForestTrainConfig};
+use caloforest::forest::generate;
+use caloforest::gbt::{serialize, TrainParams, TreeKind};
+
+fn synthetic_cfg(kind: TreeKind) -> ForestTrainConfig {
+    ForestTrainConfig {
+        n_t: 2,
+        k_dup: 8,
+        params: TrainParams { n_trees: 3, max_depth: 4, kind, ..Default::default() },
+        seed: 5,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn intra_job_parallel_training_is_bit_identical_on_synthetic_benchmark() {
+    // 400 rows × 6 features × 2 classes, K=8 ⇒ 1600 duplicated rows per
+    // class: enough to cross every parallel threshold (histograms, binning,
+    // prediction updates) inside each job.
+    let (x, y) = synthetic_dataset(400, 6, 2, 7);
+    for kind in [TreeKind::Single, TreeKind::Multi] {
+        let cfg = synthetic_cfg(kind);
+        // Reference: the plain sequential trainer (no pool involved).
+        let (seq_model, _) = train_forest(&cfg, &x, Some(&y));
+        for (workers, intra) in [(1usize, 4usize), (2, 2), (4, 8)] {
+            let par = run_training(
+                &cfg,
+                &x,
+                Some(&y),
+                &RunOptions { workers, intra_job_threads: intra, ..Default::default() },
+            );
+            assert_eq!(par.intra_job_threads, intra);
+            assert!(par.model.is_complete());
+            for t in 0..seq_model.n_t() {
+                for yy in 0..seq_model.n_y() {
+                    let a = serialize::to_bytes(seq_model.ensemble(t, yy));
+                    let b = serialize::to_bytes(par.model.ensemble(t, yy));
+                    assert_eq!(
+                        a, b,
+                        "{kind:?} ensemble (t={t}, y={yy}) diverges at \
+                         workers={workers} intra={intra}"
+                    );
+                }
+            }
+            // Generated samples are byte-equal too (same model, same seed).
+            let g_seq = generate(&seq_model, &GenerateConfig::new(500, 11));
+            let g_par = generate(&par.model, &GenerateConfig::new(500, 11).with_workers(8));
+            assert_eq!(g_seq.0.data, g_par.0.data);
+            assert_eq!(g_seq.1, g_par.1);
+        }
+    }
+}
+
+#[test]
+fn auto_budget_saturates_few_job_runs() {
+    // Few jobs × big budget: the policy must push the spare workers down
+    // into the jobs instead of leaving them idle.
+    let (jobs, intra) = worker_budget(8, 2, 0);
+    assert_eq!((jobs, intra), (2, 4));
+    // And the auto split is what run_training actually applies.
+    let (x, y) = synthetic_dataset(120, 4, 2, 3);
+    let cfg = synthetic_cfg(TreeKind::Single);
+    let out = run_training(
+        &cfg,
+        &x,
+        Some(&y),
+        &RunOptions { workers: 8, ..Default::default() },
+    );
+    // 2 timesteps × 2 classes = 4 jobs; budget 8 ⇒ 4 job workers × 2 intra.
+    assert_eq!(out.job_workers, 4);
+    assert_eq!(out.intra_job_threads, 2);
+}
