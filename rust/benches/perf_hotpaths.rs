@@ -5,10 +5,13 @@
 //! EXPERIMENTS.md §Perf.
 
 use caloforest::coordinator::memory::TrackingAlloc;
+use caloforest::coordinator::pool::{self as cpool, WorkerPool};
 use caloforest::forest::noising;
 use caloforest::forest::schedule::VpSchedule;
+use caloforest::gbt::histogram::{HistLayout, Histogram};
 use caloforest::gbt::predict::PackedForest;
-use caloforest::gbt::{Booster, TrainParams, TreeKind};
+use caloforest::gbt::tree::PAR_BUILD_MIN_ROWS;
+use caloforest::gbt::{BinnedMatrix, Booster, TrainParams, TreeKind};
 use caloforest::runtime::{xla_sampler::XlaField, PjrtRuntime};
 use caloforest::tensor::Matrix;
 use caloforest::util::bench::Bench;
@@ -74,6 +77,70 @@ fn main() {
         );
     }
 
+    // --- Dispatch overhead: per-call spawn/join vs persistent pool. -------
+    // The worker-pool tentpole claim: park/unpark dispatch on a persistent
+    // WorkerPool is strictly cheaper than per-call scoped spawn/join, which
+    // is what let PAR_BUILD_MIN_ROWS drop below 1024.
+    let workers = host.clamp(2, 8);
+    let wp = WorkerPool::new(workers);
+    let m_spawn = bench.time(&format!("dispatch spawn/join (w={workers}, trivial)"), || {
+        cpool::for_each_chunk(workers, 64, 1, |_ci, r| {
+            std::hint::black_box(r.start);
+        });
+    });
+    let m_park = bench.time(&format!("dispatch park/unpark (w={workers}, trivial)"), || {
+        wp.for_each_chunk(64, 1, |_ci, r| {
+            std::hint::black_box(r.start);
+        });
+    });
+    bench.csv("path,label,mean_secs", format!("dispatch,spawn-join,{:.9}", m_spawn.mean()));
+    bench.csv("path,label,mean_secs", format!("dispatch,park-unpark,{:.9}", m_park.mean()));
+    println!(
+        "dispatch overhead: spawn/join {:.1} µs vs park/unpark {:.1} µs per call ({:.1}x)",
+        m_spawn.mean() * 1e6,
+        m_park.mean() * 1e6,
+        m_spawn.mean() / m_park.mean().max(1e-12),
+    );
+
+    // Small-node histogram build (512 rows — below the old 1024-row
+    // threshold): persistent-pool parallel build vs per-call pool
+    // construction (the old spawn/join-per-node cost model) vs sequential.
+    let small_n = 512;
+    let sx = Matrix::randn(small_n, p, &mut rng);
+    let sb = BinnedMatrix::fit_bin(&sx.view(), 255);
+    let slayout = HistLayout::new(&sb);
+    let srows: Vec<u32> = (0..small_n as u32).collect();
+    let sgrads: Vec<f64> = (0..small_n).map(|i| (i % 7) as f64 - 3.0).collect();
+    let mut shist = Histogram::new(&slayout, 1, true);
+    let m_seq = bench.time(&format!("hist build n={small_n} sequential"), || {
+        shist.build(&sb, &slayout, &srows, &sgrads, &[]);
+        std::hint::black_box(shist.count[0]);
+    });
+    let m_pool = bench.time(&format!("hist build n={small_n} pooled (w={workers})"), || {
+        shist.build_par(&sb, &slayout, &srows, &sgrads, &[], &wp);
+        std::hint::black_box(shist.count[0]);
+    });
+    let m_fresh = bench.time(&format!("hist build n={small_n} spawn-per-call (w={workers})"), || {
+        let fresh = WorkerPool::new(workers);
+        shist.build_par(&sb, &slayout, &srows, &sgrads, &[], &fresh);
+        std::hint::black_box(shist.count[0]);
+    });
+    bench.csv("path,label,mean_secs", format!("hist-small,sequential,{:.9}", m_seq.mean()));
+    bench.csv("path,label,mean_secs", format!("hist-small,pooled,{:.9}", m_pool.mean()));
+    bench.csv("path,label,mean_secs", format!("hist-small,spawn-per-call,{:.9}", m_fresh.mean()));
+    bench.csv("path,label,value", "threshold,par_build_min_rows_before,1024".to_string());
+    bench.csv(
+        "path,label,value",
+        format!("threshold,par_build_min_rows_after,{PAR_BUILD_MIN_ROWS}"),
+    );
+    println!(
+        "small-node ({small_n} rows) hist build: seq {:.1} µs, pooled {:.1} µs, \
+         spawn-per-call {:.1} µs; PAR_BUILD_MIN_ROWS 1024 -> {PAR_BUILD_MIN_ROWS}",
+        m_seq.mean() * 1e6,
+        m_pool.mean() * 1e6,
+        m_fresh.mean() * 1e6,
+    );
+
     // --- Generation hot path: booster vs packed vs XLA. -------------------
     let train_n = 400;
     let xt = Matrix::randn(train_n, 2, &mut rng);
@@ -99,8 +166,10 @@ fn main() {
         let r = packed.predict(&batch.view());
         std::hint::black_box(r.data[0]);
     });
+    let predict_pool = WorkerPool::new(host);
     let mpar = bench.time(&format!("predict native parallel (workers={host})"), || {
-        caloforest::gbt::predict::predict_batch_par(&booster, &batch.view(), &mut out, host);
+        use caloforest::gbt::predict::predict_batch_par;
+        predict_batch_par(&booster, &batch.view(), &mut out, &predict_pool);
         std::hint::black_box(out[0]);
     });
     bench.csv("path,label,mean_secs", format!("predict,native,{:.6}", m1.mean()));

@@ -4,7 +4,11 @@
 //! This is where the paper's system contribution lives as *code paths you can
 //! benchmark against each other*:
 //!
-//! * [`pool`] — the worker pool scheduling `(t, y)` training jobs;
+//! * [`pool`] — job scheduling for the `(t, y)` grid plus the persistent
+//!   [`pool::WorkerPool`] (parked workers, park/unpark dispatch) that every
+//!   job's intra-job primitives ride; [`run_training`] keeps one pool per
+//!   job-worker slot alive for the whole run and **rebalances** freed
+//!   worker budget into surviving slots' pools as the job queue drains;
 //! * [`memory`] — a tracking allocator + `/proc` RSS reader for *measuring*
 //!   our implementation, and a byte-accurate [`memory::MemoryModel`] for
 //!   *modelling* the original implementation's joblib/numpy behaviour
@@ -22,7 +26,7 @@ pub mod memory;
 pub mod store;
 
 use crate::forest::model::ForestModel;
-use crate::forest::trainer::{prepare, train_job, ForestTrainConfig, JobRecord, TrainReport};
+use crate::forest::trainer::{prepare, train_job_in, ForestTrainConfig, JobRecord, TrainReport};
 use crate::tensor::Matrix;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -90,8 +94,13 @@ pub struct RunOutcome {
     pub timeline: Vec<(f64, usize)>,
     /// Job-level workers actually scheduled (the budget split's left half).
     pub job_workers: usize,
-    /// Intra-job threads each job trained with (the split's right half).
+    /// Intra-job threads each job *started* with (the split's right half);
+    /// pools may end wider after dynamic rebalancing.
     pub intra_job_threads: usize,
+    /// Worker threads reassigned to surviving jobs' pools as the job queue
+    /// drained (the dynamic worker-budget rebalance; 0 with a single job
+    /// worker).
+    pub rebalanced_threads: usize,
 }
 
 /// Run the improved training pipeline: prepare shared state once, schedule
@@ -151,36 +160,89 @@ pub fn run_training(
 
     let completed: Mutex<Vec<(usize, usize, Option<crate::gbt::Booster>, JobRecord)>> =
         Mutex::new(Vec::with_capacity(jobs.len()));
-    let job_counter = AtomicUsize::new(0);
+    let next_job = AtomicUsize::new(0);
+    let jobs_done = AtomicUsize::new(0);
 
-    pool::run_indexed(job_workers, jobs.len(), |job_idx| {
-        let (t_idx, y_idx) = jobs[job_idx];
-        let jt0 = std::time::Instant::now();
-        let booster = train_job(&prep, job_cfg, t_idx, y_idx);
-        let rec = JobRecord {
-            t_idx,
-            y: y_idx,
-            best_round: booster.best_round,
-            rounds_trained: booster.history.len(),
-            final_train_loss: booster.history.last().map(|h| h.train_loss).unwrap_or(0.0),
-            final_valid_loss: booster.history.last().and_then(|h| h.valid_loss),
-            seconds: jt0.elapsed().as_secs_f64(),
-            nbytes: booster.nbytes(),
-        };
-        // Issue 3: write to disk inside the worker, then drop from memory.
-        let keep = match &store {
-            Some(s) => {
-                s.save(t_idx, y_idx, &booster).expect("store write failed");
-                None
+    // One persistent worker pool per job-worker slot, alive for the whole
+    // run: every per-round/per-node parallel primitive inside a job rides
+    // its slot's pool, so pool construction here is the only thread spawn
+    // in the training path.
+    let pools: Vec<pool::WorkerPool> =
+        (0..job_workers).map(|_| pool::WorkerPool::new(intra_threads)).collect();
+    // Dynamic worker-budget rebalancing state: which slots still train.
+    let slot_active: Mutex<Vec<bool>> = Mutex::new(vec![true; job_workers]);
+    let rebalanced = AtomicUsize::new(0);
+
+    let run_slot = |slot: usize| {
+        let exec = &pools[slot];
+        loop {
+            let job_idx = next_job.fetch_add(1, Ordering::Relaxed);
+            if job_idx >= jobs.len() {
+                break;
             }
-            None => Some(booster),
-        };
-        completed.lock().unwrap().push((t_idx, y_idx, keep, rec));
-        let done = job_counter.fetch_add(1, Ordering::Relaxed);
-        if done % 8 == 0 {
-            sample_mem(&timeline, &t0);
+            let (t_idx, y_idx) = jobs[job_idx];
+            let jt0 = std::time::Instant::now();
+            let booster = train_job_in(&prep, job_cfg, t_idx, y_idx, exec);
+            let rec = JobRecord {
+                t_idx,
+                y: y_idx,
+                best_round: booster.best_round,
+                rounds_trained: booster.history.len(),
+                final_train_loss: booster.history.last().map(|h| h.train_loss).unwrap_or(0.0),
+                final_valid_loss: booster.history.last().and_then(|h| h.valid_loss),
+                seconds: jt0.elapsed().as_secs_f64(),
+                nbytes: booster.nbytes(),
+            };
+            // Issue 3: write to disk inside the worker, then drop from memory.
+            let keep = match &store {
+                Some(s) => {
+                    s.save(t_idx, y_idx, &booster).expect("store write failed");
+                    None
+                }
+                None => Some(booster),
+            };
+            completed.lock().unwrap().push((t_idx, y_idx, keep, rec));
+            let done = jobs_done.fetch_add(1, Ordering::Relaxed);
+            if done % 8 == 0 {
+                sample_mem(&timeline, &t0);
+            }
         }
-    });
+        // Dynamic worker-budget rebalancing: the queue is drained for this
+        // slot, so its whole thread budget (caller + pool workers, however
+        // wide it has grown) is free. Retire its parked workers and
+        // re-spawn the budget round-robin into the surviving slots' pools,
+        // keeping live threads at the budget. Growing a pool mid-run is
+        // safe — chunk boundaries are fixed, so the widened pools keep
+        // producing bit-identical models.
+        let mut active = slot_active.lock().unwrap();
+        // Read the width under the lock: donations are serialized by it, so
+        // a grant can't land between the read and the retire below (which
+        // would be retired but never re-donated, leaking budget).
+        let freed = exec.threads();
+        active[slot] = false;
+        exec.retire_workers();
+        let survivors: Vec<usize> =
+            active.iter().enumerate().filter(|&(_, &a)| a).map(|(i, _)| i).collect();
+        if survivors.is_empty() {
+            return;
+        }
+        for k in 0..freed {
+            pools[survivors[k % survivors.len()]].grow(1);
+            rebalanced.fetch_add(1, Ordering::Relaxed);
+        }
+    };
+
+    if job_workers == 1 {
+        run_slot(0);
+    } else {
+        let run_slot = &run_slot;
+        std::thread::scope(|scope| {
+            for slot in 0..job_workers {
+                scope.spawn(move || run_slot(slot));
+            }
+        });
+    }
+    drop(pools);
     sample_mem(&timeline, &t0);
 
     let mut model = ForestModel::empty(
@@ -211,6 +273,7 @@ pub fn run_training(
         timeline: timeline.into_inner().unwrap(),
         job_workers,
         intra_job_threads: intra_threads,
+        rebalanced_threads: rebalanced.load(Ordering::Relaxed),
     }
 }
 
@@ -254,6 +317,21 @@ mod tests {
         let g2 = crate::forest::generate(&par.model, &crate::forest::GenerateConfig::new(30, 9));
         assert_eq!(g1.0.data, g2.0.data);
         assert_eq!(par.report.jobs.len(), 6);
+        // Dynamic rebalancing must have fired: every drained slot except
+        // the last donates at least one worker to a surviving pool.
+        assert_eq!(par.job_workers, 4);
+        assert!(
+            par.rebalanced_threads >= par.job_workers - 1,
+            "expected >= {} rebalanced threads, got {}",
+            par.job_workers - 1,
+            par.rebalanced_threads
+        );
+        // A single job worker has nobody to donate to.
+        assert_eq!(seq_rebalance_is_zero(&c, &x, &y), 0);
+    }
+
+    fn seq_rebalance_is_zero(c: &ForestTrainConfig, x: &Matrix, y: &[u32]) -> usize {
+        run_training(c, x, Some(y), &RunOptions::default()).rebalanced_threads
     }
 
     #[test]

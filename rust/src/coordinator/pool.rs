@@ -16,10 +16,21 @@
 //!   — never on the worker count — and [`map_reduce_chunks`] folds results
 //!   in chunk-index order, so any determinism argument made for one worker
 //!   holds for any worker count.
+//!
+//! The free functions spawn scoped threads *per call* — cheap for job-level
+//! scheduling (a handful of calls per run) but ruinous for per-node
+//! histogram builds inside tree growth. [`WorkerPool`] is the persistent
+//! alternative: workers are spawned once, park on a condvar between
+//! dispatches, and are unparked for each task (generation-counted so a
+//! late-waking worker can never run a stale or retired task). Its chunked
+//! primitives mirror the free functions exactly — same fixed chunk
+//! boundaries, same ordered/disjoint merges — so pool execution is
+//! bit-identical to scoped-thread execution for any worker count, and a
+//! pool [grown mid-run](WorkerPool::grow) stays bit-identical too.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Run `f(job_index)` for every index in `0..n_jobs` using up to `workers`
 /// threads (`workers == 1` runs inline, no threads spawned).
@@ -188,6 +199,361 @@ where
     parts.into_iter().fold(init, fold)
 }
 
+/// Type-erased task shared with the parked workers for one dispatch.
+type TaskFn = dyn Fn() + Sync;
+
+/// Erase the task's lifetime so it can sit in the pool's shared state.
+///
+/// # Safety
+/// The caller must guarantee the reference is never dereferenced after the
+/// dispatching call returns. [`WorkerPool::dispatch`] upholds this: workers
+/// register in `running` under the state mutex before calling the task, and
+/// `dispatch` does not return until `running == 0` and the task slot is
+/// cleared.
+unsafe fn erase_task<'a>(task: &'a (dyn Fn() + Sync + 'a)) -> &'static TaskFn {
+    std::mem::transmute::<&'a (dyn Fn() + Sync + 'a), &'static (dyn Fn() + Sync + 'static)>(task)
+}
+
+/// State guarded by the pool mutex.
+#[derive(Default)]
+struct PoolState {
+    /// Dispatch generation: bumped once per task so a worker that already
+    /// ran generation `g` parks until `g` changes (a worker can never run
+    /// the same dispatch twice).
+    gen: u64,
+    /// The live task, if a dispatch is in flight.
+    job: Option<&'static TaskFn>,
+    /// Participants (dispatcher + workers) currently inside the live task.
+    running: usize,
+    /// First panic payload raised inside a worker, re-thrown by `dispatch`.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between dispatches.
+    work_cv: Condvar,
+    /// The dispatcher parks here until the last participant leaves.
+    done_cv: Condvar,
+    /// Spawned worker threads (excludes the dispatching caller).
+    worker_count: AtomicUsize,
+}
+
+/// A persistent intra-job worker pool: threads are spawned once (and
+/// optionally [grown](Self::grow) mid-run), park between dispatches, and are
+/// unparked per task — replacing the per-call spawn/join of the scoped
+/// free functions on the per-node/per-round training hot path.
+///
+/// The dispatching thread always participates in the task, so a pool built
+/// with `threads == 1` spawns nothing and runs inline. All chunked
+/// primitives share the fixed chunk boundaries of the free functions, so
+/// results are bit-identical for any worker count, before or after a grow.
+///
+/// One thread dispatches at a time (the owning training job); concurrent
+/// [`grow`](Self::grow) from other threads is safe and is how the
+/// coordinator's dynamic worker-budget rebalancing reassigns freed workers.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    /// Create a pool that executes tasks over `threads` threads total: the
+    /// caller plus `threads − 1` parked workers (`threads <= 1` spawns
+    /// nothing and every primitive runs inline).
+    pub fn new(threads: usize) -> WorkerPool {
+        let pool = WorkerPool {
+            shared: Arc::new(PoolShared {
+                state: Mutex::new(PoolState::default()),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+                worker_count: AtomicUsize::new(0),
+            }),
+            handles: Mutex::new(Vec::new()),
+        };
+        pool.grow(threads.max(1) - 1);
+        pool
+    }
+
+    /// Total execution width: the dispatching caller plus parked workers.
+    pub fn threads(&self) -> usize {
+        1 + self.shared.worker_count.load(Ordering::Relaxed)
+    }
+
+    /// Add `extra` parked workers. Safe to call from any thread at any
+    /// time — a new worker may join a task already in flight, and because
+    /// chunk boundaries never depend on the worker count, results are
+    /// unchanged. This is the coordinator's rebalancing primitive.
+    pub fn grow(&self, extra: usize) {
+        for _ in 0..extra {
+            let shared = Arc::clone(&self.shared);
+            let handle = std::thread::Builder::new()
+                .name("caloforest-pool-worker".into())
+                .spawn(move || worker_loop(&shared))
+                .expect("failed to spawn pool worker");
+            self.handles.lock().unwrap().push(handle);
+            self.shared.worker_count.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Permanently stop and join this pool's spawned workers; the
+    /// dispatching caller keeps working inline (`threads()` returns 1
+    /// afterwards). The coordinator calls this when a job slot drains: the
+    /// slot's thread budget is re-spawned into surviving slots' pools, so
+    /// retiring the parked originals keeps the live thread count at the
+    /// budget instead of accumulating idle stacks. Must not be called
+    /// while a dispatch is in flight on this pool; [`grow`](Self::grow)
+    /// after retirement is not supported (new workers exit immediately).
+    pub fn retire_workers(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        let handles: Vec<_> = std::mem::take(&mut *self.handles.lock().unwrap());
+        for handle in handles {
+            let _ = handle.join();
+        }
+        self.shared.worker_count.store(0, Ordering::Relaxed);
+    }
+
+    /// Run `work` on every pool thread (and the caller) until it returns.
+    ///
+    /// The task is expected to pull work items from a shared counter the
+    /// caller owns; `dispatch` returns only after every participating
+    /// thread has left the task. Worker panics are captured and re-thrown
+    /// here, and the pool stays usable afterwards.
+    pub fn dispatch(&self, work: &(dyn Fn() + Sync)) {
+        if self.shared.worker_count.load(Ordering::Relaxed) == 0 {
+            work();
+            return;
+        }
+        // SAFETY: see `erase_task` — no participant survives this call.
+        let task = unsafe { erase_task(work) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(st.job.is_none(), "reentrant WorkerPool::dispatch");
+            st.gen = st.gen.wrapping_add(1);
+            st.job = Some(task);
+            st.running += 1; // the dispatching thread participates
+            self.shared.work_cv.notify_all();
+        }
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(work));
+        let mut st = self.shared.state.lock().unwrap();
+        st.running -= 1;
+        if st.running == 0 {
+            // No worker ever joined (or all left before us): retire the task.
+            st.job = None;
+        } else {
+            while st.running > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        let worker_panic = st.panic.take();
+        drop(st);
+        if let Some(p) = worker_panic {
+            std::panic::resume_unwind(p);
+        }
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Pool-backed [`run_indexed`]: `f(i)` for every `i in 0..n_jobs`,
+    /// indices pulled from a shared counter (inline when the pool has a
+    /// single thread).
+    pub fn run_indexed<F>(&self, n_jobs: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n_jobs == 0 {
+            return;
+        }
+        if self.threads() == 1 || n_jobs == 1 {
+            for i in 0..n_jobs {
+                f(i);
+            }
+            return;
+        }
+        let counter = AtomicUsize::new(0);
+        self.dispatch(&|| loop {
+            let i = counter.fetch_add(1, Ordering::Relaxed);
+            if i >= n_jobs {
+                break;
+            }
+            f(i);
+        });
+    }
+
+    /// Pool-backed [`map_indexed`]: results collected in job order.
+    pub fn map_indexed<R, F>(&self, n_jobs: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let mut slots: Vec<Option<R>> = (0..n_jobs).map(|_| None).collect();
+        {
+            let cells: Vec<Mutex<&mut Option<R>>> = slots.iter_mut().map(Mutex::new).collect();
+            self.run_indexed(n_jobs, |i| {
+                let r = f(i);
+                **cells[i].lock().unwrap() = Some(r);
+            });
+        }
+        slots.into_iter().map(|s| s.expect("job skipped")).collect()
+    }
+
+    /// Pool-backed [`for_each_chunk`]: same fixed chunk boundaries.
+    pub fn for_each_chunk<F>(&self, n_items: usize, chunk_size: usize, f: F)
+    where
+        F: Fn(usize, Range<usize>) + Sync,
+    {
+        let nc = n_chunks(n_items, chunk_size);
+        self.run_indexed(nc, |ci| f(ci, chunk_range(n_items, chunk_size, ci)));
+    }
+
+    /// Pool-backed [`for_each_chunk_scratch`]: one lazily-created scratch
+    /// per participating thread, all created scratches returned (same
+    /// disjoint/commutative-merge contract as the free function).
+    pub fn for_each_chunk_scratch<S, I, F>(
+        &self,
+        n_items: usize,
+        chunk_size: usize,
+        init: I,
+        f: F,
+    ) -> Vec<S>
+    where
+        S: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize, Range<usize>) + Sync,
+    {
+        let nc = n_chunks(n_items, chunk_size);
+        if nc == 0 {
+            return Vec::new();
+        }
+        if self.threads() == 1 || nc == 1 {
+            let mut scratch = init();
+            for ci in 0..nc {
+                f(&mut scratch, ci, chunk_range(n_items, chunk_size, ci));
+            }
+            return vec![scratch];
+        }
+        let counter = AtomicUsize::new(0);
+        let out: Mutex<Vec<S>> = Mutex::new(Vec::new());
+        self.dispatch(&|| {
+            let mut scratch: Option<S> = None;
+            loop {
+                let ci = counter.fetch_add(1, Ordering::Relaxed);
+                if ci >= nc {
+                    break;
+                }
+                f(scratch.get_or_insert_with(&init), ci, chunk_range(n_items, chunk_size, ci));
+            }
+            if let Some(s) = scratch {
+                out.lock().unwrap().push(s);
+            }
+        });
+        out.into_inner().unwrap()
+    }
+
+    /// Pool-backed [`for_each_mut_chunk`]: disjoint `&mut` chunks of a
+    /// shared buffer.
+    pub fn for_each_mut_chunk<T, F>(&self, data: &mut [T], chunk_size: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let chunk_size = chunk_size.max(1);
+        if self.threads() == 1 || data.len() <= chunk_size {
+            for (ci, chunk) in data.chunks_mut(chunk_size).enumerate() {
+                f(ci, chunk);
+            }
+            return;
+        }
+        let cells: Vec<Mutex<&mut [T]>> = data.chunks_mut(chunk_size).map(Mutex::new).collect();
+        self.run_indexed(cells.len(), |ci| {
+            let mut guard = cells[ci].lock().unwrap();
+            f(ci, &mut **guard);
+        });
+    }
+
+    /// Pool-backed [`map_reduce_chunks`]: parallel map, ordered fold.
+    pub fn map_reduce_chunks<R, A, M, F>(
+        &self,
+        n_items: usize,
+        chunk_size: usize,
+        map: M,
+        init: A,
+        fold: F,
+    ) -> A
+    where
+        R: Send,
+        M: Fn(usize, Range<usize>) -> R + Sync,
+        F: FnMut(A, R) -> A,
+    {
+        let nc = n_chunks(n_items, chunk_size);
+        let parts = self.map_indexed(nc, |ci| map(ci, chunk_range(n_items, chunk_size, ci)));
+        parts.into_iter().fold(init, fold)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for handle in self.handles.get_mut().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.threads()).finish()
+    }
+}
+
+/// Body of every pool worker: park on the condvar, join each new
+/// generation's task once, record panics, retire the task when last out.
+fn worker_loop(shared: &PoolShared) {
+    let mut seen_gen = 0u64;
+    loop {
+        let (job, gen) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = st.job {
+                    if st.gen != seen_gen {
+                        let gen = st.gen;
+                        st.running += 1;
+                        break (job, gen);
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        seen_gen = gen;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(p) = result {
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+        st.running -= 1;
+        if st.running == 0 {
+            st.job = None;
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,5 +675,151 @@ mod tests {
             );
             assert_eq!(concat, (0..26).collect::<Vec<_>>());
         }
+    }
+
+    // ------------------------- WorkerPool -------------------------------
+
+    #[test]
+    fn pool_runs_all_jobs_once_and_is_reusable() {
+        for threads in [1usize, 2, 5] {
+            let pool = WorkerPool::new(threads);
+            assert_eq!(pool.threads(), threads.max(1));
+            // Many dispatches on the same pool: park/unpark, no respawn.
+            for round in 0..20 {
+                let hits = AtomicU64::new(0);
+                let sum = AtomicU64::new(0);
+                pool.run_indexed(100, |i| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                    sum.fetch_add(i as u64, Ordering::Relaxed);
+                });
+                assert_eq!(hits.load(Ordering::Relaxed), 100, "t={threads} r={round}");
+                assert_eq!(sum.load(Ordering::Relaxed), 4950);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_primitives_match_free_functions() {
+        let pool = WorkerPool::new(4);
+        // map_indexed: ordered results.
+        assert_eq!(pool.map_indexed(20, |i| i * i), map_indexed(4, 20, |i| i * i));
+        assert!(pool.map_indexed(0, |i| i).is_empty());
+        // for_each_chunk: full disjoint coverage.
+        for chunk in [1usize, 3, 7, 100] {
+            let hits = AtomicU64::new(0);
+            let sum = AtomicU64::new(0);
+            pool.for_each_chunk(20, chunk, |_ci, range| {
+                for i in range {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                    sum.fetch_add(i as u64, Ordering::Relaxed);
+                }
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 20, "c={chunk}");
+            assert_eq!(sum.load(Ordering::Relaxed), 190);
+        }
+        // for_each_chunk_scratch: items partitioned across scratches.
+        let scratches =
+            pool.for_each_chunk_scratch(100, 7, Vec::new, |s: &mut Vec<usize>, _ci, r| {
+                s.extend(r);
+            });
+        assert!(!scratches.is_empty() && scratches.len() <= pool.threads());
+        let mut all: Vec<usize> = scratches.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+        let none = pool.for_each_chunk_scratch(0, 8, Vec::new, |s: &mut Vec<usize>, _ci, r| {
+            s.extend(r);
+        });
+        assert!(none.is_empty());
+        // for_each_mut_chunk: disjoint writes, complete coverage.
+        for chunk in [1usize, 4, 9, 64] {
+            let mut data = vec![0usize; 33];
+            pool.for_each_mut_chunk(&mut data, chunk, |ci, slice| {
+                for (k, v) in slice.iter_mut().enumerate() {
+                    *v = ci * chunk + k + 1;
+                }
+            });
+            assert_eq!(data, (1..=33).collect::<Vec<_>>(), "c={chunk}");
+        }
+        // map_reduce_chunks: ordered fold.
+        let concat = pool.map_reduce_chunks(
+            26,
+            4,
+            |ci, range| (ci, range.collect::<Vec<_>>()),
+            Vec::new(),
+            |mut acc: Vec<usize>, (ci, items)| {
+                assert_eq!(items.first().copied(), Some(ci * 4));
+                acc.extend(items);
+                acc
+            },
+        );
+        assert_eq!(concat, (0..26).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_grow_mid_run_keeps_results_identical() {
+        let pool = WorkerPool::new(1);
+        let baseline = pool.map_indexed(50, |i| i * 3);
+        // Grow between dispatches…
+        pool.grow(3);
+        assert_eq!(pool.threads(), 4);
+        assert_eq!(pool.map_indexed(50, |i| i * 3), baseline);
+        // …and concurrently *during* a dispatch: correctness must not
+        // depend on when the new workers join.
+        std::thread::scope(|scope| {
+            scope.spawn(|| pool.grow(2));
+            for _ in 0..50 {
+                assert_eq!(pool.map_indexed(64, |i| i + 1), (1..=64).collect::<Vec<_>>());
+            }
+        });
+        assert_eq!(pool.threads(), 6);
+        assert_eq!(pool.map_indexed(50, |i| i * 3), baseline);
+    }
+
+    #[test]
+    fn pool_propagates_panics_and_survives_them() {
+        let pool = WorkerPool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_indexed(64, |i| {
+                if i == 33 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the dispatcher");
+        // The pool must remain fully usable after a task panicked.
+        let hits = AtomicU64::new(0);
+        pool.run_indexed(64, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn retired_pool_keeps_working_inline() {
+        let pool = WorkerPool::new(4);
+        let expect: Vec<usize> = (0..40).map(|i| i * 2).collect();
+        assert_eq!(pool.map_indexed(40, |i| i * 2), expect);
+        pool.retire_workers();
+        assert_eq!(pool.threads(), 1);
+        // Dispatch after retirement runs inline on the caller, same results.
+        assert_eq!(pool.map_indexed(40, |i| i * 2), expect);
+        // Retiring twice is a no-op.
+        pool.retire_workers();
+        assert_eq!(pool.threads(), 1);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        // threads <= 1 spawns no workers at all.
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let tid = std::thread::current().id();
+        pool.run_indexed(8, |_| assert_eq!(std::thread::current().id(), tid));
+        let mut data = vec![0u8; 16];
+        pool.for_each_mut_chunk(&mut data, 4, |_ci, chunk| {
+            assert_eq!(std::thread::current().id(), tid);
+            chunk.fill(1);
+        });
+        assert!(data.iter().all(|&b| b == 1));
     }
 }

@@ -132,16 +132,17 @@ impl ForestModel {
     }
 
     /// [`eval_field`](Self::eval_field) with row-block-parallel prediction
-    /// over `workers` threads (bit-identical output for any worker count).
+    /// on a persistent worker pool (bit-identical output for any worker
+    /// count).
     pub fn eval_field_par(
         &self,
         t_idx: usize,
         y: usize,
         x: &crate::tensor::MatrixView<'_>,
         out: &mut [f32],
-        workers: usize,
+        exec: &crate::coordinator::pool::WorkerPool,
     ) {
-        crate::gbt::predict::predict_batch_par(self.ensemble(t_idx, y), x, out, workers);
+        crate::gbt::predict::predict_batch_par(self.ensemble(t_idx, y), x, out, exec);
     }
 
     /// Persist the full model as a directory: `meta.json` + one `.fbj` per

@@ -12,6 +12,7 @@
 //! together.
 
 use super::model::{ForestModel, ModelKind};
+use crate::coordinator::pool::WorkerPool;
 use crate::tensor::{Matrix, MatrixView};
 use crate::util::rng::Rng;
 
@@ -75,16 +76,18 @@ impl<'a> FieldEval for NativeField<'a> {
     }
 }
 
-/// Native backend with row-block-parallel batched prediction — identical
-/// output to [`NativeField`] for any worker count.
+/// Native backend with row-block-parallel batched prediction on a
+/// persistent worker pool — identical output to [`NativeField`] for any
+/// worker count. The pool outlives the whole generation loop (`n_t` field
+/// evaluations per class), so sampling spawns threads exactly once.
 pub struct ParNativeField<'a> {
     pub model: &'a ForestModel,
-    pub workers: usize,
+    pub exec: &'a WorkerPool,
 }
 
 impl<'a> FieldEval for ParNativeField<'a> {
     fn eval(&self, t_idx: usize, y: usize, x: &MatrixView<'_>, out: &mut [f32]) {
-        self.model.eval_field_par(t_idx, y, x, out, self.workers);
+        self.model.eval_field_par(t_idx, y, x, out, self.exec);
     }
 }
 
@@ -128,9 +131,10 @@ pub fn sample_labels(
 }
 
 /// Generate `cfg.n` samples with the native backend (`cfg.workers` threads
-/// for field evaluation).
+/// for field evaluation, pooled for the duration of the run).
 pub fn generate(model: &ForestModel, cfg: &GenerateConfig) -> (Matrix, Vec<u32>) {
-    generate_with(model, &ParNativeField { model, workers: cfg.workers.max(1) }, cfg)
+    let exec = WorkerPool::new(cfg.workers.max(1));
+    generate_with(model, &ParNativeField { model, exec: &exec }, cfg)
 }
 
 /// Generate with an arbitrary vector-field backend.

@@ -19,6 +19,7 @@ use super::model::{ForestModel, ModelKind};
 use super::noising;
 use super::scaler::ClassScalers;
 use super::schedule::{TimeGrid, VpSchedule};
+use crate::coordinator::pool::WorkerPool;
 use crate::gbt::{Booster, TrainParams};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
@@ -227,7 +228,25 @@ impl TrainReport {
 ///
 /// This is the unit the coordinator schedules. It allocates only
 /// `O(n_y_rows·K·p)` transient state and returns the trained booster.
+/// Spawns one [`WorkerPool`] of `cfg.params.intra_threads` threads for the
+/// job; schedulers that train many jobs should amortize the spawn by
+/// passing a long-lived pool to [`train_job_in`] instead.
 pub fn train_job(prep: &Prepared, cfg: &ForestTrainConfig, t_idx: usize, y: usize) -> Booster {
+    let exec = WorkerPool::new(cfg.params.intra_threads.max(1));
+    train_job_in(prep, cfg, t_idx, y, &exec)
+}
+
+/// [`train_job`] on an existing persistent worker pool — the coordinator
+/// keeps one pool per job-worker slot alive for the whole run (and may grow
+/// it mid-run as the job queue drains); every job trained on it produces
+/// bit-identical ensembles for any pool width.
+pub fn train_job_in(
+    prep: &Prepared,
+    cfg: &ForestTrainConfig,
+    t_idx: usize,
+    y: usize,
+    exec: &WorkerPool,
+) -> Booster {
     let t = prep.grid.ts[t_idx];
     let (s, e) = prep.class_ranges_dup[y];
     let x0 = prep.x0.row_slice(s, e);
@@ -274,8 +293,14 @@ pub fn train_job(prep: &Prepared, cfg: &ForestTrainConfig, t_idx: usize, y: usiz
     };
 
     match &val {
-        Some((xtv, zv)) => Booster::train(&xt.view(), &z.view(), cfg.params, Some((&xtv.view(), &zv.view()))),
-        None => Booster::train(&xt.view(), &z.view(), cfg.params, None),
+        Some((xtv, zv)) => Booster::train_with(
+            &xt.view(),
+            &z.view(),
+            cfg.params,
+            Some((&xtv.view(), &zv.view())),
+            exec,
+        ),
+        None => Booster::train_with(&xt.view(), &z.view(), cfg.params, None, exec),
     }
 }
 

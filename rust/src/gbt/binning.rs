@@ -17,6 +17,7 @@
 //!   not reproducible across passes therefore produces inconsistent
 //!   bin indices — the bug the paper found in the upstream codebase.
 
+use crate::coordinator::pool::WorkerPool;
 use crate::tensor::MatrixView;
 
 /// Reserved bin code for missing values.
@@ -91,16 +92,21 @@ impl BinCuts {
         BinCuts { cuts }
     }
 
-    /// Feature-parallel [`fit`](Self::fit): every feature's quantile sketch
-    /// (collect → sort → cut) is independent, so columns are distributed
-    /// over `workers` threads and collected in feature order. The result is
-    /// identical to the sequential fit for any worker count.
-    pub fn fit_par(x: &MatrixView<'_>, max_bins: usize, workers: usize) -> BinCuts {
-        if workers.max(1) == 1 || x.cols < 2 {
+    /// Feature-parallel [`fit`](Self::fit) on a persistent worker pool:
+    /// every feature's quantile sketch (collect → sort → cut) is
+    /// independent, so with enough columns each column is one task,
+    /// collected in feature order. In the few-wide-columns regime
+    /// (`cols < pool threads`) the parallelism moves *inside* each column:
+    /// the sort runs as pool-sorted fixed chunks merged stably
+    /// ([`sort_column_pooled`]), which reproduces the sequential stable
+    /// sort — and therefore the sequential cuts — bit-for-bit. The result
+    /// is identical to [`fit`](Self::fit) for any worker count.
+    pub fn fit_par(x: &MatrixView<'_>, max_bins: usize, exec: &WorkerPool) -> BinCuts {
+        if exec.threads() == 1 {
             return BinCuts::fit(x, max_bins);
         }
         let max_bins = max_bins.min(MAX_BINS);
-        let cuts = crate::coordinator::pool::map_indexed(workers, x.cols, |f| {
+        let collect_col = |f: usize| -> Vec<f32> {
             let mut col = Vec::with_capacity(x.rows);
             for r in 0..x.rows {
                 let v = x.at(r, f);
@@ -108,9 +114,29 @@ impl BinCuts {
                     col.push(v);
                 }
             }
-            cuts_for_column(&mut col, max_bins)
-        });
-        BinCuts { cuts }
+            col
+        };
+        // Few wide columns — and only when the column is long enough for
+        // the chunked sort to actually engage — move the parallelism
+        // *inside* each column; otherwise column-parallel is strictly
+        // better (a short column's pooled sort would run sequentially).
+        if x.cols < exec.threads() && x.rows > SORT_CHUNK {
+            let mut cuts = Vec::with_capacity(x.cols);
+            for f in 0..x.cols {
+                let mut col = collect_col(f);
+                sort_column_pooled(&mut col, exec);
+                cuts.push(cuts_for_sorted_column(&col, max_bins));
+            }
+            return BinCuts { cuts };
+        }
+        if x.cols >= 2 {
+            let cuts = exec.map_indexed(x.cols, |f| {
+                let mut col = collect_col(f);
+                cuts_for_column(&mut col, max_bins)
+            });
+            return BinCuts { cuts };
+        }
+        BinCuts::fit(x, max_bins)
     }
 
     pub fn n_features(&self) -> usize {
@@ -156,10 +182,15 @@ impl BinCuts {
 
 /// Compute ascending upper-edge cuts for one column (values get sorted).
 fn cuts_for_column(col: &mut [f32], max_bins: usize) -> Vec<f32> {
+    col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    cuts_for_sorted_column(col, max_bins)
+}
+
+/// [`cuts_for_column`] over an already ascending-sorted column.
+fn cuts_for_sorted_column(col: &[f32], max_bins: usize) -> Vec<f32> {
     if col.is_empty() {
         return Vec::new();
     }
-    col.sort_by(|a, b| a.partial_cmp(b).unwrap());
     // Distinct values.
     let mut distinct: Vec<f32> = Vec::new();
     for &v in col.iter() {
@@ -193,6 +224,72 @@ fn cuts_for_column(col: &mut [f32], max_bins: usize) -> Vec<f32> {
     }
     cuts.push(next_up(*distinct.last().unwrap()));
     cuts
+}
+
+/// Fixed run size for [`sort_column_pooled`] (run boundaries must never
+/// depend on the worker count).
+pub const SORT_CHUNK: usize = 16384;
+
+/// Sort one column ascending on the persistent pool: fixed
+/// [`SORT_CHUNK`]-element runs are sorted in parallel (each run with the
+/// same stable comparison sort as the sequential path), then merged
+/// pairwise with ties taken from the left run. Ties-to-left pairwise
+/// merging of stably sorted runs *is* a stable mergesort, so the result —
+/// including the relative order of bitwise-distinct equal keys like
+/// `-0.0`/`0.0` — is identical to `col.sort_by(partial_cmp)` for any
+/// worker count. NaNs must be filtered out beforehand.
+fn sort_column_pooled(col: &mut Vec<f32>, exec: &WorkerPool) {
+    let n = col.len();
+    if exec.threads() == 1 || n <= SORT_CHUNK {
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        return;
+    }
+    exec.for_each_mut_chunk(col, SORT_CHUNK, |_ci, run| {
+        run.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    });
+    // Pairwise merge rounds, ping-ponging between two buffers; each output
+    // pair-span is disjoint, so merges of one round run on the pool too.
+    let mut src = std::mem::take(col);
+    let mut dst = vec![0.0f32; n];
+    let mut run = SORT_CHUNK;
+    while run < n {
+        let pair = 2 * run;
+        {
+            let src_ref = &src;
+            exec.for_each_mut_chunk(&mut dst, pair, |ci, out| {
+                merge_adjacent_runs(src_ref, out, ci * pair, run);
+            });
+        }
+        std::mem::swap(&mut src, &mut dst);
+        run = pair;
+    }
+    *col = src;
+}
+
+/// Merge the two adjacent sorted runs `src[base .. base+run]` and
+/// `src[base+run .. base+out.len()]` into `out`, taking from the left run
+/// on ties (stability). When the span holds a single (possibly short) run
+/// it is copied through unchanged.
+fn merge_adjacent_runs(src: &[f32], out: &mut [f32], base: usize, run: usize) {
+    let span = out.len();
+    let mid = run.min(span);
+    let (mut i, mut j) = (0usize, mid);
+    for slot in out.iter_mut() {
+        let take_left = if i >= mid {
+            false
+        } else if j >= span {
+            true
+        } else {
+            src[base + i] <= src[base + j]
+        };
+        if take_left {
+            *slot = src[base + i];
+            i += 1;
+        } else {
+            *slot = src[base + j];
+            j += 1;
+        }
+    }
 }
 
 #[inline]
@@ -252,12 +349,12 @@ impl BinnedMatrix {
     pub const BIN_BLOCK_ROWS: usize = 8192;
 
     /// Row-chunk-parallel [`bin`](Self::bin): the `(feature, row-block)`
-    /// task grid is scheduled over `workers` threads, each task writing a
-    /// disjoint contiguous span of the column-major code buffer. Each code
-    /// depends on one input value only, so output equals the sequential
-    /// path bit-for-bit.
-    pub fn bin_par(x: &MatrixView<'_>, cuts: &BinCuts, workers: usize) -> BinnedMatrix {
-        BinnedMatrix::bin_par_block(x, cuts, workers, Self::BIN_BLOCK_ROWS)
+    /// task grid is scheduled over the persistent pool's threads, each task
+    /// writing a disjoint contiguous span of the column-major code buffer.
+    /// Each code depends on one input value only, so output equals the
+    /// sequential path bit-for-bit.
+    pub fn bin_par(x: &MatrixView<'_>, cuts: &BinCuts, exec: &WorkerPool) -> BinnedMatrix {
+        BinnedMatrix::bin_par_block(x, cuts, exec, Self::BIN_BLOCK_ROWS)
     }
 
     /// [`bin_par`](Self::bin_par) with an explicit row-block size (exposed
@@ -265,7 +362,7 @@ impl BinnedMatrix {
     pub fn bin_par_block(
         x: &MatrixView<'_>,
         cuts: &BinCuts,
-        workers: usize,
+        exec: &WorkerPool,
         block_rows: usize,
     ) -> BinnedMatrix {
         assert_eq!(x.cols, cuts.n_features());
@@ -274,7 +371,7 @@ impl BinnedMatrix {
         let block = block_rows.max(1);
         // Guard on *rows per column* (the task grain): a matrix whose
         // columns each fit one block gains nothing from the task grid.
-        if workers.max(1) == 1 || n <= block {
+        if exec.threads() == 1 || n <= block {
             return BinnedMatrix::bin(x, cuts);
         }
         let blocks_per_col = crate::coordinator::pool::n_chunks(n, block);
@@ -286,7 +383,7 @@ impl BinnedMatrix {
                 .flat_map(|col| col.chunks_mut(block))
                 .map(std::sync::Mutex::new)
                 .collect();
-            crate::coordinator::pool::run_indexed(workers, cells.len(), |i| {
+            exec.run_indexed(cells.len(), |i| {
                 let f = i / blocks_per_col;
                 let r0 = (i % blocks_per_col) * block;
                 let mut guard = cells[i].lock().unwrap();
@@ -299,11 +396,11 @@ impl BinnedMatrix {
         BinnedMatrix { n, p, codes, cuts: cuts.clone() }
     }
 
-    /// Fit cuts and bin in one step, both parallelized over `workers`
-    /// threads (identical output to [`fit_bin`](Self::fit_bin)).
-    pub fn fit_bin_par(x: &MatrixView<'_>, max_bins: usize, workers: usize) -> BinnedMatrix {
-        let cuts = BinCuts::fit_par(x, max_bins, workers);
-        BinnedMatrix::bin_par(x, &cuts, workers)
+    /// Fit cuts and bin in one step, both parallelized on the persistent
+    /// pool (identical output to [`fit_bin`](Self::fit_bin)).
+    pub fn fit_bin_par(x: &MatrixView<'_>, max_bins: usize, exec: &WorkerPool) -> BinnedMatrix {
+        let cuts = BinCuts::fit_par(x, max_bins, exec);
+        BinnedMatrix::bin_par(x, &cuts, exec)
     }
 
     /// Build from a multi-pass iterator: one pass for cuts (inside
@@ -491,21 +588,59 @@ mod tests {
         }
         let seq = BinnedMatrix::fit_bin(&x.view(), 64);
         for workers in [1usize, 2, 8] {
-            let cuts = BinCuts::fit_par(&x.view(), 64, workers);
+            let exec = WorkerPool::new(workers);
+            let cuts = BinCuts::fit_par(&x.view(), 64, &exec);
             assert_eq!(seq.cuts, cuts, "cuts diverge at workers={workers}");
             // Adversarial block sizes: 1 row, non-dividing, bigger than n.
             for block in [1usize, 64, 77, 10_000] {
-                let par = BinnedMatrix::bin_par_block(&x.view(), &cuts, workers, block);
+                let par = BinnedMatrix::bin_par_block(&x.view(), &cuts, &exec, block);
                 assert_eq!(seq.codes, par.codes, "codes diverge w={workers} b={block}");
             }
-            let combined = BinnedMatrix::fit_bin_par(&x.view(), 64, workers);
+            let combined = BinnedMatrix::fit_bin_par(&x.view(), 64, &exec);
             assert_eq!(seq.codes, combined.codes);
         }
         // Degenerate shapes: single row, single feature.
         let tiny = Matrix::from_vec(1, 1, vec![0.5]);
         let a = BinnedMatrix::fit_bin(&tiny.view(), 8);
-        let b = BinnedMatrix::fit_bin_par(&tiny.view(), 8, 8);
+        let b = BinnedMatrix::fit_bin_par(&tiny.view(), 8, &WorkerPool::new(8));
         assert_eq!(a.codes, b.codes);
+    }
+
+    #[test]
+    fn pooled_column_sort_matches_stable_sort_bitwise() {
+        // Duplicates, ±0.0, and a ragged tail across several SORT_CHUNK
+        // runs: the pooled sort must reproduce the sequential stable sort
+        // bit-for-bit (compare as bit patterns so -0.0 ≠ 0.0).
+        let n = 2 * SORT_CHUNK + 4321;
+        let mut rng = Rng::new(3);
+        let mut vals: Vec<f32> = (0..n)
+            .map(|i| match i % 17 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => 1.5,
+                _ => rng.normal_f32(),
+            })
+            .collect();
+        let mut expect = vals.clone();
+        expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let expect_bits: Vec<u32> = expect.iter().map(|v| v.to_bits()).collect();
+        for workers in [1usize, 2, 8] {
+            let exec = WorkerPool::new(workers);
+            let mut got = vals.clone();
+            sort_column_pooled(&mut got, &exec);
+            let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(expect_bits, got_bits, "sort diverges at workers={workers}");
+        }
+        // The few-wide-columns fit path (p=1 < threads) rides that sort.
+        vals.truncate(SORT_CHUNK * 2 + 100);
+        let x = Matrix::from_vec(vals.len(), 1, vals);
+        let seq = BinCuts::fit(&x.view(), 64);
+        for workers in [2usize, 8] {
+            let par = BinCuts::fit_par(&x.view(), 64, &WorkerPool::new(workers));
+            let a: Vec<u32> = seq.cuts[0].iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = par.cuts[0].iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "cuts diverge at workers={workers}");
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@ use super::binning::BinnedMatrix;
 use super::histogram::{HistLayout, HistPool};
 use super::objective::Objective;
 use super::tree::{grow_tree_pooled, GrowParams, Tree, TreeKind};
+use crate::coordinator::pool::WorkerPool;
 use crate::tensor::MatrixView;
 
 /// Training hyperparameters; defaults mirror the paper's Table 9 "Original"
@@ -35,11 +36,14 @@ pub struct TrainParams {
     pub early_stopping_rounds: usize,
     /// Use the histogram-subtraction trick.
     pub hist_subtraction: bool,
-    /// Threads used *inside* this booster's training (feature-parallel
-    /// histograms, row-chunk binning, row-block prediction updates). 1 runs
-    /// fully sequentially; any value produces bit-identical models — the
-    /// coordinator's worker-budget policy sets this for the few-jobs /
-    /// huge-data regime.
+    /// Threads used *inside* this booster's training: the width of the
+    /// persistent [`WorkerPool`] that [`Booster::train`] /
+    /// [`Booster::train_binned`] construct for the run (gradients,
+    /// histograms, binning, partitioning, prediction updates, losses all
+    /// ride it). Ignored by the `*_with` variants, which use the caller's
+    /// pool — the coordinator passes its per-job-slot pool, possibly grown
+    /// mid-run by rebalancing. 1 runs fully sequentially; any value
+    /// produces bit-identical models.
     pub intra_threads: usize,
 }
 
@@ -70,7 +74,6 @@ impl TrainParams {
             min_child_weight: self.min_child_weight,
             min_split_gain: self.min_split_gain,
             hist_subtraction: self.hist_subtraction,
-            n_threads: self.intra_threads.max(1),
         }
     }
 }
@@ -117,14 +120,34 @@ impl Booster {
     }
 
     /// Train on raw features (bins fitted internally).
+    ///
+    /// Constructs one [`WorkerPool`] of `params.intra_threads` threads for
+    /// the whole boosting run — the *only* thread spawn in training; every
+    /// per-round and per-node parallel primitive is dispatched to the
+    /// pool's parked workers. Callers that already own a pool (the
+    /// coordinator's per-job pools) use [`train_with`](Self::train_with).
     pub fn train(
         x: &MatrixView<'_>,
         targets: &MatrixView<'_>,
         params: TrainParams,
         eval: Option<(&MatrixView<'_>, &MatrixView<'_>)>,
     ) -> Booster {
-        let binned = BinnedMatrix::fit_bin_par(x, params.max_bins, params.intra_threads.max(1));
-        Booster::train_binned(&binned, targets, params, eval)
+        let exec = WorkerPool::new(params.intra_threads.max(1));
+        Booster::train_with(x, targets, params, eval, &exec)
+    }
+
+    /// [`train`](Self::train) on an existing persistent worker pool (the
+    /// pool may be wider or narrower than `params.intra_threads`, and may
+    /// grow mid-run; results are bit-identical for any width).
+    pub fn train_with(
+        x: &MatrixView<'_>,
+        targets: &MatrixView<'_>,
+        params: TrainParams,
+        eval: Option<(&MatrixView<'_>, &MatrixView<'_>)>,
+        exec: &WorkerPool,
+    ) -> Booster {
+        let binned = BinnedMatrix::fit_bin_par(x, params.max_bins, exec);
+        Booster::train_binned_with(&binned, targets, params, eval, exec)
     }
 
     /// Train on pre-binned features — the Issue-6 path: one `BinnedMatrix`
@@ -134,6 +157,19 @@ impl Booster {
         targets: &MatrixView<'_>,
         params: TrainParams,
         eval: Option<(&MatrixView<'_>, &MatrixView<'_>)>,
+    ) -> Booster {
+        let exec = WorkerPool::new(params.intra_threads.max(1));
+        Booster::train_binned_with(binned, targets, params, eval, &exec)
+    }
+
+    /// [`train_binned`](Self::train_binned) on an existing persistent
+    /// worker pool.
+    pub fn train_binned_with(
+        binned: &BinnedMatrix,
+        targets: &MatrixView<'_>,
+        params: TrainParams,
+        eval: Option<(&MatrixView<'_>, &MatrixView<'_>)>,
+        exec: &WorkerPool,
     ) -> Booster {
         let n = binned.n;
         let m = targets.cols;
@@ -204,21 +240,25 @@ impl Booster {
         let eval_x = eval.map(|(xv, _)| xv);
 
         for round in 0..params.n_trees {
+            // Per-row gradients in fixed chunks on the pool (disjoint
+            // elementwise writes: bit-identical for any worker count).
             params
                 .objective
-                .gradients(&preds, &targets_flat, m, &mut grads, &mut hess);
+                .gradients_par(&preds, &targets_flat, m, &mut grads, &mut hess, exec);
 
             let round_trees: Vec<Tree> = match params.kind {
                 TreeKind::Multi => {
                     vec![grow_tree_pooled(
-                        binned, &layout, &rows, &grads, &hess, m, &grow, &mut pool,
+                        binned, &layout, &rows, &grads, &hess, m, &grow, &mut pool, exec,
                     )]
                 }
                 TreeKind::Single => (0..m)
                     .map(|j| {
                         // Strided gradient view for output j.
                         let gj: Vec<f64> = (0..n).map(|r| grads[r * m + j]).collect();
-                        grow_tree_pooled(binned, &layout, &rows, &gj, &hess, 1, &grow, &mut pool)
+                        grow_tree_pooled(
+                            binned, &layout, &rows, &gj, &hess, 1, &grow, &mut pool, exec,
+                        )
                     })
                     .collect(),
             };
@@ -226,47 +266,23 @@ impl Booster {
             // Update train predictions. (Prediction uses raw thresholds, so
             // we reconstruct rows from bin codes' cut midpoints — instead we
             // route by codes directly for exactness.) Row blocks are
-            // independent, so the update is scheduled over intra_threads.
-            update_train_preds(
-                &round_trees,
-                binned,
-                &mut preds,
-                m,
-                params.kind,
-                params.eta,
-                params.intra_threads.max(1),
-            );
+            // independent, so the update is dispatched to the pool.
+            update_train_preds(&round_trees, binned, &mut preds, m, params.kind, params.eta, exec);
 
-            // Update validation predictions with the new trees.
+            // Update validation predictions with the new trees — the same
+            // disjoint row-block schedule as the training update.
             if let (Some(ep), Some(xv)) = (eval_preds.as_mut(), eval_x) {
-                match params.kind {
-                    TreeKind::Multi => {
-                        let tree = &round_trees[0];
-                        for r in 0..xv.rows {
-                            tree.predict_into(xv.row(r), params.eta, &mut ep[r * m..(r + 1) * m]);
-                        }
-                    }
-                    TreeKind::Single => {
-                        for (j, tree) in round_trees.iter().enumerate() {
-                            for r in 0..xv.rows {
-                                let mut out = [0.0f32];
-                                tree.predict_into(xv.row(r), params.eta, &mut out);
-                                ep[r * m + j] += out[0];
-                            }
-                        }
-                    }
-                }
+                update_eval_preds(&round_trees, xv, ep, m, params.kind, params.eta, exec);
             }
 
             booster.trees.extend(round_trees);
 
             // Chunk-grouped loss: the grouping is fixed (never depends on
             // the worker count), so early stopping is bit-identical across
-            // any intra_threads value.
-            let workers = params.intra_threads.max(1);
-            let train_loss = params.objective.eval_loss_par(&preds, &targets_flat, workers);
+            // any pool width.
+            let train_loss = params.objective.eval_loss_par(&preds, &targets_flat, exec);
             let valid_loss = match (&eval_preds, &eval_targets) {
-                (Some(ep), Some(et)) => Some(params.objective.eval_loss_par(ep, et, workers)),
+                (Some(ep), Some(et)) => Some(params.objective.eval_loss_par(ep, et, exec)),
                 _ => None,
             };
             booster.history.push(EvalRecord { round, train_loss, valid_loss });
@@ -344,7 +360,7 @@ const UPDATE_BLOCK_ROWS: usize = 2048;
 
 /// Add the round's new trees into the running train predictions, routing
 /// rows by bin codes. Rows are independent; blocks of [`UPDATE_BLOCK_ROWS`]
-/// are scheduled over `workers` threads with bit-identical results.
+/// are dispatched to the persistent pool with bit-identical results.
 fn update_train_preds(
     round_trees: &[Tree],
     binned: &BinnedMatrix,
@@ -352,37 +368,69 @@ fn update_train_preds(
     m: usize,
     kind: TreeKind,
     eta: f32,
-    workers: usize,
+    exec: &WorkerPool,
 ) {
-    crate::coordinator::pool::for_each_mut_chunk(
-        workers,
-        preds,
-        UPDATE_BLOCK_ROWS * m,
-        |ci, chunk| {
-            let r0 = ci * UPDATE_BLOCK_ROWS;
-            let rows = chunk.len() / m;
-            match kind {
-                TreeKind::Multi => {
-                    let tree = &round_trees[0];
-                    for i in 0..rows {
-                        let leaf = leaf_for_binned(tree, binned, r0 + i);
-                        let vals = &tree.values[leaf * m..(leaf + 1) * m];
-                        for j in 0..m {
-                            chunk[i * m + j] += eta * vals[j];
-                        }
-                    }
-                }
-                TreeKind::Single => {
-                    for (j, tree) in round_trees.iter().enumerate() {
-                        for i in 0..rows {
-                            let leaf = leaf_for_binned(tree, binned, r0 + i);
-                            chunk[i * m + j] += eta * tree.values[leaf];
-                        }
+    exec.for_each_mut_chunk(preds, UPDATE_BLOCK_ROWS * m, |ci, chunk| {
+        let r0 = ci * UPDATE_BLOCK_ROWS;
+        let rows = chunk.len() / m;
+        match kind {
+            TreeKind::Multi => {
+                let tree = &round_trees[0];
+                for i in 0..rows {
+                    let leaf = leaf_for_binned(tree, binned, r0 + i);
+                    let vals = &tree.values[leaf * m..(leaf + 1) * m];
+                    for j in 0..m {
+                        chunk[i * m + j] += eta * vals[j];
                     }
                 }
             }
-        },
-    );
+            TreeKind::Single => {
+                for (j, tree) in round_trees.iter().enumerate() {
+                    for i in 0..rows {
+                        let leaf = leaf_for_binned(tree, binned, r0 + i);
+                        chunk[i * m + j] += eta * tree.values[leaf];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Add the round's new trees into the running *validation* predictions,
+/// routing rows by raw feature values (the eval set is never binned). Each
+/// output element receives exactly one contribution per round, so the
+/// disjoint [`UPDATE_BLOCK_ROWS`] row blocks reproduce the sequential scan
+/// bit-for-bit on any pool width.
+fn update_eval_preds(
+    round_trees: &[Tree],
+    xv: &MatrixView<'_>,
+    eval_preds: &mut [f32],
+    m: usize,
+    kind: TreeKind,
+    eta: f32,
+    exec: &WorkerPool,
+) {
+    exec.for_each_mut_chunk(eval_preds, UPDATE_BLOCK_ROWS * m, |ci, chunk| {
+        let r0 = ci * UPDATE_BLOCK_ROWS;
+        let rows = chunk.len() / m;
+        match kind {
+            TreeKind::Multi => {
+                let tree = &round_trees[0];
+                for i in 0..rows {
+                    tree.predict_into(xv.row(r0 + i), eta, &mut chunk[i * m..(i + 1) * m]);
+                }
+            }
+            TreeKind::Single => {
+                for (j, tree) in round_trees.iter().enumerate() {
+                    for i in 0..rows {
+                        let mut out = [0.0f32];
+                        tree.predict_into(xv.row(r0 + i), eta, &mut out);
+                        chunk[i * m + j] += out[0];
+                    }
+                }
+            }
+        }
+    });
 }
 
 /// Route a training row through a tree using bin codes (exact: the split

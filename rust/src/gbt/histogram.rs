@@ -11,6 +11,7 @@
 //! (`uniform_hess`); the logistic objective stores true per-bin hessians.
 
 use super::binning::{BinnedMatrix, MISSING_BIN};
+use crate::coordinator::pool::WorkerPool;
 
 /// Bin-slot layout across features: each feature `f` owns
 /// `offsets[f] .. offsets[f] + n_bins(f) + 1` slots, the final slot holding
@@ -189,7 +190,7 @@ impl Histogram {
     }
 
     /// Feature-parallel [`build`](Self::build): features are chunked over
-    /// `workers` threads, each thread accumulating into a private scratch
+    /// the pool's threads, each thread accumulating into a private scratch
     /// histogram, and the scratches are merged at the end. Because every
     /// feature owns a disjoint slot range, per-slot values are accumulated
     /// in the exact row order of the sequential path — the result is
@@ -201,16 +202,17 @@ impl Histogram {
         rows: &[u32],
         grads: &[f64],
         hess: &[f64],
-        workers: usize,
+        exec: &WorkerPool,
     ) {
-        self.build_par_scratch(binned, layout, rows, grads, hess, workers, None);
+        self.build_par_scratch(binned, layout, rows, grads, hess, exec, None);
     }
 
     /// [`build_par`](Self::build_par) drawing per-thread scratch buffers
     /// from `scratch_pool` and returning them afterwards, so steady-state
     /// parallel builds allocate nothing across nodes **and trees** — the
     /// parallel analogue of [`HistPool`]'s zero-allocation contract
-    /// (§Perf, L3 iteration 3).
+    /// (§Perf, L3 iteration 3). Dispatch rides the persistent `exec` pool:
+    /// no threads are spawned here, per node or otherwise.
     #[allow(clippy::too_many_arguments)]
     pub fn build_par_scratch(
         &mut self,
@@ -219,10 +221,10 @@ impl Histogram {
         rows: &[u32],
         grads: &[f64],
         hess: &[f64],
-        workers: usize,
+        exec: &WorkerPool,
         scratch_pool: Option<&std::sync::Mutex<Vec<Histogram>>>,
     ) {
-        if workers.max(1) == 1 || binned.p < 2 || rows.is_empty() {
+        if exec.threads() == 1 || binned.p < 2 || rows.is_empty() {
             self.build(binned, layout, rows, grads, hess);
             return;
         }
@@ -243,8 +245,7 @@ impl Histogram {
             }
             Histogram::new(layout, m, uniform_hess)
         };
-        let scratches = crate::coordinator::pool::for_each_chunk_scratch(
-            workers,
+        let scratches = exec.for_each_chunk_scratch(
             binned.p,
             1,
             take_scratch,
@@ -502,8 +503,9 @@ mod tests {
                     let mut seq = Histogram::new(&layout, m, uniform);
                     seq.build(&b, &layout, rows, &grads, hess);
                     for workers in [1usize, 2, 8] {
+                        let exec = WorkerPool::new(workers);
                         let mut par = Histogram::new(&layout, m, uniform);
-                        par.build_par(&b, &layout, rows, &grads, hess, workers);
+                        par.build_par(&b, &layout, rows, &grads, hess, &exec);
                         assert_eq!(seq.g, par.g, "m={m} uniform={uniform} w={workers}");
                         assert_eq!(seq.h, par.h);
                         assert_eq!(seq.count, par.count);
@@ -523,10 +525,11 @@ mod tests {
         let grads: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
         let mut expect = Histogram::new(&layout, 1, true);
         expect.build(&b, &layout, &rows, &grads, &[]);
+        let exec = WorkerPool::new(4);
         let scratch_pool = std::sync::Mutex::new(Vec::new());
         for pass in 0..3 {
             let mut h = Histogram::new(&layout, 1, true);
-            h.build_par_scratch(&b, &layout, &rows, &grads, &[], 4, Some(&scratch_pool));
+            h.build_par_scratch(&b, &layout, &rows, &grads, &[], &exec, Some(&scratch_pool));
             assert_eq!(expect.g, h.g, "pass {pass}");
             assert_eq!(expect.count, h.count);
             // Scratches were returned for the next pass to reuse.
@@ -547,7 +550,7 @@ mod tests {
         dirty.build(&b, &layout, &rows, &grads, &[]);
         pool.put(dirty);
         let mut reused = pool.take(&layout, 1, true);
-        reused.build_par(&b, &layout, &rows, &grads, &[], 4);
+        reused.build_par(&b, &layout, &rows, &grads, &[], &WorkerPool::new(4));
         let mut fresh = Histogram::new(&layout, 1, true);
         fresh.build(&b, &layout, &rows, &grads, &[]);
         assert_eq!(reused.g, fresh.g);

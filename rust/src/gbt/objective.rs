@@ -1,5 +1,8 @@
 //! Training objectives: gradients/hessians and evaluation losses.
 
+use crate::coordinator::pool::WorkerPool;
+use std::sync::Mutex;
+
 /// Supported objectives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Objective {
@@ -54,6 +57,61 @@ impl Objective {
         }
     }
 
+    /// [`gradients`](Self::gradients) scheduled over a persistent worker
+    /// pool: per-row gradients (and hessians) are independent, so fixed
+    /// [`GRAD_CHUNK`]-element chunks are written into disjoint spans of the
+    /// output buffers — bit-identical to the sequential path for any worker
+    /// count.
+    pub fn gradients_par(
+        &self,
+        preds: &[f32],
+        targets: &[f32],
+        m: usize,
+        grads: &mut [f64],
+        hess: &mut Vec<f64>,
+        exec: &WorkerPool,
+    ) {
+        debug_assert_eq!(preds.len(), targets.len());
+        debug_assert_eq!(grads.len(), preds.len());
+        if exec.threads() == 1 || preds.len() <= GRAD_CHUNK {
+            self.gradients(preds, targets, m, grads, hess);
+            return;
+        }
+        match self {
+            Objective::SquaredError => {
+                hess.clear();
+                exec.for_each_mut_chunk(grads, GRAD_CHUNK, |ci, chunk| {
+                    let base = ci * GRAD_CHUNK;
+                    for (k, g) in chunk.iter_mut().enumerate() {
+                        let t = targets[base + k];
+                        *g = if t.is_nan() { 0.0 } else { (preds[base + k] - t) as f64 };
+                    }
+                });
+            }
+            Objective::Logistic => {
+                assert_eq!(m, 1, "logistic objective is single-output");
+                hess.resize(preds.len(), 0.0);
+                // Gradient and hessian chunks share boundaries, so each
+                // task owns one disjoint (grads, hess) span pair.
+                let cells: Vec<Mutex<(&mut [f64], &mut [f64])>> = grads
+                    .chunks_mut(GRAD_CHUNK)
+                    .zip(hess.chunks_mut(GRAD_CHUNK))
+                    .map(Mutex::new)
+                    .collect();
+                exec.run_indexed(cells.len(), |ci| {
+                    let mut guard = cells[ci].lock().unwrap();
+                    let (g, h) = &mut *guard;
+                    let base = ci * GRAD_CHUNK;
+                    for k in 0..g.len() {
+                        let p = sigmoid(preds[base + k] as f64);
+                        g[k] = p - targets[base + k] as f64;
+                        h[k] = (p * (1.0 - p)).max(1e-16);
+                    }
+                });
+            }
+        }
+    }
+
     /// Evaluation loss (lower is better): RMSE or log-loss.
     pub fn eval_loss(&self, preds: &[f32], targets: &[f32]) -> f64 {
         match self {
@@ -94,23 +152,23 @@ impl Objective {
         }
     }
 
-    /// [`eval_loss`](Self::eval_loss) as a chunked, ordered reduction.
+    /// [`eval_loss`](Self::eval_loss) as a chunked, ordered reduction on a
+    /// persistent worker pool.
     ///
     /// Batches above [`LOSS_CHUNK`] elements are cut into fixed chunks
     /// whose partial sums are folded **in chunk order**
-    /// ([`crate::coordinator::pool::map_reduce_chunks`]) — the chunk
-    /// grouping never depends on `workers`, so the loss (and therefore
-    /// early stopping) is identical for any worker count. Batches within
-    /// one chunk take the plain sequential path.
-    pub fn eval_loss_par(&self, preds: &[f32], targets: &[f32], workers: usize) -> f64 {
+    /// ([`WorkerPool::map_reduce_chunks`]) — the chunk grouping never
+    /// depends on the pool width, so the loss (and therefore early
+    /// stopping) is identical for any worker count. Batches within one
+    /// chunk take the plain sequential path.
+    pub fn eval_loss_par(&self, preds: &[f32], targets: &[f32], exec: &WorkerPool) -> f64 {
         let n = preds.len();
         if n <= LOSS_CHUNK {
             return self.eval_loss(preds, targets);
         }
         match self {
             Objective::SquaredError => {
-                let (sum, count) = crate::coordinator::pool::map_reduce_chunks(
-                    workers,
+                let (sum, count) = exec.map_reduce_chunks(
                     n,
                     LOSS_CHUNK,
                     |_ci, r| {
@@ -133,8 +191,7 @@ impl Objective {
                 (sum / count.max(1) as f64).sqrt()
             }
             Objective::Logistic => {
-                let sum = crate::coordinator::pool::map_reduce_chunks(
-                    workers,
+                let sum = exec.map_reduce_chunks(
                     n,
                     LOSS_CHUNK,
                     |_ci, r| {
@@ -160,6 +217,10 @@ impl Objective {
 /// Fixed element-chunk size for the parallel loss reduction (chunk
 /// boundaries must never depend on the worker count).
 pub const LOSS_CHUNK: usize = 8192;
+
+/// Fixed element-chunk size for parallel gradient/hessian computation
+/// (chunk boundaries must never depend on the worker count).
+pub const GRAD_CHUNK: usize = 8192;
 
 #[inline]
 pub fn sigmoid(x: f64) -> f64 {
@@ -220,9 +281,9 @@ mod tests {
         }
         let obj = Objective::SquaredError;
         let seq = obj.eval_loss(&preds, &targets);
-        let one = obj.eval_loss_par(&preds, &targets, 1);
+        let one = obj.eval_loss_par(&preds, &targets, &WorkerPool::new(1));
         for workers in [2usize, 8] {
-            let par = obj.eval_loss_par(&preds, &targets, workers);
+            let par = obj.eval_loss_par(&preds, &targets, &WorkerPool::new(workers));
             // Fixed chunk grouping: exact equality across worker counts.
             assert_eq!(one.to_bits(), par.to_bits(), "workers={workers}");
         }
@@ -230,8 +291,47 @@ mod tests {
         assert!((seq - one).abs() <= 1e-12 * seq.abs().max(1.0));
         // Logistic path (no NaN masking).
         let t01: Vec<f32> = targets.iter().map(|t| if t.is_nan() { 1.0 } else { 0.0 }).collect();
-        let one = Objective::Logistic.eval_loss_par(&preds, &t01, 1);
-        let par = Objective::Logistic.eval_loss_par(&preds, &t01, 8);
+        let one = Objective::Logistic.eval_loss_par(&preds, &t01, &WorkerPool::new(1));
+        let par = Objective::Logistic.eval_loss_par(&preds, &t01, &WorkerPool::new(8));
         assert_eq!(one.to_bits(), par.to_bits());
+    }
+
+    #[test]
+    fn parallel_gradients_match_sequential_exactly() {
+        // > GRAD_CHUNK elements with a ragged tail; NaN targets exercise
+        // the squared-error row masking.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let n = GRAD_CHUNK * 2 + 771;
+        let mut preds = Vec::with_capacity(n);
+        let mut targets = Vec::with_capacity(n);
+        for i in 0..n {
+            preds.push(rng.normal_f32());
+            targets.push(if i % 89 == 0 { f32::NAN } else { preds[i] * 0.3 - 0.2 });
+        }
+        // Squared error, m = 3 (row-major [n/3 × 3] layout is elementwise).
+        let mut g_seq = vec![0.0f64; n];
+        let mut h_seq = Vec::new();
+        Objective::SquaredError.gradients(&preds, &targets, 3, &mut g_seq, &mut h_seq);
+        for workers in [1usize, 2, 8] {
+            let exec = WorkerPool::new(workers);
+            let mut g = vec![1.0f64; n];
+            let mut h = vec![9.0f64; 4];
+            Objective::SquaredError.gradients_par(&preds, &targets, 3, &mut g, &mut h, &exec);
+            assert_eq!(g_seq, g, "sqerr grads diverge at workers={workers}");
+            assert!(h.is_empty());
+        }
+        // Logistic (single-output, targets in {0, 1}).
+        let t01: Vec<f32> = targets.iter().map(|t| if t.is_nan() { 1.0 } else { 0.0 }).collect();
+        let mut g_seq = vec![0.0f64; n];
+        let mut h_seq = Vec::new();
+        Objective::Logistic.gradients(&preds, &t01, 1, &mut g_seq, &mut h_seq);
+        for workers in [1usize, 2, 8] {
+            let exec = WorkerPool::new(workers);
+            let mut g = vec![0.0f64; n];
+            let mut h = Vec::new();
+            Objective::Logistic.gradients_par(&preds, &t01, 1, &mut g, &mut h, &exec);
+            assert_eq!(g_seq, g, "logistic grads diverge at workers={workers}");
+            assert_eq!(h_seq, h, "logistic hess diverges at workers={workers}");
+        }
     }
 }

@@ -8,6 +8,7 @@
 
 use super::booster::Booster;
 use super::tree::TreeKind;
+use crate::coordinator::pool::WorkerPool;
 use crate::tensor::MatrixView;
 
 /// Predict margins for all rows of `x` into `out` (row-major `[n × m]`).
@@ -53,35 +54,30 @@ pub fn predict_batch(booster: &Booster, x: &MatrixView<'_>, out: &mut [f32]) {
 pub const PREDICT_BLOCK_ROWS: usize = 1024;
 
 /// Row-block-parallel [`predict_batch`]: the batch is cut into fixed
-/// [`PREDICT_BLOCK_ROWS`] blocks scheduled over `workers` threads, each
-/// block running the same tree-outer/row-inner loop into its disjoint slice
-/// of `out`. Rows are independent, so output equals the sequential path
-/// bit-for-bit for any worker count.
+/// [`PREDICT_BLOCK_ROWS`] blocks scheduled over the persistent pool's
+/// threads, each block running the same tree-outer/row-inner loop into its
+/// disjoint slice of `out`. Rows are independent, so output equals the
+/// sequential path bit-for-bit for any worker count.
 pub fn predict_batch_par(
     booster: &Booster,
     x: &MatrixView<'_>,
     out: &mut [f32],
-    workers: usize,
+    exec: &WorkerPool,
 ) {
     let n = x.rows;
     let m = booster.m;
     assert_eq!(out.len(), n * m, "output buffer shape mismatch");
-    if workers.max(1) == 1 || n <= PREDICT_BLOCK_ROWS {
+    if exec.threads() == 1 || n <= PREDICT_BLOCK_ROWS {
         predict_batch(booster, x, out);
         return;
     }
     let p = x.cols;
-    crate::coordinator::pool::for_each_mut_chunk(
-        workers,
-        out,
-        PREDICT_BLOCK_ROWS * m,
-        |ci, chunk| {
-            let r0 = ci * PREDICT_BLOCK_ROWS;
-            let rows = chunk.len() / m;
-            let sub = MatrixView { rows, cols: p, data: &x.data[r0 * p..(r0 + rows) * p] };
-            predict_batch(booster, &sub, chunk);
-        },
-    );
+    exec.for_each_mut_chunk(out, PREDICT_BLOCK_ROWS * m, |ci, chunk| {
+        let r0 = ci * PREDICT_BLOCK_ROWS;
+        let rows = chunk.len() / m;
+        let sub = MatrixView { rows, cols: p, data: &x.data[r0 * p..(r0 + rows) * p] };
+        predict_batch(booster, &sub, chunk);
+    });
 }
 
 /// Flattened forest tensors for the XLA backend and for cheap traversal.
@@ -276,16 +272,18 @@ mod tests {
             let mut seq = vec![0.0f32; x.rows * b.m];
             predict_batch(&b, &x.view(), &mut seq);
             for workers in [1usize, 2, 8] {
+                let exec = crate::coordinator::pool::WorkerPool::new(workers);
                 let mut par = vec![0.0f32; x.rows * b.m];
-                predict_batch_par(&b, &x.view(), &mut par, workers);
+                predict_batch_par(&b, &x.view(), &mut par, &exec);
                 assert_eq!(seq, par, "{kind:?} workers={workers}");
             }
             // Tiny batch (single block) stays on the sequential path.
             let x1 = Matrix::randn(3, 3, &mut rng);
             let mut seq1 = vec![0.0f32; 3 * b.m];
             let mut par1 = vec![0.0f32; 3 * b.m];
+            let exec8 = crate::coordinator::pool::WorkerPool::new(8);
             predict_batch(&b, &x1.view(), &mut seq1);
-            predict_batch_par(&b, &x1.view(), &mut par1, 8);
+            predict_batch_par(&b, &x1.view(), &mut par1, &exec8);
             assert_eq!(seq1, par1);
         }
     }

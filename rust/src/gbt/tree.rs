@@ -8,6 +8,7 @@
 use super::binning::{BinnedMatrix, MISSING_BIN};
 use super::histogram::{HistLayout, HistPool, Histogram};
 use super::split::{best_split, NodeStats};
+use crate::coordinator::pool::WorkerPool;
 
 /// Tree family: one ensemble per output feature (the original
 /// ForestDiffusion design) or one multi-output ensemble for all features
@@ -121,6 +122,8 @@ impl Tree {
 }
 
 /// Parameters consumed by the grower (a subset of [`super::TrainParams`]).
+/// Execution width comes from the [`WorkerPool`] handed to the grower, not
+/// from a field here — the pool is long-lived and can grow mid-run.
 #[derive(Clone, Copy, Debug)]
 pub struct GrowParams {
     pub max_depth: usize,
@@ -130,25 +133,26 @@ pub struct GrowParams {
     /// Use the histogram-subtraction trick (build the smaller child's
     /// histogram, derive the sibling's by subtraction).
     pub hist_subtraction: bool,
-    /// Threads for feature-parallel histogram builds inside this tree
-    /// (1 = fully sequential; results are identical either way).
-    pub n_threads: usize,
 }
 
-/// Nodes below this row count build their histogram sequentially even when
-/// `n_threads > 1`: per-thread scratch setup costs more than it saves on
-/// small nodes, and the sibling-subtraction trick already covers them.
-pub const PAR_BUILD_MIN_ROWS: usize = 1024;
+/// Nodes below this row count build their histogram sequentially even on a
+/// multi-thread pool: below it the per-chunk bookkeeping costs more than it
+/// saves, and the sibling-subtraction trick already covers most small
+/// nodes. Park/unpark dispatch on the persistent [`WorkerPool`] costs
+/// microseconds where the old per-call scoped spawn/join cost tens (see
+/// `benches/perf_hotpaths.rs`, "dispatch" rows), which is what let this
+/// threshold drop 1024 → 256.
+pub const PAR_BUILD_MIN_ROWS: usize = 256;
 
-/// Effective histogram-build thread count for a node of `n_rows` rows.
-#[inline]
-fn node_threads(params: &GrowParams, n_rows: usize) -> usize {
-    if params.n_threads > 1 && n_rows >= PAR_BUILD_MIN_ROWS {
-        params.n_threads
-    } else {
-        1
-    }
-}
+/// Row sets below this size are partitioned into left/right children
+/// sequentially; above it, fixed [`PARTITION_CHUNK`]-row chunks are
+/// classified on the pool and concatenated in chunk order — exactly the
+/// sequential row order, so the split is bit-identical either way.
+pub const PAR_PARTITION_MIN_ROWS: usize = 8192;
+
+/// Fixed chunk size for pooled row partitioning (boundaries never depend
+/// on the worker count).
+pub const PARTITION_CHUNK: usize = 4096;
 
 /// Grow one tree on (a subset of) the binned training data.
 ///
@@ -164,12 +168,15 @@ pub fn grow_tree(
     params: &GrowParams,
 ) -> Tree {
     let mut pool = HistPool::new();
-    grow_tree_pooled(binned, layout, rows, grads, hess, m, params, &mut pool)
+    let exec = WorkerPool::new(1);
+    grow_tree_pooled(binned, layout, rows, grads, hess, m, params, &mut pool, &exec)
 }
 
-/// [`grow_tree`] with an external histogram-buffer pool — the boosting loop
-/// passes one pool across all trees so steady-state tree growth performs no
-/// heap allocation for histograms (§Perf, L3 iteration 3).
+/// [`grow_tree`] with an external histogram-buffer pool and a persistent
+/// worker pool — the boosting loop passes one of each across all trees, so
+/// steady-state tree growth performs no heap allocation for histograms
+/// (§Perf, L3 iteration 3) **and no thread spawn per node** (the pool's
+/// park/unpark dispatch replaces per-call scoped threads).
 #[allow(clippy::too_many_arguments)]
 pub fn grow_tree_pooled(
     binned: &BinnedMatrix,
@@ -180,6 +187,7 @@ pub fn grow_tree_pooled(
     m: usize,
     params: &GrowParams,
     pool: &mut HistPool,
+    exec: &WorkerPool,
 ) -> Tree {
     let uniform_hess = hess.is_empty();
     let mut tree = Tree::new(m);
@@ -200,15 +208,7 @@ pub fn grow_tree_pooled(
             Some(h) => h,
             None => {
                 let mut h = pool.take(layout, m, uniform_hess);
-                h.build_par_scratch(
-                    binned,
-                    layout,
-                    &rows,
-                    grads,
-                    hess,
-                    node_threads(params, rows.len()),
-                    Some(pool.par_scratch()),
-                );
+                build_node_hist(&mut h, binned, layout, &rows, grads, hess, pool, exec);
                 h
             }
         };
@@ -239,24 +239,11 @@ pub fn grow_tree_pooled(
             }
         };
 
-        // Partition rows.
-        let f = split.feature;
-        let codes = binned.feature_codes(f);
-        let mut left_rows = Vec::with_capacity(rows.len() / 2);
-        let mut right_rows = Vec::with_capacity(rows.len() / 2);
-        for &r in &rows {
-            let code = codes[r as usize];
-            let go_left = if code == MISSING_BIN {
-                split.default_left
-            } else {
-                code <= split.bin
-            };
-            if go_left {
-                left_rows.push(r);
-            } else {
-                right_rows.push(r);
-            }
-        }
+        // Partition rows (pooled above PAR_PARTITION_MIN_ROWS; identical
+        // row order either way).
+        let codes = binned.feature_codes(split.feature);
+        let (left_rows, right_rows) =
+            partition_rows(&rows, codes, split.bin, split.default_left, exec);
         if left_rows.is_empty() || right_rows.is_empty() {
             // Degenerate (can happen when all non-missing mass is on one
             // side and missing follows it): finalize as leaf.
@@ -267,8 +254,8 @@ pub fn grow_tree_pooled(
 
         let l = tree.push_node();
         let rgt = tree.push_node();
-        tree.feature[node] = f as u32;
-        tree.threshold[node] = binned.cuts.threshold(f, split.bin);
+        tree.feature[node] = split.feature as u32;
+        tree.threshold[node] = binned.cuts.threshold(split.feature, split.bin);
         tree.left[node] = l as i32;
         tree.right[node] = rgt as i32;
         tree.default_left[node] = split.default_left;
@@ -288,15 +275,7 @@ pub fn grow_tree_pooled(
                     (right_rows, rgt, left_rows, l)
                 };
             let mut small_hist = pool.take(layout, m, uniform_hess);
-            small_hist.build_par_scratch(
-                binned,
-                layout,
-                &small_rows,
-                grads,
-                hess,
-                node_threads(params, small_rows.len()),
-                Some(pool.par_scratch()),
-            );
+            build_node_hist(&mut small_hist, binned, layout, &small_rows, grads, hess, pool, exec);
             let mut big_hist = pool.take_uncleared(layout, m, uniform_hess);
             big_hist.subtract_from(&hist, &small_hist);
             pool.put(hist);
@@ -319,6 +298,85 @@ pub fn grow_tree_pooled(
         }
     }
     tree
+}
+
+/// Build one node's histogram, going feature-parallel on the persistent
+/// pool only when the node is big enough to amortize the chunk bookkeeping
+/// ([`PAR_BUILD_MIN_ROWS`]). Either path accumulates per-slot values in the
+/// same row order, so the result is bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn build_node_hist(
+    hist: &mut Histogram,
+    binned: &BinnedMatrix,
+    layout: &HistLayout,
+    rows: &[u32],
+    grads: &[f64],
+    hess: &[f64],
+    pool: &HistPool,
+    exec: &WorkerPool,
+) {
+    if exec.threads() > 1 && rows.len() >= PAR_BUILD_MIN_ROWS {
+        hist.build_par_scratch(binned, layout, rows, grads, hess, exec, Some(pool.par_scratch()));
+    } else {
+        hist.build(binned, layout, rows, grads, hess);
+    }
+}
+
+/// Split a node's rows by the chosen `(feature, bin)` split. Above
+/// [`PAR_PARTITION_MIN_ROWS`] rows, fixed [`PARTITION_CHUNK`] chunks are
+/// classified on the pool and folded **in chunk order**, which reproduces
+/// the sequential left-to-right scan exactly for any worker count.
+fn partition_rows(
+    rows: &[u32],
+    codes: &[u8],
+    split_bin: u8,
+    default_left: bool,
+    exec: &WorkerPool,
+) -> (Vec<u32>, Vec<u32>) {
+    let classify = |r: u32| -> bool {
+        let code = codes[r as usize];
+        if code == MISSING_BIN {
+            default_left
+        } else {
+            code <= split_bin
+        }
+    };
+    if exec.threads() == 1 || rows.len() < PAR_PARTITION_MIN_ROWS {
+        let mut left_rows = Vec::with_capacity(rows.len() / 2);
+        let mut right_rows = Vec::with_capacity(rows.len() / 2);
+        for &r in rows {
+            if classify(r) {
+                left_rows.push(r);
+            } else {
+                right_rows.push(r);
+            }
+        }
+        return (left_rows, right_rows);
+    }
+    exec.map_reduce_chunks(
+        rows.len(),
+        PARTITION_CHUNK,
+        |_ci, range| {
+            // Expect a roughly even split; a skewed chunk just regrows once.
+            let cap = range.len() / 2 + 16;
+            let mut left = Vec::with_capacity(cap);
+            let mut right = Vec::with_capacity(cap);
+            for &r in &rows[range] {
+                if classify(r) {
+                    left.push(r);
+                } else {
+                    right.push(r);
+                }
+            }
+            (left, right)
+        },
+        (Vec::with_capacity(rows.len() / 2), Vec::with_capacity(rows.len() / 2)),
+        |(mut left_acc, mut right_acc): (Vec<u32>, Vec<u32>), (left, right)| {
+            left_acc.extend_from_slice(&left);
+            right_acc.extend_from_slice(&right);
+            (left_acc, right_acc)
+        },
+    )
 }
 
 /// First feature with at least one bin (for recovering node totals).
@@ -348,7 +406,6 @@ mod tests {
             min_child_weight: 1.0,
             min_split_gain: 0.0,
             hist_subtraction: false,
-            n_threads: 1,
         };
         let tree = grow_tree(&binned, &layout, &rows, &grads, &[], m, &params);
         (binned, tree)
@@ -423,7 +480,6 @@ mod tests {
             min_child_weight: 1.0,
             min_split_gain: 0.0,
             hist_subtraction: false,
-            n_threads: 1,
         };
         let with_sub = GrowParams { hist_subtraction: true, ..base };
         let t1 = grow_tree(&binned, &layout, &rows, &grads, &[], 1, &base);
@@ -460,13 +516,48 @@ mod tests {
             min_child_weight: 1.0,
             min_split_gain: 0.0,
             hist_subtraction: true,
-            n_threads: 1,
         };
         let t_seq = grow_tree(&binned, &layout, &rows, &grads, &[], 1, &seq_params);
         for workers in [2usize, 8] {
-            let par_params = GrowParams { n_threads: workers, ..seq_params };
-            let t_par = grow_tree(&binned, &layout, &rows, &grads, &[], 1, &par_params);
-            assert_eq!(t_seq, t_par, "tree diverges at n_threads={workers}");
+            let exec = WorkerPool::new(workers);
+            let mut hist_pool = HistPool::new();
+            let t_par = grow_tree_pooled(
+                &binned,
+                &layout,
+                &rows,
+                &grads,
+                &[],
+                1,
+                &seq_params,
+                &mut hist_pool,
+                &exec,
+            );
+            assert_eq!(t_seq, t_par, "tree diverges at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn pooled_row_partition_matches_sequential_scan() {
+        // Above PAR_PARTITION_MIN_ROWS the partition runs on the pool;
+        // left/right vectors must keep the exact sequential row order.
+        let mut rng = crate::util::rng::Rng::new(51);
+        let n = PAR_PARTITION_MIN_ROWS + 2 * PARTITION_CHUNK + 333;
+        let mut x = Matrix::randn(n, 1, &mut rng);
+        for r in (0..n).step_by(23) {
+            x.set(r, 0, f32::NAN);
+        }
+        let binned = BinnedMatrix::fit_bin(&x.view(), 32);
+        let rows: Vec<u32> = (0..n as u32).filter(|r| r % 5 != 2).collect();
+        let codes = binned.feature_codes(0);
+        let split_bin = 13u8;
+        for default_left in [true, false] {
+            let seq = partition_rows(&rows, codes, split_bin, default_left, &WorkerPool::new(1));
+            for workers in [2usize, 8] {
+                let exec = WorkerPool::new(workers);
+                let par = partition_rows(&rows, codes, split_bin, default_left, &exec);
+                assert_eq!(seq, par, "partition diverges at workers={workers}");
+            }
+            assert_eq!(seq.0.len() + seq.1.len(), rows.len());
         }
     }
 
@@ -484,7 +575,6 @@ mod tests {
             min_child_weight: 1.0,
             min_split_gain: 0.0,
             hist_subtraction: false,
-            n_threads: 1,
         };
         let tree = grow_tree(&binned, &layout, &[0, 1, 2, 3], &grads, &[], 2, &params);
         let mut out = [0.0f32; 2];

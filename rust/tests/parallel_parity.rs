@@ -1,15 +1,25 @@
-//! Acceptance gate for the two-level parallel training engine: on the
-//! synthetic benchmark dataset, training with `intra_job_threads > 1` (and
-//! any job-level worker count) must produce **bit-identical** models to the
-//! fully sequential path, and the sampler must generate bit-identical
-//! samples for any worker count.
+//! Acceptance gate for the parallel training engine: on the synthetic
+//! benchmark dataset, training with `intra_job_threads > 1` (and any
+//! job-level worker count) must produce **bit-identical** models to the
+//! fully sequential path, the sampler must generate bit-identical samples
+//! for any worker count, and a persistent [`WorkerPool`] — including one
+//! **grown mid-run** by the coordinator's dynamic rebalancing — must
+//! reproduce single-thread results byte-for-byte.
+//!
+//! CI runs this suite under explicit worker counts via the
+//! `CALOFOREST_TEST_WORKERS` env var, which is appended to every sweep.
 
+use caloforest::coordinator::pool::WorkerPool;
 use caloforest::coordinator::{run_training, worker_budget, RunOptions};
 use caloforest::data::synthetic_dataset;
-use caloforest::forest::sampler::GenerateConfig;
-use caloforest::forest::trainer::{train_forest, ForestTrainConfig};
 use caloforest::forest::generate;
-use caloforest::gbt::{serialize, TrainParams, TreeKind};
+use caloforest::forest::sampler::GenerateConfig;
+use caloforest::forest::trainer::{
+    prepare, train_forest, train_job, train_job_in, ForestTrainConfig,
+};
+use caloforest::gbt::{serialize, Booster, TrainParams, TreeKind};
+use caloforest::tensor::Matrix;
+use caloforest::util::rng::Rng;
 
 fn synthetic_cfg(kind: TreeKind) -> ForestTrainConfig {
     ForestTrainConfig {
@@ -19,6 +29,20 @@ fn synthetic_cfg(kind: TreeKind) -> ForestTrainConfig {
         seed: 5,
         ..Default::default()
     }
+}
+
+/// Worker counts to sweep. `CALOFOREST_TEST_WORKERS` (the CI matrix leg)
+/// *replaces* the default `{1, 2, 8}` sweep so each matrix leg is genuinely
+/// width-specific; without it the full default sweep runs.
+fn worker_counts() -> Vec<usize> {
+    if let Ok(raw) = std::env::var("CALOFOREST_TEST_WORKERS") {
+        if let Ok(w) = raw.trim().parse::<usize>() {
+            if w >= 1 {
+                return vec![w];
+            }
+        }
+    }
+    vec![1, 2, 8]
 }
 
 #[test]
@@ -31,7 +55,13 @@ fn intra_job_parallel_training_is_bit_identical_on_synthetic_benchmark() {
         let cfg = synthetic_cfg(kind);
         // Reference: the plain sequential trainer (no pool involved).
         let (seq_model, _) = train_forest(&cfg, &x, Some(&y));
-        for (workers, intra) in [(1usize, 4usize), (2, 2), (4, 8)] {
+        // Width-specific CI legs replace the default combo sweep.
+        let combos: Vec<(usize, usize)> = if std::env::var("CALOFOREST_TEST_WORKERS").is_ok() {
+            worker_counts().into_iter().map(|w| (w, w)).collect()
+        } else {
+            vec![(1, 4), (2, 2), (4, 8)]
+        };
+        for (workers, intra) in combos {
             let par = run_training(
                 &cfg,
                 &x,
@@ -56,6 +86,143 @@ fn intra_job_parallel_training_is_bit_identical_on_synthetic_benchmark() {
             let g_par = generate(&par.model, &GenerateConfig::new(500, 11).with_workers(8));
             assert_eq!(g_seq.0.data, g_par.0.data);
             assert_eq!(g_seq.1, g_par.1);
+        }
+    }
+}
+
+/// A dataset big enough that every new pooled hot path engages inside one
+/// booster train: gradients (> GRAD_CHUNK elements), the eval-set
+/// prediction update (> UPDATE_BLOCK_ROWS rows), row partitioning at the
+/// root (> PAR_PARTITION_MIN_ROWS rows), and the chunked loss reduction.
+fn big_regression() -> (Matrix, Matrix, Matrix, Matrix) {
+    let n = 9000;
+    let p = 5;
+    let mk = |seed: u64, rows: usize| {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::randn(rows, p, &mut rng);
+        let mut t = Matrix::zeros(rows, p);
+        for r in 0..rows {
+            for c in 0..p {
+                let v = x.at(r, c) * 0.5 - x.at(r, (c + 1) % p) * 0.25
+                    + 0.05 * rng.normal_f32();
+                t.set(r, c, v);
+            }
+        }
+        (x, t)
+    };
+    let (x, t) = mk(1, n);
+    let (xv, tv) = mk(2, 3000);
+    (x, t, xv, tv)
+}
+
+#[test]
+fn pooled_hot_paths_gradients_eval_update_partitioning_are_bit_identical() {
+    let (x, t, xv, tv) = big_regression();
+    for kind in [TreeKind::Single, TreeKind::Multi] {
+        let params = TrainParams {
+            n_trees: 3,
+            max_depth: 5,
+            kind,
+            early_stopping_rounds: 2,
+            ..Default::default()
+        };
+        let seq = Booster::train_with(
+            &x.view(),
+            &t.view(),
+            params,
+            Some((&xv.view(), &tv.view())),
+            &WorkerPool::new(1),
+        );
+        for workers in worker_counts() {
+            let exec = WorkerPool::new(workers);
+            let par = Booster::train_with(
+                &x.view(),
+                &t.view(),
+                params,
+                Some((&xv.view(), &tv.view())),
+                &exec,
+            );
+            assert_eq!(seq.trees, par.trees, "{kind:?} trees diverge at workers={workers}");
+            assert_eq!(seq.base_score, par.base_score);
+            // Loss history carries the eval-update and loss-reduction
+            // paths; exact equality pins early stopping too.
+            let h1: Vec<(u64, u64)> = seq
+                .history
+                .iter()
+                .map(|h| (h.train_loss.to_bits(), h.valid_loss.unwrap_or(0.0).to_bits()))
+                .collect();
+            let h2: Vec<(u64, u64)> = par
+                .history
+                .iter()
+                .map(|h| (h.train_loss.to_bits(), h.valid_loss.unwrap_or(0.0).to_bits()))
+                .collect();
+            assert_eq!(h1, h2, "{kind:?} history diverges at workers={workers}");
+            assert_eq!(seq.best_round, par.best_round);
+        }
+    }
+}
+
+#[test]
+fn pool_grown_mid_run_reproduces_single_thread_models_byte_for_byte() {
+    let (x, y) = synthetic_dataset(400, 6, 2, 7);
+    let cfg = synthetic_cfg(TreeKind::Single);
+    let prep = prepare(&cfg, &x, Some(&y));
+    // Sequential reference (cfg.params.intra_threads == 1 ⇒ inline pool).
+    let reference = serialize::to_bytes(&train_job(&prep, &cfg, 1, 0));
+
+    // Reuse one pool across jobs, growing it between them (the shape of
+    // the coordinator's rebalance: a surviving slot's pool widens after
+    // other slots drain).
+    let pool = WorkerPool::new(2);
+    let before_grow = serialize::to_bytes(&train_job_in(&prep, &cfg, 1, 0, &pool));
+    assert_eq!(reference, before_grow, "2-thread pool diverges from sequential");
+    pool.grow(6);
+    assert_eq!(pool.threads(), 8);
+    let after_grow = serialize::to_bytes(&train_job_in(&prep, &cfg, 1, 0, &pool));
+    assert_eq!(reference, after_grow, "pool grown 2→8 between jobs diverges");
+
+    // And grow *while* a job trains on the pool: whenever the new workers
+    // join, fixed chunk boundaries keep the model byte-identical.
+    let racing = WorkerPool::new(2);
+    let during_grow = std::thread::scope(|scope| {
+        scope.spawn(|| {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            racing.grow(4);
+        });
+        serialize::to_bytes(&train_job_in(&prep, &cfg, 1, 0, &racing))
+    });
+    assert_eq!(reference, during_grow, "pool grown mid-training diverges");
+    assert_eq!(racing.threads(), 6);
+}
+
+#[test]
+fn rebalanced_run_training_is_bit_identical_and_reports_grants() {
+    // 2 timesteps × 2 classes = 4 jobs over 3 job workers: slots drain at
+    // different times, so freed budget is regrafted onto survivors while
+    // they are still training — models must not change.
+    let (x, y) = synthetic_dataset(250, 5, 2, 11);
+    let cfg = synthetic_cfg(TreeKind::Single);
+    let (seq_model, _) = train_forest(&cfg, &x, Some(&y));
+    let out = run_training(
+        &cfg,
+        &x,
+        Some(&y),
+        &RunOptions { workers: 3, intra_job_threads: 2, ..Default::default() },
+    );
+    assert!(out.model.is_complete());
+    assert_eq!(out.job_workers, 3);
+    // Every drained slot except the last donates ≥ 1 worker.
+    assert!(
+        out.rebalanced_threads >= out.job_workers - 1,
+        "expected >= {} rebalanced threads, got {}",
+        out.job_workers - 1,
+        out.rebalanced_threads
+    );
+    for t in 0..seq_model.n_t() {
+        for yy in 0..seq_model.n_y() {
+            let a = serialize::to_bytes(seq_model.ensemble(t, yy));
+            let b = serialize::to_bytes(out.model.ensemble(t, yy));
+            assert_eq!(a, b, "ensemble (t={t}, y={yy}) diverges after rebalance");
         }
     }
 }
