@@ -182,6 +182,93 @@ fn main() {
         batch.rows as f64 / mpar.mean() / 1e6
     );
 
+    // --- Sampler field-evaluation throughput: old vs blocked engine. ------
+    // Generation evaluates one ensemble over the whole batch per
+    // (t, y, step), so rows/sec of a single field evaluation bounds
+    // sampling throughput. Old = predict_batch over six parallel node
+    // vecs; blocked = the compiled NativeForest (contiguous 16-byte
+    // breadth-first arena, row-block × tree-tile traversal). Outputs are
+    // bit-identical; only the traversal differs.
+    let engine = booster.compile();
+    let pool8 = WorkerPool::new(8);
+    let rows_n = batch.rows;
+    let mut sampler_results: Vec<(&str, usize, f64)> = Vec::new();
+    let m_old1 = bench.time("field-eval old (predict_batch, 1 thread)", || {
+        caloforest::gbt::predict::predict_batch(&booster, &batch.view(), &mut out);
+        std::hint::black_box(out[0]);
+    });
+    sampler_results.push(("predict_batch", 1, m_old1.mean()));
+    let m_new1 = bench.time("field-eval blocked (NativeForest, 1 thread)", || {
+        engine.predict_into(&batch.view(), &mut out);
+        std::hint::black_box(out[0]);
+    });
+    sampler_results.push(("blocked", 1, m_new1.mean()));
+    let m_old8 = bench.time("field-eval old (predict_batch_par, 8 threads)", || {
+        caloforest::gbt::predict::predict_batch_par(&booster, &batch.view(), &mut out, &pool8);
+        std::hint::black_box(out[0]);
+    });
+    sampler_results.push(("predict_batch_par", 8, m_old8.mean()));
+    let m_new8 = bench.time("field-eval blocked (pooled, 8 threads)", || {
+        engine.predict_into_pooled(&batch.view(), &mut out, &pool8);
+        std::hint::black_box(out[0]);
+    });
+    sampler_results.push(("blocked-pooled", 8, m_new8.mean()));
+    for &(backend, threads, secs) in &sampler_results {
+        bench.csv(
+            "path,label,mean_secs",
+            format!("sampler-field-eval,{backend}-t{threads},{secs:.9}"),
+        );
+    }
+    let speedup1 = m_old1.mean() / m_new1.mean().max(1e-12);
+    let speedup8 = m_old8.mean() / m_new8.mean().max(1e-12);
+    println!(
+        "sampler field-eval: old {:.2} Mrow/s vs blocked {:.2} Mrow/s (1 thread, {speedup1:.2}x); \
+         old {:.2} Mrow/s vs blocked {:.2} Mrow/s (8 threads, {speedup8:.2}x)",
+        rows_n as f64 / m_old1.mean() / 1e6,
+        rows_n as f64 / m_new1.mean() / 1e6,
+        rows_n as f64 / m_old8.mean() / 1e6,
+        rows_n as f64 / m_new8.mean() / 1e6,
+    );
+    // Full-size runs persist the trajectory at the workspace root (cargo
+    // runs benches from the package dir, so anchor on the manifest path)
+    // where the committed file lives; smoke/--test runs use tiny sizes and
+    // must not overwrite the recorded baseline.
+    if !quick {
+        use caloforest::util::Json;
+        let mut doc = Json::obj();
+        let results = sampler_results
+            .iter()
+            .map(|&(backend, threads, secs)| {
+                let mut o = Json::obj();
+                o.set("backend", backend)
+                    .set("threads", threads)
+                    .set("mean_secs", secs)
+                    .set("rows_per_sec", rows_n as f64 / secs.max(1e-12));
+                o
+            })
+            .collect::<Vec<_>>();
+        let mut config = Json::obj();
+        config
+            .set("rows", rows_n)
+            .set("features", batch.cols)
+            .set("trees", booster.trees.len())
+            .set("max_depth", booster.params.max_depth)
+            .set("outputs", booster.m);
+        doc.set("bench", "sampler_field_eval")
+            .set("status", "measured")
+            .set("config", config)
+            .set("results", Json::Arr(results))
+            .set("single_thread_speedup", speedup1)
+            .set("pooled_speedup", speedup8);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(|root| root.join("BENCH_sampling.json"))
+            .unwrap_or_else(|| std::path::PathBuf::from("BENCH_sampling.json"));
+        if std::fs::write(&path, doc.pretty()).is_ok() {
+            eprintln!("  [bench] wrote {}", path.display());
+        }
+    }
+
     // XLA path at its pinned batch (per-call latency matters for L3).
     if let Ok(runtime) = PjrtRuntime::cpu(std::path::Path::new("artifacts")) {
         // Wrap the booster in a 1×1 model grid to reuse XlaField.

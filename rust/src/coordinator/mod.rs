@@ -82,6 +82,37 @@ pub fn worker_budget(total: usize, n_jobs: usize, intra_override: usize) -> (usi
     (job_workers, intra)
 }
 
+/// Useful job-level parallel width for a set of job sizes: the makespan is
+/// bounded below by the largest job, so scheduling more than
+/// `⌈Σ sizes / max size⌉` job workers cannot shorten the run — it only
+/// starves the straggler of intra-job threads. Uniform sizes give exactly
+/// `n_jobs`.
+pub fn effective_job_width(job_sizes: &[usize]) -> usize {
+    let max = job_sizes.iter().copied().max().unwrap_or(0);
+    if max == 0 {
+        return job_sizes.len().max(1);
+    }
+    let sum: usize = job_sizes.iter().sum();
+    sum.div_ceil(max).max(1)
+}
+
+/// Size-aware [`worker_budget`]: `job_sizes` carries each job's duplicated
+/// row count (per-class skew repeats across timesteps), and the job-level
+/// width is additionally capped by [`effective_job_width`] so skewed runs
+/// route the spare budget into intra-job threads instead of idling
+/// alongside the straggler ([`run_training`] grants the floor-division
+/// remainder to the leading slots' pools so the whole budget stays live).
+/// Equal sizes reduce exactly to [`worker_budget`]; any split produces
+/// bit-identical models.
+pub fn worker_budget_sized(
+    total: usize,
+    job_sizes: &[usize],
+    intra_override: usize,
+) -> (usize, usize) {
+    let width_cap = job_sizes.len().max(1).min(effective_job_width(job_sizes));
+    worker_budget(total, width_cap, intra_override)
+}
+
 /// Outcome of a coordinated run.
 pub struct RunOutcome {
     /// The trained model; ensembles are `None` when streamed to disk only
@@ -92,11 +123,18 @@ pub struct RunOutcome {
     pub peak_alloc_bytes: usize,
     /// Memory timeline samples `(seconds, bytes)` when tracking was enabled.
     pub timeline: Vec<(f64, usize)>,
-    /// Job-level workers actually scheduled (the budget split's left half).
+    /// Job-level workers actually scheduled (the budget split's left half,
+    /// capped by the size-aware [`effective_job_width`]).
     pub job_workers: usize,
     /// Intra-job threads each job *started* with (the split's right half);
-    /// pools may end wider after dynamic rebalancing.
+    /// pools may be wider — leading slots absorb the budget remainder the
+    /// floor split leaves, and dynamic rebalancing regrafts drained slots'
+    /// threads.
     pub intra_job_threads: usize,
+    /// Size-weighted useful job-level width the split was capped by
+    /// (`⌈Σ job sizes / max job size⌉`; equals the job count when classes
+    /// are balanced).
+    pub effective_job_width: usize,
     /// Worker threads reassigned to surviving jobs' pools as the job queue
     /// drained (the dynamic worker-budget rebalance; 0 with a single job
     /// worker).
@@ -151,9 +189,20 @@ pub fn run_training(
         }
     }
 
-    // Two-level budget: job-level workers × intra-job threads.
+    // Two-level budget: job-level workers × intra-job threads, weighted by
+    // each job's duplicated row count (per-class skew) so a dominant class
+    // starts with more intra-job threads instead of idle job workers.
+    let job_sizes: Vec<usize> = jobs
+        .iter()
+        .map(|&(_, y_idx)| {
+            let (s, e) = prep.class_ranges_dup[y_idx];
+            e - s
+        })
+        .collect();
+    let eff_width = effective_job_width(&job_sizes);
+    let total_budget = if opts.workers == 0 { memory::host_cpus() } else { opts.workers };
     let (job_workers, intra_threads) =
-        worker_budget(opts.workers, jobs.len(), opts.intra_job_threads);
+        worker_budget_sized(total_budget, &job_sizes, opts.intra_job_threads);
     let mut job_cfg = cfg.clone();
     job_cfg.params.intra_threads = intra_threads;
     let job_cfg = &job_cfg;
@@ -169,6 +218,18 @@ pub fn run_training(
     // in the training path.
     let pools: Vec<pool::WorkerPool> =
         (0..job_workers).map(|_| pool::WorkerPool::new(intra_threads)).collect();
+    // The floor split can strand up to job_workers − 1 threads of the
+    // budget when the size-aware width cap does not divide it (e.g. 8 over
+    // a width of 3 ⇒ 3 × 2 + 2 spare). Grant the remainder to the leading
+    // slots' pools up front — widths never affect results (fixed chunk
+    // boundaries), so this is pure utilization. No grants with an explicit
+    // intra override: the caller chose the per-job width deliberately.
+    if opts.intra_job_threads == 0 {
+        let remainder = total_budget.saturating_sub(job_workers * intra_threads);
+        for k in 0..remainder {
+            pools[k % job_workers].grow(1);
+        }
+    }
     // Dynamic worker-budget rebalancing state: which slots still train.
     let slot_active: Mutex<Vec<bool>> = Mutex::new(vec![true; job_workers]);
     let rebalanced = AtomicUsize::new(0);
@@ -273,6 +334,7 @@ pub fn run_training(
         timeline: timeline.into_inner().unwrap(),
         job_workers,
         intra_job_threads: intra_threads,
+        effective_job_width: eff_width,
         rebalanced_threads: rebalanced.load(Ordering::Relaxed),
     }
 }
@@ -367,6 +429,46 @@ mod tests {
         let g2 = crate::forest::generate(&reloaded, &crate::forest::GenerateConfig::new(20, 5));
         assert_eq!(g1.0.data, g2.0.data);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn size_aware_budget_caps_width_by_skew() {
+        // Uniform sizes reduce exactly to the unweighted policy.
+        assert_eq!(worker_budget_sized(8, &[100; 100], 0), worker_budget(8, 100, 0));
+        assert_eq!(worker_budget_sized(8, &[500, 500], 0), (2, 4));
+        // One dominant class: width capped at ⌈sum/max⌉ so the spare
+        // budget becomes intra-job threads for the straggler.
+        assert_eq!(effective_job_width(&[1000, 100, 1000, 100]), 3);
+        assert_eq!(worker_budget_sized(8, &[1000, 100, 1000, 100], 0), (3, 2));
+        assert_eq!(effective_job_width(&[10_000, 1, 1, 1]), 2);
+        assert_eq!(worker_budget_sized(8, &[10_000, 1, 1, 1], 0), (2, 4));
+        // Mild imbalance keeps the full width (ceiling division).
+        assert_eq!(effective_job_width(&[60, 40, 60, 40]), 4);
+        // Explicit intra override still wins; degenerate inputs stay sane.
+        assert_eq!(worker_budget_sized(8, &[1000, 10], 3), (2, 3));
+        assert_eq!(worker_budget_sized(4, &[], 0), (1, 4));
+        assert_eq!(worker_budget_sized(1, &[0, 0], 0), (1, 1));
+    }
+
+    #[test]
+    fn skewed_run_reports_and_applies_size_aware_split() {
+        // 3 : 1 class skew over 2 timesteps ⇒ job sizes [3s, s, 3s, s]:
+        // effective width ⌈8s/3s⌉ = 3 < 4 jobs, so a budget of 8 splits
+        // 3 × 2 instead of the uniform 4 × 2.
+        let mut rng = Rng::new(17);
+        let x = Matrix::randn(40, 2, &mut rng);
+        let y: Vec<u32> = (0..40).map(|i| u32::from(i % 4 == 0)).collect();
+        let c = ForestTrainConfig {
+            n_t: 2,
+            k_dup: 4,
+            params: TrainParams { n_trees: 2, max_depth: 2, ..Default::default() },
+            seed: 19,
+            ..Default::default()
+        };
+        let out = run_training(&c, &x, Some(&y), &RunOptions { workers: 8, ..Default::default() });
+        assert_eq!(out.effective_job_width, 3);
+        assert_eq!((out.job_workers, out.intra_job_threads), (3, 2));
+        assert!(out.model.is_complete());
     }
 
     #[test]

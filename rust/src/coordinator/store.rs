@@ -52,15 +52,27 @@ impl ModelStore {
     /// Persist sampler metadata (scalers, grid, label counts).
     pub fn save_meta(&self, model: &ForestModel) -> io::Result<()> {
         // Reuse the model-dir writer for meta.json only: write into the
-        // store dir (ensembles are written separately by workers).
-        let skeleton = ForestModel {
-            ensembles: vec![None; model.ensembles.len()],
-            ..model.clone()
-        };
+        // store dir (ensembles are written separately by workers). Build
+        // the skeleton from the metadata fields alone — cloning the whole
+        // model would transiently duplicate every booster (and compiled
+        // engine) just to discard them.
+        let skeleton = ForestModel::empty(
+            model.kind,
+            model.grid.clone(),
+            model.schedule,
+            model.scalers.clone(),
+            model.label_counts.clone(),
+            model.p,
+        );
         skeleton.save_dir(&self.dir)
     }
 
     /// Assemble the full model from `meta.json` + every stored ensemble.
+    /// Blocked inference engines are *not* built here — the per-slot cache
+    /// compiles lazily on first field evaluation, so non-native consumers
+    /// (the XLA sampling path) pay nothing; native sampling callers that
+    /// want the first step compile-free call
+    /// [`ForestModel::precompile`] on the result.
     pub fn load_model(&self) -> io::Result<ForestModel> {
         ForestModel::load_dir(&self.dir)
     }
@@ -111,6 +123,47 @@ mod tests {
         let b2 = store.load(2, 1).unwrap();
         assert_eq!(b.predict(&x.view()).data, b2.predict(&x.view()).data);
         assert!(store.disk_bytes() > 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_model_is_sampling_ready() {
+        use crate::forest::model::{ForestModel, ModelKind};
+        use crate::forest::scaler::{ClassScalers, MinMaxScaler};
+        use crate::forest::schedule::{TimeGrid, VpSchedule};
+        let dir = std::env::temp_dir().join("caloforest_test_store_precompile");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::create(&dir).unwrap();
+        let (x, b) = booster(3);
+        let mut model = ForestModel::empty(
+            ModelKind::Flow,
+            TimeGrid::uniform(2, 0.0),
+            VpSchedule::default(),
+            ClassScalers {
+                scalers: vec![MinMaxScaler {
+                    mins: vec![0.0; 2],
+                    maxs: vec![1.0; 2],
+                    lo: -1.0,
+                    hi: 1.0,
+                }],
+                per_class: false,
+            },
+            vec![60],
+            2,
+        );
+        model.set_ensemble(0, 0, b);
+        store.save(0, 0, model.ensemble(0, 0)).unwrap();
+        store.save_meta(&model).unwrap();
+        let loaded = store.load_model().unwrap();
+        // Loading builds no engines (lazy cache); an explicit precompile
+        // builds exactly the trained slots.
+        assert!(loaded.compiled.iter().all(|c| c.get().is_none()));
+        loaded.precompile();
+        assert!(loaded.compiled[loaded.slot(0, 0)].get().is_some());
+        assert!(loaded.compiled[loaded.slot(1, 0)].get().is_none());
+        let p1 = model.ensemble(0, 0).predict(&x.view());
+        let p2 = loaded.compiled(0, 0).predict(&x.view());
+        assert_eq!(p1.data, p2.data);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

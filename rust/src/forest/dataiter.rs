@@ -40,7 +40,9 @@ pub struct NoisingIter<'a> {
     /// Rolling RNG used only in flawed mode (never reset between passes).
     rolling: Rng,
     flawed: bool,
-    /// Scratch buffers reused across batches.
+    /// Scratch buffers reused across batches — allocated once at
+    /// `batch_rows × p` capacity; the ragged tail batch only shrinks the
+    /// logical row count, never the backing storage.
     noise_buf: Matrix,
     out_buf: Matrix,
 }
@@ -111,17 +113,21 @@ impl<'a> BatchIterator for NoisingIter<'a> {
         self.fill_noise(batch_index, rows);
         let x0b = MatrixView { rows, cols: p, data: &self.x0.data[start * p..end * p] };
         let noise = MatrixView { rows, cols: p, data: &self.noise_buf.data[..rows * p] };
-        // Reuse out_buf; shape it to this batch.
-        let mut out = Matrix::zeros(rows, p);
+        // Write into the reusable scratch in place (no per-batch
+        // allocation). The kernels assert on `out.rows` and touch exactly
+        // the first `rows × p` elements, so shape the scratch to this
+        // batch for the call, then restore the allocated shape to keep the
+        // Matrix invariant (`rows × cols == data.len()`) outside it.
+        self.out_buf.rows = rows;
         match self.kind {
-            ModelKind::Flow => noising::cfm_inputs(&x0b, &noise, self.t, &mut out),
+            ModelKind::Flow => noising::cfm_inputs(&x0b, &noise, self.t, &mut self.out_buf),
             ModelKind::Diffusion => {
-                noising::diffusion_inputs(&x0b, &noise, self.t, &self.schedule, &mut out)
+                noising::diffusion_inputs(&x0b, &noise, self.t, &self.schedule, &mut self.out_buf)
             }
         }
-        self.out_buf = out;
+        self.out_buf.rows = self.batch_rows;
         self.pos = end;
-        Some(self.out_buf.view())
+        Some(MatrixView { rows, cols: p, data: &self.out_buf.data[..rows * p] })
     }
 }
 

@@ -3,8 +3,9 @@
 
 use super::scaler::ClassScalers;
 use super::schedule::{TimeGrid, VpSchedule};
-use crate::gbt::{serialize, Booster};
+use crate::gbt::{serialize, Booster, NativeForest};
 use std::path::Path;
+use std::sync::OnceLock;
 
 /// Which generative method the ensembles were trained for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,6 +40,11 @@ pub struct ForestModel {
     /// Ensemble grid, row-major `[n_t × n_y]`; `None` until trained (allows
     /// checkpoint-resume to fill holes).
     pub ensembles: Vec<Option<Booster>>,
+    /// Per-slot compiled blocked-inference engines, built lazily on first
+    /// field evaluation (or eagerly by [`precompile`](Self::precompile)
+    /// after training / model-store load). Same `[n_t × n_y]` indexing as
+    /// `ensembles`; invalidated by [`set_ensemble`](Self::set_ensemble).
+    pub compiled: Vec<OnceLock<NativeForest>>,
 }
 
 impl ForestModel {
@@ -59,6 +65,7 @@ impl ForestModel {
             label_counts,
             p,
             ensembles: vec![None; slots],
+            compiled: (0..slots).map(|_| OnceLock::new()).collect(),
         }
     }
 
@@ -84,6 +91,28 @@ impl ForestModel {
     pub fn set_ensemble(&mut self, t_idx: usize, y: usize, booster: Booster) {
         let slot = self.slot(t_idx, y);
         self.ensembles[slot] = Some(booster);
+        // Any previously compiled engine for this slot is stale.
+        self.compiled[slot] = OnceLock::new();
+    }
+
+    /// The compiled blocked-inference engine for `(t_idx, y)`, building it
+    /// on first use. Predictions are bit-identical to the booster path
+    /// ([`eval_field`](Self::eval_field)).
+    pub fn compiled(&self, t_idx: usize, y: usize) -> &NativeForest {
+        let slot = self.slot(t_idx, y);
+        self.compiled[slot].get_or_init(|| self.ensemble(t_idx, y).compile())
+    }
+
+    /// Eagerly compile every trained slot (after training or a model-store
+    /// load) so the first sampling step pays no compile latency.
+    pub fn precompile(&self) {
+        for t in 0..self.n_t() {
+            for y in 0..self.n_y() {
+                if self.ensembles[self.slot(t, y)].is_some() {
+                    let _ = self.compiled(t, y);
+                }
+            }
+        }
     }
 
     /// True when every grid slot has a trained ensemble.
@@ -117,12 +146,20 @@ impl ForestModel {
             .sum()
     }
 
-    /// Logical serialized size in bytes.
+    /// Logical serialized size in bytes. Compiled inference engines are
+    /// counted on top of the boosters they were built from.
     pub fn nbytes(&self) -> usize {
-        self.ensembles
+        let boosters: usize = self
+            .ensembles
             .iter()
             .filter_map(|e| e.as_ref().map(|b| b.nbytes()))
-            .sum()
+            .sum();
+        let engines: usize = self
+            .compiled
+            .iter()
+            .filter_map(|c| c.get().map(|f| f.nbytes()))
+            .sum();
+        boosters + engines
     }
 
     /// Evaluate the learned vector field at grid point `t_idx` for class `y`
@@ -143,6 +180,20 @@ impl ForestModel {
         exec: &crate::coordinator::pool::WorkerPool,
     ) {
         crate::gbt::predict::predict_batch_par(self.ensemble(t_idx, y), x, out, exec);
+    }
+
+    /// [`eval_field`](Self::eval_field) through the compiled blocked
+    /// engine, pooled over row blocks — the default sampling backend.
+    /// Bit-identical to the booster paths for any worker count.
+    pub fn eval_field_compiled(
+        &self,
+        t_idx: usize,
+        y: usize,
+        x: &crate::tensor::MatrixView<'_>,
+        out: &mut [f32],
+        exec: &crate::coordinator::pool::WorkerPool,
+    ) {
+        self.compiled(t_idx, y).predict_into_pooled(x, out, exec);
     }
 
     /// Persist the full model as a directory: `meta.json` + one `.fbj` per
@@ -315,6 +366,41 @@ mod tests {
         assert_eq!(m.n_trained(), 1);
         assert_eq!(m.missing().len(), 5);
         assert!(m.missing().iter().all(|&(t, y)| !(t == 1 && y == 0)));
+    }
+
+    #[test]
+    fn compiled_cache_builds_lazily_and_invalidates() {
+        let mut m = dummy_model();
+        let x = crate::tensor::Matrix::from_vec(4, 1, vec![0.0, 0.3, 0.6, 1.0]);
+        let y = crate::tensor::Matrix::from_vec(4, 1, vec![1.0, 1.0, -1.0, -1.0]);
+        let b = Booster::train(
+            &x.view(),
+            &y.view(),
+            crate::gbt::TrainParams { n_trees: 2, max_depth: 2, ..Default::default() },
+            None,
+        );
+        m.set_ensemble(1, 0, b.clone());
+        let base = m.nbytes();
+        // Lazy build on first access; nbytes then accounts the engine.
+        let slot = m.slot(1, 0);
+        assert!(m.compiled[slot].get().is_none());
+        let pred_compiled = m.compiled(1, 0).predict(&x.view());
+        assert!(m.compiled[slot].get().is_some());
+        assert!(m.nbytes() > base, "compiled engine must be accounted");
+        // Bit-identical to the booster path.
+        let pred_booster = m.ensemble(1, 0).predict(&x.view());
+        assert_eq!(pred_booster.data, pred_compiled.data);
+        // Replacing the ensemble drops the stale engine.
+        m.set_ensemble(1, 0, b);
+        assert!(m.compiled[slot].get().is_none());
+        // precompile builds every trained slot (and only those).
+        m.precompile();
+        assert!(m.compiled[slot].get().is_some());
+        assert_eq!(
+            m.compiled.iter().filter(|c| c.get().is_some()).count(),
+            1,
+            "untrained slots must stay uncompiled"
+        );
     }
 
     #[test]

@@ -7,9 +7,10 @@
 //! step.
 //!
 //! The vector-field evaluation is abstracted behind [`FieldEval`] so the
-//! sampler runs identically over the native Rust predictor and the AOT XLA
-//! backend ([`crate::runtime::xla_sampler`]); a parity test pins them
-//! together.
+//! sampler runs identically over the compiled blocked inference engine
+//! ([`CompiledField`], the default), the booster-traversal predictors
+//! ([`NativeField`] / [`ParNativeField`]), and the AOT XLA backend
+//! ([`crate::runtime::xla_sampler`]); parity tests pin them together.
 
 use super::model::{ForestModel, ModelKind};
 use crate::coordinator::pool::WorkerPool;
@@ -80,6 +81,8 @@ impl<'a> FieldEval for NativeField<'a> {
 /// persistent worker pool — identical output to [`NativeField`] for any
 /// worker count. The pool outlives the whole generation loop (`n_t` field
 /// evaluations per class), so sampling spawns threads exactly once.
+/// Superseded as the default by [`CompiledField`]; kept as the
+/// booster-traversal reference the parity tests pin the compiled engine to.
 pub struct ParNativeField<'a> {
     pub model: &'a ForestModel,
     pub exec: &'a WorkerPool,
@@ -88,6 +91,23 @@ pub struct ParNativeField<'a> {
 impl<'a> FieldEval for ParNativeField<'a> {
     fn eval(&self, t_idx: usize, y: usize, x: &MatrixView<'_>, out: &mut [f32]) {
         self.model.eval_field_par(t_idx, y, x, out, self.exec);
+    }
+}
+
+/// Default backend: the compiled blocked native inference engine
+/// ([`crate::gbt::NativeForest`]), pooled over row blocks on a persistent
+/// worker pool. Each `(t, y)` slot's engine is built lazily on its first
+/// evaluation and cached on the model, so a generation run compiles every
+/// ensemble at most once. Output is bit-identical to [`ParNativeField`] /
+/// [`NativeField`] for any worker count.
+pub struct CompiledField<'a> {
+    pub model: &'a ForestModel,
+    pub exec: &'a WorkerPool,
+}
+
+impl<'a> FieldEval for CompiledField<'a> {
+    fn eval(&self, t_idx: usize, y: usize, x: &MatrixView<'_>, out: &mut [f32]) {
+        self.model.eval_field_compiled(t_idx, y, x, out, self.exec);
     }
 }
 
@@ -130,11 +150,13 @@ pub fn sample_labels(
     }
 }
 
-/// Generate `cfg.n` samples with the native backend (`cfg.workers` threads
-/// for field evaluation, pooled for the duration of the run).
+/// Generate `cfg.n` samples with the default backend — the compiled
+/// blocked inference engine ([`CompiledField`]) with `cfg.workers` threads
+/// pooled for the duration of the run. Byte-identical to the booster
+/// traversal backends for the same seed.
 pub fn generate(model: &ForestModel, cfg: &GenerateConfig) -> (Matrix, Vec<u32>) {
     let exec = WorkerPool::new(cfg.workers.max(1));
-    generate_with(model, &ParNativeField { model, exec: &exec }, cfg)
+    generate_with(model, &CompiledField { model, exec: &exec }, cfg)
 }
 
 /// Generate with an arbitrary vector-field backend.
@@ -355,6 +377,31 @@ mod tests {
             assert_eq!(seq.0.data, par.0.data, "samples diverge at workers={workers}");
             assert_eq!(seq.1, par.1);
         }
+    }
+
+    #[test]
+    fn compiled_default_backend_smoke_matches_booster_backend() {
+        // Cheap unit-level pin of the backend swap; the full two-kind,
+        // multi-width byte-identity gate lives in tests/parallel_parity.rs
+        // (compiled_default_sampling_backend_is_byte_identical).
+        let (x, y) = blob_data(120, &[(-2.0, 1.0), (2.0, -1.0)], 30);
+        let cfg = ForestTrainConfig {
+            n_t: 4,
+            k_dup: 5,
+            params: TrainParams { n_trees: 6, max_depth: 3, ..Default::default() },
+            seed: 31,
+            ..Default::default()
+        };
+        let (model, _) = train_forest(&cfg, &x, Some(&y));
+        let gen_cfg = GenerateConfig::new(400, 17);
+        let exec = WorkerPool::new(1);
+        let reference =
+            generate_with(&model, &ParNativeField { model: &model, exec: &exec }, &gen_cfg);
+        let via_default = generate(&model, &gen_cfg);
+        let rb: Vec<u32> = reference.0.data.iter().map(|v| v.to_bits()).collect();
+        let db: Vec<u32> = via_default.0.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(rb, db, "default backend diverges from booster traversal");
+        assert_eq!(reference.1, via_default.1);
     }
 
     #[test]

@@ -227,6 +227,14 @@ impl Booster {
         let rows: Vec<u32> = (0..n as u32).collect();
         let mut grads = vec![0.0f64; n * m];
         let mut hess: Vec<f64> = Vec::new();
+        // Per-output gradient column, reused across every Single-kind round
+        // (gathered on the pool; empty in Multi mode and when m == 1, where
+        // `grads` is already the single column).
+        let mut gj: Vec<f64> = if params.kind == TreeKind::Single && m > 1 {
+            vec![0.0; n]
+        } else {
+            Vec::new()
+        };
         // One histogram pool for the whole boosting run: steady-state tree
         // growth allocates nothing (§Perf, L3 iteration 3).
         let mut pool = HistPool::new();
@@ -252,15 +260,24 @@ impl Booster {
                         binned, &layout, &rows, &grads, &hess, m, &grow, &mut pool, exec,
                     )]
                 }
-                TreeKind::Single => (0..m)
-                    .map(|j| {
-                        // Strided gradient view for output j.
-                        let gj: Vec<f64> = (0..n).map(|r| grads[r * m + j]).collect();
-                        grow_tree_pooled(
-                            binned, &layout, &rows, &gj, &hess, 1, &grow, &mut pool, exec,
-                        )
-                    })
-                    .collect(),
+                TreeKind::Single => {
+                    let mut round_trees = Vec::with_capacity(m);
+                    for j in 0..m {
+                        // Strided gradient gather for output j into the
+                        // reusable column buffer, chunked on the pool (for
+                        // m == 1 `grads` already is the column: no copy).
+                        let col: &[f64] = if m == 1 {
+                            &grads
+                        } else {
+                            gather_output_grads(&grads, m, j, &mut gj, exec);
+                            &gj
+                        };
+                        round_trees.push(grow_tree_pooled(
+                            binned, &layout, &rows, col, &hess, 1, &grow, &mut pool, exec,
+                        ));
+                    }
+                    round_trees
+                }
             };
 
             // Update train predictions. (Prediction uses raw thresholds, so
@@ -352,11 +369,42 @@ impl Booster {
     pub fn nbytes(&self) -> usize {
         self.trees.iter().map(|t| t.nbytes()).sum::<usize>() + self.base_score.len() * 4 + 64
     }
+
+    /// Compile this ensemble into the blocked native inference engine —
+    /// the packed-arena representation whose batch predictions are
+    /// bit-identical to [`super::predict::predict_batch`] but traverse a
+    /// contiguous 16-byte-node layout (see [`super::packed_native`]).
+    pub fn compile(&self) -> super::packed_native::NativeForest {
+        super::packed_native::NativeForest::compile(self)
+    }
 }
 
 /// Row-block granularity for the train-prediction update (fixed: block
 /// boundaries never depend on the worker count).
 const UPDATE_BLOCK_ROWS: usize = 2048;
+
+/// Chunk size for the pooled per-output gradient gather (fixed: chunk
+/// boundaries never depend on the worker count).
+const GATHER_CHUNK: usize = 8192;
+
+/// Gather output `j`'s strided gradient column (`grads[r * m + j]`) into
+/// the contiguous buffer `gj` on the persistent pool. Chunks are disjoint
+/// elementwise copies, so the gather is bit-identical for any worker count.
+fn gather_output_grads(grads: &[f64], m: usize, j: usize, gj: &mut [f64], exec: &WorkerPool) {
+    debug_assert_eq!(grads.len(), gj.len() * m);
+    if exec.threads() == 1 || gj.len() <= GATHER_CHUNK {
+        for (r, g) in gj.iter_mut().enumerate() {
+            *g = grads[r * m + j];
+        }
+        return;
+    }
+    exec.for_each_mut_chunk(gj, GATHER_CHUNK, |ci, chunk| {
+        let base = ci * GATHER_CHUNK;
+        for (k, g) in chunk.iter_mut().enumerate() {
+            *g = grads[(base + k) * m + j];
+        }
+    });
+}
 
 /// Add the round's new trees into the running train predictions, routing
 /// rows by bin codes. Rows are independent; blocks of [`UPDATE_BLOCK_ROWS`]
@@ -550,6 +598,29 @@ mod tests {
                 let h1: Vec<f64> = seq.history.iter().map(|h| h.train_loss).collect();
                 let h2: Vec<f64> = par.history.iter().map(|h| h.train_loss).collect();
                 assert_eq!(h1, h2, "loss history diverges at intra={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_gradient_gather_is_bit_identical() {
+        // > GATHER_CHUNK rows with a ragged tail so the pooled path engages.
+        let mut rng = Rng::new(91);
+        let n = 2 * GATHER_CHUNK + 777;
+        let m = 3;
+        let grads: Vec<f64> = (0..n * m).map(|_| rng.normal()).collect();
+        for j in 0..m {
+            let mut seq = vec![0.0f64; n];
+            gather_output_grads(&grads, m, j, &mut seq, &WorkerPool::new(1));
+            let expect: Vec<f64> = (0..n).map(|r| grads[r * m + j]).collect();
+            assert_eq!(seq, expect);
+            for workers in [2usize, 8] {
+                let exec = WorkerPool::new(workers);
+                let mut par = vec![0.0f64; n];
+                gather_output_grads(&grads, m, j, &mut par, &exec);
+                let sb: Vec<u64> = seq.iter().map(|v| v.to_bits()).collect();
+                let pb: Vec<u64> = par.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(sb, pb, "gather diverges at j={j} workers={workers}");
             }
         }
     }

@@ -14,7 +14,12 @@
 //! * the boosting loop with learning rate `η`, optional evaluation set and
 //!   early stopping, squared-error and logistic objectives ([`booster`],
 //!   [`objective`]);
-//! * a batched, allocation-free prediction path ([`predict`]);
+//! * a batched, allocation-free prediction path ([`predict`]) plus the
+//!   blocked native inference engine ([`packed_native`]): ensembles are
+//!   compiled post-training into a contiguous arena of 16-byte
+//!   breadth-first node records and traversed row-block × tree-tile with
+//!   branch-free child selection — bit-identical to [`predict`] and the
+//!   default sampling backend;
 //! * a compact binary model format with save/load for the streaming model
 //!   store — the stand-in for XGBoost's UBJ ([`serialize`]);
 //! * a multi-pass *data iterator* for out-of-core quantile construction,
@@ -28,11 +33,13 @@ pub mod split;
 pub mod tree;
 pub mod booster;
 pub mod objective;
+pub mod packed_native;
 pub mod predict;
 pub mod serialize;
 
 pub use binning::{BinCuts, BinnedMatrix, BatchIterator, MISSING_BIN};
 pub use booster::{Booster, EvalRecord, TrainParams};
+pub use packed_native::NativeForest;
 pub use objective::Objective;
 pub use tree::{Tree, TreeKind};
 

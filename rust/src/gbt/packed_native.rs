@@ -1,0 +1,487 @@
+//! Blocked native inference engine — the default sampling backend.
+//!
+//! [`super::predict::predict_batch`] walks six parallel node `Vec`s per
+//! tree with data-dependent branches, touching ~40 bytes spread across six
+//! cache lines per visited node. During generation that cost is paid
+//! `n_t × n_y` times over the whole batch (the paper's Issues 8/9 loop), so
+//! field-evaluation throughput bounds sampling throughput.
+//!
+//! [`NativeForest`] is the cache-optimized alternative: after training, the
+//! whole ensemble is flattened into one contiguous arena of 16-byte
+//! [`PackedNode`] records laid out **breadth-first per tree** (children are
+//! adjacent, so one `left` offset addresses both: `right == left + 1`).
+//! Leaves self-loop (`left == own index`), which lets traversal run a fixed
+//! `depth`-iteration loop with **branch-free child selection** — the NaN
+//! default direction and the leaf bit live in a flags byte, and the next
+//! node index is pure comparison arithmetic, so the hot loop has no
+//! unpredictable branches at all.
+//!
+//! Traversal is blocked two ways: [`ROW_BLOCK`] rows are kept hot in L1
+//! while a [`TREE_TILE`]-tree tile's node records stream through L1/L2, and
+//! tiles advance in tree order. Because every output element accumulates
+//! its per-tree contributions in exactly the tree order of
+//! [`super::predict::predict_batch`], the engine is **bit-identical** to
+//! the reference path — for any row blocking and any worker count. The
+//! fixed-shape [`super::predict::PackedForest`] (the XLA-oriented packing)
+//! doubles as a parity oracle for this engine.
+
+use super::booster::Booster;
+use super::predict::PREDICT_BLOCK_ROWS;
+use super::tree::TreeKind;
+use crate::coordinator::pool::WorkerPool;
+use crate::tensor::MatrixView;
+use std::collections::VecDeque;
+
+/// Rows traversed together per (tile, block) kernel call; 64 rows × p
+/// features stay resident in L1 across a whole tree tile.
+pub const ROW_BLOCK: usize = 64;
+
+/// Trees per tile; a tile's node records (≤ `TREE_TILE · 2^(depth+1) · 16`
+/// bytes) stay hot while every row block streams through it.
+pub const TREE_TILE: usize = 16;
+
+/// Flags bit: missing values (NaN) default to the left child.
+const FLAG_DEFAULT_LEFT: u8 = 0b01;
+/// Flags bit: this node is a leaf (self-looping; traversal never leaves it).
+const FLAG_LEAF: u8 = 0b10;
+
+/// One node of the packed arena — exactly 16 bytes, interleaved so a single
+/// cache line holds four complete nodes.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+struct PackedNode {
+    /// Split feature (0 for leaves).
+    feature: u16,
+    /// [`FLAG_DEFAULT_LEFT`] | [`FLAG_LEAF`].
+    flags: u8,
+    _pad: u8,
+    /// Split threshold; `x < threshold` goes left (0 for leaves).
+    threshold: f32,
+    /// Arena index of the left child; the right child is `left + 1`
+    /// (breadth-first layout). Leaves store their own index (self-loop).
+    left: u32,
+    /// Leaves: start index of this leaf's `m` values in the values arena.
+    payload: u32,
+}
+
+const _: () = assert!(std::mem::size_of::<PackedNode>() == 16);
+
+/// Per-tree metadata in the compiled forest.
+#[derive(Clone, Copy, Debug)]
+struct PackedTree {
+    /// Arena index of the root node.
+    root: u32,
+    /// Iterations needed for any row to reach (and self-loop on) a leaf.
+    depth: u32,
+    /// Output written by this tree: `-1` writes all `m` outputs
+    /// ([`TreeKind::Multi`]), otherwise the single slot
+    /// ([`TreeKind::Single`]).
+    out_slot: i32,
+}
+
+/// A compiled ensemble: contiguous breadth-first node arena + leaf-value
+/// arena + per-tree metadata. Built once per trained [`Booster`] (see
+/// [`Booster::compile`]); predictions are bit-identical to
+/// [`super::predict::predict_batch`].
+#[derive(Clone, Debug)]
+pub struct NativeForest {
+    /// Output dimension.
+    pub m: usize,
+    pub n_features: usize,
+    pub eta: f32,
+    pub base_score: Vec<f32>,
+    nodes: Vec<PackedNode>,
+    values: Vec<f32>,
+    trees: Vec<PackedTree>,
+}
+
+impl NativeForest {
+    /// Flatten a trained booster into the packed arena. Tree order (and
+    /// therefore accumulation order) is preserved exactly.
+    pub fn compile(booster: &Booster) -> NativeForest {
+        assert!(
+            booster.n_features <= u16::MAX as usize + 1,
+            "packed node stores features as u16"
+        );
+        let total_nodes: usize = booster.trees.iter().map(|t| t.n_nodes()).sum();
+        assert!(total_nodes <= u32::MAX as usize, "node arena index overflow");
+        let m = booster.m;
+        let mut nf = NativeForest {
+            m,
+            n_features: booster.n_features,
+            eta: booster.params.eta,
+            base_score: booster.base_score.clone(),
+            nodes: Vec::with_capacity(total_nodes),
+            values: Vec::new(),
+            trees: Vec::with_capacity(booster.trees.len()),
+        };
+        for (ti, tree) in booster.trees.iter().enumerate() {
+            let out_slot = match booster.params.kind {
+                TreeKind::Multi => -1,
+                TreeKind::Single => (ti % m) as i32,
+            };
+            let base = nf.nodes.len() as u32;
+            // Breadth-first renumbering: children are pushed consecutively,
+            // so siblings land adjacent and `right == left + 1` holds.
+            let n_nodes = tree.n_nodes();
+            let mut order = Vec::with_capacity(n_nodes);
+            let mut new_id = vec![u32::MAX; n_nodes];
+            let mut queue = VecDeque::with_capacity(n_nodes);
+            queue.push_back(0usize);
+            while let Some(old) = queue.pop_front() {
+                new_id[old] = base + order.len() as u32;
+                order.push(old);
+                if !tree.is_leaf(old) {
+                    queue.push_back(tree.left[old] as usize);
+                    queue.push_back(tree.right[old] as usize);
+                }
+            }
+            debug_assert_eq!(order.len(), n_nodes, "tree has unreachable nodes");
+            for &old in &order {
+                let me = new_id[old];
+                if tree.is_leaf(old) {
+                    let payload = nf.values.len() as u32;
+                    nf.values
+                        .extend_from_slice(&tree.values[old * tree.m..(old + 1) * tree.m]);
+                    nf.nodes.push(PackedNode {
+                        feature: 0,
+                        flags: FLAG_LEAF | FLAG_DEFAULT_LEFT,
+                        _pad: 0,
+                        threshold: 0.0,
+                        left: me,
+                        payload,
+                    });
+                } else {
+                    let left = new_id[tree.left[old] as usize];
+                    debug_assert_eq!(
+                        new_id[tree.right[old] as usize],
+                        left + 1,
+                        "BFS siblings must be adjacent"
+                    );
+                    let flags = if tree.default_left[old] { FLAG_DEFAULT_LEFT } else { 0 };
+                    nf.nodes.push(PackedNode {
+                        feature: tree.feature[old] as u16,
+                        flags,
+                        _pad: 0,
+                        threshold: tree.threshold[old],
+                        left,
+                        payload: 0,
+                    });
+                }
+            }
+            nf.trees.push(PackedTree {
+                root: base,
+                depth: tree.max_depth() as u32,
+                out_slot,
+            });
+        }
+        assert!(nf.values.len() <= u32::MAX as usize, "leaf-value arena index overflow");
+        nf
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Logical size in bytes (model-store accounting: the compiled engine
+    /// is counted on top of the booster it was built from).
+    pub fn nbytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<PackedNode>()
+            + self.values.len() * 4
+            + self.trees.len() * std::mem::size_of::<PackedTree>()
+            + self.base_score.len() * 4
+    }
+
+    /// Run one tree tile over one row block, accumulating into `ob`
+    /// (`rows × m`, rows ≤ [`ROW_BLOCK`]). `xb` is the block's feature rows
+    /// (`rows × p`).
+    #[inline]
+    fn run_tile(&self, tile: std::ops::Range<usize>, xb: &[f32], p: usize, ob: &mut [f32]) {
+        let m = self.m;
+        let rows = ob.len() / m;
+        debug_assert!(rows <= ROW_BLOCK);
+        debug_assert_eq!(xb.len(), rows * p);
+        let nodes = &self.nodes[..];
+        let eta = self.eta;
+        let mut idx = [0u32; ROW_BLOCK];
+        for t in tile {
+            let pt = self.trees[t];
+            idx[..rows].fill(pt.root);
+            // Fixed-depth walk: leaves self-loop, so after `depth` steps
+            // every row sits on its leaf. The child select is branch-free:
+            // NaN compares false, so `go_left = lt | (nan & default_left)`
+            // reproduces leaf_for's NaN routing, and the leaf bit masks the
+            // step to 0 (self-loop).
+            for _ in 0..pt.depth {
+                for (i, node) in idx[..rows].iter_mut().enumerate() {
+                    let nd = nodes[*node as usize];
+                    let v = xb[i * p + nd.feature as usize];
+                    let lt = v < nd.threshold;
+                    let nan = v.is_nan();
+                    let default_left = nd.flags & FLAG_DEFAULT_LEFT != 0;
+                    let go_left = lt | (nan & default_left);
+                    let internal = u32::from(nd.flags & FLAG_LEAF == 0);
+                    *node = nd.left + (u32::from(!go_left) & internal);
+                }
+            }
+            match pt.out_slot {
+                -1 => {
+                    for (node, o) in idx[..rows].iter().zip(ob.chunks_mut(m)) {
+                        let at = nodes[*node as usize].payload as usize;
+                        let vals = &self.values[at..at + m];
+                        for (oj, &vj) in o.iter_mut().zip(vals) {
+                            *oj += eta * vj;
+                        }
+                    }
+                }
+                j => {
+                    let j = j as usize;
+                    for (node, o) in idx[..rows].iter().zip(ob.chunks_mut(m)) {
+                        let at = nodes[*node as usize].payload as usize;
+                        o[j] += eta * self.values[at];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Blocked batch prediction into `out` (row-major `[n × m]`), starting
+    /// from the base score — bit-identical to
+    /// [`super::predict::predict_batch`] on the source booster.
+    pub fn predict_into(&self, x: &MatrixView<'_>, out: &mut [f32]) {
+        let n = x.rows;
+        let m = self.m;
+        assert_eq!(out.len(), n * m, "output buffer shape mismatch");
+        assert_eq!(x.cols, self.n_features, "feature count mismatch");
+        for r in 0..n {
+            out[r * m..(r + 1) * m].copy_from_slice(&self.base_score);
+        }
+        let p = x.cols;
+        // Tile-outer: a tile's nodes stay hot in cache while every row
+        // block streams through it; per-element accumulation order is still
+        // global tree order (tiles advance in order), hence bit-identity.
+        let mut tile_start = 0;
+        while tile_start < self.trees.len() {
+            let tile = tile_start..(tile_start + TREE_TILE).min(self.trees.len());
+            let mut r0 = 0;
+            while r0 < n {
+                let rows = ROW_BLOCK.min(n - r0);
+                self.run_tile(
+                    tile.clone(),
+                    &x.data[r0 * p..(r0 + rows) * p],
+                    p,
+                    &mut out[r0 * m..(r0 + rows) * m],
+                );
+                r0 += rows;
+            }
+            tile_start = tile.end;
+        }
+    }
+
+    /// Row-block-parallel [`predict_into`](Self::predict_into) on a
+    /// persistent pool: the same fixed [`PREDICT_BLOCK_ROWS`] blocks as
+    /// [`super::predict::predict_batch_par`], each block running the blocked
+    /// engine into its disjoint slice — rows are independent, so output is
+    /// bit-identical for any worker count.
+    pub fn predict_into_pooled(&self, x: &MatrixView<'_>, out: &mut [f32], exec: &WorkerPool) {
+        let n = x.rows;
+        let m = self.m;
+        assert_eq!(out.len(), n * m, "output buffer shape mismatch");
+        if exec.threads() == 1 || n <= PREDICT_BLOCK_ROWS {
+            self.predict_into(x, out);
+            return;
+        }
+        let p = x.cols;
+        exec.for_each_mut_chunk(out, PREDICT_BLOCK_ROWS * m, |ci, chunk| {
+            let r0 = ci * PREDICT_BLOCK_ROWS;
+            let rows = chunk.len() / m;
+            let sub = MatrixView { rows, cols: p, data: &x.data[r0 * p..(r0 + rows) * p] };
+            self.predict_into(&sub, chunk);
+        });
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`predict_into`](Self::predict_into).
+    pub fn predict(&self, x: &MatrixView<'_>) -> crate::tensor::Matrix {
+        let mut out = crate::tensor::Matrix::zeros(x.rows, self.m);
+        self.predict_into(x, &mut out.data);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbt::booster::TrainParams;
+    use crate::gbt::predict::{predict_batch, PackedForest};
+    use crate::gbt::tree::Tree;
+    use crate::tensor::Matrix;
+    use crate::util::prop::assert_close;
+    use crate::util::rng::Rng;
+
+    fn trained(kind: TreeKind, seed: u64, n_trees: usize, depth: usize) -> (Matrix, Booster) {
+        let mut rng = Rng::new(seed);
+        let n = 300;
+        let x = Matrix::randn(n, 4, &mut rng);
+        let mut y = Matrix::zeros(n, 2);
+        for r in 0..n {
+            y.set(r, 0, x.at(r, 0) * 1.5 - x.at(r, 2));
+            y.set(r, 1, (x.at(r, 1) * x.at(r, 3)).tanh());
+        }
+        let params = TrainParams {
+            n_trees,
+            max_depth: depth,
+            kind,
+            ..Default::default()
+        };
+        let b = Booster::train(&x.view(), &y.view(), params, None);
+        (x, b)
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn bit_identical_to_predict_batch_both_kinds() {
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (x, b) = trained(kind, 7, 12, 5);
+            let nf = b.compile();
+            assert_eq!(nf.n_trees(), b.trees.len());
+            assert_eq!(nf.n_nodes(), b.n_nodes());
+            // Training data + unseen data, including a ragged (< ROW_BLOCK)
+            // and a multi-block batch.
+            let mut rng = Rng::new(99);
+            for rows in [1usize, ROW_BLOCK - 1, ROW_BLOCK, 3 * ROW_BLOCK + 17] {
+                let xb = Matrix::randn(rows, 4, &mut rng);
+                let mut reference = vec![0.0f32; rows * b.m];
+                predict_batch(&b, &xb.view(), &mut reference);
+                let mut blocked = vec![0.0f32; rows * b.m];
+                nf.predict_into(&xb.view(), &mut blocked);
+                assert_eq!(bits(&reference), bits(&blocked), "{kind:?} rows={rows}");
+            }
+            let mut reference = vec![0.0f32; x.rows * b.m];
+            predict_batch(&b, &x.view(), &mut reference);
+            let blocked = nf.predict(&x.view());
+            assert_eq!(bits(&reference), bits(&blocked.data), "{kind:?} train rows");
+        }
+    }
+
+    #[test]
+    fn nan_rows_follow_default_directions_exactly() {
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (_, b) = trained(kind, 11, 10, 5);
+            let nf = b.compile();
+            let mut rng = Rng::new(5);
+            let mut x = Matrix::randn(200, 4, &mut rng);
+            for r in 0..200 {
+                // Sprinkle NaNs over every column pattern, incl. all-NaN rows.
+                for c in 0..4 {
+                    if (r + c) % 3 == 0 || r % 17 == 0 {
+                        x.set(r, c, f32::NAN);
+                    }
+                }
+            }
+            let mut reference = vec![0.0f32; 200 * b.m];
+            predict_batch(&b, &x.view(), &mut reference);
+            let mut blocked = vec![0.0f32; 200 * b.m];
+            nf.predict_into(&x.view(), &mut blocked);
+            assert_eq!(bits(&reference), bits(&blocked), "{kind:?} NaN routing diverges");
+        }
+    }
+
+    #[test]
+    fn ragged_trees_and_single_leaf_trees() {
+        // Hand-built ensemble with wildly different tree shapes, including
+        // a depth-0 single-leaf tree (the fixed-depth walk must handle
+        // depth == 0 without stepping).
+        let stump = Tree {
+            m: 1,
+            feature: vec![0],
+            threshold: vec![0.0],
+            left: vec![-1],
+            right: vec![-1],
+            default_left: vec![true],
+            values: vec![2.5],
+        };
+        let split = Tree {
+            m: 1,
+            feature: vec![1, 0, 0],
+            threshold: vec![0.5, 0.0, 0.0],
+            left: vec![1, -1, -1],
+            right: vec![2, -1, -1],
+            default_left: vec![false, true, true],
+            values: vec![0.0, -1.0, 4.0],
+        };
+        let b = Booster {
+            params: TrainParams { n_trees: 2, kind: TreeKind::Single, ..Default::default() },
+            n_features: 2,
+            m: 1,
+            base_score: vec![0.25],
+            trees: vec![stump, split],
+            best_round: 1,
+            history: Vec::new(),
+        };
+        let nf = b.compile();
+        let x = Matrix::from_vec(
+            4,
+            2,
+            vec![0.0, 0.0, 0.0, 1.0, f32::NAN, f32::NAN, 3.0, 0.4],
+        );
+        let mut reference = vec![0.0f32; 4];
+        predict_batch(&b, &x.view(), &mut reference);
+        let mut blocked = vec![0.0f32; 4];
+        nf.predict_into(&x.view(), &mut blocked);
+        assert_eq!(bits(&reference), bits(&blocked));
+    }
+
+    #[test]
+    fn pooled_blocked_prediction_matches_for_any_worker_count() {
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (_, b) = trained(kind, 21, 8, 4);
+            let nf = b.compile();
+            let mut rng = Rng::new(3);
+            // Spans several PREDICT_BLOCK_ROWS blocks with a ragged tail.
+            let x = Matrix::randn(2 * PREDICT_BLOCK_ROWS + 137, 4, &mut rng);
+            let mut seq = vec![0.0f32; x.rows * b.m];
+            nf.predict_into(&x.view(), &mut seq);
+            for workers in [1usize, 2, 8] {
+                let exec = WorkerPool::new(workers);
+                let mut par = vec![0.0f32; x.rows * b.m];
+                nf.predict_into_pooled(&x.view(), &mut par, &exec);
+                assert_eq!(bits(&seq), bits(&par), "{kind:?} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_forest_is_a_consistent_oracle() {
+        // The XLA-oriented fixed-shape packing and the blocked engine must
+        // agree on the same booster (oracle check, incl. NaNs).
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (_, b) = trained(kind, 31, 9, 6);
+            let nf = b.compile();
+            let oracle = PackedForest::pack(&b);
+            let mut rng = Rng::new(13);
+            let mut x = Matrix::randn(150, 4, &mut rng);
+            for r in (0..150).step_by(7) {
+                x.set(r, r % 4, f32::NAN);
+            }
+            let via_oracle = oracle.predict(&x.view());
+            let via_blocked = nf.predict(&x.view());
+            assert_close(&via_oracle.data, &via_blocked.data, 1e-6, 1e-6).unwrap();
+        }
+    }
+
+    #[test]
+    fn nbytes_is_positive_and_node_proportional() {
+        let (_, b) = trained(TreeKind::Multi, 41, 6, 4);
+        let nf = b.compile();
+        assert!(nf.nbytes() >= nf.n_nodes() * 16);
+        assert_eq!(nf.n_nodes(), b.n_nodes());
+    }
+}

@@ -1,10 +1,16 @@
-//! Batched, allocation-free ensemble prediction — the generation hot path.
+//! Batched, allocation-free ensemble prediction — the reference scalar path.
 //!
 //! During sampling the forest is evaluated `n_t` times over the whole batch,
 //! so per-row overhead matters. The batch loop is tree-outer/row-inner,
 //! which keeps each tree's node arrays hot in cache while streaming rows —
 //! the same cache-locality argument the paper makes for XGBoost's C++
 //! inference (Issue 8).
+//!
+//! [`predict_batch`] defines the *bit-identity contract* for every other
+//! backend: the blocked native engine ([`super::packed_native`], the
+//! default sampling path) must reproduce it exactly, and the fixed-shape
+//! [`PackedForest`] here — originally the XLA packing — doubles as its
+//! parity oracle.
 
 use super::booster::Booster;
 use super::tree::TreeKind;
@@ -80,7 +86,10 @@ pub fn predict_batch_par(
     });
 }
 
-/// Flattened forest tensors for the XLA backend and for cheap traversal.
+/// Flattened forest tensors for the XLA backend — and the parity oracle
+/// for the blocked native engine ([`super::packed_native::NativeForest`]):
+/// an independently-derived flat representation whose reference traversal
+/// pins down the exact leaf routing (incl. NaN defaults and self-loops).
 ///
 /// All trees are padded to a common node count; `feature` is `-1` padded.
 /// Layout matches `python/compile/kernels/forest_predict.py`.

@@ -248,6 +248,25 @@ mod tests {
     }
 
     #[test]
+    fn roundtripped_booster_compiles_to_identical_engine() {
+        // A booster reloaded from the model store must compile into a
+        // blocked engine that predicts byte-identically to one compiled
+        // from the in-memory original (the store-load sampling path).
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (x, b) = trained(kind);
+            let b2 = from_bytes(&to_bytes(&b)).unwrap();
+            let e1 = b.compile();
+            let e2 = b2.compile();
+            let p1 = e1.predict(&x.view());
+            let p2 = e2.predict(&x.view());
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&p1.data), bits(&p2.data), "{kind:?}");
+            // And both match the scalar reference path exactly.
+            assert_eq!(bits(&b.predict(&x.view()).data), bits(&p1.data), "{kind:?}");
+        }
+    }
+
+    #[test]
     fn rejects_corrupt_data() {
         let (_, b) = trained(TreeKind::Single);
         let mut bytes = to_bytes(&b);

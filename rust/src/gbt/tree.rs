@@ -70,6 +70,12 @@ impl Tree {
         self.left.iter().filter(|&&l| l < 0).count()
     }
 
+    /// Whether node `id` is a leaf (no children).
+    #[inline]
+    pub fn is_leaf(&self, id: usize) -> bool {
+        self.left[id] < 0
+    }
+
     pub fn max_depth(&self) -> usize {
         fn depth(t: &Tree, id: usize) -> usize {
             if t.left[id] < 0 {

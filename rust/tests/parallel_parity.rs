@@ -13,10 +13,12 @@ use caloforest::coordinator::pool::WorkerPool;
 use caloforest::coordinator::{run_training, worker_budget, RunOptions};
 use caloforest::data::synthetic_dataset;
 use caloforest::forest::generate;
-use caloforest::forest::sampler::GenerateConfig;
+use caloforest::forest::sampler::{generate_with, GenerateConfig, ParNativeField};
 use caloforest::forest::trainer::{
     prepare, train_forest, train_job, train_job_in, ForestTrainConfig,
 };
+use caloforest::forest::ModelKind;
+use caloforest::gbt::predict::predict_batch;
 use caloforest::gbt::{serialize, Booster, TrainParams, TreeKind};
 use caloforest::tensor::Matrix;
 use caloforest::util::rng::Rng;
@@ -228,12 +230,101 @@ fn rebalanced_run_training_is_bit_identical_and_reports_grants() {
 }
 
 #[test]
+fn blocked_engine_is_bit_identical_to_predict_batch_across_widths() {
+    // The compiled NativeForest must reproduce the reference scalar path
+    // exactly — both tree kinds, NaN rows, ragged tree sizes (early
+    // stopping truncates mid-round growth), every CI worker width.
+    let (x, t, xv, tv) = big_regression();
+    let mut rng = Rng::new(41);
+    for kind in [TreeKind::Single, TreeKind::Multi] {
+        let params = TrainParams {
+            n_trees: 4,
+            max_depth: 5,
+            kind,
+            early_stopping_rounds: 2,
+            ..Default::default()
+        };
+        let b = Booster::train_with(
+            &x.view(),
+            &t.view(),
+            params,
+            Some((&xv.view(), &tv.view())),
+            &WorkerPool::new(1),
+        );
+        let engine = b.compile();
+        let mut batch = Matrix::randn(3000, x.cols, &mut rng);
+        for r in (0..batch.rows).step_by(13) {
+            batch.set(r, r % batch.cols, f32::NAN);
+        }
+        let mut reference = vec![0.0f32; batch.rows * b.m];
+        predict_batch(&b, &batch.view(), &mut reference);
+        let ref_bits: Vec<u32> = reference.iter().map(|v| v.to_bits()).collect();
+        let mut blocked = vec![0.0f32; batch.rows * b.m];
+        engine.predict_into(&batch.view(), &mut blocked);
+        assert_eq!(
+            ref_bits,
+            blocked.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{kind:?} blocked engine diverges from predict_batch"
+        );
+        for workers in worker_counts() {
+            let exec = WorkerPool::new(workers);
+            let mut pooled = vec![0.0f32; batch.rows * b.m];
+            engine.predict_into_pooled(&batch.view(), &mut pooled, &exec);
+            assert_eq!(
+                ref_bits,
+                pooled.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{kind:?} pooled blocked engine diverges at workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_default_sampling_backend_is_byte_identical() {
+    // generate()'s default backend swapped from booster traversal
+    // (ParNativeField) to the compiled blocked engine: for a fixed seed the
+    // output must not change by a single byte — both model kinds, every CI
+    // worker width.
+    let (x, y) = synthetic_dataset(300, 5, 2, 23);
+    for model_kind in [ModelKind::Flow, ModelKind::Diffusion] {
+        let cfg = ForestTrainConfig {
+            kind: model_kind,
+            eps: if model_kind == ModelKind::Diffusion { 0.01 } else { 0.0 },
+            n_t: 3,
+            k_dup: 6,
+            params: TrainParams { n_trees: 4, max_depth: 4, ..Default::default() },
+            seed: 29,
+            ..Default::default()
+        };
+        let (model, _) = train_forest(&cfg, &x, Some(&y));
+        // Batch large enough to span several prediction blocks.
+        let gen_cfg = GenerateConfig::new(3000, 13);
+        let exec = WorkerPool::new(1);
+        let reference =
+            generate_with(&model, &ParNativeField { model: &model, exec: &exec }, &gen_cfg);
+        let ref_bits: Vec<u32> = reference.0.data.iter().map(|v| v.to_bits()).collect();
+        for workers in worker_counts() {
+            let sampled = generate(&model, &gen_cfg.with_workers(workers));
+            let got_bits: Vec<u32> = sampled.0.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                ref_bits, got_bits,
+                "{model_kind:?} samples diverge at workers={workers}"
+            );
+            assert_eq!(reference.1, sampled.1, "{model_kind:?} labels diverge");
+        }
+    }
+}
+
+#[test]
 fn auto_budget_saturates_few_job_runs() {
     // Few jobs × big budget: the policy must push the spare workers down
     // into the jobs instead of leaving them idle.
     let (jobs, intra) = worker_budget(8, 2, 0);
     assert_eq!((jobs, intra), (2, 4));
-    // And the auto split is what run_training actually applies.
+    // And the auto split is what run_training actually applies. The split
+    // is size-aware since PR 3: job-level width is additionally capped by
+    // the reported effective width (⌈Σ sizes / max size⌉), which for the
+    // near-balanced random labels here is the full 4-job width.
     let (x, y) = synthetic_dataset(120, 4, 2, 3);
     let cfg = synthetic_cfg(TreeKind::Single);
     let out = run_training(
@@ -242,7 +333,13 @@ fn auto_budget_saturates_few_job_runs() {
         Some(&y),
         &RunOptions { workers: 8, ..Default::default() },
     );
-    // 2 timesteps × 2 classes = 4 jobs; budget 8 ⇒ 4 job workers × 2 intra.
-    assert_eq!(out.job_workers, 4);
-    assert_eq!(out.intra_job_threads, 2);
+    // 2 timesteps × 2 classes = 4 jobs; budget 8.
+    let expect_jobs = out.effective_job_width.min(4).min(8);
+    assert_eq!(out.job_workers, expect_jobs);
+    assert_eq!(out.intra_job_threads, (8 / expect_jobs).max(1));
+    assert!(
+        out.effective_job_width >= 3,
+        "random binary labels must be near-balanced, got width {}",
+        out.effective_job_width
+    );
 }
