@@ -8,10 +8,11 @@ use caloforest::coordinator::memory::TrackingAlloc;
 use caloforest::coordinator::pool::{self as cpool, WorkerPool};
 use caloforest::forest::noising;
 use caloforest::forest::schedule::VpSchedule;
+use caloforest::gbt::booster::{update_eval_preds, update_train_preds};
 use caloforest::gbt::histogram::{HistLayout, Histogram};
 use caloforest::gbt::predict::PackedForest;
 use caloforest::gbt::tree::PAR_BUILD_MIN_ROWS;
-use caloforest::gbt::{BinnedMatrix, Booster, TrainParams, TreeKind};
+use caloforest::gbt::{BinnedMatrix, Booster, QuantForest, TrainParams, TreeKind};
 use caloforest::runtime::{xla_sampler::XlaField, PjrtRuntime};
 use caloforest::tensor::Matrix;
 use caloforest::util::bench::Bench;
@@ -229,23 +230,112 @@ fn main() {
         rows_n as f64 / m_old8.mean() / 1e6,
         rows_n as f64 / m_new8.mean() / 1e6,
     );
+    // --- Training-update hot path: float references vs quantized engine. --
+    // Every boosting round adds its new trees into the running train and
+    // eval predictions. The float-raw reference walks raw thresholds
+    // (`update_eval_preds`), the binned reference re-derives each visited
+    // node's split bin by binary search per row (`update_train_preds`), and
+    // the quantized engine compiles the round group once into a u8-bin
+    // arena and traverses codes directly (`QuantForest`, the production
+    // training path since this PR). Outputs are bit-identical; only the
+    // routing differs.
+    let upd_params = TrainParams {
+        n_trees: 2,
+        max_depth: 6,
+        kind: TreeKind::Multi,
+        ..Default::default()
+    };
+    let upd_binned = BinnedMatrix::fit_bin(&x.view(), upd_params.max_bins);
+    let upd_booster = Booster::train_binned(&upd_binned, &targets.view(), upd_params, None);
+    let group = &upd_booster.trees[..1]; // one Multi round group
+    let upd_m = upd_booster.m;
+    let upd_eta = upd_booster.params.eta;
+    let upd_qf = QuantForest::compile_trees(
+        group,
+        TreeKind::Multi,
+        upd_m,
+        upd_eta,
+        vec![0.0; upd_m],
+        &upd_binned.cuts,
+    );
+    let mut upd_preds = vec![0.0f32; n * upd_m];
+    let upd_pool1 = WorkerPool::new(1);
+    let mut upd_results: Vec<(&str, usize, f64)> = Vec::new();
+    for (threads, upd_pool) in [(1usize, &upd_pool1), (8, &pool8)] {
+        let m_raw = bench.time(&format!("train-update float-raw ({threads} thread)"), || {
+            update_eval_preds(
+                group,
+                &x.view(),
+                &mut upd_preds,
+                upd_m,
+                TreeKind::Multi,
+                upd_eta,
+                upd_pool,
+            );
+            std::hint::black_box(upd_preds[0]);
+        });
+        upd_results.push(("float-raw", threads, m_raw.mean()));
+        let m_ref = bench.time(&format!("train-update binned-ref ({threads} thread)"), || {
+            update_train_preds(
+                group,
+                &upd_binned,
+                &mut upd_preds,
+                upd_m,
+                TreeKind::Multi,
+                upd_eta,
+                upd_pool,
+            );
+            std::hint::black_box(upd_preds[0]);
+        });
+        upd_results.push(("binned-ref", threads, m_ref.mean()));
+        let m_quant = bench.time(&format!("train-update quant ({threads} thread)"), || {
+            upd_qf.accumulate_pooled(&upd_binned, &mut upd_preds, upd_pool);
+            std::hint::black_box(upd_preds[0]);
+        });
+        upd_results.push(("quant", threads, m_quant.mean()));
+    }
+    for &(backend, threads, secs) in &upd_results {
+        bench.csv(
+            "path,label,mean_secs",
+            format!("train-update,{backend}-t{threads},{secs:.9}"),
+        );
+    }
+    let upd_mean = |backend: &str, threads: usize| {
+        upd_results
+            .iter()
+            .find(|&&(b, t, _)| b == backend && t == threads)
+            .map(|&(_, _, s)| s)
+            .unwrap_or(f64::NAN)
+    };
+    let upd_speedup1 = upd_mean("binned-ref", 1) / upd_mean("quant", 1).max(1e-12);
+    let upd_speedup8 = upd_mean("binned-ref", 8) / upd_mean("quant", 8).max(1e-12);
+    println!(
+        "train-update: binned-ref {:.2} vs quant {:.2} Mrow/s (1 thread, {upd_speedup1:.2}x); \
+         binned-ref {:.2} vs quant {:.2} Mrow/s (8 threads, {upd_speedup8:.2}x)",
+        n as f64 / upd_mean("binned-ref", 1) / 1e6,
+        n as f64 / upd_mean("quant", 1) / 1e6,
+        n as f64 / upd_mean("binned-ref", 8) / 1e6,
+        n as f64 / upd_mean("quant", 8) / 1e6,
+    );
+
     // Full-size runs persist the trajectory at the workspace root (cargo
     // runs benches from the package dir, so anchor on the manifest path)
     // where the committed file lives; smoke/--test runs use tiny sizes and
     // must not overwrite the recorded baseline.
     if !quick {
         use caloforest::util::Json;
-        let mut doc = Json::obj();
+        let row_json = |rows: usize, backend: &str, threads: usize, secs: f64| {
+            let mut o = Json::obj();
+            o.set("backend", backend)
+                .set("threads", threads)
+                .set("mean_secs", secs)
+                .set("rows_per_sec", rows as f64 / secs.max(1e-12));
+            o
+        };
+        let mut sampler_sec = Json::obj();
         let results = sampler_results
             .iter()
-            .map(|&(backend, threads, secs)| {
-                let mut o = Json::obj();
-                o.set("backend", backend)
-                    .set("threads", threads)
-                    .set("mean_secs", secs)
-                    .set("rows_per_sec", rows_n as f64 / secs.max(1e-12));
-                o
-            })
+            .map(|&(backend, threads, secs)| row_json(rows_n, backend, threads, secs))
             .collect::<Vec<_>>();
         let mut config = Json::obj();
         config
@@ -254,12 +344,34 @@ fn main() {
             .set("trees", booster.trees.len())
             .set("max_depth", booster.params.max_depth)
             .set("outputs", booster.m);
-        doc.set("bench", "sampler_field_eval")
-            .set("status", "measured")
+        sampler_sec
             .set("config", config)
             .set("results", Json::Arr(results))
             .set("single_thread_speedup", speedup1)
             .set("pooled_speedup", speedup8);
+        let mut upd_sec = Json::obj();
+        let results = upd_results
+            .iter()
+            .map(|&(backend, threads, secs)| row_json(n, backend, threads, secs))
+            .collect::<Vec<_>>();
+        let mut config = Json::obj();
+        config
+            .set("rows", n)
+            .set("features", p)
+            .set("trees_per_round", group.len())
+            .set("max_depth", upd_booster.params.max_depth)
+            .set("outputs", upd_m)
+            .set("kind", "Multi");
+        upd_sec
+            .set("config", config)
+            .set("results", Json::Arr(results))
+            .set("quant_speedup_1t", upd_speedup1)
+            .set("quant_speedup_8t", upd_speedup8);
+        let mut doc = Json::obj();
+        doc.set("bench", "perf_hotpaths")
+            .set("status", "measured")
+            .set("sampler_field_eval", sampler_sec)
+            .set("training_update", upd_sec);
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .parent()
             .map(|root| root.join("BENCH_sampling.json"))

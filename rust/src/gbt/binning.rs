@@ -178,6 +178,33 @@ impl BinCuts {
     pub fn threshold(&self, f: usize, bin: u8) -> f32 {
         self.cuts[f][bin as usize]
     }
+
+    /// Recover the split bin whose upper edge is `thr` — the exact inverse
+    /// of [`threshold`](Self::threshold). Trees grown on these cuts store
+    /// thresholds that *are* cut values, and cuts are strictly ascending,
+    /// so the binary search hits exactly; the quantized training engine
+    /// ([`crate::gbt::packed_binned::QuantForest`]) and the scalar binned
+    /// router ([`crate::gbt::booster::leaf_for_binned`]) both rely on this
+    /// to turn `x < thr` into `code <= bin`.
+    #[inline]
+    pub fn bin_for_threshold(&self, f: usize, thr: f32) -> u8 {
+        let cuts = &self.cuts[f];
+        match cuts.binary_search_by(|c| c.partial_cmp(&thr).unwrap()) {
+            Ok(i) => i as u8,
+            Err(i) => {
+                // A miss means the tree was not grown on these cuts — the
+                // compiled routing would silently diverge from the float
+                // path. Fail loudly under debug assertions (the CI parity
+                // legs run the dev profile); release falls back to the
+                // nearest bin.
+                debug_assert!(
+                    false,
+                    "threshold {thr} is not a cut of feature {f}: tree/cuts mismatch"
+                );
+                (i.min(cuts.len().saturating_sub(1))) as u8
+            }
+        }
+    }
 }
 
 /// Compute ascending upper-edge cuts for one column (values get sorted).
@@ -640,6 +667,25 @@ mod tests {
             let a: Vec<u32> = seq.cuts[0].iter().map(|v| v.to_bits()).collect();
             let b: Vec<u32> = par.cuts[0].iter().map(|v| v.to_bits()).collect();
             assert_eq!(a, b, "cuts diverge at workers={workers}");
+        }
+    }
+
+    #[test]
+    fn bin_for_threshold_inverts_threshold_everywhere() {
+        let mut rng = Rng::new(77);
+        let x = Matrix::randn(400, 2, &mut rng);
+        for max_bins in [8usize, 32, 255] {
+            let cuts = BinCuts::fit(&x.view(), max_bins);
+            for f in 0..x.cols {
+                for b in 0..cuts.n_bins(f) {
+                    let thr = cuts.threshold(f, b as u8);
+                    assert_eq!(
+                        cuts.bin_for_threshold(f, thr),
+                        b as u8,
+                        "f={f} b={b} max_bins={max_bins}"
+                    );
+                }
+            }
         }
     }
 

@@ -13,6 +13,7 @@
 use super::binning::BinnedMatrix;
 use super::histogram::{HistLayout, HistPool};
 use super::objective::Objective;
+use super::packed_binned::QuantForest;
 use super::tree::{grow_tree_pooled, GrowParams, Tree, TreeKind};
 use crate::coordinator::pool::WorkerPool;
 use crate::tensor::MatrixView;
@@ -245,7 +246,14 @@ impl Booster {
             Some((p, t)) => (Some(p), Some(t)),
             None => (None, None),
         };
-        let eval_x = eval.map(|(xv, _)| xv);
+        // Eval rows binned once with the training cuts so the per-round
+        // prediction update runs on the quantized engine. Split thresholds
+        // are bin upper edges, so code routing reproduces float routing
+        // exactly — including beyond-range rows clamped to the last bin
+        // (split bins are always below it, so clamped codes route right,
+        // like their float values) and NaNs (MISSING_BIN follows the same
+        // learned default directions).
+        let eval_binned = eval.map(|(xv, _)| BinnedMatrix::bin_par(xv, &binned.cuts, exec));
 
         for round in 0..params.n_trees {
             // Per-row gradients in fixed chunks on the pool (disjoint
@@ -280,16 +288,25 @@ impl Booster {
                 }
             };
 
-            // Update train predictions. (Prediction uses raw thresholds, so
-            // we reconstruct rows from bin codes' cut midpoints — instead we
-            // route by codes directly for exactness.) Row blocks are
-            // independent, so the update is dispatched to the pool.
-            update_train_preds(&round_trees, binned, &mut preds, m, params.kind, params.eta, exec);
-
-            // Update validation predictions with the new trees — the same
-            // disjoint row-block schedule as the training update.
-            if let (Some(ep), Some(xv)) = (eval_preds.as_mut(), eval_x) {
-                update_eval_preds(&round_trees, xv, ep, m, params.kind, params.eta, exec);
+            // Update train and eval predictions with the round's new trees
+            // on the quantized engine: the round group is compiled once into
+            // a u8-bin arena (hoisting the per-node threshold→bin recovery
+            // out of the per-row walk) and its contributions are added in
+            // the same fixed UPDATE_BLOCK_ROWS row blocks on the pool.
+            // Bit-identical to the float reference walkers
+            // (`update_train_preds` / `update_eval_preds`), which remain as
+            // parity oracles for the test suites.
+            let qf = QuantForest::compile_trees(
+                &round_trees,
+                params.kind,
+                m,
+                params.eta,
+                vec![0.0; m],
+                &binned.cuts,
+            );
+            qf.accumulate_pooled(binned, &mut preds, exec);
+            if let (Some(ep), Some(eb)) = (eval_preds.as_mut(), eval_binned.as_ref()) {
+                qf.accumulate_pooled(eb, ep, exec);
             }
 
             booster.trees.extend(round_trees);
@@ -379,9 +396,11 @@ impl Booster {
     }
 }
 
-/// Row-block granularity for the train-prediction update (fixed: block
-/// boundaries never depend on the worker count).
-const UPDATE_BLOCK_ROWS: usize = 2048;
+/// Row-block granularity for the per-round prediction updates — both the
+/// quantized production path ([`QuantForest::accumulate_pooled`]) and the
+/// float reference walkers below use it (fixed: block boundaries never
+/// depend on the worker count).
+pub const UPDATE_BLOCK_ROWS: usize = 2048;
 
 /// Chunk size for the pooled per-output gradient gather (fixed: chunk
 /// boundaries never depend on the worker count).
@@ -407,9 +426,17 @@ fn gather_output_grads(grads: &[f64], m: usize, j: usize, gj: &mut [f64], exec: 
 }
 
 /// Add the round's new trees into the running train predictions, routing
-/// rows by bin codes. Rows are independent; blocks of [`UPDATE_BLOCK_ROWS`]
-/// are dispatched to the persistent pool with bit-identical results.
-fn update_train_preds(
+/// rows by bin codes with per-node split-bin recovery
+/// ([`leaf_for_binned`]). Rows are independent; blocks of
+/// [`UPDATE_BLOCK_ROWS`] are dispatched to the persistent pool with
+/// bit-identical results.
+///
+/// **Reference oracle.** Production training runs the compiled
+/// [`QuantForest`] instead; this scalar walker defines the behaviour the
+/// quantized engine must reproduce byte-for-byte and is exercised against
+/// it by the unit, property, and `parallel_parity` suites (plus the
+/// `train-update` rows of `perf_hotpaths`).
+pub fn update_train_preds(
     round_trees: &[Tree],
     binned: &BinnedMatrix,
     preds: &mut [f32],
@@ -445,11 +472,15 @@ fn update_train_preds(
 }
 
 /// Add the round's new trees into the running *validation* predictions,
-/// routing rows by raw feature values (the eval set is never binned). Each
-/// output element receives exactly one contribution per round, so the
-/// disjoint [`UPDATE_BLOCK_ROWS`] row blocks reproduce the sequential scan
-/// bit-for-bit on any pool width.
-fn update_eval_preds(
+/// routing rows by raw feature values. Each output element receives exactly
+/// one contribution per round, so the disjoint [`UPDATE_BLOCK_ROWS`] row
+/// blocks reproduce the sequential scan bit-for-bit on any pool width.
+///
+/// **Reference oracle.** Production training bins the eval set once with
+/// the training cuts and runs the compiled [`QuantForest`] instead; this
+/// float-threshold walker pins the behaviour the quantized engine must
+/// reproduce byte-for-byte on unseen rows (clamped codes, NaNs included).
+pub fn update_eval_preds(
     round_trees: &[Tree],
     xv: &MatrixView<'_>,
     eval_preds: &mut [f32],
@@ -469,11 +500,13 @@ fn update_eval_preds(
                 }
             }
             TreeKind::Single => {
+                // Direct accumulation, the same fused `+= η·v` as the train
+                // update (and the quantized engine) — one contribution per
+                // element, no intermediate buffer.
                 for (j, tree) in round_trees.iter().enumerate() {
                     for i in 0..rows {
-                        let mut out = [0.0f32];
-                        tree.predict_into(xv.row(r0 + i), eta, &mut out);
-                        chunk[i * m + j] += out[0];
+                        let leaf = tree.leaf_for(xv.row(r0 + i));
+                        chunk[i * m + j] += eta * tree.values[leaf];
                     }
                 }
             }
@@ -482,9 +515,13 @@ fn update_eval_preds(
 }
 
 /// Route a training row through a tree using bin codes (exact: the split
-/// bin, not the float threshold, decides).
+/// bin, not the float threshold, decides). The split bin is re-derived from
+/// the stored float threshold at every visited node
+/// ([`super::binning::BinCuts::bin_for_threshold`]) — the per-row cost the
+/// compiled [`QuantForest`] hoists to compile time. Kept `pub` as the
+/// scalar routing oracle for the parity suites.
 #[inline]
-fn leaf_for_binned(tree: &Tree, binned: &BinnedMatrix, r: usize) -> usize {
+pub fn leaf_for_binned(tree: &Tree, binned: &BinnedMatrix, r: usize) -> usize {
     let mut id = 0usize;
     loop {
         let l = tree.left[id];
@@ -498,22 +535,9 @@ fn leaf_for_binned(tree: &Tree, binned: &BinnedMatrix, r: usize) -> usize {
         } else {
             // Thresholds are bin upper edges, so `value < threshold` is
             // exactly `code <= split_bin`.
-            code <= split_bin_of(tree, binned, id)
+            code <= binned.cuts.bin_for_threshold(f, tree.threshold[id])
         };
         id = if go_left { l as usize } else { tree.right[id] as usize };
-    }
-}
-
-/// Recover the split bin for node `id` from its stored float threshold.
-#[inline]
-fn split_bin_of(tree: &Tree, binned: &BinnedMatrix, id: usize) -> u8 {
-    let f = tree.feature[id] as usize;
-    let thr = tree.threshold[id];
-    // The threshold equals cuts[f][bin]; binary search it.
-    let cuts = &binned.cuts.cuts[f];
-    match cuts.binary_search_by(|c| c.partial_cmp(&thr).unwrap()) {
-        Ok(i) => i as u8,
-        Err(i) => (i.min(cuts.len().saturating_sub(1))) as u8,
     }
 }
 

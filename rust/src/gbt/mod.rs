@@ -20,6 +20,11 @@
 //!   breadth-first node records and traversed row-block × tree-tile with
 //!   branch-free child selection — bit-identical to [`predict`] and the
 //!   default sampling backend;
+//! * the quantized bin-code training predictor ([`packed_binned`]): the
+//!   same 16-byte arena with `u8` split bins instead of float thresholds,
+//!   traversed directly over [`BinnedMatrix`] codes — the boosting loop's
+//!   per-round train/eval prediction updates run on it, bit-identical to
+//!   the float reference walkers;
 //! * a compact binary model format with save/load for the streaming model
 //!   store — the stand-in for XGBoost's UBJ ([`serialize`]);
 //! * a multi-pass *data iterator* for out-of-core quantile construction,
@@ -33,12 +38,14 @@ pub mod split;
 pub mod tree;
 pub mod booster;
 pub mod objective;
+pub mod packed_binned;
 pub mod packed_native;
 pub mod predict;
 pub mod serialize;
 
 pub use binning::{BinCuts, BinnedMatrix, BatchIterator, MISSING_BIN};
 pub use booster::{Booster, EvalRecord, TrainParams};
+pub use packed_binned::QuantForest;
 pub use packed_native::NativeForest;
 pub use objective::Objective;
 pub use tree::{Tree, TreeKind};

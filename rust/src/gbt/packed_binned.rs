@@ -1,0 +1,541 @@
+//! Quantized bin-code training predictor — the training-path analogue of
+//! the blocked native inference engine ([`super::packed_native`]).
+//!
+//! Every split in a trained tree was chosen at a [`BinCuts`] edge, so on any
+//! dataset binned with those cuts the float comparison `x < threshold` is
+//! *exactly* the integer comparison `code <= split_bin`:
+//!
+//! * non-missing, unclamped codes: `bin_value` returns the first bin whose
+//!   upper edge exceeds `x`, and cuts are strictly ascending, so
+//!   `code <= b ⟺ x < cuts[b]`;
+//! * codes clamped to the last bin (values at or beyond every cut — possible
+//!   only for *unseen* rows, e.g. an eval set): the split search
+//!   ([`super::split::best_split`]) only proposes bins `< n_bins − 1`, so a
+//!   clamped code routes right, exactly like its float value;
+//! * missing ([`MISSING_BIN`]): routed by the learned default direction,
+//!   same as NaN on the float path.
+//!
+//! The reference training-update walkers pay for that equivalence per row:
+//! [`super::booster::leaf_for_binned`] re-derives each visited node's split
+//! bin with a binary search over the cuts, and the eval-set walker re-reads
+//! raw `f32` features. [`QuantForest`] hoists the bin recovery to compile
+//! time: trees are flattened into the same contiguous 16-byte breadth-first
+//! arena as [`NativeForest`](super::packed_native::NativeForest) (one shared
+//! flattening, [`bfs_layout`]), with the `f32` threshold replaced by the
+//! `u8` split bin, and traversal runs row-block × tree-tile directly over
+//! [`BinnedMatrix`] codes — one-byte feature reads, no float compares, no
+//! per-node searches, and the same branch-free child selection. Per output
+//! element, contributions accumulate in exact tree order, so predictions
+//! are **bit-identical** to the float path for both [`TreeKind`]s and any
+//! worker count.
+
+use super::binning::{BinCuts, BinnedMatrix, MISSING_BIN};
+use super::booster::{Booster, UPDATE_BLOCK_ROWS};
+use super::packed_native::{
+    bfs_layout, FLAG_DEFAULT_LEFT, FLAG_LEAF, PackedTree, ROW_BLOCK, TREE_TILE,
+};
+use super::tree::{Tree, TreeKind};
+use crate::coordinator::pool::WorkerPool;
+
+/// One node of the quantized arena — 16 bytes like
+/// [`super::packed_native::PackedNode`](super::packed_native), with the
+/// float threshold replaced by the split bin.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+struct QuantNode {
+    /// Split feature (0 for leaves).
+    feature: u16,
+    /// [`FLAG_DEFAULT_LEFT`] | [`FLAG_LEAF`].
+    flags: u8,
+    /// Split bin: non-missing codes `<= bin` go left (0 for leaves).
+    bin: u8,
+    /// Arena index of the left child; the right child is `left + 1`
+    /// (breadth-first layout). Leaves store their own index (self-loop).
+    left: u32,
+    /// Leaves: start index of this leaf's `m` values in the values arena.
+    payload: u32,
+    _pad: u32,
+}
+
+const _: () = assert!(std::mem::size_of::<QuantNode>() == 16);
+
+/// A compiled bin-code ensemble: contiguous breadth-first node arena +
+/// leaf-value arena + per-tree metadata, traversed over [`BinnedMatrix`]
+/// codes. Built per trained [`Booster`] ([`QuantForest::compile`]) or per
+/// boosting-round tree group ([`QuantForest::compile_trees`], the training
+/// loop's per-round prediction update).
+#[derive(Clone, Debug)]
+pub struct QuantForest {
+    /// Output dimension.
+    pub m: usize,
+    pub n_features: usize,
+    pub eta: f32,
+    pub base_score: Vec<f32>,
+    nodes: Vec<QuantNode>,
+    values: Vec<f32>,
+    trees: Vec<PackedTree>,
+}
+
+impl QuantForest {
+    /// Compile a whole trained booster against the cuts its trees were
+    /// grown on (predictions over data binned with those cuts are
+    /// bit-identical to [`super::predict::predict_batch`] on the raw
+    /// features).
+    pub fn compile(booster: &Booster, cuts: &BinCuts) -> QuantForest {
+        QuantForest::compile_trees(
+            &booster.trees,
+            booster.params.kind,
+            booster.m,
+            booster.params.eta,
+            booster.base_score.clone(),
+            cuts,
+        )
+    }
+
+    /// Flatten a tree slice into the quantized arena. In
+    /// [`TreeKind::Single`] mode tree `i` writes output `i % m` — correct
+    /// both for a whole round-major ensemble and for one round's `m`-tree
+    /// group. Tree order (and therefore accumulation order) is preserved
+    /// exactly.
+    pub fn compile_trees(
+        trees: &[Tree],
+        kind: TreeKind,
+        m: usize,
+        eta: f32,
+        base_score: Vec<f32>,
+        cuts: &BinCuts,
+    ) -> QuantForest {
+        let n_features = cuts.n_features();
+        assert!(
+            n_features <= u16::MAX as usize + 1,
+            "packed node stores features as u16"
+        );
+        let total_nodes: usize = trees.iter().map(|t| t.n_nodes()).sum();
+        assert!(total_nodes <= u32::MAX as usize, "node arena index overflow");
+        let mut qf = QuantForest {
+            m,
+            n_features,
+            eta,
+            base_score,
+            nodes: Vec::with_capacity(total_nodes),
+            values: Vec::new(),
+            trees: Vec::with_capacity(trees.len()),
+        };
+        for (ti, tree) in trees.iter().enumerate() {
+            let out_slot = match kind {
+                TreeKind::Multi => -1,
+                TreeKind::Single => (ti % m) as i32,
+            };
+            let base = qf.nodes.len() as u32;
+            let (order, new_id) = bfs_layout(tree, base);
+            for &old in &order {
+                let me = new_id[old];
+                if tree.is_leaf(old) {
+                    let payload = qf.values.len() as u32;
+                    qf.values
+                        .extend_from_slice(&tree.values[old * tree.m..(old + 1) * tree.m]);
+                    qf.nodes.push(QuantNode {
+                        feature: 0,
+                        flags: FLAG_LEAF | FLAG_DEFAULT_LEFT,
+                        bin: 0,
+                        left: me,
+                        payload,
+                        _pad: 0,
+                    });
+                } else {
+                    let left = new_id[tree.left[old] as usize];
+                    debug_assert_eq!(
+                        new_id[tree.right[old] as usize],
+                        left + 1,
+                        "BFS siblings must be adjacent"
+                    );
+                    let f = tree.feature[old] as usize;
+                    let flags = if tree.default_left[old] { FLAG_DEFAULT_LEFT } else { 0 };
+                    qf.nodes.push(QuantNode {
+                        feature: tree.feature[old] as u16,
+                        flags,
+                        bin: cuts.bin_for_threshold(f, tree.threshold[old]),
+                        left,
+                        payload: 0,
+                        _pad: 0,
+                    });
+                }
+            }
+            qf.trees.push(PackedTree {
+                root: base,
+                depth: tree.max_depth() as u32,
+                out_slot,
+            });
+        }
+        assert!(qf.values.len() <= u32::MAX as usize, "leaf-value arena index overflow");
+        qf
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Logical size in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<QuantNode>()
+            + self.values.len() * 4
+            + self.trees.len() * std::mem::size_of::<PackedTree>()
+            + self.base_score.len() * 4
+    }
+
+    /// Run one tree tile over the row block `[r0, r0 + rows)` of the binned
+    /// dataset (`codes` column-major, `n` rows per column), accumulating
+    /// into `ob` (`rows × m`, rows ≤ [`ROW_BLOCK`]).
+    #[inline]
+    fn run_tile(
+        &self,
+        tile: std::ops::Range<usize>,
+        codes: &[u8],
+        n: usize,
+        r0: usize,
+        ob: &mut [f32],
+    ) {
+        let m = self.m;
+        let rows = ob.len() / m;
+        debug_assert!(rows <= ROW_BLOCK);
+        debug_assert!(r0 + rows <= n);
+        let nodes = &self.nodes[..];
+        let eta = self.eta;
+        let mut idx = [0u32; ROW_BLOCK];
+        for t in tile {
+            let qt = self.trees[t];
+            idx[..rows].fill(qt.root);
+            // Fixed-depth walk over bin codes: MISSING_BIN routes by the
+            // default-left flag, everything else by `code <= bin` (which is
+            // never true for MISSING_BIN itself: split bins are real bins,
+            // < 255). The leaf bit masks the step to 0 (self-loop), so the
+            // child select is branch-free like the float engine's.
+            for _ in 0..qt.depth {
+                for (i, node) in idx[..rows].iter_mut().enumerate() {
+                    let nd = nodes[*node as usize];
+                    let code = codes[nd.feature as usize * n + r0 + i];
+                    let le = code <= nd.bin;
+                    let miss = code == MISSING_BIN;
+                    let default_left = nd.flags & FLAG_DEFAULT_LEFT != 0;
+                    let go_left = (le & !miss) | (miss & default_left);
+                    let internal = u32::from(nd.flags & FLAG_LEAF == 0);
+                    *node = nd.left + (u32::from(!go_left) & internal);
+                }
+            }
+            match qt.out_slot {
+                -1 => {
+                    for (node, o) in idx[..rows].iter().zip(ob.chunks_mut(m)) {
+                        let at = nodes[*node as usize].payload as usize;
+                        let vals = &self.values[at..at + m];
+                        for (oj, &vj) in o.iter_mut().zip(vals) {
+                            *oj += eta * vj;
+                        }
+                    }
+                }
+                j => {
+                    let j = j as usize;
+                    for (node, o) in idx[..rows].iter().zip(ob.chunks_mut(m)) {
+                        let at = nodes[*node as usize].payload as usize;
+                        o[j] += eta * self.values[at];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Add this forest's η-scaled contributions for rows
+    /// `[r0, r0 + out.len()/m)` of `binned` into `out` — no base-score
+    /// initialization, which is what the per-round boosting update needs.
+    /// Tile-outer blocking: a tile's nodes stay hot while row blocks stream
+    /// through it, and per output element contributions still accumulate in
+    /// global tree order (tiles advance in order), hence bit-identity with
+    /// the scalar reference walk.
+    pub fn accumulate_block(&self, binned: &BinnedMatrix, r0: usize, out: &mut [f32]) {
+        let m = self.m;
+        debug_assert_eq!(out.len() % m, 0);
+        let rows = out.len() / m;
+        assert!(r0 + rows <= binned.n, "row block out of range");
+        assert_eq!(binned.p, self.n_features, "feature count mismatch");
+        let mut tile_start = 0;
+        while tile_start < self.trees.len() {
+            let tile = tile_start..(tile_start + TREE_TILE).min(self.trees.len());
+            let mut b0 = 0;
+            while b0 < rows {
+                let brows = ROW_BLOCK.min(rows - b0);
+                self.run_tile(
+                    tile.clone(),
+                    &binned.codes,
+                    binned.n,
+                    r0 + b0,
+                    &mut out[b0 * m..(b0 + brows) * m],
+                );
+                b0 += brows;
+            }
+            tile_start = tile.end;
+        }
+    }
+
+    /// [`accumulate_block`](Self::accumulate_block) over every row of
+    /// `binned`, dispatched to the persistent pool in the training loop's
+    /// fixed [`UPDATE_BLOCK_ROWS`] blocks — the same boundaries as the
+    /// float reference updates. Row blocks write disjoint `out` slices, so
+    /// output is bit-identical for any worker count.
+    pub fn accumulate_pooled(&self, binned: &BinnedMatrix, out: &mut [f32], exec: &WorkerPool) {
+        let m = self.m;
+        assert_eq!(out.len(), binned.n * m, "output buffer shape mismatch");
+        if exec.threads() == 1 || binned.n <= UPDATE_BLOCK_ROWS {
+            self.accumulate_block(binned, 0, out);
+            return;
+        }
+        exec.for_each_mut_chunk(out, UPDATE_BLOCK_ROWS * m, |ci, chunk| {
+            self.accumulate_block(binned, ci * UPDATE_BLOCK_ROWS, chunk);
+        });
+    }
+
+    /// Full batch prediction over a binned dataset (base score + every
+    /// tree) — bit-identical to [`super::predict::predict_batch`] on the
+    /// raw features the codes were binned from.
+    pub fn predict_into(&self, binned: &BinnedMatrix, out: &mut [f32]) {
+        let m = self.m;
+        assert_eq!(out.len(), binned.n * m, "output buffer shape mismatch");
+        assert_eq!(self.base_score.len(), m, "compiled without a base score");
+        for r in 0..binned.n {
+            out[r * m..(r + 1) * m].copy_from_slice(&self.base_score);
+        }
+        self.accumulate_block(binned, 0, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbt::booster::{TrainParams, update_eval_preds, update_train_preds};
+    use crate::gbt::predict::predict_batch;
+    use crate::tensor::Matrix;
+    use crate::util::prop::bits_f32;
+    use crate::util::rng::Rng;
+
+    fn trained(kind: TreeKind, seed: u64, n_trees: usize, depth: usize) -> (Matrix, Booster) {
+        let mut rng = Rng::new(seed);
+        let n = 300;
+        let mut x = Matrix::randn(n, 4, &mut rng);
+        for r in (0..n).step_by(9) {
+            x.set(r, r % 4, f32::NAN);
+        }
+        let mut y = Matrix::zeros(n, 2);
+        for r in 0..n {
+            let x0 = if x.at(r, 0).is_nan() { 0.0 } else { x.at(r, 0) };
+            let x2 = if x.at(r, 2).is_nan() { 0.0 } else { x.at(r, 2) };
+            y.set(r, 0, x0 * 1.5 - x2);
+            y.set(r, 1, (x0 * x2).tanh());
+        }
+        let params = TrainParams { n_trees, max_depth: depth, kind, ..Default::default() };
+        let b = Booster::train(&x.view(), &y.view(), params, None);
+        (x, b)
+    }
+
+    fn base_init(base: &[f32], rows: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(rows * base.len());
+        for _ in 0..rows {
+            out.extend_from_slice(base);
+        }
+        out
+    }
+
+    #[test]
+    fn predict_over_codes_matches_predict_batch_bitwise() {
+        // Training rows: codes are exact, so quantized traversal must equal
+        // float traversal bit-for-bit — both kinds, NaN rows included.
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (x, b) = trained(kind, 7, 12, 5);
+            let binned = BinnedMatrix::fit_bin(&x.view(), b.params.max_bins);
+            let qf = QuantForest::compile(&b, &binned.cuts);
+            assert_eq!(qf.n_trees(), b.trees.len());
+            assert_eq!(qf.n_nodes(), b.n_nodes());
+            let mut reference = vec![0.0f32; x.rows * b.m];
+            predict_batch(&b, &x.view(), &mut reference);
+            let mut quant = vec![0.0f32; x.rows * b.m];
+            qf.predict_into(&binned, &mut quant);
+            assert_eq!(
+                bits_f32(&reference),
+                bits_f32(&quant),
+                "{kind:?} diverges on training rows"
+            );
+        }
+    }
+
+    #[test]
+    fn round_update_matches_float_references_bitwise() {
+        // Replay every boosting round through the quantized engine and the
+        // two float reference walkers; running train and eval predictions
+        // must stay byte-identical round by round.
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (x, b) = trained(kind, 11, 8, 4);
+            let binned = BinnedMatrix::fit_bin(&x.view(), b.params.max_bins);
+            let m = b.m;
+            let tpr = match kind {
+                TreeKind::Single => m,
+                TreeKind::Multi => 1,
+            };
+            let exec = WorkerPool::new(1);
+            let mut train_ref = base_init(&b.base_score, x.rows);
+            let mut eval_ref = base_init(&b.base_score, x.rows);
+            let mut train_q = base_init(&b.base_score, x.rows);
+            for group in b.trees.chunks(tpr) {
+                update_train_preds(group, &binned, &mut train_ref, m, kind, b.params.eta, &exec);
+                update_eval_preds(group, &x.view(), &mut eval_ref, m, kind, b.params.eta, &exec);
+                let qf = QuantForest::compile_trees(
+                    group,
+                    kind,
+                    m,
+                    b.params.eta,
+                    vec![0.0; m],
+                    &binned.cuts,
+                );
+                qf.accumulate_pooled(&binned, &mut train_q, &exec);
+                assert_eq!(
+                    bits_f32(&train_ref),
+                    bits_f32(&train_q),
+                    "{kind:?} train update diverges"
+                );
+                assert_eq!(
+                    bits_f32(&eval_ref),
+                    bits_f32(&train_q),
+                    "{kind:?} eval walker diverges"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unseen_rows_with_clamped_codes_and_nans_route_like_floats() {
+        // Eval-set shape: values beyond the training range clamp to the last
+        // bin; split bins are always below it, so routing must still match
+        // the raw-threshold walker exactly. NaN rows ride the default
+        // directions.
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (x, b) = trained(kind, 21, 10, 5);
+            let binned = BinnedMatrix::fit_bin(&x.view(), b.params.max_bins);
+            let mut rng = Rng::new(5);
+            let mut xv = Matrix::randn(200, 4, &mut rng);
+            for r in 0..200 {
+                match r % 5 {
+                    0 => xv.set(r, r % 4, 1e6),
+                    1 => xv.set(r, r % 4, -1e6),
+                    2 => xv.set(r, r % 4, f32::NAN),
+                    _ => {}
+                }
+            }
+            let eval_binned = BinnedMatrix::bin(&xv.view(), &binned.cuts);
+            let m = b.m;
+            let mut float_ref = vec![0.0f32; xv.rows * m];
+            predict_batch(&b, &xv.view(), &mut float_ref);
+            let qf = QuantForest::compile(&b, &binned.cuts);
+            let mut quant = vec![0.0f32; xv.rows * m];
+            qf.predict_into(&eval_binned, &mut quant);
+            assert_eq!(
+                bits_f32(&float_ref),
+                bits_f32(&quant),
+                "{kind:?} unseen-row routing diverges"
+            );
+        }
+    }
+
+    #[test]
+    fn pooled_accumulate_is_bit_identical_for_any_worker_count() {
+        // Trained on a batch spanning several UPDATE_BLOCK_ROWS blocks with
+        // a ragged tail, so the pooled path genuinely engages.
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let mut rng = Rng::new(3);
+            let n = 2 * UPDATE_BLOCK_ROWS + 137;
+            let x = Matrix::randn(n, 4, &mut rng);
+            let mut y = Matrix::zeros(n, 2);
+            for r in 0..n {
+                y.set(r, 0, x.at(r, 0) - 0.5 * x.at(r, 3));
+                y.set(r, 1, (x.at(r, 1) * x.at(r, 2)).tanh());
+            }
+            let params = TrainParams { n_trees: 3, max_depth: 4, kind, ..Default::default() };
+            let binned = BinnedMatrix::fit_bin(&x.view(), params.max_bins);
+            let b = Booster::train_binned(&binned, &y.view(), params, None);
+            let qf = QuantForest::compile(&b, &binned.cuts);
+            let mut seq = vec![0.0f32; n * b.m];
+            qf.accumulate_block(&binned, 0, &mut seq);
+            for workers in [1usize, 2, 8] {
+                let exec = WorkerPool::new(workers);
+                let mut par = vec![0.0f32; n * b.m];
+                qf.accumulate_pooled(&binned, &mut par, &exec);
+                assert_eq!(bits_f32(&seq), bits_f32(&par), "{kind:?} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn hand_built_stump_and_split_route_missing_exactly() {
+        let stump = Tree {
+            m: 1,
+            feature: vec![0],
+            threshold: vec![0.0],
+            left: vec![-1],
+            right: vec![-1],
+            default_left: vec![true],
+            values: vec![2.5],
+        };
+        let x = Matrix::from_vec(
+            6,
+            2,
+            vec![-1.0, 0.0, 0.2, 1.0, f32::NAN, f32::NAN, 3.0, 0.4, -2.0, 2.0, 0.9, f32::NAN],
+        );
+        let cuts = BinCuts::fit(&x.view(), 16);
+        let binned = BinnedMatrix::bin(&x.view(), &cuts);
+        // A real split at every learned edge of feature 1, both defaults.
+        for bin in 0..cuts.n_bins(1) as u8 {
+            for default_left in [true, false] {
+                let split = Tree {
+                    m: 1,
+                    feature: vec![1, 0, 0],
+                    threshold: vec![cuts.threshold(1, bin), 0.0, 0.0],
+                    left: vec![1, -1, -1],
+                    right: vec![2, -1, -1],
+                    default_left: vec![default_left, true, true],
+                    values: vec![0.0, -1.0, 4.0],
+                };
+                let b = Booster {
+                    params: TrainParams {
+                        n_trees: 2,
+                        kind: TreeKind::Single,
+                        ..Default::default()
+                    },
+                    n_features: 2,
+                    m: 1,
+                    base_score: vec![0.25],
+                    trees: vec![stump.clone(), split],
+                    best_round: 1,
+                    history: Vec::new(),
+                };
+                let mut reference = vec![0.0f32; x.rows];
+                predict_batch(&b, &x.view(), &mut reference);
+                let qf = QuantForest::compile(&b, &cuts);
+                let mut quant = vec![0.0f32; x.rows];
+                qf.predict_into(&binned, &mut quant);
+                assert_eq!(
+                    bits_f32(&reference),
+                    bits_f32(&quant),
+                    "bin={bin} default_left={default_left}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nbytes_is_node_proportional() {
+        let (x, b) = trained(TreeKind::Multi, 41, 6, 4);
+        let binned = BinnedMatrix::fit_bin(&x.view(), b.params.max_bins);
+        let qf = QuantForest::compile(&b, &binned.cuts);
+        assert!(qf.nbytes() >= qf.n_nodes() * 16);
+        assert_eq!(qf.n_nodes(), b.n_nodes());
+    }
+}

@@ -40,10 +40,12 @@ pub const ROW_BLOCK: usize = 64;
 /// bytes) stay hot while every row block streams through it.
 pub const TREE_TILE: usize = 16;
 
-/// Flags bit: missing values (NaN) default to the left child.
-const FLAG_DEFAULT_LEFT: u8 = 0b01;
+/// Flags bit: missing values (NaN / [`super::binning::MISSING_BIN`])
+/// default to the left child. Shared with the quantized training engine
+/// ([`super::packed_binned::QuantForest`]), which uses the same flags byte.
+pub(crate) const FLAG_DEFAULT_LEFT: u8 = 0b01;
 /// Flags bit: this node is a leaf (self-looping; traversal never leaves it).
-const FLAG_LEAF: u8 = 0b10;
+pub(crate) const FLAG_LEAF: u8 = 0b10;
 
 /// One node of the packed arena — exactly 16 bytes, interleaved so a single
 /// cache line holds four complete nodes.
@@ -66,17 +68,45 @@ struct PackedNode {
 
 const _: () = assert!(std::mem::size_of::<PackedNode>() == 16);
 
-/// Per-tree metadata in the compiled forest.
+/// Per-tree metadata in a compiled forest — shared by the float
+/// ([`NativeForest`]) and quantized ([`super::packed_binned::QuantForest`])
+/// arenas.
 #[derive(Clone, Copy, Debug)]
-struct PackedTree {
+pub(crate) struct PackedTree {
     /// Arena index of the root node.
-    root: u32,
+    pub(crate) root: u32,
     /// Iterations needed for any row to reach (and self-loop on) a leaf.
-    depth: u32,
+    pub(crate) depth: u32,
     /// Output written by this tree: `-1` writes all `m` outputs
     /// ([`TreeKind::Multi`]), otherwise the single slot
     /// ([`TreeKind::Single`]).
-    out_slot: i32,
+    pub(crate) out_slot: i32,
+}
+
+/// Breadth-first renumbering of one tree's nodes starting at arena index
+/// `base`: children are enqueued consecutively, so siblings land adjacent in
+/// the returned visit order (`right == left + 1` after renumbering), which is
+/// what lets a packed node address both children with one `left` offset.
+/// Returns `(order, new_id)` where `order` lists old node ids in arena order
+/// and `new_id[old]` is the arena index assigned to `old`. This is the one
+/// flattening shared by the float and quantized compilers — a structural
+/// divergence between the two engines is impossible by construction.
+pub(crate) fn bfs_layout(tree: &super::tree::Tree, base: u32) -> (Vec<usize>, Vec<u32>) {
+    let n_nodes = tree.n_nodes();
+    let mut order = Vec::with_capacity(n_nodes);
+    let mut new_id = vec![u32::MAX; n_nodes];
+    let mut queue = VecDeque::with_capacity(n_nodes);
+    queue.push_back(0usize);
+    while let Some(old) = queue.pop_front() {
+        new_id[old] = base + order.len() as u32;
+        order.push(old);
+        if !tree.is_leaf(old) {
+            queue.push_back(tree.left[old] as usize);
+            queue.push_back(tree.right[old] as usize);
+        }
+    }
+    debug_assert_eq!(order.len(), n_nodes, "tree has unreachable nodes");
+    (order, new_id)
 }
 
 /// A compiled ensemble: contiguous breadth-first node arena + leaf-value
@@ -121,22 +151,9 @@ impl NativeForest {
                 TreeKind::Single => (ti % m) as i32,
             };
             let base = nf.nodes.len() as u32;
-            // Breadth-first renumbering: children are pushed consecutively,
-            // so siblings land adjacent and `right == left + 1` holds.
-            let n_nodes = tree.n_nodes();
-            let mut order = Vec::with_capacity(n_nodes);
-            let mut new_id = vec![u32::MAX; n_nodes];
-            let mut queue = VecDeque::with_capacity(n_nodes);
-            queue.push_back(0usize);
-            while let Some(old) = queue.pop_front() {
-                new_id[old] = base + order.len() as u32;
-                order.push(old);
-                if !tree.is_leaf(old) {
-                    queue.push_back(tree.left[old] as usize);
-                    queue.push_back(tree.right[old] as usize);
-                }
-            }
-            debug_assert_eq!(order.len(), n_nodes, "tree has unreachable nodes");
+            // Shared breadth-first renumbering (see [`bfs_layout`]): siblings
+            // land adjacent, so `right == left + 1` holds.
+            let (order, new_id) = bfs_layout(tree, base);
             for &old in &order {
                 let me = new_id[old];
                 if tree.is_leaf(old) {

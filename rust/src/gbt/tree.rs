@@ -27,6 +27,13 @@ pub struct Tree {
     /// Split feature per node (unused for leaves).
     pub feature: Vec<u32>,
     /// Split threshold (raw feature value; `x < threshold` goes left).
+    ///
+    /// Invariant: the grower only ever writes *bin upper edges* here
+    /// (`BinCuts::threshold(feature, split_bin)`), so the split bin is
+    /// exactly recoverable via `BinCuts::bin_for_threshold` — which is what
+    /// lets the quantized training engine (`gbt::packed_binned`) and the
+    /// scalar binned router (`gbt::booster::leaf_for_binned`) route by
+    /// `u8` codes with bit-identical results to float comparison.
     pub threshold: Vec<f32>,
     /// Left child id, or `-1` for leaves.
     pub left: Vec<i32>,

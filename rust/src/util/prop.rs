@@ -1,11 +1,18 @@
 //! Minimal property-based testing harness (proptest is unavailable offline).
 //!
 //! A property is a closure over a [`Rng`]-driven generated input; the runner
-//! executes it for `cases` random cases and, on failure, re-reports the seed
-//! so the case can be replayed deterministically. A light-weight shrink pass
-//! for `Vec<f32>` inputs halves the input until the failure disappears.
+//! executes it for `cases` random cases and, on failure, reports the failing
+//! case index alongside the replay seed so the case can be re-run
+//! deterministically. [`forall_shrink`] adds a greedy shrink pass over any
+//! [`Shrink`] input — vectors, matrix dimensions, whole matrices — so the
+//! panic carries a minimal failing input, not just the original one.
+//!
+//! CI's elevated-count property leg multiplies every run's case count via
+//! the `CALOFOREST_PROP_CASES` env var (see [`Config::effective_cases`]).
 
 use super::rng::Rng;
+use crate::gbt::{BinnedMatrix, Booster, TrainParams, TreeKind};
+use crate::tensor::Matrix;
 
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
@@ -20,7 +27,23 @@ impl Default for Config {
     }
 }
 
-/// Run `property(rng, case_index)`, panicking with the failing seed on error.
+impl Config {
+    /// Case count actually run: `cases` times the `CALOFOREST_PROP_CASES`
+    /// multiplier (≥ 1; unset or unparsable means 1). A multiplier — not an
+    /// absolute override — so cheap and expensive properties keep their
+    /// relative budgets when CI elevates the whole suite.
+    pub fn effective_cases(&self) -> usize {
+        let mult = std::env::var("CALOFOREST_PROP_CASES")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&m| m >= 1)
+            .unwrap_or(1);
+        self.cases * mult
+    }
+}
+
+/// Run `property(rng, case_index)` for every case, panicking with the
+/// failing case index and the replay seed on error.
 ///
 /// The property returns `Result<(), String>`; `Err` carries a description of
 /// the violated invariant.
@@ -28,15 +51,158 @@ pub fn forall<F>(name: &str, cfg: Config, mut property: F)
 where
     F: FnMut(&mut Rng, usize) -> Result<(), String>,
 {
-    for case in 0..cfg.cases {
+    let cases = cfg.effective_cases();
+    for case in 0..cases {
         let mut rng = Rng::new(cfg.seed).split(case as u64);
         if let Err(msg) = property(&mut rng, case) {
             panic!(
-                "property '{name}' failed on case {case} (replay: seed={:#x}, split {case}): {msg}",
+                "property '{name}' failed on case {case} of {cases} \
+                 (replay: seed={:#x}, split={case}): {msg}",
                 cfg.seed
             );
         }
     }
+}
+
+/// Cap on greedy shrink steps taken by [`forall_shrink`].
+const MAX_SHRINK_STEPS: usize = 64;
+
+/// [`forall`] with an explicit generator and a shrink pass: on failure, the
+/// first [`Shrink`] candidate that still fails replaces the input, repeated
+/// to a fixpoint (or [`MAX_SHRINK_STEPS`]); the panic reports the failing
+/// case index, the replay seed, the shrink-step count, and the minimal
+/// input. Properties must be deterministic in their input — randomness
+/// belongs in `generate`, which receives the case's replayable [`Rng`].
+pub fn forall_shrink<T, G, P>(name: &str, cfg: Config, generate: G, property: P)
+where
+    T: Shrink + std::fmt::Debug,
+    G: Fn(&mut Rng, usize) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let cases = cfg.effective_cases();
+    for case in 0..cases {
+        let mut rng = Rng::new(cfg.seed).split(case as u64);
+        let input = generate(&mut rng, case);
+        let msg = match property(&input) {
+            Ok(()) => continue,
+            Err(m) => m,
+        };
+        let mut cur = input;
+        let mut cur_msg = msg;
+        let mut steps = 0usize;
+        'descend: while steps < MAX_SHRINK_STEPS {
+            for cand in cur.shrink() {
+                if let Err(m) = property(&cand) {
+                    cur = cand;
+                    cur_msg = m;
+                    steps += 1;
+                    continue 'descend;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed on case {case} of {cases} \
+             (replay: seed={:#x}, split={case}; shrunk {steps} steps): \
+             {cur_msg}\n  minimal input: {cur:?}",
+            cfg.seed
+        );
+    }
+}
+
+/// Worker widths the parity/property test sweeps use:
+/// `CALOFOREST_TEST_WORKERS` (CI's per-width matrix legs) *replaces* the
+/// default `{1, 2, 8}` sweep so each matrix leg is genuinely
+/// width-specific; without it the full default sweep runs. Shared by the
+/// `parallel_parity` and `property_suite` crates so the two can never
+/// drift apart under the same CI variable.
+pub fn worker_widths() -> Vec<usize> {
+    if let Ok(raw) = std::env::var("CALOFOREST_TEST_WORKERS") {
+        if let Ok(w) = raw.trim().parse::<usize>() {
+            if w >= 1 {
+                return vec![w];
+            }
+        }
+    }
+    vec![1, 2, 8]
+}
+
+/// Inputs the [`forall_shrink`] runner can reduce toward a minimal failing
+/// case. Candidates must be *strictly* simpler than `self` (fewer elements,
+/// smaller dimensions, or non-zero data zeroed) — the runner caps total
+/// steps, but same-size candidates would stall the descent at the cap.
+pub trait Shrink: Sized {
+    /// Simplification candidates, most aggressive first; empty when fully
+    /// shrunk.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for Vec<f32> {
+    /// Halve (either half may hold the culprit), then zero the data.
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.len() >= 2 {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[self.len() / 2..].to_vec());
+        }
+        if self.iter().any(|&v| v != 0.0) {
+            out.push(vec![0.0; self.len()]);
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        match *self {
+            0 => Vec::new(),
+            1 => vec![0],
+            n => vec![n / 2, n - 1],
+        }
+    }
+}
+
+/// Matrix dimensions `(rows, cols)` — shrink either axis.
+impl Shrink for (usize, usize) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1)).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0, b)));
+        out
+    }
+}
+
+impl Shrink for Matrix {
+    /// Halve rows (keep the top), halve columns (keep the left), then zero
+    /// the data — dimensions first, so the minimal case is *small*, not
+    /// merely simple.
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.rows >= 2 {
+            let r = self.rows / 2;
+            out.push(Matrix::from_vec(r, self.cols, self.data[..r * self.cols].to_vec()));
+        }
+        if self.cols >= 2 {
+            let c = self.cols / 2;
+            let mut data = Vec::with_capacity(self.rows * c);
+            for r in 0..self.rows {
+                data.extend_from_slice(&self.row(r)[..c]);
+            }
+            out.push(Matrix::from_vec(self.rows, c, data));
+        }
+        if self.data.iter().any(|&v| v != 0.0) {
+            out.push(Matrix::zeros(self.rows, self.cols));
+        }
+        out
+    }
+}
+
+/// A randomized trained booster bundled with its training data and bin
+/// codes — the shared generator for training-path parity properties.
+#[derive(Debug)]
+pub struct BoosterCase {
+    pub x: Matrix,
+    pub binned: BinnedMatrix,
+    pub booster: Booster,
 }
 
 /// Generator helpers for common tabular shapes.
@@ -70,6 +236,52 @@ impl Gen {
     pub fn labels(rng: &mut Rng, len: usize, n_classes: usize) -> Vec<u32> {
         (0..len).map(|_| rng.below(n_classes) as u32).collect()
     }
+
+    /// A `rows × cols` matrix of [`Gen::vec_f32`]-style values with
+    /// `nan_frac` of entries replaced by NaN (missing-value edge cases).
+    pub fn matrix_with_nans(rng: &mut Rng, rows: usize, cols: usize, nan_frac: f64) -> Matrix {
+        let mut x = Matrix::from_vec(rows, cols, Self::vec_f32(rng, rows * cols, 5.0));
+        for v in x.data.iter_mut() {
+            if rng.uniform() < nan_frac {
+                *v = f32::NAN;
+            }
+        }
+        x
+    }
+
+    /// A trained booster on randomized shapes and hyperparameters: random
+    /// output dimension, bin budget, max depth (individual trees come out
+    /// ragged — data runs dry at different depths), and ~8% missing
+    /// entries. `case` alternates the [`TreeKind`] so both families appear
+    /// deterministically across any run.
+    pub fn booster_case(rng: &mut Rng, case: usize) -> BoosterCase {
+        let n = 20 + rng.below(120);
+        let p = 1 + rng.below(4);
+        let m = 1 + rng.below(3);
+        let x = Self::matrix_with_nans(rng, n, p, 0.08);
+        let mut y = Matrix::zeros(n, m);
+        for v in y.data.iter_mut() {
+            *v = rng.normal_f32();
+        }
+        let kind = if case % 2 == 0 { TreeKind::Single } else { TreeKind::Multi };
+        let params = TrainParams {
+            n_trees: 1 + rng.below(5),
+            max_depth: 1 + rng.below(6),
+            kind,
+            max_bins: 8 + rng.below(120),
+            ..Default::default()
+        };
+        let binned = BinnedMatrix::fit_bin(&x.view(), params.max_bins);
+        let booster = Booster::train_binned(&binned, &y.view(), params, None);
+        BoosterCase { x, binned, booster }
+    }
+}
+
+/// The f32 slice as raw bit patterns — the comparator every bit-identity
+/// suite uses (`assert_eq!(bits_f32(&a), bits_f32(&b))` distinguishes
+/// `-0.0` from `0.0` and NaN payloads, which `==` on floats cannot).
+pub fn bits_f32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
 }
 
 /// Assert two slices are elementwise close; returns Err description if not.
@@ -132,5 +344,99 @@ mod tests {
         assert!(v.iter().all(|x| x.is_finite() && x.abs() <= 3.0));
         let y = Gen::labels(&mut rng, 50, 4);
         assert!(y.iter().all(|&l| l < 4));
+    }
+
+    #[test]
+    fn gen_matrix_with_nans_hits_requested_fraction_roughly() {
+        let mut rng = Rng::new(3);
+        let x = Gen::matrix_with_nans(&mut rng, 100, 10, 0.2);
+        let nans = x.data.iter().filter(|v| v.is_nan()).count();
+        assert!((100..300).contains(&nans), "nan count {nans} far from 20%");
+    }
+
+    #[test]
+    fn gen_booster_case_trains_both_kinds() {
+        for case in 0..2usize {
+            let mut rng = Rng::new(9).split(case as u64);
+            let bc = Gen::booster_case(&mut rng, case);
+            assert!(!bc.booster.trees.is_empty());
+            assert_eq!(bc.binned.n, bc.x.rows);
+            assert_eq!(bc.binned.p, bc.x.cols);
+            let expect = if case % 2 == 0 { TreeKind::Single } else { TreeKind::Multi };
+            assert_eq!(bc.booster.params.kind, expect);
+        }
+    }
+
+    #[test]
+    fn shrink_candidates_are_strictly_simpler() {
+        // usize: every candidate strictly smaller.
+        for n in [0usize, 1, 2, 17] {
+            for c in n.shrink() {
+                assert!(c < n, "usize shrink {c} !< {n}");
+            }
+        }
+        // Vec<f32>: fewer elements, or same length with data newly zeroed.
+        let v = vec![1.0f32, 0.0, -2.0, 3.5, 4.0];
+        for c in v.shrink() {
+            assert!(
+                c.len() < v.len() || c.iter().all(|&x| x == 0.0),
+                "vec shrink not simpler: {c:?}"
+            );
+        }
+        assert!(vec![0.0f32; 1].shrink().is_empty(), "all-zero singleton is fully shrunk");
+        // Matrix: smaller dims or zeroed data; fully-shrunk 1×1 zero stops.
+        let m = Matrix::from_vec(4, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        for c in m.shrink() {
+            assert!(
+                c.rows * c.cols < m.rows * m.cols || c.data.iter().all(|&x| x == 0.0),
+                "matrix shrink not simpler: {}x{}",
+                c.rows,
+                c.cols
+            );
+        }
+        assert!(Matrix::zeros(1, 1).shrink().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk")]
+    fn forall_shrink_minimizes_and_reports_steps() {
+        // Fails whenever the vector has ≥ 3 elements: the shrinker must
+        // descend through halvings and report the shrink trajectory.
+        forall_shrink(
+            "len >= 3 fails",
+            Config { cases: 1, seed: 7 },
+            |rng, _| Gen::vec_f32(rng, 64, 1.0),
+            |v: &Vec<f32>| {
+                if v.len() >= 3 {
+                    Err(format!("len {}", v.len()))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn forall_shrink_passes_clean_properties_silently() {
+        forall_shrink(
+            "dims in budget",
+            Config { cases: 8, seed: 11 },
+            |rng, _| Gen::dims(rng, 50, 6),
+            |&(r, c): &(usize, usize)| {
+                if r <= 50 && c <= 6 {
+                    Ok(())
+                } else {
+                    Err(format!("({r}, {c})"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn effective_cases_is_at_least_base() {
+        // The CALOFOREST_PROP_CASES multiplier can only elevate.
+        let cfg = Config { cases: 5, seed: 1 };
+        assert!(cfg.effective_cases() >= 5);
+        assert_eq!(cfg.effective_cases() % 5, 0);
     }
 }

@@ -18,9 +18,11 @@ use caloforest::forest::trainer::{
     prepare, train_forest, train_job, train_job_in, ForestTrainConfig,
 };
 use caloforest::forest::ModelKind;
+use caloforest::gbt::booster::{update_eval_preds, update_train_preds};
 use caloforest::gbt::predict::predict_batch;
-use caloforest::gbt::{serialize, Booster, TrainParams, TreeKind};
+use caloforest::gbt::{BinnedMatrix, Booster, QuantForest, serialize, TrainParams, TreeKind};
 use caloforest::tensor::Matrix;
+use caloforest::util::prop::{bits_f32, worker_widths};
 use caloforest::util::rng::Rng;
 
 fn synthetic_cfg(kind: TreeKind) -> ForestTrainConfig {
@@ -33,19 +35,9 @@ fn synthetic_cfg(kind: TreeKind) -> ForestTrainConfig {
     }
 }
 
-/// Worker counts to sweep. `CALOFOREST_TEST_WORKERS` (the CI matrix leg)
-/// *replaces* the default `{1, 2, 8}` sweep so each matrix leg is genuinely
-/// width-specific; without it the full default sweep runs.
-fn worker_counts() -> Vec<usize> {
-    if let Ok(raw) = std::env::var("CALOFOREST_TEST_WORKERS") {
-        if let Ok(w) = raw.trim().parse::<usize>() {
-            if w >= 1 {
-                return vec![w];
-            }
-        }
-    }
-    vec![1, 2, 8]
-}
+// Worker counts to sweep come from the shared `util::prop::worker_widths`
+// helper: `CALOFOREST_TEST_WORKERS` (the CI matrix leg) *replaces* the
+// default `{1, 2, 8}` sweep so each matrix leg is genuinely width-specific.
 
 #[test]
 fn intra_job_parallel_training_is_bit_identical_on_synthetic_benchmark() {
@@ -59,7 +51,7 @@ fn intra_job_parallel_training_is_bit_identical_on_synthetic_benchmark() {
         let (seq_model, _) = train_forest(&cfg, &x, Some(&y));
         // Width-specific CI legs replace the default combo sweep.
         let combos: Vec<(usize, usize)> = if std::env::var("CALOFOREST_TEST_WORKERS").is_ok() {
-            worker_counts().into_iter().map(|w| (w, w)).collect()
+            worker_widths().into_iter().map(|w| (w, w)).collect()
         } else {
             vec![(1, 4), (2, 2), (4, 8)]
         };
@@ -135,7 +127,7 @@ fn pooled_hot_paths_gradients_eval_update_partitioning_are_bit_identical() {
             Some((&xv.view(), &tv.view())),
             &WorkerPool::new(1),
         );
-        for workers in worker_counts() {
+        for workers in worker_widths() {
             let exec = WorkerPool::new(workers);
             let par = Booster::train_with(
                 &x.view(),
@@ -160,6 +152,91 @@ fn pooled_hot_paths_gradients_eval_update_partitioning_are_bit_identical() {
                 .collect();
             assert_eq!(h1, h2, "{kind:?} history diverges at workers={workers}");
             assert_eq!(seq.best_round, par.best_round);
+        }
+    }
+}
+
+#[test]
+fn quantized_training_update_is_bit_identical_to_float_reference() {
+    // The training loop's per-round prediction updates (train + eval) now
+    // run on the compiled QuantForest. Replay every boosting round through
+    // both engines: the float reference walkers (sequential) and the
+    // quantized engine pooled at every CI worker width must agree
+    // byte-for-byte — on training rows (exact codes) and on an eval set
+    // with NaNs and beyond-range values (clamped codes).
+    let (x, t, xv_clean, _tv) = big_regression();
+    let mut xv = xv_clean;
+    for r in 0..xv.rows {
+        match r % 7 {
+            0 => {
+                let c = r % xv.cols;
+                xv.set(r, c, 1e7);
+            }
+            1 => {
+                let c = r % xv.cols;
+                xv.set(r, c, -1e7);
+            }
+            2 => {
+                let c = r % xv.cols;
+                xv.set(r, c, f32::NAN);
+            }
+            _ => {}
+        }
+    }
+    let init = |base: &[f32], rows: usize| {
+        let mut out = Vec::with_capacity(rows * base.len());
+        for _ in 0..rows {
+            out.extend_from_slice(base);
+        }
+        out
+    };
+    for kind in [TreeKind::Single, TreeKind::Multi] {
+        let params = TrainParams { n_trees: 3, max_depth: 5, kind, ..Default::default() };
+        let binned = BinnedMatrix::fit_bin(&x.view(), params.max_bins);
+        let b = Booster::train_binned(&binned, &t.view(), params, None);
+        let eval_binned = BinnedMatrix::bin(&xv.view(), &binned.cuts);
+        let m = b.m;
+        let tpr = match kind {
+            TreeKind::Single => m,
+            TreeKind::Multi => 1,
+        };
+        // Float reference replay, fully sequential.
+        let seq = WorkerPool::new(1);
+        let mut train_ref = init(&b.base_score, x.rows);
+        let mut eval_ref = init(&b.base_score, xv.rows);
+        for group in b.trees.chunks(tpr) {
+            update_train_preds(group, &binned, &mut train_ref, m, kind, b.params.eta, &seq);
+            update_eval_preds(group, &xv.view(), &mut eval_ref, m, kind, b.params.eta, &seq);
+        }
+        let train_bits = bits_f32(&train_ref);
+        let eval_bits = bits_f32(&eval_ref);
+        // Quantized replay, pooled per width.
+        for workers in worker_widths() {
+            let exec = WorkerPool::new(workers);
+            let mut train_q = init(&b.base_score, x.rows);
+            let mut eval_q = init(&b.base_score, xv.rows);
+            for group in b.trees.chunks(tpr) {
+                let qf = QuantForest::compile_trees(
+                    group,
+                    kind,
+                    m,
+                    b.params.eta,
+                    vec![0.0; m],
+                    &binned.cuts,
+                );
+                qf.accumulate_pooled(&binned, &mut train_q, &exec);
+                qf.accumulate_pooled(&eval_binned, &mut eval_q, &exec);
+            }
+            assert_eq!(
+                train_bits,
+                bits_f32(&train_q),
+                "{kind:?} quantized train update diverges at workers={workers}"
+            );
+            assert_eq!(
+                eval_bits,
+                bits_f32(&eval_q),
+                "{kind:?} quantized eval update diverges at workers={workers}"
+            );
         }
     }
 }
@@ -266,7 +343,7 @@ fn blocked_engine_is_bit_identical_to_predict_batch_across_widths() {
             blocked.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             "{kind:?} blocked engine diverges from predict_batch"
         );
-        for workers in worker_counts() {
+        for workers in worker_widths() {
             let exec = WorkerPool::new(workers);
             let mut pooled = vec![0.0f32; batch.rows * b.m];
             engine.predict_into_pooled(&batch.view(), &mut pooled, &exec);
@@ -303,7 +380,7 @@ fn compiled_default_sampling_backend_is_byte_identical() {
         let reference =
             generate_with(&model, &ParNativeField { model: &model, exec: &exec }, &gen_cfg);
         let ref_bits: Vec<u32> = reference.0.data.iter().map(|v| v.to_bits()).collect();
-        for workers in worker_counts() {
+        for workers in worker_widths() {
             let sampled = generate(&model, &gen_cfg.with_workers(workers));
             let got_bits: Vec<u32> = sampled.0.data.iter().map(|v| v.to_bits()).collect();
             assert_eq!(

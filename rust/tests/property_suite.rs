@@ -1,15 +1,28 @@
 //! Randomized property suite over the public API: invariants the paper's
 //! method relies on, exercised across random shapes/configs (the offline
-//! stand-in for proptest — failures report a replayable seed).
+//! stand-in for proptest — failures report a replayable seed and, for
+//! [`forall_shrink`] properties, a shrunk minimal input).
+//!
+//! CI runs this suite twice: in the plain test job, and as an
+//! elevated-case leg of the `parallel-parity` matrix with
+//! `CALOFOREST_PROP_CASES` multiplying every property's case count and
+//! `CALOFOREST_TEST_WORKERS` pinning the worker-width sweeps (debug
+//! assertions on).
 
+use caloforest::coordinator::pool::WorkerPool;
 use caloforest::forest::sampler::sample_labels;
 use caloforest::forest::scaler::MinMaxScaler;
 use caloforest::forest::trainer::{prepare, train_job, ForestTrainConfig};
 use caloforest::forest::LabelSampler;
-use caloforest::gbt::predict::PackedForest;
-use caloforest::gbt::{BinCuts, BinnedMatrix, Booster, Objective, TrainParams, TreeKind};
+use caloforest::gbt::booster::leaf_for_binned;
+use caloforest::gbt::predict::{predict_batch, PackedForest};
+use caloforest::gbt::{
+    BinCuts, BinnedMatrix, Booster, MISSING_BIN, Objective, QuantForest, TrainParams, TreeKind,
+};
 use caloforest::tensor::Matrix;
-use caloforest::util::prop::{assert_close, forall, Config, Gen};
+use caloforest::util::prop::{
+    assert_close, bits_f32, BoosterCase, Config, forall, forall_shrink, Gen, worker_widths,
+};
 use caloforest::util::rng::Rng;
 
 #[test]
@@ -300,6 +313,122 @@ fn prop_missing_values_survive_pipeline() {
         }
         Ok(())
     });
+}
+
+/// The acceptance oracle chain for the quantized training engine: on any
+/// randomized booster (both kinds, NaN rows, ragged depths) the compiled
+/// [`QuantForest`], the scalar binned router ([`leaf_for_binned`]), and the
+/// float reference ([`predict_batch`]) must agree **bit-for-bit** on
+/// training rows, sequentially and pooled across every worker width.
+#[test]
+fn prop_quantforest_leaf_for_binned_predict_batch_bit_identity() {
+    forall(
+        "QuantForest == leaf_for_binned == predict_batch",
+        Config { cases: 10, seed: 0xB1B },
+        |rng, case| {
+            let BoosterCase { x, binned, booster } = Gen::booster_case(rng, case);
+            let n = x.rows;
+            let m = booster.m;
+            let eta = booster.params.eta;
+
+            // Reference 1: float-threshold routing over raw features.
+            let mut float_ref = vec![0.0f32; n * m];
+            predict_batch(&booster, &x.view(), &mut float_ref);
+
+            // Reference 2: scalar bin-code routing with per-node split-bin
+            // recovery, accumulated in exact predict_batch tree order.
+            let mut binned_ref = vec![0.0f32; n * m];
+            for r in 0..n {
+                binned_ref[r * m..(r + 1) * m].copy_from_slice(&booster.base_score);
+            }
+            match booster.params.kind {
+                TreeKind::Multi => {
+                    for tree in &booster.trees {
+                        for r in 0..n {
+                            let leaf = leaf_for_binned(tree, &binned, r);
+                            let vals = &tree.values[leaf * m..(leaf + 1) * m];
+                            for (o, &v) in binned_ref[r * m..(r + 1) * m].iter_mut().zip(vals) {
+                                *o += eta * v;
+                            }
+                        }
+                    }
+                }
+                TreeKind::Single => {
+                    for (i, tree) in booster.trees.iter().enumerate() {
+                        let j = i % m;
+                        for r in 0..n {
+                            let leaf = leaf_for_binned(tree, &binned, r);
+                            binned_ref[r * m + j] += eta * tree.values[leaf];
+                        }
+                    }
+                }
+            }
+            if bits_f32(&float_ref) != bits_f32(&binned_ref) {
+                return Err("leaf_for_binned diverges from predict_batch".into());
+            }
+
+            // Engine under test, sequential and pooled per worker width.
+            let qf = QuantForest::compile(&booster, &binned.cuts);
+            let mut quant = vec![0.0f32; n * m];
+            qf.predict_into(&binned, &mut quant);
+            if bits_f32(&float_ref) != bits_f32(&quant) {
+                return Err("QuantForest::predict_into diverges".into());
+            }
+            for workers in worker_widths() {
+                let exec = WorkerPool::new(workers);
+                let mut pooled = vec![0.0f32; n * m];
+                for r in 0..n {
+                    pooled[r * m..(r + 1) * m].copy_from_slice(&booster.base_score);
+                }
+                qf.accumulate_pooled(&binned, &mut pooled, &exec);
+                if bits_f32(&float_ref) != bits_f32(&pooled) {
+                    return Err(format!("pooled accumulate diverges at workers={workers}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Bin codes are always in range — NaN entries get [`MISSING_BIN`], real
+/// entries land below the feature's bin count (or 0 for unsplittable
+/// features). Uses the shrinkable runner: a failure reports a minimal
+/// matrix, not the 100×5 original.
+#[test]
+fn prop_bin_codes_in_range_shrinkable() {
+    forall_shrink(
+        "bin codes in range",
+        Config { cases: 15, seed: 0xB2B },
+        |rng, _| {
+            let (n, p) = Gen::dims(rng, 100, 5);
+            Gen::matrix_with_nans(rng, n, p, 0.15)
+        },
+        |x: &Matrix| {
+            if x.rows == 0 || x.cols == 0 {
+                return Ok(());
+            }
+            let b = BinnedMatrix::fit_bin(&x.view(), 32);
+            for f in 0..x.cols {
+                let n_bins = b.cuts.n_bins(f);
+                for r in 0..x.rows {
+                    let code = b.code(r, f);
+                    let v = x.at(r, f);
+                    if v.is_nan() {
+                        if code != MISSING_BIN {
+                            return Err(format!("NaN at ({r},{f}) got code {code}"));
+                        }
+                    } else if n_bins == 0 {
+                        if code != 0 {
+                            return Err(format!("unsplittable f={f} got code {code}"));
+                        }
+                    } else if (code as usize) >= n_bins {
+                        return Err(format!("({r},{f}): code {code} >= n_bins {n_bins}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
