@@ -3,6 +3,14 @@
 //!
 //! Scaled defaults (K=10, n_t=10, n ≤ 10k); set CALOFOREST_PAPER_SCALE=1
 //! for the published K=100/n_t=50 grid (Original is then ledger-only).
+//!
+//! Ours' measured peak reflects virtual K-duplication: the *shared*
+//! training state is the undup'd `n·p` matrix plus an O(1) noise-stream
+//! definition (no `2·n·K·p` materialized x0/x1 pair). Per-job transients —
+//! one job's xt/z, `2·n_class·K·p` floats — remain O(K) and now dominate
+//! the measured curve; they are freed as each job completes, unlike the
+//! old shared pair which lived for the whole run. Original's ledger still
+//! charges the paper's full materialization closed forms.
 
 use caloforest::coordinator::memory::{fmt_bytes, TrackingAlloc};
 use caloforest::experiments::resource::{run_point, SweepConfig, Variant, CSV_HEADER};

@@ -8,6 +8,8 @@ use caloforest::coordinator::memory::TrackingAlloc;
 use caloforest::coordinator::pool::{self as cpool, WorkerPool};
 use caloforest::forest::noising;
 use caloforest::forest::schedule::VpSchedule;
+use caloforest::forest::trainer::{prepare as forest_prepare, ForestTrainConfig};
+use caloforest::forest::ModelKind;
 use caloforest::gbt::booster::{update_eval_preds, update_train_preds};
 use caloforest::gbt::histogram::{HistLayout, Histogram};
 use caloforest::gbt::predict::PackedForest;
@@ -318,6 +320,69 @@ fn main() {
         n as f64 / upd_mean("quant", 8) / 1e6,
     );
 
+    // --- Training data plane: virtual K-duplication. ----------------------
+    // `prepare` now stores only the undup'd scaled matrix plus a noise-
+    // stream definition (no n·K·p array), and each job's duplicated xt/z
+    // is synthesized by the fused generate-noise+noising kernel, chunk-
+    // parallel on the pool. Rows/sec here bounds how fast training data can
+    // come to exist at all.
+    let dp_n = if quick { 2_000 } else { 20_000 };
+    let dp_p = 10;
+    let dp_k = if quick { 8 } else { 64 };
+    let dp_x = Matrix::randn(dp_n, dp_p, &mut rng);
+    let dp_cfg = ForestTrainConfig { n_t: 2, k_dup: dp_k, seed: 3, ..Default::default() };
+    let m_prep = bench.time(&format!("training prepare n={dp_n} p={dp_p} K={dp_k} (virtual)"), || {
+        let prep = forest_prepare(&dp_cfg, &dp_x, None);
+        std::hint::black_box(prep.nbytes());
+    });
+    let dp_prep = forest_prepare(&dp_cfg, &dp_x, None);
+    let dup_rows = dp_n * dp_k;
+    let mut dp_xt = Matrix::zeros(dup_rows, dp_p);
+    let mut dp_z = Matrix::zeros(dup_rows, dp_p);
+    // (stage, threads, mean_secs, rows-processed-per-call).
+    let mut prep_results: Vec<(&str, usize, f64, usize)> =
+        vec![("prepare", 1, m_prep.mean(), dp_n)];
+    for (threads, dp_pool) in [(1usize, &upd_pool1), (8, &pool8)] {
+        let m_jb = bench.time(&format!("job build (fused virtual noise, {threads} thread)"), || {
+            noising::stream_inputs_targets(
+                ModelKind::Flow,
+                &dp_prep.x.row_slice(0, dp_n),
+                0,
+                &dp_prep.noise,
+                0,
+                dp_k,
+                0.4,
+                &dp_prep.schedule,
+                &mut dp_xt,
+                &mut dp_z,
+                dp_pool,
+            );
+            std::hint::black_box(dp_xt.data[0]);
+        });
+        prep_results.push(("job-build", threads, m_jb.mean(), dup_rows));
+    }
+    for &(stage, threads, secs, _rows) in &prep_results {
+        bench.csv(
+            "path,label,mean_secs",
+            format!("training-prepare,{stage}-t{threads},{secs:.9}"),
+        );
+    }
+    let jb_mean = |threads: usize| {
+        prep_results
+            .iter()
+            .find(|&&(s, th, _, _)| s == "job-build" && th == threads)
+            .map(|&(_, _, m, _)| m)
+            .unwrap_or(f64::NAN)
+    };
+    let jb_speedup = jb_mean(1) / jb_mean(8).max(1e-12);
+    println!(
+        "training data plane: prepare {:.2} Mrow/s; job build {:.2} Mrow/s (1 thread) vs \
+         {:.2} Mrow/s (8 threads, {jb_speedup:.2}x) at K={dp_k}",
+        dp_n as f64 / m_prep.mean() / 1e6,
+        dup_rows as f64 / jb_mean(1) / 1e6,
+        dup_rows as f64 / jb_mean(8) / 1e6,
+    );
+
     // Full-size runs persist the trajectory at the workspace root (cargo
     // runs benches from the package dir, so anchor on the manifest path)
     // where the committed file lives; smoke/--test runs use tiny sizes and
@@ -367,11 +432,27 @@ fn main() {
             .set("results", Json::Arr(results))
             .set("quant_speedup_1t", upd_speedup1)
             .set("quant_speedup_8t", upd_speedup8);
+        let mut prep_sec = Json::obj();
+        let results = prep_results
+            .iter()
+            .map(|&(stage, threads, secs, rows)| row_json(rows, stage, threads, secs))
+            .collect::<Vec<_>>();
+        let mut config = Json::obj();
+        config
+            .set("rows", dp_n)
+            .set("features", dp_p)
+            .set("k_dup", dp_k)
+            .set("dup_rows", dup_rows);
+        prep_sec
+            .set("config", config)
+            .set("results", Json::Arr(results))
+            .set("job_build_speedup_8t", jb_speedup);
         let mut doc = Json::obj();
         doc.set("bench", "perf_hotpaths")
             .set("status", "measured")
             .set("sampler_field_eval", sampler_sec)
-            .set("training_update", upd_sec);
+            .set("training_update", upd_sec)
+            .set("training_prepare", prep_sec);
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .parent()
             .map(|root| root.join("BENCH_sampling.json"))

@@ -35,7 +35,10 @@ fn main() {
     }
 
     // Appendix B.3 correctness: the flawed iterator trains a *different*
-    // (silently wrong) model vs the corrected one at identical seeds.
+    // (silently wrong) model vs the corrected one at identical seeds. Since
+    // the virtual K-duplication refactor the corrected iterator reads the
+    // same counter-based noise streams as the in-memory trainer, so it is
+    // not merely close to the direct model — it is the *same* model.
     let (x, _) = synthetic_dataset(400, 5, 1, 3);
     let fc = ForestTrainConfig {
         n_t: 4,
@@ -78,6 +81,11 @@ fn main() {
     assert!(
         flawed_vs_direct > corr_vs_direct,
         "the flawed iterator must deviate more from the in-memory model"
+    );
+    assert_eq!(
+        corr_vs_direct, 0.0,
+        "the corrected iterator shares the in-memory path's noise streams and \
+         must reproduce its model exactly"
     );
     bench.write_csv("table6_data_iterator.csv");
     eprintln!("{}", bench.summary());

@@ -13,7 +13,10 @@
 //!    without actually consuming them. This is how we reproduce the paper's
 //!    250 GiB / 2.34 TiB / 1.22 PiB numbers and the job-failure crosses on a
 //!    35 GB host. The closed forms charged here are exactly those derived in
-//!    the paper's §3.3 Benefit paragraphs.
+//!    the paper's §3.3 Benefit paragraphs. The `fig2_memory_timeline`
+//!    harness also uses the ledger to model the *pre-virtual* shared
+//!    `x0`/`x1` pair (`2·n·K·p` floats) against the measured
+//!    `Prepared::nbytes()` (`n·p` floats since virtual K-duplication).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -17,9 +17,13 @@
 //!   written as soon as their job completes, freed from memory, and double
 //!   as resumable checkpoints;
 //! * [`run_training`] — the improved pipeline end to end: shared read-only
-//!   `Prepared` state (Issue 2/4), slice-based class conditioning (Issue 5),
-//!   per-job on-the-fly `x_t` (Issue 1), one binning per job shared across
-//!   outputs (Issue 6), fp32 throughout (Issue 7).
+//!   `Prepared` state (Issue 2/4) that since the virtual K-duplication
+//!   refactor is only `n·p` floats plus a noise-stream definition (the
+//!   materialized `2·n·K·p` `x0`/`x1` pair is gone — ~200× less shared
+//!   state at the paper's K=100), slice-based class conditioning (Issue 5),
+//!   per-job on-the-fly noise + `x_t` synthesis (Issue 1, now including the
+//!   noise itself), one binning per job shared across outputs (Issue 6),
+//!   fp32 throughout (Issue 7).
 
 pub mod pool;
 pub mod memory;
@@ -163,7 +167,10 @@ pub fn run_training(
 
     // Shared, read-only state: built once, referenced by every worker
     // (Issue 2: no per-job copies; Issue 4 analogue: the coordinator holds
-    // exactly one copy).
+    // exactly one copy). Duplication is virtual — `prep` holds the undup'd
+    // `[n × p]` matrix plus a noise-stream definition, so shared bytes are
+    // `n·p·4` regardless of K; each job synthesizes its own duplicated
+    // xt/z transiently on its slot's pool.
     let prep = prepare(cfg, x_raw, y);
     sample_mem(&timeline, &t0);
 
@@ -190,8 +197,11 @@ pub fn run_training(
     }
 
     // Two-level budget: job-level workers × intra-job threads, weighted by
-    // each job's duplicated row count (per-class skew) so a dominant class
-    // starts with more intra-job threads instead of idle job workers.
+    // each job's *virtual* duplicated row count (per-class skew) so a
+    // dominant class starts with more intra-job threads instead of idle job
+    // workers. Virtual rows are compute — noise synthesis, binning,
+    // boosting — not resident bytes (shared state is n·p regardless of K),
+    // but makespan still scales with them.
     let job_sizes: Vec<usize> = jobs
         .iter()
         .map(|&(_, y_idx)| {

@@ -155,9 +155,13 @@ pub fn run_point(variant: Variant, n: usize, p: usize, n_y: usize, cfg: &SweepCo
         }
         Variant::OursIterator => {
             // Iterator path: per-job out-of-core binning; memory measured.
+            // One persistent pool serves every job's boosting rounds (the
+            // per-call spawn of the plain wrapper would dominate small jobs).
             memory::reset_peak();
             let t0 = std::time::Instant::now();
             let prep = crate::forest::trainer::prepare(&fc, &x, labels);
+            let exec =
+                crate::coordinator::pool::WorkerPool::new(fc.params.intra_threads.max(1));
             let mut model = crate::forest::model::ForestModel::empty(
                 fc.kind,
                 prep.grid.clone(),
@@ -168,8 +172,8 @@ pub fn run_point(variant: Variant, n: usize, p: usize, n_y: usize, cfg: &SweepCo
             );
             for t_idx in 0..prep.grid.n_t() {
                 for y_idx in 0..prep.label_counts.len() {
-                    let b = crate::forest::dataiter::train_job_iterator(
-                        &prep, &fc, t_idx, y_idx, cfg.k_dup, false,
+                    let b = crate::forest::dataiter::train_job_iterator_in(
+                        &prep, &fc, t_idx, y_idx, cfg.k_dup, false, &exec,
                     );
                     model.set_ensemble(t_idx, y_idx, b);
                 }

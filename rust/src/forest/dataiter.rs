@@ -4,13 +4,21 @@
 //! consumed *multiple times*. The upstream ForestDiffusion integration drew
 //! **fresh noise on every pass**, so the sketch pass and the index passes
 //! saw different datasets — silently training on inconsistent bin indices.
-//! Seeding the noise per batch (so every pass replays identical batches)
-//! fixes it.
+//! Addressing the noise positionally (so every pass replays identical
+//! batches) fixes it.
+//!
+//! Since the virtual K-duplication refactor the iterator reads the **same
+//! counter-based noise streams** as the in-memory trainer
+//! ([`Prepared::noise`]): noise is a pure function of `(replica, row)`, so
+//! batches are replay-identical by construction *and* batch-size-invariant,
+//! and the out-of-core path trains byte-identical ensembles to
+//! [`train_job_in`](super::trainer::train_job_in) (pinned by tests).
 //!
 //! Both variants are implemented here:
-//! * [`NoisingIter`] with `flawed = false` — the corrected, seeded iterator
-//!   this paper ships;
-//! * `flawed = true` — the upstream bug, kept reproducible so the
+//! * [`NoisingIter`] with `flawed = false` — the corrected, stream-addressed
+//!   iterator this paper ships;
+//! * `flawed = true` — the upstream bug (a rolling generator that never
+//!   resets between passes), kept reproducible so the
 //!   `table6_data_iterator` bench and the regression tests can demonstrate
 //!   the inconsistency.
 //!
@@ -22,76 +30,135 @@ use super::model::ModelKind;
 use super::noising;
 use super::schedule::VpSchedule;
 use super::trainer::{ForestTrainConfig, Prepared};
+use crate::coordinator::pool::WorkerPool;
 use crate::gbt::binning::{BatchIterator, BinnedMatrix};
 use crate::gbt::Booster;
 use crate::tensor::{Matrix, MatrixView};
-use crate::util::rng::Rng;
+use crate::util::rng::{NormalStream, Rng};
 
-/// Batch iterator producing noised inputs `x_t` for one `(t, y)` job.
+/// Walk virtual duplicated rows `[v0, v1)` of an `n_rows`-row slice
+/// replica-major — virtual row `v` is replica `v / n_rows`, local row
+/// `v % n_rows` — calling `f(replica, local_row0, rows, elem_offset)` once
+/// per replica segment. The one place the wrap-around arithmetic lives;
+/// `elem_offset` counts elements from `v0`.
+fn for_virtual_segments(
+    n_rows: usize,
+    cols: usize,
+    v0: usize,
+    v1: usize,
+    mut f: impl FnMut(usize, usize, usize, usize),
+) {
+    let mut v = v0;
+    let mut off = 0usize;
+    while v < v1 {
+        let rep = v / n_rows;
+        let local = v % n_rows;
+        let take = (n_rows - local).min(v1 - v);
+        f(rep, local, take, off);
+        v += take;
+        off += take * cols;
+    }
+}
+
+/// Noise for virtual duplicated rows `[vstart, vstart + rows)` of a class
+/// slice (`row0` its global offset) in the shared counter-based stream —
+/// the same addressing the in-memory fused kernel uses, so any batching of
+/// the virtual rows sees identical values.
+pub fn fill_virtual_noise(
+    stream: &NormalStream,
+    n_rows: usize,
+    row0: usize,
+    vstart: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    let p = stream.cols();
+    debug_assert_eq!(out.len(), rows * p, "noise buffer/shape mismatch");
+    for_virtual_segments(n_rows, p, vstart, vstart + rows, |rep, local, take, off| {
+        stream.fill(rep, row0 + local, take, &mut out[off..off + take * p]);
+    });
+}
+
+/// Batch iterator producing noised inputs `x_t` over the *virtual*
+/// duplicated rows of one `(t, y)` job.
 pub struct NoisingIter<'a> {
+    /// Undup'd class slice of the scaled data.
     x0: MatrixView<'a>,
+    /// Global row offset of `x0` within the full sorted matrix.
+    row0: usize,
+    /// Duplication factor: the iterator spans `x0.rows · k` virtual rows.
+    k: usize,
+    /// Shared noise-stream definition (replicas `0..k`).
+    stream: NormalStream,
     t: f32,
     kind: ModelKind,
     schedule: VpSchedule,
     batch_rows: usize,
     pos: usize,
-    /// Base seed; per-batch streams derive from it in seeded mode.
-    seed: u64,
     /// Rolling RNG used only in flawed mode (never reset between passes).
     rolling: Rng,
     flawed: bool,
-    /// Scratch buffers reused across batches — allocated once at
-    /// `batch_rows × p` capacity; the ragged tail batch only shrinks the
+    /// Scratch buffers reused across batches — allocated once at the
+    /// clamped batch capacity; the ragged tail batch only shrinks the
     /// logical row count, never the backing storage.
     noise_buf: Matrix,
     out_buf: Matrix,
 }
 
 impl<'a> NoisingIter<'a> {
+    /// `job_tag` keys the flawed-mode rolling generator (one independent
+    /// flawed realization per `(t, y)` job, as upstream had); the corrected
+    /// mode ignores it — its noise is fully addressed by the stream.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         x0: MatrixView<'a>,
+        row0: usize,
+        stream: NormalStream,
+        k: usize,
         t: f32,
         kind: ModelKind,
         schedule: VpSchedule,
         batch_rows: usize,
-        seed: u64,
         flawed: bool,
+        job_tag: u64,
     ) -> Self {
         let p = x0.cols;
+        let k = k.max(1);
+        // Clamp the scratch capacity to the virtual row count: small inputs
+        // must not leave the restored logical shape pointing past the rows
+        // any batch can ever produce.
+        let cap = batch_rows.max(1).min((x0.rows * k).max(1));
         NoisingIter {
             x0,
+            row0,
+            k,
+            stream,
             t,
             kind,
             schedule,
-            batch_rows: batch_rows.max(1),
+            batch_rows: cap,
             pos: 0,
-            seed,
-            rolling: Rng::new(seed),
+            rolling: Rng::new(stream.seed()).split(job_tag),
             flawed,
-            noise_buf: Matrix::zeros(batch_rows.max(1), p),
-            out_buf: Matrix::zeros(batch_rows.max(1), p),
+            noise_buf: Matrix::zeros(cap, p),
+            out_buf: Matrix::zeros(cap, p),
         }
     }
 
-    /// Deterministic noise for batch `b` (seeded mode).
-    fn fill_noise(&mut self, batch_index: usize, rows: usize) {
+    /// Virtual duplicated rows this iterator spans.
+    pub fn total_rows(&self) -> usize {
+        self.x0.rows * self.k
+    }
+
+    /// Noise for the batch starting at virtual row `vstart`.
+    fn fill_noise(&mut self, vstart: usize, rows: usize) {
         let buf = &mut self.noise_buf.data[..rows * self.x0.cols];
         if self.flawed {
             // Upstream bug: fresh draw every consumption.
             self.rolling.fill_normal(buf);
         } else {
-            let mut rng = Rng::new(self.seed).split(batch_index as u64);
-            rng.fill_normal(buf);
+            fill_virtual_noise(&self.stream, self.x0.rows, self.row0, vstart, rows, buf);
         }
-    }
-
-    /// Reconstruct the noise for batch `b` (used to build targets from the
-    /// *same* draw in seeded mode).
-    pub fn noise_for_batch(seed: u64, batch_index: usize, rows: usize, p: usize) -> Matrix {
-        let mut m = Matrix::zeros(rows, p);
-        let mut rng = Rng::new(seed).split(batch_index as u64);
-        rng.fill_normal(&mut m.data);
-        m
     }
 }
 
@@ -102,36 +169,55 @@ impl<'a> BatchIterator for NoisingIter<'a> {
     }
 
     fn next_batch(&mut self) -> Option<MatrixView<'_>> {
-        if self.pos >= self.x0.rows {
+        let total = self.total_rows();
+        if self.pos >= total {
             return None;
         }
         let start = self.pos;
-        let end = (start + self.batch_rows).min(self.x0.rows);
+        let end = (start + self.batch_rows).min(total);
         let rows = end - start;
         let p = self.x0.cols;
-        let batch_index = start / self.batch_rows;
-        self.fill_noise(batch_index, rows);
-        let x0b = MatrixView { rows, cols: p, data: &self.x0.data[start * p..end * p] };
-        let noise = MatrixView { rows, cols: p, data: &self.noise_buf.data[..rows * p] };
-        // Write into the reusable scratch in place (no per-batch
-        // allocation). The kernels assert on `out.rows` and touch exactly
-        // the first `rows × p` elements, so shape the scratch to this
-        // batch for the call, then restore the allocated shape to keep the
-        // Matrix invariant (`rows × cols == data.len()`) outside it.
+        let n_rows = self.x0.rows;
+        self.fill_noise(start, rows);
+        // Shape the reusable scratch to this batch (the ragged tail shrinks
+        // the logical row count only), asserting the Matrix invariant
+        // against the allocated capacity at both shape flips.
         self.out_buf.rows = rows;
-        match self.kind {
-            ModelKind::Flow => noising::cfm_inputs(&x0b, &noise, self.t, &mut self.out_buf),
-            ModelKind::Diffusion => {
-                noising::diffusion_inputs(&x0b, &noise, self.t, &self.schedule, &mut self.out_buf)
+        debug_assert!(
+            self.out_buf.rows * self.out_buf.cols <= self.out_buf.data.len(),
+            "batch shape exceeds scratch capacity"
+        );
+        // The shared noising algebra (`noising::xt_elem` — single-sourced
+        // with the fused in-memory kernel), segment-by-replica because the
+        // virtual rows wrap around the undup'd slice.
+        let (alpha, sigma) = noising::xt_coeffs(self.kind, self.t, &self.schedule);
+        let x0_data = self.x0.data;
+        let noise_data = &self.noise_buf.data;
+        let out_data = &mut self.out_buf.data;
+        for_virtual_segments(n_rows, p, start, end, |_rep, local, take, off| {
+            let x0s = &x0_data[local * p..(local + take) * p];
+            let es = &noise_data[off..off + take * p];
+            let outs = &mut out_data[off..off + take * p];
+            for i in 0..outs.len() {
+                outs[i] = noising::xt_elem(alpha, sigma, x0s[i], es[i]);
             }
-        }
+        });
+        // Restore the allocated logical shape for the next batch.
         self.out_buf.rows = self.batch_rows;
+        debug_assert_eq!(
+            self.out_buf.rows * self.out_buf.cols,
+            self.out_buf.data.len(),
+            "restored scratch shape must satisfy rows × cols == data.len()"
+        );
         self.pos = end;
         Some(MatrixView { rows, cols: p, data: &self.out_buf.data[..rows * p] })
     }
 }
 
-/// Train one `(t, y)` job through the data-iterator path.
+/// Train one `(t, y)` job through the data-iterator path; spawns one
+/// [`WorkerPool`] of `cfg.params.intra_threads` threads for the job.
+/// Schedulers that train many jobs should pass a long-lived pool to
+/// [`train_job_iterator_in`] instead.
 ///
 /// `batches` controls the batch count (the paper uses K batches so only one
 /// copy of the raw dataset streams at a time). `flawed = true` reproduces
@@ -144,57 +230,119 @@ pub fn train_job_iterator(
     batches: usize,
     flawed: bool,
 ) -> Booster {
+    let exec = WorkerPool::new(cfg.params.intra_threads.max(1));
+    train_job_iterator_in(prep, cfg, t_idx, y, batches, flawed, &exec)
+}
+
+/// [`train_job_iterator`] on an existing persistent worker pool: binning
+/// still streams batch-by-batch (that is the point of the path), but the
+/// boosting rounds ride the pool, and the target pass reuses one noise
+/// scratch while writing straight into `z`'s row spans — no per-batch
+/// allocations anywhere.
+pub fn train_job_iterator_in(
+    prep: &Prepared,
+    cfg: &ForestTrainConfig,
+    t_idx: usize,
+    y: usize,
+    batches: usize,
+    flawed: bool,
+    exec: &WorkerPool,
+) -> Booster {
     let t = prep.grid.ts[t_idx];
-    let (s, e) = prep.class_ranges_dup[y];
-    let x0 = prep.x0.row_slice(s, e);
-    let rows = e - s;
+    let (s, e) = prep.class_ranges[y];
+    let x0 = prep.x.row_slice(s, e);
+    let n_rows = e - s;
+    let rows_dup = n_rows * prep.k;
     let p = prep.p;
-    let batch_rows = rows.div_ceil(batches.max(1)).max(1);
-    let job_seed = cfg
-        .seed
-        .wrapping_mul(0x9E3779B97F4A7C15)
-        .wrapping_add((t_idx * 10_007 + y) as u64);
+    let batch_rows = rows_dup.div_ceil(batches.max(1)).max(1);
+    // Per-job tag for the flawed-mode rolling generator only (upstream drew
+    // independent flawed noise per job).
+    let job_tag = (t_idx * 10_007 + y) as u64;
 
     // Multi-pass quantile construction (3 passes over the iterator).
     let mut it = NoisingIter::new(
         x0,
+        s,
+        prep.noise,
+        prep.k,
         t,
         cfg.kind,
         prep.schedule,
         batch_rows,
-        job_seed,
         flawed,
+        job_tag,
     );
     let binned = BinnedMatrix::from_iterator(&mut it, cfg.params.max_bins);
 
-    // Targets from the same per-batch noise streams (one more pass).
-    let mut z = Matrix::zeros(rows, p);
+    // Targets from the same positional noise streams (one more pass): one
+    // reusable noise scratch, targets written directly into z's row spans
+    // through the shared noising algebra (`noising::*_target_elem`).
+    let mut z = Matrix::zeros(rows_dup, p);
+    let cap = batch_rows.min(rows_dup.max(1));
+    let mut noise_buf = vec![0.0f32; cap * p];
+    let inv_sigma = noising::target_inv_sigma(t, &prep.schedule);
     let mut start = 0usize;
-    let mut batch_index = 0usize;
-    while start < rows {
-        let end = (start + batch_rows).min(rows);
-        let brows = end - start;
-        let noise = NoisingIter::noise_for_batch(job_seed, batch_index, brows, p);
-        let x0b = MatrixView { rows: brows, cols: p, data: &x0.data[start * p..end * p] };
-        let mut zb = Matrix::zeros(brows, p);
-        match cfg.kind {
-            ModelKind::Flow => noising::cfm_targets(&x0b, &noise.view(), &mut zb),
-            ModelKind::Diffusion => {
-                noising::diffusion_targets(&noise.view(), t, &prep.schedule, &mut zb)
+    while start < rows_dup {
+        let end = (start + batch_rows).min(rows_dup);
+        let rows = end - start;
+        fill_virtual_noise(&prep.noise, n_rows, s, start, rows, &mut noise_buf[..rows * p]);
+        let z_data = &mut z.data;
+        let nb = &noise_buf;
+        for_virtual_segments(n_rows, p, start, end, |_rep, local, take, off| {
+            let abs = start * p + off;
+            let zs = &mut z_data[abs..abs + take * p];
+            let es = &nb[off..off + take * p];
+            match cfg.kind {
+                ModelKind::Flow => {
+                    let x0s = &x0.data[local * p..(local + take) * p];
+                    for i in 0..zs.len() {
+                        zs[i] = noising::flow_target_elem(x0s[i], es[i]);
+                    }
+                }
+                ModelKind::Diffusion => {
+                    for i in 0..zs.len() {
+                        zs[i] = noising::diffusion_target_elem(inv_sigma, es[i]);
+                    }
+                }
             }
-        }
-        z.data[start * p..end * p].copy_from_slice(&zb.data);
+        });
         start = end;
-        batch_index += 1;
     }
 
-    Booster::train_binned(&binned, &z.view(), cfg.params, None)
+    // Fresh-noise validation (§3.4): the same replica-k eval set the
+    // in-memory path builds, so validation-driven early stopping keeps the
+    // two paths byte-identical. Undup'd `[n_class × p]` — small next to the
+    // streamed duplicated data, so holding it in memory keeps the
+    // out-of-core story intact.
+    let val = if prep.fresh_noise_validation {
+        let mut xtv = Matrix::zeros(n_rows, p);
+        let mut zv = Matrix::zeros(n_rows, p);
+        noising::stream_inputs_targets(
+            cfg.kind, &x0, s, &prep.noise, prep.k, 1, t, &prep.schedule, &mut xtv, &mut zv,
+            exec,
+        );
+        Some((xtv, zv))
+    } else {
+        None
+    };
+
+    match &val {
+        Some((xtv, zv)) => Booster::train_binned_with(
+            &binned,
+            &z.view(),
+            cfg.params,
+            Some((&xtv.view(), &zv.view())),
+            exec,
+        ),
+        None => Booster::train_binned_with(&binned, &z.view(), cfg.params, None, exec),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::forest::trainer::prepare;
+    use crate::forest::noising;
+    use crate::forest::trainer::{prepare, train_job};
     use crate::gbt::binning::BinCuts;
     use crate::gbt::TrainParams;
 
@@ -215,27 +363,32 @@ mod tests {
     #[test]
     fn seeded_iterator_is_reproducible_across_passes() {
         let (prep, cfg) = prep_and_cfg();
-        let x0 = prep.x0.row_slice(0, prep.x0.rows);
+        let x0 = prep.x.row_slice(0, prep.n);
         let mut it = NoisingIter::new(
-            x0, 0.5, cfg.kind, prep.schedule, 32, 123, /* flawed */ false,
+            x0, 0, prep.noise, prep.k, 0.5, cfg.kind, prep.schedule, 32,
+            /* flawed */ false, 0,
         );
+        assert_eq!(it.total_rows(), 80 * 5);
         let mut pass1 = Vec::new();
         while let Some(b) = it.next_batch() {
             pass1.extend_from_slice(b.data);
         }
+        assert_eq!(pass1.len(), 80 * 5 * 3);
         it.reset();
         let mut pass2 = Vec::new();
         while let Some(b) = it.next_batch() {
             pass2.extend_from_slice(b.data);
         }
-        assert_eq!(pass1, pass2, "seeded iterator must replay identically");
+        assert_eq!(pass1, pass2, "stream-addressed iterator must replay identically");
     }
 
     #[test]
     fn flawed_iterator_differs_across_passes() {
         let (prep, cfg) = prep_and_cfg();
-        let x0 = prep.x0.row_slice(0, prep.x0.rows);
-        let mut it = NoisingIter::new(x0, 0.5, cfg.kind, prep.schedule, 32, 123, true);
+        let x0 = prep.x.row_slice(0, prep.n);
+        let mut it = NoisingIter::new(
+            x0, 0, prep.noise, prep.k, 0.5, cfg.kind, prep.schedule, 32, true, 3,
+        );
         let mut pass1 = Vec::new();
         while let Some(b) = it.next_batch() {
             pass1.extend_from_slice(b.data);
@@ -250,36 +403,101 @@ mod tests {
 
     #[test]
     fn corrected_iterator_cuts_match_single_shot_on_same_noise() {
-        // With the same noise realization, iterator-built cuts equal
-        // single-shot cuts.
+        // With the same stream realization, iterator-built cuts equal
+        // single-shot cuts on the in-memory virtual x_t.
         let (prep, cfg) = prep_and_cfg();
-        let x0 = prep.x0.row_slice(0, prep.x0.rows);
-        let rows = x0.rows;
-        let p = x0.cols;
-        let batch_rows = 32;
-        let mut it =
-            NoisingIter::new(x0, 0.5, cfg.kind, prep.schedule, batch_rows, 99, false);
+        let x0 = prep.x.row_slice(0, prep.n);
+        let rows_dup = prep.n * prep.k;
+        let p = prep.p;
+        let mut it = NoisingIter::new(
+            x0, 0, prep.noise, prep.k, 0.5, cfg.kind, prep.schedule, 32, false, 0,
+        );
         let via_iter = BinnedMatrix::from_iterator(&mut it, 64);
 
-        // Rebuild the same x_t in memory from the per-batch seeds.
-        let mut xt = Matrix::zeros(rows, p);
-        let mut start = 0;
-        let mut bi = 0;
-        while start < rows {
-            let end = (start + batch_rows).min(rows);
-            let brows = end - start;
-            let noise = NoisingIter::noise_for_batch(99, bi, brows, p);
-            let x0b = MatrixView { rows: brows, cols: p, data: &x0.data[start * p..end * p] };
-            let mut out = Matrix::zeros(brows, p);
-            noising::cfm_inputs(&x0b, &noise.view(), 0.5, &mut out);
-            xt.data[start * p..end * p].copy_from_slice(&out.data);
-            start = end;
-            bi += 1;
-        }
+        // Rebuild the same virtual x_t in memory with the fused kernel.
+        let mut xt = Matrix::zeros(rows_dup, p);
+        let mut z = Matrix::zeros(rows_dup, p);
+        noising::stream_inputs_targets(
+            cfg.kind,
+            &x0,
+            0,
+            &prep.noise,
+            0,
+            prep.k,
+            0.5,
+            &prep.schedule,
+            &mut xt,
+            &mut z,
+            &WorkerPool::new(1),
+        );
         let direct_cuts = BinCuts::fit(&xt.view(), 64);
         assert_eq!(via_iter.cuts, direct_cuts);
         let direct = BinnedMatrix::bin(&xt.view(), &direct_cuts);
         assert_eq!(via_iter.codes, direct.codes);
+    }
+
+    #[test]
+    fn iterator_is_batch_size_invariant_and_matches_in_memory_path() {
+        let (prep, cfg) = prep_and_cfg();
+        let x0 = prep.x.row_slice(0, prep.n);
+        // Positional streams make the produced x_t independent of the batch
+        // structure — including ragged tails and batch > total.
+        let collect = |batch: usize| {
+            let mut it = NoisingIter::new(
+                x0, 0, prep.noise, prep.k, 0.7, cfg.kind, prep.schedule, batch, false, 0,
+            );
+            let mut all = Vec::new();
+            while let Some(b) = it.next_batch() {
+                all.extend_from_slice(b.data);
+            }
+            all
+        };
+        let reference = collect(64);
+        assert_eq!(collect(7), reference);
+        assert_eq!(collect(1), reference);
+        assert_eq!(collect(10_000), reference);
+        // …so the out-of-core job trains a byte-identical ensemble to the
+        // in-memory virtual job (same streams, same cuts, same targets).
+        let via_iter = train_job_iterator(&prep, &cfg, 1, 0, 5, false);
+        let in_memory = train_job(&prep, &cfg, 1, 0);
+        assert_eq!(
+            crate::gbt::serialize::to_bytes(&via_iter),
+            crate::gbt::serialize::to_bytes(&in_memory),
+            "iterator path diverges from the in-memory virtual path"
+        );
+    }
+
+    #[test]
+    fn iterator_matches_in_memory_path_with_fresh_noise_validation() {
+        // Validation-driven early stopping rides the same replica-k eval
+        // set in both paths — best_round and the kept trees must agree
+        // byte-for-byte too.
+        let mut rng = Rng::new(43);
+        let x = Matrix::randn(90, 3, &mut rng);
+        let cfg = ForestTrainConfig {
+            n_t: 3,
+            k_dup: 4,
+            fresh_noise_validation: true,
+            params: TrainParams {
+                n_trees: 8,
+                max_depth: 3,
+                early_stopping_rounds: 2,
+                ..Default::default()
+            },
+            seed: 21,
+            ..Default::default()
+        };
+        let prep = prepare(&cfg, &x, None);
+        for t_idx in [0, 2] {
+            let via_iter = train_job_iterator(&prep, &cfg, t_idx, 0, 4, false);
+            let in_memory = train_job(&prep, &cfg, t_idx, 0);
+            assert!(via_iter.history.last().unwrap().valid_loss.is_some());
+            assert_eq!(
+                crate::gbt::serialize::to_bytes(&via_iter),
+                crate::gbt::serialize::to_bytes(&in_memory),
+                "validation-on iterator path diverges at t={t_idx}"
+            );
+        }
     }
 
     #[test]

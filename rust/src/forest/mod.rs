@@ -30,4 +30,4 @@ pub mod impute;
 
 pub use model::{ForestModel, ModelKind};
 pub use sampler::{generate, GenerateConfig, LabelSampler};
-pub use trainer::{train_forest, ForestTrainConfig, Prepared, TrainReport};
+pub use trainer::{train_forest, ForestTrainConfig, Materialized, Prepared, TrainReport};

@@ -6,9 +6,25 @@
 //! (`python/compile/kernels/noising.py`); a parity test lives in
 //! `python/tests/` via the shared HLO artifact and in
 //! `rust/tests/xla_parity.rs`.
+//!
+//! Since the virtual K-duplication refactor the noise itself is never
+//! materialized either: [`stream_inputs_targets`] fuses noise generation
+//! (from a counter-based [`NormalStream`]) with the corruption/target math,
+//! writing each job's `x_t`/`z` directly. Work is split into fixed
+//! `(replica, row-chunk)` units whose boundaries depend only on the global
+//! row coordinates, so the kernel is bit-identical for any [`WorkerPool`]
+//! width and for any class slice (a slice sees exactly the noise its rows
+//! would have inside the full matrix). The elementwise expressions match the
+//! scalar kernels below operation-for-operation, which is what lets
+//! `Prepared::materialize()` + the scalar kernels serve as a bit-exact
+//! oracle for the fused path.
 
+use super::model::ModelKind;
 use super::schedule::VpSchedule;
+use crate::coordinator::pool::WorkerPool;
 use crate::tensor::{Matrix, MatrixView};
+use crate::util::rng::NormalStream;
+use std::sync::Mutex;
 
 /// Conditional flow matching (Eq. 5): `x_t = t·x1 + (1−t)·x0` (σ = 0).
 /// The regression target `x1 − x0` is time-independent.
@@ -59,10 +75,163 @@ pub fn diffusion_targets(
     }
 }
 
+/// Shared elementwise algebra of every *virtual-duplication* path — the
+/// fused kernel below, `NoisingIter::next_batch`, and the iterator target
+/// pass all route through these, so the three code paths cannot drift apart
+/// bit-wise. The scalar kernels above are deliberately **not** routed
+/// through them: they are the independent oracle the fused path is pinned
+/// against (`Prepared::materialize` + `train_job_materialized`).
+///
+/// `(α, σ)` such that `x_t = α·x0 + σ·ε`: flow is `(1−t, t)` (the scalar
+/// kernel's `t·x1 + (1−t)·x0` with the sum commuted — bit-equal), diffusion
+/// is the VP schedule's `(α_t, σ_t)`.
+#[inline]
+pub fn xt_coeffs(kind: ModelKind, t: f32, schedule: &VpSchedule) -> (f32, f32) {
+    match kind {
+        ModelKind::Flow => (1.0 - t, t),
+        ModelKind::Diffusion => (schedule.alpha(t), schedule.sigma(t)),
+    }
+}
+
+/// `−1/σ_t` with the scalar kernel's clamp — the diffusion target scale.
+#[inline]
+pub fn target_inv_sigma(t: f32, schedule: &VpSchedule) -> f32 {
+    -1.0 / schedule.sigma(t).max(1e-5)
+}
+
+/// `x_t = α·x0 + σ·ε`.
+#[inline(always)]
+pub fn xt_elem(alpha: f32, sigma: f32, x: f32, e: f32) -> f32 {
+    alpha * x + sigma * e
+}
+
+/// Flow target `ε − x0` ([`cfm_targets`]' `x1 − x0`).
+#[inline(always)]
+pub fn flow_target_elem(x: f32, e: f32) -> f32 {
+    e - x
+}
+
+/// Diffusion target `−ε/σ` ([`diffusion_targets`]' scaled form).
+#[inline(always)]
+pub fn diffusion_target_elem(inv_sigma: f32, e: f32) -> f32 {
+    inv_sigma * e
+}
+
+/// One parallel work unit of the virtual data plane: a single replica's
+/// overlap with one fixed global row chunk.
+struct Unit {
+    replica: usize,
+    /// First covered row, in *global* (full sorted matrix) coordinates.
+    row0: usize,
+    rows: usize,
+}
+
+/// Fused generate-noise + noising kernel: synthesize the duplicated
+/// `x_t` (`xt`) and regression target (`z`) of one training job straight
+/// from the noise stream, without ever materializing an `n·K·p` array.
+///
+/// `x0` is the *undup'd* class slice (`row0` its global row offset);
+/// `replicas` replicas starting at `replica0` are laid out replica-major:
+/// virtual duplicated row `v` is replica `v / x0.rows`, source row
+/// `v % x0.rows`. `xt` and `z` must be preallocated `[x0.rows·replicas × p]`.
+///
+/// Chunk-parallel on `exec` over fixed `(replica, row-chunk)` units —
+/// bit-identical for any pool width, and slice-invariant: a class slice's
+/// rows get the same noise they would inside the full matrix.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_inputs_targets(
+    kind: ModelKind,
+    x0: &MatrixView<'_>,
+    row0: usize,
+    stream: &NormalStream,
+    replica0: usize,
+    replicas: usize,
+    t: f32,
+    schedule: &VpSchedule,
+    xt: &mut Matrix,
+    z: &mut Matrix,
+    exec: &WorkerPool,
+) {
+    let n_rows = x0.rows;
+    let p = x0.cols;
+    assert_eq!(p, stream.cols(), "stream/feature width mismatch");
+    assert_eq!((xt.rows, xt.cols), (n_rows * replicas, p), "xt shape mismatch");
+    assert_eq!((z.rows, z.cols), (n_rows * replicas, p), "z shape mismatch");
+    if n_rows == 0 || replicas == 0 || p == 0 {
+        return;
+    }
+
+    let (alpha, sigma) = xt_coeffs(kind, t, schedule);
+    let inv_sigma = target_inv_sigma(t, schedule);
+
+    // Fixed unit list: boundaries are a pure function of (row0, n_rows) in
+    // global row coordinates — never of the pool width or the class slice.
+    let ch = NormalStream::CHUNK_ROWS;
+    let g0 = row0 / ch;
+    let g1 = (row0 + n_rows - 1) / ch + 1;
+    let mut units = Vec::with_capacity(replicas * (g1 - g0));
+    for rep in 0..replicas {
+        for g in g0..g1 {
+            let a = (g * ch).max(row0);
+            let b = ((g + 1) * ch).min(row0 + n_rows);
+            units.push(Unit { replica: replica0 + rep, row0: a, rows: b - a });
+        }
+    }
+
+    // In unit order the duplicated-row spans tile `[0, n_rows·replicas)`
+    // contiguously, so both outputs split into per-unit disjoint `&mut`
+    // slices (the same Mutex-cell pattern as `WorkerPool::for_each_mut_chunk`).
+    let mut xt_cells: Vec<Mutex<&mut [f32]>> = Vec::with_capacity(units.len());
+    let mut z_cells: Vec<Mutex<&mut [f32]>> = Vec::with_capacity(units.len());
+    let mut xt_rest: &mut [f32] = &mut xt.data;
+    let mut z_rest: &mut [f32] = &mut z.data;
+    for u in &units {
+        let len = u.rows * p;
+        let (head, tail) = std::mem::take(&mut xt_rest).split_at_mut(len);
+        xt_cells.push(Mutex::new(head));
+        xt_rest = tail;
+        let (head, tail) = std::mem::take(&mut z_rest).split_at_mut(len);
+        z_cells.push(Mutex::new(head));
+        z_rest = tail;
+    }
+    debug_assert!(xt_rest.is_empty() && z_rest.is_empty());
+
+    exec.run_indexed(units.len(), |ui| {
+        let u = &units[ui];
+        let local0 = u.row0 - row0;
+        let x0s = &x0.data[local0 * p..(local0 + u.rows) * p];
+        let mut xg = xt_cells[ui].lock().unwrap();
+        let mut zg = z_cells[ui].lock().unwrap();
+        let xts: &mut [f32] = &mut xg;
+        let zs: &mut [f32] = &mut zg;
+        debug_assert_eq!(xts.len(), u.rows * p, "unit span mismatch");
+        // Generate ε directly into the target buffer, then rewrite both
+        // buffers elementwise — no scratch, no second pass over memory.
+        stream.fill(u.replica, u.row0, u.rows, zs);
+        match kind {
+            ModelKind::Flow => {
+                for i in 0..xts.len() {
+                    let e = zs[i];
+                    let x = x0s[i];
+                    xts[i] = xt_elem(alpha, sigma, x, e);
+                    zs[i] = flow_target_elem(x, e);
+                }
+            }
+            ModelKind::Diffusion => {
+                for i in 0..xts.len() {
+                    let e = zs[i];
+                    xts[i] = xt_elem(alpha, sigma, x0s[i], e);
+                    zs[i] = diffusion_target_elem(inv_sigma, e);
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::prop::{assert_close, forall, Config};
+    use crate::util::prop::{assert_close, bits_f32, forall, Config};
     use crate::util::rng::Rng;
 
     #[test]
@@ -133,6 +302,82 @@ mod tests {
         // Near data (small t) the score is much larger in magnitude.
         assert!(z_early.data[0].abs() > z_late.data[0].abs() * 3.0);
         assert!(z_late.data[0] < 0.0);
+    }
+
+    #[test]
+    fn fused_kernel_matches_scalar_kernels_on_materialized_noise() {
+        // stream_inputs_targets == (materialize the stream's noise, then run
+        // the scalar kernels) — bit-for-bit, both model kinds, K replicas.
+        let mut rng = Rng::new(9);
+        let (n, p, k) = (300, 3, 4); // spans two 256-row chunks
+        let x0 = Matrix::randn(n, p, &mut rng);
+        let stream = NormalStream::new(77, p);
+        let sched = VpSchedule::default();
+        let pool = WorkerPool::new(2);
+        for kind in [ModelKind::Flow, ModelKind::Diffusion] {
+            let t = 0.37;
+            let mut xt = Matrix::zeros(n * k, p);
+            let mut z = Matrix::zeros(n * k, p);
+            stream_inputs_targets(
+                kind, &x0.view(), 0, &stream, 0, k, t, &sched, &mut xt, &mut z, &pool,
+            );
+            // Materialize the same streams replica-major, then run the
+            // scalar reference kernels.
+            let mut x0_dup = Matrix::zeros(n * k, p);
+            let mut x1_dup = Matrix::zeros(n * k, p);
+            for rep in 0..k {
+                x0_dup.data[rep * n * p..(rep + 1) * n * p].copy_from_slice(&x0.data);
+                stream.fill(rep, 0, n, &mut x1_dup.data[rep * n * p..(rep + 1) * n * p]);
+            }
+            let mut xt_ref = Matrix::zeros(n * k, p);
+            let mut z_ref = Matrix::zeros(n * k, p);
+            match kind {
+                ModelKind::Flow => {
+                    cfm_inputs(&x0_dup.view(), &x1_dup.view(), t, &mut xt_ref);
+                    cfm_targets(&x0_dup.view(), &x1_dup.view(), &mut z_ref);
+                }
+                ModelKind::Diffusion => {
+                    diffusion_inputs(&x0_dup.view(), &x1_dup.view(), t, &sched, &mut xt_ref);
+                    diffusion_targets(&x1_dup.view(), t, &sched, &mut z_ref);
+                }
+            }
+            assert_eq!(bits_f32(&xt.data), bits_f32(&xt_ref.data), "{kind:?} xt diverges");
+            assert_eq!(bits_f32(&z.data), bits_f32(&z_ref.data), "{kind:?} z diverges");
+        }
+    }
+
+    #[test]
+    fn fused_kernel_is_slice_invariant() {
+        // A class slice's rows must see exactly the noise they'd have inside
+        // the full matrix — including slices starting mid-chunk.
+        let mut rng = Rng::new(11);
+        let (n, p, k) = (600, 2, 3);
+        let x0 = Matrix::randn(n, p, &mut rng);
+        let stream = NormalStream::new(5, p);
+        let sched = VpSchedule::default();
+        let pool = WorkerPool::new(1);
+        let mut xt_full = Matrix::zeros(n * k, p);
+        let mut z_full = Matrix::zeros(n * k, p);
+        stream_inputs_targets(
+            ModelKind::Flow, &x0.view(), 0, &stream, 0, k, 0.6, &sched,
+            &mut xt_full, &mut z_full, &pool,
+        );
+        let (s, e) = (250, 530);
+        let rows = e - s;
+        let mut xt = Matrix::zeros(rows * k, p);
+        let mut z = Matrix::zeros(rows * k, p);
+        stream_inputs_targets(
+            ModelKind::Flow, &x0.row_slice(s, e), s, &stream, 0, k, 0.6, &sched,
+            &mut xt, &mut z, &pool,
+        );
+        for rep in 0..k {
+            let got = &xt.data[rep * rows * p..(rep + 1) * rows * p];
+            let want = &xt_full.data[(rep * n + s) * p..(rep * n + e) * p];
+            assert_eq!(bits_f32(got), bits_f32(want), "rep {rep} xt diverges");
+            let got = &z.data[rep * rows * p..(rep + 1) * rows * p];
+            let want = &z_full.data[(rep * n + s) * p..(rep * n + e) * p];
+            assert_eq!(bits_f32(got), bits_f32(want), "rep {rep} z diverges");
+        }
     }
 
     #[test]

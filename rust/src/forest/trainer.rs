@@ -1,19 +1,32 @@
 //! Training-job construction and the sequential trainer.
 //!
-//! [`Prepared`] holds exactly the state the paper's improved implementation
-//! keeps in (shared) memory: the class-sorted, per-class-scaled, K-duplicated
-//! `X0'`, the matching noise draw `X1`, and per-class row *slices* (Issue 5:
-//! no Boolean masks, no advanced-indexing copies). Each `(t, y)` job builds
-//! its regression inputs on the fly (Issue 1), bins them once for all `p`
+//! [`Prepared`] holds exactly the state the improved implementation keeps in
+//! (shared) memory — and since the **virtual K-duplication** refactor that
+//! is only the class-sorted, per-class-scaled, *undup'd* `[n × p]` matrix
+//! plus a counter-based noise-stream definition
+//! ([`NormalStream`]): `n·p` floats instead of the
+//! materialized `2·n·K·p` `x0`/`x1` pair (a ~2K× shared-state reduction,
+//! ~200× at the paper's K=100). The K replicas exist only as addresses in
+//! the stream; each `(t, y)` job synthesizes its duplicated `x_t`/`z` with
+//! the fused chunk-parallel kernel
+//! ([`noising::stream_inputs_targets`]) — bit-identical for any worker
+//! width, and slice-invariant across class ranges. Per-class row *slices*
+//! still replace Boolean masks (Issue 5), each job bins once for all `p`
 //! outputs (Issue 6), and everything stays `f32` (Issue 7).
+//!
+//! [`Prepared::materialize`] rebuilds the old-style duplicated matrices
+//! *from the same streams*, and [`train_job_materialized`] trains on them
+//! through the scalar kernels — the bit-exact parity oracle the
+//! `parallel_parity` suite pins the virtual path against.
 //!
 //! Parallel execution with the shared-memory policy (Issue 2) and streaming
 //! model store (Issue 3) is the coordinator's job
 //! ([`crate::coordinator::run_training`]); this module exposes the pure
 //! per-job function [`train_job`] it schedules. Intra-job parallelism
 //! (feature-parallel histograms, row-chunk binning, row-block prediction
-//! updates) is carried in `cfg.params.intra_threads` — the coordinator's
-//! worker-budget policy sets it, and any value yields bit-identical models.
+//! updates, chunk-parallel noise synthesis) is carried in
+//! `cfg.params.intra_threads` — the coordinator's worker-budget policy sets
+//! it, and any value yields bit-identical models.
 
 use super::model::{ForestModel, ModelKind};
 use super::noising;
@@ -22,7 +35,7 @@ use super::schedule::{TimeGrid, VpSchedule};
 use crate::coordinator::pool::WorkerPool;
 use crate::gbt::{Booster, TrainParams};
 use crate::tensor::Matrix;
-use crate::util::rng::Rng;
+use crate::util::rng::{splitmix64, NormalStream};
 
 /// Time-grid shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -71,19 +84,30 @@ impl Default for ForestTrainConfig {
 }
 
 /// Read-only state shared by every training job.
+///
+/// Duplication is **virtual**: only the undup'd `[n × p]` scaled matrix is
+/// stored; the K noise replicas (and the §3.4 fresh validation draw, replica
+/// index `k`) are addresses in the counter-based [`NormalStream`], recomputed
+/// on demand by the fused kernels. The virtual duplicated layout is
+/// class-major, then replica-major within each class: duplicated row `d` of
+/// class `y` (whose original rows are `[s, e)`) is replica
+/// `(d − s·k) / (e − s)`, source row `s + (d − s·k) % (e − s)`.
 #[derive(Debug)]
 pub struct Prepared {
-    /// Scaled, class-sorted, K-duplicated data `[n·K × p]`.
-    pub x0: Matrix,
-    /// Standard-normal noise, same shape.
-    pub x1: Matrix,
-    /// Undup'd scaled data for fresh-noise validation.
-    pub x0_val: Option<Matrix>,
-    /// Fresh noise for validation.
-    pub x1_val: Option<Matrix>,
+    /// Scaled, class-sorted, *undup'd* data `[n × p]` — the only `O(n·p)`
+    /// shared array.
+    pub x: Matrix,
+    /// Noise-stream definition: replicas `0..k` are training noise, replica
+    /// `k` is the fresh-noise validation draw.
+    pub noise: NormalStream,
+    /// Duplication factor K (`cfg.k_dup.max(1)`).
+    pub k: usize,
+    /// Whether jobs build the §3.4 fresh-noise validation set.
+    pub fresh_noise_validation: bool,
     pub grid: TimeGrid,
     pub schedule: VpSchedule,
-    /// Contiguous `[start, end)` per class in the *duplicated* rows.
+    /// Contiguous `[start, end)` per class in the *virtual duplicated* rows
+    /// (`(s·k, e·k)` — job sizing and slicing, not bytes).
     pub class_ranges_dup: Vec<(usize, usize)>,
     /// Contiguous `[start, end)` per class in the *original* rows.
     pub class_ranges: Vec<(usize, usize)>,
@@ -93,23 +117,69 @@ pub struct Prepared {
     pub p: usize,
 }
 
+/// Old-style materialized training state, rebuilt from the same noise
+/// streams as the virtual path — the parity oracle
+/// ([`train_job_materialized`] trains on it through the scalar kernels).
+#[derive(Debug)]
+pub struct Materialized {
+    /// Duplicated data `[n·K × p]` in the virtual layout (class-major,
+    /// replica-major within class).
+    pub x0: Matrix,
+    /// The stream's noise, same shape and layout.
+    pub x1: Matrix,
+    /// Fresh validation noise `[n × p]` (replica K), when validation is on.
+    pub x1_val: Option<Matrix>,
+}
+
 impl Prepared {
-    /// Logical bytes of the shared arrays (feeds the memory model).
+    /// Logical bytes of the shared training state (feeds the memory model).
+    /// Virtual duplication keeps this at `n·p·4` — independent of K; the
+    /// noise exists only as an `O(1)` stream definition.
     pub fn nbytes(&self) -> usize {
-        self.x0.nbytes()
-            + self.x1.nbytes()
-            + self.x0_val.as_ref().map(|m| m.nbytes()).unwrap_or(0)
-            + self.x1_val.as_ref().map(|m| m.nbytes()).unwrap_or(0)
+        self.x.nbytes()
+    }
+
+    /// Build the old-style duplicated `x0`/`x1` matrices (and validation
+    /// noise) from the same counter-based streams the virtual path reads.
+    /// Costs the full `2·n·K·p` floats the refactor eliminated — parity
+    /// tests and oracles only.
+    pub fn materialize(&self) -> Materialized {
+        let (k, p) = (self.k, self.p);
+        let mut x0 = Matrix::zeros(self.n * k, p);
+        let mut x1 = Matrix::zeros(self.n * k, p);
+        for (y, &(s, e)) in self.class_ranges.iter().enumerate() {
+            let rows = e - s;
+            let (ds, _) = self.class_ranges_dup[y];
+            for rep in 0..k {
+                let d0 = (ds + rep * rows) * p;
+                x0.data[d0..d0 + rows * p].copy_from_slice(&self.x.data[s * p..e * p]);
+                self.noise.fill(rep, s, rows, &mut x1.data[d0..d0 + rows * p]);
+            }
+        }
+        let x1_val = self.fresh_noise_validation.then(|| {
+            let mut v = Matrix::zeros(self.n, p);
+            self.noise.fill(k, 0, self.n, &mut v.data);
+            v
+        });
+        Materialized { x0, x1, x1_val }
     }
 }
 
-/// Sort rows by label, fit scalers, duplicate K-fold, and draw noise.
+/// Domain-separated seed for the noise stream, so no other consumer of
+/// `cfg.seed` (job seeds, samplers, data generators) shares its streams.
+fn noise_stream_seed(seed: u64) -> u64 {
+    let mut s = seed ^ 0x6E6F_6973_652D_7631; // "noise-v1"
+    splitmix64(&mut s)
+}
+
+/// Sort rows by label, fit scalers, and define the virtual duplication:
+/// no K-sized array is allocated — duplication and noise exist only as the
+/// stream definition in the returned [`Prepared`].
 ///
 /// `y = None` trains unconditionally (a single pseudo-class).
 pub fn prepare(cfg: &ForestTrainConfig, x_raw: &Matrix, y: Option<&[u32]>) -> Prepared {
     let n = x_raw.rows;
     let p = x_raw.cols;
-    let mut rng = Rng::new(cfg.seed);
 
     // Class-sort (Issue 5): stable argsort by label.
     let (x_sorted, label_counts, class_ranges) = match y {
@@ -142,22 +212,14 @@ pub fn prepare(cfg: &ForestTrainConfig, x_raw: &Matrix, y: Option<&[u32]>) -> Pr
     };
     scalers.transform(&mut x_scaled, &class_ranges);
 
-    // K-fold duplication with class contiguity preserved.
+    // Virtual K-fold duplication: class contiguity is preserved by
+    // construction (replica-major blocks inside each class range), and the
+    // noise — training replicas 0..k plus the §3.4 fresh validation draw at
+    // replica k — is only a stream definition, never an array.
     let k = cfg.k_dup.max(1);
-    let x0 = x_scaled.repeat_rows(k);
     let class_ranges_dup: Vec<(usize, usize)> =
         class_ranges.iter().map(|&(s, e)| (s * k, e * k)).collect();
-    let mut x1 = Matrix::zeros(x0.rows, p);
-    rng.fill_normal(&mut x1.data);
-
-    // Fresh-noise validation arrays (§3.4): reuse X0 (undup'd), new X1.
-    let (x0_val, x1_val) = if cfg.fresh_noise_validation {
-        let mut noise = Matrix::zeros(n, p);
-        rng.fill_normal(&mut noise.data);
-        (Some(x_scaled), Some(noise))
-    } else {
-        (None, None)
-    };
+    let noise = NormalStream::new(noise_stream_seed(cfg.seed), p);
 
     let grid = match cfg.grid_kind {
         GridKind::Uniform => TimeGrid::uniform(cfg.n_t, cfg.eps),
@@ -165,10 +227,10 @@ pub fn prepare(cfg: &ForestTrainConfig, x_raw: &Matrix, y: Option<&[u32]>) -> Pr
     };
 
     Prepared {
-        x0,
-        x1,
-        x0_val,
-        x1_val,
+        x: x_scaled,
+        noise,
+        k,
+        fresh_noise_validation: cfg.fresh_noise_validation,
         grid,
         schedule: VpSchedule::default(),
         class_ranges_dup,
@@ -248,13 +310,68 @@ pub fn train_job_in(
     exec: &WorkerPool,
 ) -> Booster {
     let t = prep.grid.ts[t_idx];
+    let (s, e) = prep.class_ranges[y];
+    let x0 = prep.x.row_slice(s, e);
+    let rows_dup = (e - s) * prep.k;
+    let p = prep.p;
+
+    // Regression inputs and targets, synthesized on the fly (Issue 1) from
+    // the virtual duplication streams — the fused kernel generates noise
+    // and noises in one chunk-parallel pass; nothing `n·K·p`-shaped is ever
+    // shared, only this job's transient xt/z.
+    let mut xt = Matrix::zeros(rows_dup, p);
+    let mut z = Matrix::zeros(rows_dup, p);
+    noising::stream_inputs_targets(
+        cfg.kind, &x0, s, &prep.noise, 0, prep.k, t, &prep.schedule, &mut xt, &mut z, exec,
+    );
+
+    // Fresh-noise validation set at the same timestep: undup'd data rows
+    // with the dedicated validation replica (index k) of the same stream.
+    let val = if prep.fresh_noise_validation {
+        let vrows = e - s;
+        let mut xtv = Matrix::zeros(vrows, p);
+        let mut zv = Matrix::zeros(vrows, p);
+        noising::stream_inputs_targets(
+            cfg.kind, &x0, s, &prep.noise, prep.k, 1, t, &prep.schedule, &mut xtv, &mut zv,
+            exec,
+        );
+        Some((xtv, zv))
+    } else {
+        None
+    };
+
+    match &val {
+        Some((xtv, zv)) => Booster::train_with(
+            &xt.view(),
+            &z.view(),
+            cfg.params,
+            Some((&xtv.view(), &zv.view())),
+            exec,
+        ),
+        None => Booster::train_with(&xt.view(), &z.view(), cfg.params, None, exec),
+    }
+}
+
+/// [`train_job_in`] driven off [`Prepared::materialize`]'s old-style
+/// duplicated matrices through the scalar kernels — the bit-exact oracle
+/// for the virtual path: for any `(t, y)`, any pool width, and both model
+/// kinds, the returned booster must equal the virtual one byte-for-byte
+/// (pinned by `tests/parallel_parity.rs`).
+pub fn train_job_materialized(
+    prep: &Prepared,
+    mat: &Materialized,
+    cfg: &ForestTrainConfig,
+    t_idx: usize,
+    y: usize,
+    exec: &WorkerPool,
+) -> Booster {
+    let t = prep.grid.ts[t_idx];
     let (s, e) = prep.class_ranges_dup[y];
-    let x0 = prep.x0.row_slice(s, e);
-    let x1 = prep.x1.row_slice(s, e);
+    let x0 = mat.x0.row_slice(s, e);
+    let x1 = mat.x1.row_slice(s, e);
     let rows = e - s;
     let p = prep.p;
 
-    // Regression inputs and targets, built on the fly (Issue 1).
     let mut xt = Matrix::zeros(rows, p);
     let mut z = Matrix::zeros(rows, p);
     match cfg.kind {
@@ -268,12 +385,11 @@ pub fn train_job_in(
         }
     }
 
-    // Fresh-noise validation set at the same timestep.
-    let val = match (&prep.x0_val, &prep.x1_val) {
-        (Some(x0v), Some(x1v)) => {
+    let val = match &mat.x1_val {
+        Some(x1v_all) => {
             let (vs, ve) = prep.class_ranges[y];
-            let x0v = x0v.row_slice(vs, ve);
-            let x1v = x1v.row_slice(vs, ve);
+            let x0v = prep.x.row_slice(vs, ve);
+            let x1v = x1v_all.row_slice(vs, ve);
             let vrows = ve - vs;
             let mut xtv = Matrix::zeros(vrows, p);
             let mut zv = Matrix::zeros(vrows, p);
@@ -289,7 +405,7 @@ pub fn train_job_in(
             }
             Some((xtv, zv))
         }
-        _ => None,
+        None => None,
     };
 
     match &val {
@@ -348,6 +464,7 @@ pub fn train_forest(
 mod tests {
     use super::*;
     use crate::gbt::TreeKind;
+    use crate::util::rng::Rng;
 
     fn two_cluster_data(n: usize, seed: u64) -> (Matrix, Vec<u32>) {
         let mut rng = Rng::new(seed);
@@ -374,24 +491,37 @@ mod tests {
     }
 
     #[test]
-    fn prepare_sorts_scales_duplicates() {
+    fn prepare_sorts_scales_and_duplicates_virtually() {
         let (x, y) = two_cluster_data(20, 1);
         let cfg = tiny_cfg();
         let prep = prepare(&cfg, &x, Some(&y));
-        assert_eq!(prep.x0.rows, 20 * 3);
-        assert_eq!(prep.x1.rows, 20 * 3);
+        // Only the undup'd matrix is stored; duplication is addressing.
+        assert_eq!(prep.x.rows, 20);
+        assert_eq!(prep.k, 3);
         assert_eq!(prep.label_counts, vec![10, 10]);
         assert_eq!(prep.class_ranges, vec![(0, 10), (10, 20)]);
         assert_eq!(prep.class_ranges_dup, vec![(0, 30), (30, 60)]);
+        assert_eq!(prep.nbytes(), 20 * 2 * 4);
         // Scaled data within [-1, 1].
-        let (mins, maxs) = prep.x0.col_min_max();
+        let (mins, maxs) = prep.x.col_min_max();
         for c in 0..2 {
             assert!(mins[c] >= -1.0 - 1e-5 && maxs[c] <= 1.0 + 1e-5);
         }
-        // Class contiguity after duplication: every row in [0, 30) belongs
-        // to class 0 (feature-0 values all below class 1's).
-        let c0_max = (0..30).map(|r| prep.x0.at(r, 0)).fold(f32::MIN, f32::max);
+        // The materialized oracle realizes the virtual layout: class blocks
+        // stay contiguous, replica-major within each class.
+        let mat = prep.materialize();
+        assert_eq!(mat.x0.rows, 60);
+        assert_eq!(mat.x1.rows, 60);
+        assert_eq!(mat.x0.row(0), prep.x.row(0));
+        assert_eq!(mat.x0.row(10), prep.x.row(0), "replica 1 repeats class 0's rows");
+        assert_eq!(mat.x0.row(30), prep.x.row(10), "class 1's block starts at 30");
+        let c0_max = (0..30).map(|r| mat.x0.at(r, 0)).fold(f32::MIN, f32::max);
         assert!(c0_max <= 1.0);
+        // Noise matches the stream addressing (replica, original row).
+        let mut want = vec![0.0f32; 10 * 2];
+        prep.noise.fill(1, 0, 10, &mut want);
+        assert_eq!(&mat.x1.data[10 * 2..20 * 2], &want[..]);
+        assert!(mat.x1_val.is_none(), "no validation draw unless requested");
     }
 
     #[test]
@@ -401,6 +531,47 @@ mod tests {
         let prep = prepare(&cfg, &x, None);
         assert_eq!(prep.label_counts, vec![12]);
         assert_eq!(prep.class_ranges_dup, vec![(0, 36)]);
+    }
+
+    #[test]
+    fn prepared_footprint_is_independent_of_k() {
+        let (x, y) = two_cluster_data(20, 8);
+        let mut cfg = tiny_cfg();
+        let small = prepare(&cfg, &x, Some(&y));
+        cfg.k_dup = 50;
+        let big = prepare(&cfg, &x, Some(&y));
+        assert_eq!(small.nbytes(), big.nbytes());
+        assert_eq!(big.nbytes(), 20 * 2 * 4);
+        assert_eq!(big.class_ranges_dup, vec![(0, 500), (500, 1000)]);
+    }
+
+    #[test]
+    fn virtual_job_matches_materialized_oracle() {
+        // Quick unit-level parity (the full sweep across model/tree kinds,
+        // widths, and elevated K lives in tests/parallel_parity.rs).
+        let (x, y) = two_cluster_data(30, 12);
+        let cfg = ForestTrainConfig {
+            fresh_noise_validation: true,
+            params: TrainParams {
+                n_trees: 4,
+                max_depth: 3,
+                early_stopping_rounds: 2,
+                ..Default::default()
+            },
+            ..tiny_cfg()
+        };
+        let prep = prepare(&cfg, &x, Some(&y));
+        let mat = prep.materialize();
+        let exec = WorkerPool::new(1);
+        for y_idx in 0..2 {
+            let virt = train_job_in(&prep, &cfg, 1, y_idx, &exec);
+            let oracle = train_job_materialized(&prep, &mat, &cfg, 1, y_idx, &exec);
+            assert_eq!(
+                crate::gbt::serialize::to_bytes(&virt),
+                crate::gbt::serialize::to_bytes(&oracle),
+                "virtual job diverges from materialized oracle (y={y_idx})"
+            );
+        }
     }
 
     #[test]

@@ -127,6 +127,18 @@ pub fn worker_widths() -> Vec<usize> {
     vec![1, 2, 8]
 }
 
+/// Duplication factor K for the parity sweeps: `CALOFOREST_TEST_KDUP` (CI's
+/// elevated-duplication matrix leg) overrides the caller's default so the
+/// virtual-duplication code paths also run at a K where the old
+/// materialized `x0`/`x1` pair would have dominated memory.
+pub fn test_kdup(default: usize) -> usize {
+    std::env::var("CALOFOREST_TEST_KDUP")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&k| k >= 1)
+        .unwrap_or(default)
+}
+
 /// Inputs the [`forall_shrink`] runner can reduce toward a minimal failing
 /// case. Candidates must be *strictly* simpler than `self` (fewer elements,
 /// smaller dimensions, or non-zero data zeroed) — the runner caps total

@@ -131,6 +131,31 @@ impl Rng {
         }
     }
 
+    /// Advance the generator past `n` normal draws — the state afterwards is
+    /// identical to drawing and discarding them (including the Box–Muller
+    /// pair cache). Lets counter-based streams start mid-chunk.
+    ///
+    /// Fast path: a full Box–Muller pair consumes exactly two uniforms, so
+    /// whole pairs are skipped with raw draws (no `ln`/`sqrt`/`sin_cos`);
+    /// only an odd final draw pays the real transform, because it must
+    /// leave its sibling in the pair cache exactly as [`normal`](Self::normal)
+    /// would.
+    pub fn skip_normals(&mut self, mut n: usize) {
+        if n == 0 {
+            return;
+        }
+        if self.gauss_cache.take().is_some() {
+            n -= 1;
+        }
+        for _ in 0..n / 2 {
+            let _ = self.uniform();
+            let _ = self.uniform();
+        }
+        if n % 2 == 1 {
+            let _ = self.normal();
+        }
+    }
+
     /// Fill a slice with uniforms in `[lo, hi)`.
     pub fn fill_uniform(&mut self, out: &mut [f32], lo: f32, hi: f32) {
         for v in out.iter_mut() {
@@ -197,6 +222,75 @@ impl Rng {
             if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
                 return d * v * theta;
             }
+        }
+    }
+}
+
+/// Counter-based stream of standard normals addressed by
+/// `(replica, row, column)` — the virtual K-duplication noise definition.
+///
+/// Values are realized per **fixed row chunk** ([`Self::CHUNK_ROWS`] rows in
+/// the *original, undup'd* row coordinates): chunk `c` of replica `r` is the
+/// independent child stream `Rng::new(seed).split(r << 32 | c)`, whose
+/// normals fill the chunk's rows in row-major order. Chunk boundaries are a
+/// pure function of the global row index — never of the requested range, the
+/// worker count, or a class slice — so any sub-range read reproduces exactly
+/// the values the full matrix would contain (*slice-invariance*), and
+/// chunk-parallel generation is bit-identical under any scheduling
+/// (*width-invariance*). The stream itself is `O(1)` state: two words
+/// standing in for what a materialized `[n·K × p]` noise matrix used to be.
+#[derive(Clone, Copy, Debug)]
+pub struct NormalStream {
+    seed: u64,
+    cols: usize,
+}
+
+impl NormalStream {
+    /// Rows per realization chunk. Small enough that a mid-chunk read skips
+    /// at most `CHUNK_ROWS − 1` rows of draws, large enough that one chunk
+    /// amortizes its child-`Rng` construction over thousands of values.
+    pub const CHUNK_ROWS: usize = 256;
+
+    pub fn new(seed: u64, cols: usize) -> NormalStream {
+        NormalStream { seed, cols }
+    }
+
+    /// Values per row.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The defining seed (also used to derive the flawed-iterator rolling
+    /// generator in `forest::dataiter`).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Child generator owning `(replica, chunk)`.
+    fn chunk_rng(&self, replica: usize, chunk: usize) -> Rng {
+        debug_assert!(
+            (replica as u64) < (1 << 32) && (chunk as u64) < (1 << 32),
+            "replica/chunk out of keyable range"
+        );
+        Rng::new(self.seed).split(((replica as u64) << 32) | chunk as u64)
+    }
+
+    /// Fill `out` (`rows × cols` values, row-major) with the noise of rows
+    /// `[row0, row0 + rows)` of `replica` — bit-identical to slicing those
+    /// rows out of a full-matrix fill.
+    pub fn fill(&self, replica: usize, row0: usize, rows: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), rows * self.cols, "fill buffer/shape mismatch");
+        let ch = Self::CHUNK_ROWS;
+        let mut row = row0;
+        let mut off = 0usize;
+        while row < row0 + rows {
+            let chunk = row / ch;
+            let take = (row0 + rows).min((chunk + 1) * ch) - row;
+            let mut rng = self.chunk_rng(replica, chunk);
+            rng.skip_normals((row - chunk * ch) * self.cols);
+            rng.fill_normal(&mut out[off..off + take * self.cols]);
+            row += take;
+            off += take * self.cols;
         }
     }
 }
@@ -296,5 +390,81 @@ mod tests {
         let mut sorted = p.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn skip_normals_equals_draw_and_discard() {
+        // Even and odd counts (the pair-cache state differs), from both a
+        // fresh generator and one whose pair cache is already primed.
+        for skip in [0usize, 1, 2, 7, 8, 513] {
+            for prime in [0usize, 1] {
+                let mut a = Rng::new(21);
+                let mut b = Rng::new(21);
+                for _ in 0..prime {
+                    let _ = a.normal();
+                    let _ = b.normal();
+                }
+                for _ in 0..skip {
+                    let _ = a.normal();
+                }
+                b.skip_normals(skip);
+                for _ in 0..4 {
+                    assert_eq!(
+                        a.normal().to_bits(),
+                        b.normal().to_bits(),
+                        "skip={skip} prime={prime}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_fill_is_deterministic_and_replica_keyed() {
+        let s = NormalStream::new(33, 3);
+        let mut a = vec![0.0f32; 10 * 3];
+        let mut b = vec![0.0f32; 10 * 3];
+        s.fill(0, 5, 10, &mut a);
+        s.fill(0, 5, 10, &mut b);
+        assert_eq!(a, b);
+        s.fill(1, 5, 10, &mut b);
+        assert_ne!(a, b, "replicas must be independent streams");
+        NormalStream::new(34, 3).fill(0, 5, 10, &mut b);
+        assert_ne!(a, b, "seeds must be independent streams");
+    }
+
+    #[test]
+    fn stream_subrange_fill_matches_full_fill_across_chunks() {
+        // 600 rows spans three 256-row chunks; sub-ranges starting mid-chunk
+        // and crossing chunk boundaries must reproduce the full fill.
+        let p = 2;
+        let s = NormalStream::new(7, p);
+        let n = 600;
+        let mut full = vec![0.0f32; n * p];
+        s.fill(3, 0, n, &mut full);
+        for (r0, rows) in [(0, 600), (250, 280), (255, 2), (256, 256), (599, 1)] {
+            let mut sub = vec![0.0f32; rows * p];
+            s.fill(3, r0, rows, &mut sub);
+            let want = &full[r0 * p..(r0 + rows) * p];
+            assert_eq!(
+                sub.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "sub-fill [{r0}, {}) diverges",
+                r0 + rows
+            );
+        }
+    }
+
+    #[test]
+    fn stream_values_are_standard_normal() {
+        let s = NormalStream::new(55, 4);
+        let n = 50_000;
+        let mut v = vec![0.0f32; n * 4];
+        s.fill(0, 0, n, &mut v);
+        let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        let var: f64 =
+            v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
     }
 }

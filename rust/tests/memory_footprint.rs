@@ -1,0 +1,74 @@
+//! Memory regression gate for virtual K-duplication: with the tracking
+//! allocator registered, preparing the shared training state must cost
+//! `O(n·p)` bytes — live *and* peak — independent of the duplication factor
+//! K. The old implementation materialized the `x0`/`x1` pair (`2·n·K·p`
+//! floats), so any reintroduction of a K-sized array fails this gate
+//! immediately.
+//!
+//! This file holds a single test so no concurrent test can perturb the
+//! global allocator counters mid-measurement.
+
+use caloforest::coordinator::memory::{current_bytes, peak_bytes, reset_peak, TrackingAlloc};
+use caloforest::data::synthetic_dataset;
+use caloforest::forest::trainer::{prepare, ForestTrainConfig};
+use caloforest::gbt::TrainParams;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+#[test]
+fn prepared_footprint_is_k_independent_and_near_n_p_bytes() {
+    let (n, p) = (2000usize, 8usize);
+    let shared = n * p * 4; // the undup'd scaled matrix, f32
+    let (x, y) = synthetic_dataset(n, p, 2, 17);
+
+    // (live delta held by Prepared, peak delta during prepare, nbytes).
+    let measure = |k: usize| {
+        let cfg = ForestTrainConfig {
+            n_t: 2,
+            k_dup: k,
+            fresh_noise_validation: true,
+            params: TrainParams { n_trees: 2, max_depth: 2, ..Default::default() },
+            seed: 9,
+            ..Default::default()
+        };
+        let before = current_bytes();
+        reset_peak();
+        let prep = prepare(&cfg, &x, Some(&y));
+        let live = current_bytes().saturating_sub(before);
+        let peak = peak_bytes().saturating_sub(before);
+        (live, peak, prep.nbytes())
+    };
+
+    let (live32, peak32, nb32) = measure(32);
+    let (live256, peak256, nb256) = measure(256);
+
+    // The logical shared state is exactly the undup'd matrix — K≥32 changes
+    // nothing (the old materialized pair would be 2·K·n·p·4: 4 MiB at K=32,
+    // 32 MiB at K=256, against 64 KiB here).
+    assert_eq!(nb32, shared);
+    assert_eq!(nb256, shared);
+
+    // Measured live bytes held by `Prepared`: the matrix plus small
+    // constant-size bookkeeping (ranges, scalers, grid) — with slack for
+    // harness noise, far below even a single duplicated copy.
+    const SLACK: usize = 1 << 16;
+    assert!(live32 >= shared, "live {live32} below the shared matrix itself");
+    assert!(live32 <= 2 * shared + SLACK, "live {live32} exceeds the O(n·p) budget");
+
+    // Peak during prepare (sorting + scaling transients) stays O(n·p) too:
+    // nothing n·K·p-sized is ever allocated, not even transiently.
+    assert!(peak32 <= 4 * shared + SLACK, "peak {peak32} exceeds the O(n·p) budget");
+    assert!(peak256 <= 4 * shared + SLACK, "peak {peak256} exceeds the O(n·p) budget");
+
+    // And the footprint is K-independent: identical allocation pattern at
+    // K=32 and K=256.
+    assert!(
+        live32.abs_diff(live256) <= 1 << 15,
+        "live footprint depends on K: {live32} vs {live256}"
+    );
+    assert!(
+        peak32.abs_diff(peak256) <= 1 << 15,
+        "peak footprint depends on K: {peak32} vs {peak256}"
+    );
+}

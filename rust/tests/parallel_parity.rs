@@ -15,20 +15,23 @@ use caloforest::data::synthetic_dataset;
 use caloforest::forest::generate;
 use caloforest::forest::sampler::{generate_with, GenerateConfig, ParNativeField};
 use caloforest::forest::trainer::{
-    prepare, train_forest, train_job, train_job_in, ForestTrainConfig,
+    prepare, train_forest, train_job, train_job_in, train_job_materialized, ForestTrainConfig,
 };
 use caloforest::forest::ModelKind;
 use caloforest::gbt::booster::{update_eval_preds, update_train_preds};
 use caloforest::gbt::predict::predict_batch;
 use caloforest::gbt::{BinnedMatrix, Booster, QuantForest, serialize, TrainParams, TreeKind};
 use caloforest::tensor::Matrix;
-use caloforest::util::prop::{bits_f32, worker_widths};
+use caloforest::util::prop::{bits_f32, test_kdup, worker_widths};
 use caloforest::util::rng::Rng;
 
 fn synthetic_cfg(kind: TreeKind) -> ForestTrainConfig {
     ForestTrainConfig {
         n_t: 2,
-        k_dup: 8,
+        // CI's elevated-duplication leg (CALOFOREST_TEST_KDUP) raises K so
+        // every parity sweep exercises the virtual data plane at a scale
+        // where the old materialized x0/x1 pair would dominate memory.
+        k_dup: test_kdup(8),
         params: TrainParams { n_trees: 3, max_depth: 4, kind, ..Default::default() },
         seed: 5,
         ..Default::default()
@@ -237,6 +240,67 @@ fn quantized_training_update_is_bit_identical_to_float_reference() {
                 bits_f32(&eval_q),
                 "{kind:?} quantized eval update diverges at workers={workers}"
             );
+        }
+    }
+}
+
+#[test]
+fn virtual_training_is_bit_identical_to_materialized_oracle() {
+    // The acceptance gate for virtual K-duplication: synthesizing each
+    // job's xt/z from the counter-based noise streams (fused chunk-parallel
+    // kernel, any pool width) must train byte-identical ensembles to the
+    // old-style materialized x0/x1 pair built from the same streams and fed
+    // through the scalar kernels — both model kinds, both tree kinds, every
+    // (t, y) grid point, fresh-noise validation (replica K) included.
+    let (x, y) = synthetic_dataset(150, 4, 2, 13);
+    for model_kind in [ModelKind::Flow, ModelKind::Diffusion] {
+        for tree_kind in [TreeKind::Single, TreeKind::Multi] {
+            let cfg = ForestTrainConfig {
+                kind: model_kind,
+                eps: if model_kind == ModelKind::Diffusion { 0.01 } else { 0.0 },
+                n_t: 2,
+                k_dup: test_kdup(8),
+                fresh_noise_validation: true,
+                params: TrainParams {
+                    n_trees: 3,
+                    max_depth: 3,
+                    kind: tree_kind,
+                    early_stopping_rounds: 2,
+                    ..Default::default()
+                },
+                seed: 31,
+                ..Default::default()
+            };
+            let prep = prepare(&cfg, &x, Some(&y));
+            // The refactor's whole point: shared state carries no K-sized
+            // array, while the oracle pays the full duplicated pair.
+            assert_eq!(prep.nbytes(), prep.n * prep.p * 4);
+            let mat = prep.materialize();
+            assert_eq!(mat.x0.rows, prep.n * prep.k);
+            let oracle_pool = WorkerPool::new(1);
+            for t_idx in 0..prep.grid.n_t() {
+                for y_idx in 0..prep.label_counts.len() {
+                    let oracle = serialize::to_bytes(&train_job_materialized(
+                        &prep,
+                        &mat,
+                        &cfg,
+                        t_idx,
+                        y_idx,
+                        &oracle_pool,
+                    ));
+                    for workers in worker_widths() {
+                        let exec = WorkerPool::new(workers);
+                        let virt =
+                            serialize::to_bytes(&train_job_in(&prep, &cfg, t_idx, y_idx, &exec));
+                        assert_eq!(
+                            oracle, virt,
+                            "{model_kind:?}/{tree_kind:?} (t={t_idx}, y={y_idx}) \
+                             diverges at workers={workers} K={}",
+                            prep.k
+                        );
+                    }
+                }
+            }
         }
     }
 }

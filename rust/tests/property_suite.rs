@@ -10,10 +10,12 @@
 //! assertions on).
 
 use caloforest::coordinator::pool::WorkerPool;
+use caloforest::forest::noising::stream_inputs_targets;
 use caloforest::forest::sampler::sample_labels;
 use caloforest::forest::scaler::MinMaxScaler;
+use caloforest::forest::schedule::VpSchedule;
 use caloforest::forest::trainer::{prepare, train_job, ForestTrainConfig};
-use caloforest::forest::LabelSampler;
+use caloforest::forest::{LabelSampler, ModelKind};
 use caloforest::gbt::booster::leaf_for_binned;
 use caloforest::gbt::predict::{predict_batch, PackedForest};
 use caloforest::gbt::{
@@ -23,7 +25,7 @@ use caloforest::tensor::Matrix;
 use caloforest::util::prop::{
     assert_close, bits_f32, BoosterCase, Config, forall, forall_shrink, Gen, worker_widths,
 };
-use caloforest::util::rng::Rng;
+use caloforest::util::rng::{NormalStream, Rng};
 
 #[test]
 fn prop_binning_is_order_preserving_and_invertible_by_threshold() {
@@ -423,6 +425,89 @@ fn prop_bin_codes_in_range_shrinkable() {
                         }
                     } else if (code as usize) >= n_bins {
                         return Err(format!("({r},{f}): code {code} >= n_bins {n_bins}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Raw stream slice-invariance: filling any sub-range of rows — including
+/// ranges starting mid-chunk and crossing chunk boundaries — reproduces the
+/// corresponding slice of a full fill bit-for-bit, for any replica.
+#[test]
+fn prop_normal_stream_subrange_fill_matches_full_fill() {
+    forall("stream fill slice-invariance", Config { cases: 20, seed: 0xC5 }, |rng, _| {
+        let n = 1 + rng.below(1000);
+        let p = 1 + rng.below(4);
+        let stream = NormalStream::new(rng.next_u64(), p);
+        let rep = rng.below(130); // includes replica indices beyond any K
+        let mut full = vec![0.0f32; n * p];
+        stream.fill(rep, 0, n, &mut full);
+        let s = rng.below(n);
+        let e = s + 1 + rng.below(n - s);
+        let mut sub = vec![0.0f32; (e - s) * p];
+        stream.fill(rep, s, e - s, &mut sub);
+        if bits_f32(&sub) != bits_f32(&full[s * p..e * p]) {
+            return Err(format!("sub-fill [{s},{e}) of {n} rows (rep {rep}) diverges"));
+        }
+        Ok(())
+    });
+}
+
+/// The fused virtual-duplication kernel is width- and slice-invariant: for
+/// random class ranges, every CI worker width must reproduce the rows the
+/// full matrix would contain, bit-for-bit, for both model kinds.
+#[test]
+fn prop_virtual_noise_streams_are_width_and_slice_invariant() {
+    forall(
+        "virtual noise width/slice invariance",
+        Config { cases: 6, seed: 0xC4 },
+        |rng, case| {
+            let n = 40 + rng.below(560); // often spans several 256-row chunks
+            let p = 1 + rng.below(4);
+            let k = 1 + rng.below(4);
+            let stream = NormalStream::new(rng.next_u64(), p);
+            let x = Matrix::randn(n, p, rng);
+            let t = rng.uniform_f32();
+            let kind = if case % 2 == 0 { ModelKind::Flow } else { ModelKind::Diffusion };
+            let sched = VpSchedule::default();
+            // Reference: the full matrix, sequential.
+            let seq = WorkerPool::new(1);
+            let mut xt_full = Matrix::zeros(n * k, p);
+            let mut z_full = Matrix::zeros(n * k, p);
+            stream_inputs_targets(
+                kind, &x.view(), 0, &stream, 0, k, t, &sched, &mut xt_full, &mut z_full, &seq,
+            );
+            // Random class slice, every CI worker width.
+            let s = rng.below(n);
+            let e = s + 1 + rng.below(n - s);
+            let xs = x.row_slice(s, e);
+            let rows = e - s;
+            for workers in worker_widths() {
+                let exec = WorkerPool::new(workers);
+                let mut xt = Matrix::zeros(rows * k, p);
+                let mut z = Matrix::zeros(rows * k, p);
+                stream_inputs_targets(
+                    kind, &xs, s, &stream, 0, k, t, &sched, &mut xt, &mut z, &exec,
+                );
+                for rep in 0..k {
+                    let a = rep * rows * p;
+                    let fa = (rep * n + s) * p;
+                    if bits_f32(&xt.data[a..a + rows * p])
+                        != bits_f32(&xt_full.data[fa..fa + rows * p])
+                    {
+                        return Err(format!(
+                            "{kind:?} xt diverges: slice [{s},{e}) rep {rep} workers {workers}"
+                        ));
+                    }
+                    if bits_f32(&z.data[a..a + rows * p])
+                        != bits_f32(&z_full.data[fa..fa + rows * p])
+                    {
+                        return Err(format!(
+                            "{kind:?} z diverges: slice [{s},{e}) rep {rep} workers {workers}"
+                        ));
                     }
                 }
             }
