@@ -54,7 +54,7 @@ fn main() {
             &cfg,
             &x,
             Some(&y),
-            &RunOptions { workers: 1, track_memory: true, ..Default::default() },
+            &RunOptions::new().with_workers(1).with_track_memory(true),
         )
     });
     for (i, (secs, bytes)) in ours.timeline.iter().enumerate() {

@@ -33,7 +33,7 @@ fn main() {
     for workers in [1usize, 2, 4, 8] {
         reset_peak();
         let (out, secs) = bench.time_once(&format!("workers={workers}"), || {
-            run_training(&cfg, &x, Some(&y), &RunOptions { workers, ..Default::default() })
+            run_training(&cfg, &x, Some(&y), &RunOptions::new().with_workers(workers))
         });
         let peak = out.peak_alloc_bytes.max(peak_bytes());
         println!("| {workers} | {secs:.2} | {} |", fmt_bytes(peak));

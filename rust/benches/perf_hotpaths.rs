@@ -6,9 +6,13 @@
 
 use caloforest::coordinator::memory::TrackingAlloc;
 use caloforest::coordinator::pool::{self as cpool, WorkerPool};
+use caloforest::data::synthetic_dataset;
 use caloforest::forest::noising;
+use caloforest::forest::sampler::{
+    generate, generate_batched, generate_with, Backend, GenerateConfig, Solver,
+};
 use caloforest::forest::schedule::VpSchedule;
-use caloforest::forest::trainer::{prepare as forest_prepare, ForestTrainConfig};
+use caloforest::forest::trainer::{prepare as forest_prepare, train_forest, ForestTrainConfig};
 use caloforest::forest::ModelKind;
 use caloforest::gbt::booster::{update_eval_preds, update_train_preds};
 use caloforest::gbt::histogram::{HistLayout, Histogram};
@@ -232,6 +236,103 @@ fn main() {
         rows_n as f64 / m_old8.mean() / 1e6,
         rows_n as f64 / m_new8.mean() / 1e6,
     );
+    // --- Sampling service: solver ladder + request batcher. ---------------
+    // The ladder trades steps for per-step order: Heun at n_t/2 and RK4 at
+    // n_t/4 pay 2 and 4 field evaluations per step, so samples/sec tells
+    // whether the fewer-steps rungs actually win wall-clock. The batcher
+    // row measures what coalescing 64 small requests into shared batch
+    // solves buys over serving each alone on the same warm pool.
+    let svc_nt = 8;
+    let (svc_x, svc_y) = synthetic_dataset(if quick { 150 } else { 400 }, 4, 2, 71);
+    let svc_cfg = ForestTrainConfig {
+        n_t: svc_nt,
+        k_dup: 4,
+        params: TrainParams {
+            n_trees: if quick { 4 } else { 10 },
+            max_depth: 4,
+            ..Default::default()
+        },
+        seed: 73,
+        ..Default::default()
+    };
+    let (svc_model, _) = train_forest(&svc_cfg, &svc_x, Some(&svc_y));
+    svc_model.precompile();
+    let svc_n_gen = if quick { 256 } else { 4096 };
+    // (label, threads, mean_secs, samples).
+    let mut svc_results: Vec<(String, usize, f64, usize)> = Vec::new();
+    let ladder = [
+        (Solver::Euler, svc_nt),
+        (Solver::Heun, svc_nt / 2),
+        (Solver::Rk4, svc_nt / 4),
+    ];
+    for (solver, steps) in ladder {
+        for threads in [1usize, 8] {
+            let mut gcfg = GenerateConfig::new(svc_n_gen, 17)
+                .with_workers(threads)
+                .with_solver(solver);
+            if steps != svc_nt {
+                gcfg = gcfg.with_n_t_override(steps);
+            }
+            let m = bench.time(
+                &format!("generate {}@{steps} steps ({threads} thread)", solver.name()),
+                || {
+                    let (gx, _) = generate(&svc_model, &gcfg);
+                    std::hint::black_box(gx.data[0]);
+                },
+            );
+            bench.csv(
+                "path,label,mean_secs",
+                format!("sampling-solver,{}@{steps}-t{threads},{:.9}", solver.name(), m.mean()),
+            );
+            svc_results.push((format!("{}@{steps}", solver.name()), threads, m.mean(), svc_n_gen));
+        }
+    }
+    let svc_mean = |label: &str, threads: usize| {
+        svc_results
+            .iter()
+            .find(|(l, t, _, _)| l == label && *t == threads)
+            .map(|&(_, _, s, _)| s)
+            .unwrap_or(f64::NAN)
+    };
+    println!(
+        "solver ladder (1 thread): euler@{svc_nt} {:.1} Ksample/s, heun@{} {:.1} Ksample/s, \
+         rk4@{} {:.1} Ksample/s",
+        svc_n_gen as f64 / svc_mean(&format!("euler@{svc_nt}"), 1) / 1e3,
+        svc_nt / 2,
+        svc_n_gen as f64 / svc_mean(&format!("heun@{}", svc_nt / 2), 1) / 1e3,
+        svc_nt / 4,
+        svc_n_gen as f64 / svc_mean(&format!("rk4@{}", svc_nt / 4), 1) / 1e3,
+    );
+    // Batcher: 64 small requests coalesced into shared-batch solves vs the
+    // same requests served one by one on the same warm pool + field.
+    let (svc_reqs, svc_req_rows) = if quick { (16usize, 16usize) } else { (64, 32) };
+    let svc_field = svc_model.field(Backend::Compiled, &pool8);
+    let svc_batch_cfgs: Vec<GenerateConfig> = (0..svc_reqs)
+        .map(|i| GenerateConfig::new(svc_req_rows, 1000 + i as u64))
+        .collect();
+    let m_serial = bench.time(&format!("batcher serial {svc_reqs}x{svc_req_rows}"), || {
+        for c in &svc_batch_cfgs {
+            let (gx, _) = generate_with(&svc_model, &svc_field, c);
+            std::hint::black_box(gx.data[0]);
+        }
+    });
+    let m_coalesced = bench.time(&format!("batcher coalesced {svc_reqs}x{svc_req_rows}"), || {
+        let out = generate_batched(&svc_model, &svc_field, &svc_batch_cfgs);
+        std::hint::black_box(out[0].0.data[0]);
+    });
+    bench.csv("path,label,mean_secs", format!("sampling-batcher,serial,{:.9}", m_serial.mean()));
+    bench.csv(
+        "path,label,mean_secs",
+        format!("sampling-batcher,coalesced,{:.9}", m_coalesced.mean()),
+    );
+    let batcher_speedup = m_serial.mean() / m_coalesced.mean().max(1e-12);
+    println!(
+        "batcher: {svc_reqs} requests × {svc_req_rows} rows serial {:.1} ms vs coalesced \
+         {:.1} ms ({batcher_speedup:.2}x)",
+        m_serial.mean() * 1e3,
+        m_coalesced.mean() * 1e3,
+    );
+
     // --- Training-update hot path: float references vs quantized engine. --
     // Every boosting round adds its new trees into the running train and
     // eval predictions. The float-raw reference walks raw thresholds
@@ -447,12 +548,42 @@ fn main() {
             .set("config", config)
             .set("results", Json::Arr(results))
             .set("job_build_speedup_8t", jb_speedup);
+        let mut svc_sec = Json::obj();
+        let results = svc_results
+            .iter()
+            .map(|(label, threads, secs, samples)| {
+                let mut o = Json::obj();
+                o.set("solver", label.as_str())
+                    .set("threads", *threads)
+                    .set("mean_secs", *secs)
+                    .set("samples_per_sec", *samples as f64 / secs.max(1e-12));
+                o
+            })
+            .collect::<Vec<_>>();
+        let mut svc_config = Json::obj();
+        svc_config
+            .set("n_t", svc_nt)
+            .set("samples_per_call", svc_n_gen)
+            .set("features", svc_x.cols)
+            .set("classes", 2usize);
+        let mut batcher = Json::obj();
+        batcher
+            .set("requests", svc_reqs)
+            .set("rows_per_request", svc_req_rows)
+            .set("serial_secs", m_serial.mean())
+            .set("coalesced_secs", m_coalesced.mean())
+            .set("coalescing_speedup", batcher_speedup);
+        svc_sec
+            .set("config", svc_config)
+            .set("solver_ladder", Json::Arr(results))
+            .set("batcher", batcher);
         let mut doc = Json::obj();
         doc.set("bench", "perf_hotpaths")
             .set("status", "measured")
             .set("sampler_field_eval", sampler_sec)
             .set("training_update", upd_sec)
-            .set("training_prepare", prep_sec);
+            .set("training_prepare", prep_sec)
+            .set("sampling_service", svc_sec);
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .parent()
             .map(|root| root.join("BENCH_sampling.json"))

@@ -74,7 +74,7 @@ pub fn reset_peak() {
 }
 
 /// Detected host hardware parallelism (1 when detection fails) — the
-/// default total worker budget for `RunOptions { workers: 0, .. }`.
+/// default total worker budget for `RunOptions::new().with_workers(0)`.
 pub fn host_cpus() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())

@@ -36,8 +36,11 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Options for a coordinated training run.
+/// Options for a coordinated training run. `#[non_exhaustive]` builder:
+/// start from [`RunOptions::new`] (or `default()`) and refine with the
+/// `with_*` methods, so new knobs never break downstream construction.
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct RunOptions {
     /// Total worker budget (the paper's `n_jobs`); 0 = auto-detect the
     /// host's hardware parallelism.
@@ -69,13 +72,93 @@ impl Default for RunOptions {
     }
 }
 
+impl RunOptions {
+    pub fn new() -> RunOptions {
+        RunOptions::default()
+    }
+
+    /// Total worker budget (0 = auto-detect host parallelism).
+    pub fn with_workers(mut self, workers: usize) -> RunOptions {
+        self.workers = workers;
+        self
+    }
+
+    /// Threads inside each training job (0 = auto split).
+    pub fn with_intra_job_threads(mut self, threads: usize) -> RunOptions {
+        self.intra_job_threads = threads;
+        self
+    }
+
+    /// Stream trained ensembles to `dir` and drop them from memory.
+    pub fn with_store_dir(mut self, dir: impl Into<PathBuf>) -> RunOptions {
+        self.store_dir = Some(dir.into());
+        self
+    }
+
+    /// Skip `(t, y)` slots already present in the store.
+    pub fn with_resume(mut self, resume: bool) -> RunOptions {
+        self.resume = resume;
+        self
+    }
+
+    /// Sample the memory timeline while training.
+    pub fn with_track_memory(mut self, track: bool) -> RunOptions {
+        self.track_memory = track;
+        self
+    }
+
+    /// Pre-builder constructor, kept so code written against the old
+    /// struct shape migrates with a compile-time nudge instead of a silent
+    /// break.
+    #[deprecated(note = "use RunOptions::new() with the with_* builder methods")]
+    pub fn from_parts(
+        workers: usize,
+        intra_job_threads: usize,
+        store_dir: Option<PathBuf>,
+        resume: bool,
+        track_memory: bool,
+    ) -> RunOptions {
+        let mut opts = RunOptions::new()
+            .with_workers(workers)
+            .with_intra_job_threads(intra_job_threads)
+            .with_resume(resume)
+            .with_track_memory(track_memory);
+        opts.store_dir = store_dir;
+        opts
+    }
+}
+
+/// A worker-budget split: how many concurrent training jobs run
+/// (`job_workers`) and how many threads each job starts with (`intra`).
+/// Named fields replace the bare `(job_workers, intra)` tuple the budget
+/// functions used to return — the two halves read identically at call
+/// sites and were easy to swap silently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerSplit {
+    /// Concurrent job-level workers (the paper's `n_jobs` axis).
+    pub job_workers: usize,
+    /// Intra-job threads each job worker starts with.
+    pub intra: usize,
+}
+
+impl WorkerSplit {
+    pub fn new(job_workers: usize, intra: usize) -> WorkerSplit {
+        WorkerSplit { job_workers, intra }
+    }
+
+    /// Total threads the split occupies when every slot is busy.
+    pub fn total(&self) -> usize {
+        self.job_workers * self.intra
+    }
+}
+
 /// How a total worker budget is split between job-level and intra-job
 /// parallelism for a given job count.
 ///
 /// Job-level parallelism is capped by the number of jobs; whatever budget
 /// remains per job worker goes to intra-job threads. An explicit
 /// `intra_override > 0` wins over the derived split.
-pub fn worker_budget(total: usize, n_jobs: usize, intra_override: usize) -> (usize, usize) {
+pub fn worker_budget(total: usize, n_jobs: usize, intra_override: usize) -> WorkerSplit {
     let total = if total == 0 { memory::host_cpus() } else { total };
     let job_workers = total.max(1).min(n_jobs.max(1));
     let intra = if intra_override > 0 {
@@ -83,7 +166,7 @@ pub fn worker_budget(total: usize, n_jobs: usize, intra_override: usize) -> (usi
     } else {
         (total.max(1) / job_workers).max(1)
     };
-    (job_workers, intra)
+    WorkerSplit { job_workers, intra }
 }
 
 /// Useful job-level parallel width for a set of job sizes: the makespan is
@@ -112,7 +195,7 @@ pub fn worker_budget_sized(
     total: usize,
     job_sizes: &[usize],
     intra_override: usize,
-) -> (usize, usize) {
+) -> WorkerSplit {
     let width_cap = job_sizes.len().max(1).min(effective_job_width(job_sizes));
     worker_budget(total, width_cap, intra_override)
 }
@@ -211,8 +294,8 @@ pub fn run_training(
         .collect();
     let eff_width = effective_job_width(&job_sizes);
     let total_budget = if opts.workers == 0 { memory::host_cpus() } else { opts.workers };
-    let (job_workers, intra_threads) =
-        worker_budget_sized(total_budget, &job_sizes, opts.intra_job_threads);
+    let split = worker_budget_sized(total_budget, &job_sizes, opts.intra_job_threads);
+    let (job_workers, intra_threads) = (split.job_workers, split.intra);
     let mut job_cfg = cfg.clone();
     job_cfg.params.intra_threads = intra_threads;
     let job_cfg = &job_cfg;
@@ -381,7 +464,7 @@ mod tests {
         let (x, y) = data(40, 1);
         let c = cfg();
         let seq = crate::forest::trainer::train_forest(&c, &x, Some(&y));
-        let par = run_training(&c, &x, Some(&y), &RunOptions { workers: 4, ..Default::default() });
+        let par = run_training(&c, &x, Some(&y), &RunOptions::new().with_workers(4));
         assert!(par.model.is_complete());
         // Same deterministic prep ⇒ identical ensembles regardless of
         // scheduling: compare generated samples.
@@ -412,13 +495,7 @@ mod tests {
         let c = cfg();
         let dir = std::env::temp_dir().join("caloforest_test_store_resume");
         let _ = std::fs::remove_dir_all(&dir);
-        let opts = RunOptions {
-            workers: 2,
-            intra_job_threads: 0,
-            store_dir: Some(dir.clone()),
-            resume: false,
-            track_memory: false,
-        };
+        let opts = RunOptions::new().with_workers(2).with_store_dir(dir.clone());
         let out = run_training(&c, &x, Some(&y), &opts);
         // Streamed: in-memory model is empty, store holds everything.
         assert_eq!(out.model.n_trained(), 0);
@@ -428,7 +505,7 @@ mod tests {
         // Delete two slots, resume fills only those.
         std::fs::remove_file(dir.join("t0000_y000.fbj")).unwrap();
         std::fs::remove_file(dir.join("t0002_y001.fbj")).unwrap();
-        let opts2 = RunOptions { resume: true, ..opts };
+        let opts2 = opts.clone().with_resume(true);
         let out2 = run_training(&c, &x, Some(&y), &opts2);
         assert_eq!(out2.report.jobs.len(), 2);
         let reloaded = store::ModelStore::open(&dir).unwrap().load_model().unwrap();
@@ -445,19 +522,19 @@ mod tests {
     fn size_aware_budget_caps_width_by_skew() {
         // Uniform sizes reduce exactly to the unweighted policy.
         assert_eq!(worker_budget_sized(8, &[100; 100], 0), worker_budget(8, 100, 0));
-        assert_eq!(worker_budget_sized(8, &[500, 500], 0), (2, 4));
+        assert_eq!(worker_budget_sized(8, &[500, 500], 0), WorkerSplit::new(2, 4));
         // One dominant class: width capped at ⌈sum/max⌉ so the spare
         // budget becomes intra-job threads for the straggler.
         assert_eq!(effective_job_width(&[1000, 100, 1000, 100]), 3);
-        assert_eq!(worker_budget_sized(8, &[1000, 100, 1000, 100], 0), (3, 2));
+        assert_eq!(worker_budget_sized(8, &[1000, 100, 1000, 100], 0), WorkerSplit::new(3, 2));
         assert_eq!(effective_job_width(&[10_000, 1, 1, 1]), 2);
-        assert_eq!(worker_budget_sized(8, &[10_000, 1, 1, 1], 0), (2, 4));
+        assert_eq!(worker_budget_sized(8, &[10_000, 1, 1, 1], 0), WorkerSplit::new(2, 4));
         // Mild imbalance keeps the full width (ceiling division).
         assert_eq!(effective_job_width(&[60, 40, 60, 40]), 4);
         // Explicit intra override still wins; degenerate inputs stay sane.
-        assert_eq!(worker_budget_sized(8, &[1000, 10], 3), (2, 3));
-        assert_eq!(worker_budget_sized(4, &[], 0), (1, 4));
-        assert_eq!(worker_budget_sized(1, &[0, 0], 0), (1, 1));
+        assert_eq!(worker_budget_sized(8, &[1000, 10], 3), WorkerSplit::new(2, 3));
+        assert_eq!(worker_budget_sized(4, &[], 0), WorkerSplit::new(1, 4));
+        assert_eq!(worker_budget_sized(1, &[0, 0], 0), WorkerSplit::new(1, 1));
     }
 
     #[test]
@@ -475,7 +552,7 @@ mod tests {
             seed: 19,
             ..Default::default()
         };
-        let out = run_training(&c, &x, Some(&y), &RunOptions { workers: 8, ..Default::default() });
+        let out = run_training(&c, &x, Some(&y), &RunOptions::new().with_workers(8));
         assert_eq!(out.effective_job_width, 3);
         assert_eq!((out.job_workers, out.intra_job_threads), (3, 2));
         assert!(out.model.is_complete());
@@ -484,18 +561,19 @@ mod tests {
     #[test]
     fn worker_budget_splits_job_and_intra_levels() {
         // Plenty of jobs: all budget goes job-level.
-        assert_eq!(worker_budget(8, 100, 0), (8, 1));
+        assert_eq!(worker_budget(8, 100, 0), WorkerSplit::new(8, 1));
         // Few jobs, big budget: the remainder goes intra-job.
-        assert_eq!(worker_budget(8, 2, 0), (2, 4));
-        assert_eq!(worker_budget(9, 2, 0), (2, 4));
+        assert_eq!(worker_budget(8, 2, 0), WorkerSplit::new(2, 4));
+        assert_eq!(worker_budget(9, 2, 0), WorkerSplit::new(2, 4));
+        assert_eq!(worker_budget(8, 2, 0).total(), 8);
         // Single job: everything intra.
-        assert_eq!(worker_budget(6, 1, 0), (1, 6));
+        assert_eq!(worker_budget(6, 1, 0), WorkerSplit::new(1, 6));
         // Explicit override wins.
-        assert_eq!(worker_budget(8, 8, 3), (8, 3));
+        assert_eq!(worker_budget(8, 8, 3), WorkerSplit::new(8, 3));
         // Degenerate inputs stay sane.
-        assert_eq!(worker_budget(1, 0, 0), (1, 1));
-        let (jw, it) = worker_budget(0, 4, 0);
-        assert!(jw >= 1 && it >= 1);
+        assert_eq!(worker_budget(1, 0, 0), WorkerSplit::new(1, 1));
+        let auto = worker_budget(0, 4, 0);
+        assert!(auto.job_workers >= 1 && auto.intra >= 1);
     }
 
     #[test]
@@ -509,7 +587,7 @@ mod tests {
             &c,
             &x,
             Some(&y),
-            &RunOptions { workers: 2, intra_job_threads: 4, ..Default::default() },
+            &RunOptions::new().with_workers(2).with_intra_job_threads(4),
         );
         assert_eq!(par.intra_job_threads, 4);
         assert_eq!(par.job_workers, 2);
@@ -530,7 +608,7 @@ mod tests {
             &c,
             &x,
             Some(&y),
-            &RunOptions { workers: 1, track_memory: true, ..Default::default() },
+            &RunOptions::new().with_workers(1).with_track_memory(true),
         );
         assert!(out.timeline.len() >= 2);
         // peak_alloc_bytes is only nonzero when the tracking allocator is

@@ -253,6 +253,14 @@ struct PoolShared {
 /// One thread dispatches at a time (the owning training job); concurrent
 /// [`grow`](Self::grow) from other threads is safe and is how the
 /// coordinator's dynamic worker-budget rebalancing reassigns freed workers.
+///
+/// Pools are also shared *across* work kinds: the pool itself is `Send +
+/// Sync` (the task slot holds a `Sync` closure reference), so a long-lived
+/// owner like [`crate::forest::service::SamplerService`] can build one
+/// pool, hand out `&WorkerPool` to every coalesced sampling solve from its
+/// scheduler thread, and keep the spawn cost out of the request path — the
+/// single-dispatcher rule then simply means one batched solve runs at a
+/// time, which is exactly the service's queue discipline.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,

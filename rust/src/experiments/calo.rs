@@ -142,7 +142,7 @@ pub fn run_caloforest(geometry: &CaloGeometry, cfg: &CaloConfig) -> CaloOutcome 
         &fc,
         &train.voxels,
         Some(&train.labels),
-        &RunOptions { workers: cfg.workers, ..Default::default() },
+        &RunOptions::new().with_workers(cfg.workers),
     );
     let n_gen = test.voxels.rows;
     let t0 = std::time::Instant::now();

@@ -217,17 +217,9 @@ pub fn train_and_generate(
                 fc.per_class_scaler = false;
             }
             let (model, _) = train_forest(&fc, x, y);
-            let gen_cfg = GenerateConfig {
-                n: n_gen,
-                seed: cfg.seed + 1,
-                label_sampler: if original_style {
-                    LabelSampler::Multinomial
-                } else {
-                    LabelSampler::Empirical
-                },
-                clip: true,
-                workers: 1,
-            };
+            let gen_cfg = GenerateConfig::new(n_gen, cfg.seed + 1).with_label_sampler(
+                if original_style { LabelSampler::Multinomial } else { LabelSampler::Empirical },
+            );
             let (gx, gy) = generate(&model, &gen_cfg);
             (gx, y.map(|_| gy))
         }

@@ -201,7 +201,7 @@ pub fn run_point(variant: Variant, n: usize, p: usize, n_y: usize, cfg: &SweepCo
                 &fc,
                 &x,
                 labels,
-                &RunOptions { workers: cfg.workers, ..Default::default() },
+                &RunOptions::new().with_workers(cfg.workers),
             );
             let t1 = std::time::Instant::now();
             for b in 0..5 {

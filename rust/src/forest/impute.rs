@@ -10,7 +10,8 @@
 //! ever steers the missing dims consistently with the observed ones.
 
 use super::model::{ForestModel, ModelKind};
-use super::sampler::{FieldEval, NativeField};
+use super::sampler::{Backend, FieldEval};
+use crate::coordinator::pool::WorkerPool;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 
@@ -22,7 +23,8 @@ pub fn impute(
     y: Option<&[u32]>,
     seed: u64,
 ) -> Matrix {
-    impute_with(model, &NativeField(model), x_raw, y, seed)
+    let exec = WorkerPool::new(1);
+    impute_with(model, &model.field(Backend::Native, &exec), x_raw, y, seed)
 }
 
 /// Imputation over an arbitrary field backend.

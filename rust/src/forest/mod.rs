@@ -16,8 +16,11 @@
 //! * [`model`] — the trained `(t, y)` ensemble grid;
 //! * [`trainer`] — memory-lean job construction (the paper's Issues 1/5/6
 //!   fixes live here; Issue 2/3/4 live in [`crate::coordinator`]);
-//! * [`sampler`] — Euler ODE / Euler–Maruyama reverse-SDE generation with
-//!   per-class batching (Issues 8/9 fixes).
+//! * [`sampler`] — solver-ladder generation (Euler / Heun / RK4 over the
+//!   flow ODE, Euler–Maruyama or probability-flow over the reverse SDE)
+//!   with per-class batching (Issues 8/9 fixes);
+//! * [`service`] — the batching [`SamplerService`]: coalesces concurrent
+//!   generate requests into shared-batch solves on one persistent pool.
 
 pub mod schedule;
 pub mod scaler;
@@ -25,9 +28,13 @@ pub mod noising;
 pub mod model;
 pub mod trainer;
 pub mod sampler;
+pub mod service;
 pub mod dataiter;
 pub mod impute;
 
 pub use model::{ForestModel, ModelKind};
-pub use sampler::{generate, GenerateConfig, LabelSampler};
+pub use sampler::{
+    generate, generate_batched, Backend, GenerateConfig, LabelSampler, Solver,
+};
+pub use service::{SampleTicket, SamplerService, ServiceStats};
 pub use trainer::{train_forest, ForestTrainConfig, Materialized, Prepared, TrainReport};

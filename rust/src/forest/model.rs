@@ -196,6 +196,18 @@ impl ForestModel {
         self.compiled(t_idx, y).predict_into_pooled(x, out, exec);
     }
 
+    /// The one wiring point for in-process vector-field evaluation: build
+    /// the [`FieldEval`](crate::forest::sampler::FieldEval) implementation
+    /// for a [`Backend`](crate::forest::sampler::Backend) on a caller-owned
+    /// worker pool. (`Backend::Native` ignores the pool.)
+    pub fn field<'a>(
+        &'a self,
+        backend: crate::forest::sampler::Backend,
+        exec: &'a crate::coordinator::pool::WorkerPool,
+    ) -> crate::forest::sampler::BackendField<'a> {
+        crate::forest::sampler::BackendField::new(self, backend, exec)
+    }
+
     /// Persist the full model as a directory: `meta.json` + one `.fbj` per
     /// grid slot (the on-disk layout the streaming model store produces).
     pub fn save_dir(&self, dir: &Path) -> std::io::Result<()> {

@@ -47,6 +47,26 @@ impl TimeGrid {
     pub fn step(&self) -> f32 {
         (1.0 - self.eps) / (self.n_t() - 1) as f32
     }
+
+    /// Index of the grid point nearest `t` (clamped to the grid span).
+    /// Higher-order solver stages and re-spaced integration plans evaluate
+    /// the learned field at off-grid times, but the model only has
+    /// ensembles at trained levels — stages snap to the nearest one (the
+    /// ForestDiffusion convention). Works for non-uniform (cosine) grids.
+    pub fn nearest_idx(&self, t: f32) -> usize {
+        let hi = self.ts.partition_point(|&v| v < t);
+        if hi == 0 {
+            return 0;
+        }
+        if hi >= self.ts.len() {
+            return self.ts.len() - 1;
+        }
+        if t - self.ts[hi - 1] <= self.ts[hi] - t {
+            hi - 1
+        } else {
+            hi
+        }
+    }
 }
 
 /// VP-SDE linear β-schedule.
@@ -101,6 +121,27 @@ mod tests {
         let ge = TimeGrid::uniform(50, 0.001);
         assert!((ge.ts[0] - 0.001).abs() < 1e-7);
         assert!((ge.ts[49] - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn nearest_idx_snaps_and_clamps() {
+        let g = TimeGrid::uniform(5, 0.0); // ts = 0, .25, .5, .75, 1
+        assert_eq!(g.nearest_idx(0.0), 0);
+        assert_eq!(g.nearest_idx(1.0), 4);
+        assert_eq!(g.nearest_idx(-0.3), 0, "clamped below");
+        assert_eq!(g.nearest_idx(1.7), 4, "clamped above");
+        assert_eq!(g.nearest_idx(0.26), 1);
+        assert_eq!(g.nearest_idx(0.49), 2);
+        assert_eq!(g.nearest_idx(0.625), 2, "tie goes to the lower index");
+        // Exact grid points map to themselves.
+        for (i, &t) in g.ts.iter().enumerate() {
+            assert_eq!(g.nearest_idx(t), i);
+        }
+        // Non-uniform grid still snaps correctly.
+        let c = TimeGrid::cosine(9, 0.001);
+        for (i, &t) in c.ts.iter().enumerate() {
+            assert_eq!(c.nearest_idx(t), i);
+        }
     }
 
     #[test]

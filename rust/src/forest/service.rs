@@ -1,0 +1,322 @@
+//! The sampling service layer: a long-lived owner of one model + one worker
+//! pool that coalesces concurrent `generate` requests into batched solves.
+//!
+//! One synchronous [`generate`](super::sampler::generate) call walks every
+//! noise level of the grid per request — fine for experiments, wasteful for
+//! serving many small requests: each one pays the full `n_t × n_y`
+//! field-evaluation sweep on a tiny batch, far below the blocked inference
+//! engine's saturation point. [`SamplerService`] fixes the shape of the
+//! work, not the amount: requests of the same config class (backend +
+//! solver + step count) that are queued together become contiguous
+//! row-spans of one shared batch matrix, so each `(t, y)` step costs a
+//! single field evaluation for the whole cohort
+//! ([`generate_batched`](super::sampler::generate_batched)).
+//!
+//! Guarantees:
+//!
+//! * **Bit-identity** — per-request RNG streams make every request's output
+//!   byte-identical to running it alone through `generate`, for any pool
+//!   width and any co-batching (`tests/sampling_service.rs` gates this).
+//! * **No async runtime** — completion is delivered through a plain
+//!   [`std::sync::mpsc`] channel behind [`SampleTicket::wait`]; the
+//!   scheduler is one named thread; zero new dependencies.
+//! * **Warm engines** — the service precompiles every ensemble up front and
+//!   keeps one persistent [`WorkerPool`], so no request pays compile
+//!   latency or thread-spawn cost mid-flight.
+
+use super::model::ForestModel;
+use super::sampler::{generate_batched, Backend, GenerateConfig, Solver};
+use crate::coordinator::pool::WorkerPool;
+use crate::tensor::Matrix;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Requests coalesce only within one class: the solver and step count fix
+/// the integration plan, the backend fixes the evaluator.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct ClassKey {
+    backend: Backend,
+    solver: Solver,
+    steps: Option<usize>,
+}
+
+impl ClassKey {
+    fn of(cfg: &GenerateConfig) -> ClassKey {
+        ClassKey { backend: cfg.backend, solver: cfg.solver, steps: cfg.n_t_override }
+    }
+}
+
+struct Request {
+    cfg: GenerateConfig,
+    done: mpsc::Sender<(Matrix, Vec<u32>)>,
+}
+
+struct Shared {
+    model: ForestModel,
+    exec: WorkerPool,
+    queue: Mutex<VecDeque<Request>>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    served: AtomicUsize,
+    batches: AtomicUsize,
+    max_coalesced: AtomicUsize,
+}
+
+/// Completion handle for one submitted request.
+pub struct SampleTicket {
+    done: mpsc::Receiver<(Matrix, Vec<u32>)>,
+}
+
+impl SampleTicket {
+    /// Block until the request's samples are ready.
+    pub fn wait(self) -> (Matrix, Vec<u32>) {
+        self.done
+            .recv()
+            .expect("sampler service dropped before completing the request")
+    }
+}
+
+/// Service counters (observability + the coalescing tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Requests completed so far.
+    pub requests_served: usize,
+    /// Batched solves run (one per config-class group per queue drain).
+    pub batches_run: usize,
+    /// Largest number of requests coalesced into a single solve.
+    pub max_coalesced: usize,
+}
+
+/// A batching sampler: owns one [`ForestModel`] (engines precompiled), one
+/// persistent [`WorkerPool`], and a scheduler thread that drains the
+/// submission queue into coalesced [`generate_batched`] solves.
+///
+/// A request's `workers` field is ignored — the service pool's width wins.
+/// Dropping the service finishes every queued request, then joins the
+/// scheduler.
+pub struct SamplerService {
+    shared: Arc<Shared>,
+    scheduler: Option<JoinHandle<()>>,
+}
+
+impl SamplerService {
+    /// Spin up the service: precompile every trained ensemble, build the
+    /// pool (`workers` threads, min 1), start the scheduler.
+    pub fn new(model: ForestModel, workers: usize) -> SamplerService {
+        model.precompile();
+        let shared = Arc::new(Shared {
+            model,
+            exec: WorkerPool::new(workers.max(1)),
+            queue: Mutex::new(VecDeque::new()),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            served: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            max_coalesced: AtomicUsize::new(0),
+        });
+        let on_thread = Arc::clone(&shared);
+        let scheduler = std::thread::Builder::new()
+            .name("sampler-service".into())
+            .spawn(move || scheduler_loop(&on_thread))
+            .expect("spawn sampler-service scheduler");
+        SamplerService { shared, scheduler: Some(scheduler) }
+    }
+
+    /// Queue one request; returns immediately with its completion handle.
+    pub fn submit(&self, cfg: GenerateConfig) -> SampleTicket {
+        self.submit_many(std::slice::from_ref(&cfg))
+            .pop()
+            .expect("one request in, one ticket out")
+    }
+
+    /// Queue a group of requests atomically. The whole group lands in the
+    /// queue before the scheduler can drain (the wake-up is signalled while
+    /// the queue lock is held), so one `submit_many` of a single config
+    /// class is always eligible for one coalesced solve.
+    pub fn submit_many(&self, cfgs: &[GenerateConfig]) -> Vec<SampleTicket> {
+        let mut tickets = Vec::with_capacity(cfgs.len());
+        let mut queue = self.shared.queue.lock().unwrap();
+        for cfg in cfgs {
+            let (tx, rx) = mpsc::channel();
+            queue.push_back(Request { cfg: *cfg, done: tx });
+            tickets.push(SampleTicket { done: rx });
+        }
+        self.shared.wake.notify_all();
+        tickets
+    }
+
+    pub fn model(&self) -> &ForestModel {
+        &self.shared.model
+    }
+
+    /// Width of the service's persistent pool.
+    pub fn workers(&self) -> usize {
+        self.shared.exec.threads()
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            requests_served: self.shared.served.load(Ordering::Relaxed),
+            batches_run: self.shared.batches.load(Ordering::Relaxed),
+            max_coalesced: self.shared.max_coalesced.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for SamplerService {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.wake.notify_all();
+        if let Some(handle) = self.scheduler.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn scheduler_loop(shared: &Shared) {
+    loop {
+        let batch: Vec<Request> = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if !queue.is_empty() {
+                    break queue.drain(..).collect();
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                queue = shared.wake.wait(queue).unwrap();
+            }
+        };
+        run_batch(shared, batch);
+    }
+}
+
+fn run_batch(shared: &Shared, batch: Vec<Request>) {
+    // Group by config class, preserving submission order within a group.
+    let mut groups: Vec<(ClassKey, Vec<Request>)> = Vec::new();
+    for req in batch {
+        let key = ClassKey::of(&req.cfg);
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, members)) => members.push(req),
+            None => groups.push((key, vec![req])),
+        }
+    }
+    for (key, members) in groups {
+        let cfgs: Vec<GenerateConfig> = members.iter().map(|m| m.cfg).collect();
+        let field = shared.model.field(key.backend, &shared.exec);
+        let results = generate_batched(&shared.model, &field, &cfgs);
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        shared.served.fetch_add(members.len(), Ordering::Relaxed);
+        shared.max_coalesced.fetch_max(members.len(), Ordering::Relaxed);
+        for (req, result) in members.into_iter().zip(results) {
+            // A dropped ticket just discards its samples.
+            let _ = req.done.send(result);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::sampler::generate;
+    use crate::forest::trainer::{train_forest, ForestTrainConfig};
+    use crate::gbt::TrainParams;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Rng;
+
+    fn small_model() -> ForestModel {
+        let mut rng = Rng::new(50);
+        let n = 160;
+        let mut x = Matrix::zeros(n, 2);
+        let mut y = Vec::with_capacity(n);
+        for r in 0..n {
+            let c = (r % 2) as u32;
+            let cx = if c == 0 { -2.0 } else { 2.0 };
+            x.set(r, 0, cx + 0.2 * rng.normal_f32());
+            x.set(r, 1, -cx + 0.2 * rng.normal_f32());
+            y.push(c);
+        }
+        let cfg = ForestTrainConfig {
+            n_t: 5,
+            k_dup: 5,
+            params: TrainParams { n_trees: 8, max_depth: 3, ..Default::default() },
+            seed: 51,
+            ..Default::default()
+        };
+        train_forest(&cfg, &x, Some(&y)).0
+    }
+
+    #[test]
+    fn submitted_group_coalesces_and_matches_solo() {
+        let model = small_model();
+        let cfgs: Vec<GenerateConfig> =
+            (0..8).map(|i| GenerateConfig::new(25 + 3 * i, 500 + i as u64)).collect();
+        // Solo references from a plain model before the service takes it.
+        let solo: Vec<(Matrix, Vec<u32>)> = cfgs.iter().map(|c| generate(&model, c)).collect();
+        let service = SamplerService::new(model, 2);
+        let tickets = service.submit_many(&cfgs);
+        for (ticket, (sx, sl)) in tickets.into_iter().zip(solo) {
+            let (bx, bl) = ticket.wait();
+            assert_eq!(sx.data, bx.data, "coalesced output diverged from solo");
+            assert_eq!(sl, bl);
+        }
+        let stats = service.stats();
+        assert_eq!(stats.requests_served, 8);
+        // submit_many queues the whole group before the scheduler can
+        // drain, and all 8 share one config class: one coalesced solve.
+        assert_eq!(stats.max_coalesced, 8, "{stats:?}");
+        assert_eq!(stats.batches_run, 1, "{stats:?}");
+    }
+
+    #[test]
+    fn mixed_classes_split_into_separate_batches() {
+        let model = small_model();
+        let a = GenerateConfig::new(30, 1);
+        let b = GenerateConfig::new(30, 2).with_solver(Solver::Heun).with_n_t_override(3);
+        let solo_a = generate(&model, &a);
+        let solo_b = generate(&model, &b);
+        let service = SamplerService::new(model, 1);
+        let tickets = service.submit_many(&[a, b, a, b]);
+        let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+        assert_eq!(results[0].0.data, solo_a.0.data);
+        assert_eq!(results[1].0.data, solo_b.0.data);
+        assert_eq!(results[2].0.data, solo_a.0.data);
+        assert_eq!(results[3].0.data, solo_b.0.data);
+        let stats = service.stats();
+        assert_eq!(stats.requests_served, 4);
+        assert_eq!(stats.batches_run, 2, "one solve per config class: {stats:?}");
+        assert_eq!(stats.max_coalesced, 2);
+    }
+
+    #[test]
+    fn submit_works_from_many_threads() {
+        let model = small_model();
+        let expect = generate(&model, &GenerateConfig::new(20, 9));
+        let service = std::sync::Arc::new(SamplerService::new(model, 2));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let svc = std::sync::Arc::clone(&service);
+                std::thread::spawn(move || svc.submit(GenerateConfig::new(20, 9)).wait())
+            })
+            .collect();
+        for h in handles {
+            let (gx, gl) = h.join().unwrap();
+            assert_eq!(gx.data, expect.0.data);
+            assert_eq!(gl, expect.1);
+        }
+        assert_eq!(service.stats().requests_served, 4);
+    }
+
+    #[test]
+    fn drop_completes_queued_requests() {
+        let model = small_model();
+        let expect = generate(&model, &GenerateConfig::new(15, 3));
+        let service = SamplerService::new(model, 1);
+        let ticket = service.submit(GenerateConfig::new(15, 3));
+        drop(service);
+        let (gx, _) = ticket.wait();
+        assert_eq!(gx.data, expect.0.data);
+    }
+}

@@ -76,13 +76,12 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
 
     let (x, y) = load_dataset(&args)?;
     let cfg = forest_cfg_from(&args);
-    let opts = caloforest::coordinator::RunOptions {
-        workers: args.get_usize("workers"),
-        intra_job_threads: args.get_usize("intra"),
-        store_dir: Some(std::path::PathBuf::from(args.get("store"))),
-        resume: args.get_bool("resume"),
-        track_memory: true,
-    };
+    let opts = caloforest::coordinator::RunOptions::new()
+        .with_workers(args.get_usize("workers"))
+        .with_intra_job_threads(args.get_usize("intra"))
+        .with_store_dir(args.get("store"))
+        .with_resume(args.get_bool("resume"))
+        .with_track_memory(true);
     let out = caloforest::coordinator::run_training(&cfg, &x, y.as_deref(), &opts);
     println!(
         "trained {} ensembles in {:.2}s (peak heap {}, {} job workers x {} intra threads), store: {}",
@@ -103,6 +102,9 @@ fn cmd_generate(argv: &[String]) -> Result<(), String> {
         .opt("seed", "0", "seed")
         .opt("out", "results/generated.csv", "output CSV")
         .opt("workers", "1", "threads for native field evaluation (0 = all host CPUs)")
+        .opt("solver", "euler", "integration scheme: euler | heun | rk4")
+        .opt("steps", "0", "integration steps (0 = one per trained noise level)")
+        .opt("backend", "compiled", "field evaluator: compiled | native | par-native")
         .flag("xla", "use the AOT PJRT backend when an artifact fits")
         .parse(argv)?;
     let store =
@@ -113,8 +115,17 @@ fn cmd_generate(argv: &[String]) -> Result<(), String> {
         0 => caloforest::coordinator::memory::host_cpus(),
         w => w,
     };
-    let cfg = caloforest::forest::GenerateConfig::new(args.get_usize("n"), args.get_u64("seed"))
-        .with_workers(workers);
+    let solver = caloforest::forest::Solver::parse(&args.get("solver"))
+        .ok_or_else(|| format!("unknown solver '{}'", args.get("solver")))?;
+    let backend = caloforest::forest::Backend::parse(&args.get("backend"))
+        .ok_or_else(|| format!("unknown backend '{}'", args.get("backend")))?;
+    let mut cfg = caloforest::forest::GenerateConfig::new(args.get_usize("n"), args.get_u64("seed"))
+        .with_workers(workers)
+        .with_solver(solver)
+        .with_backend(backend);
+    if args.get_usize("steps") > 0 {
+        cfg = cfg.with_n_t_override(args.get_usize("steps"));
+    }
     let t0 = std::time::Instant::now();
     let (gen, labels) = if args.get_bool("xla") {
         let runtime = caloforest::runtime::PjrtRuntime::cpu(std::path::Path::new("artifacts"))

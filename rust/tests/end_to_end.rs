@@ -91,7 +91,7 @@ fn store_survives_corrupt_checkpoint() {
     };
     let dir = std::env::temp_dir().join("caloforest_e2e_corrupt_store");
     let _ = std::fs::remove_dir_all(&dir);
-    let opts = RunOptions { store_dir: Some(dir.clone()), ..Default::default() };
+    let opts = RunOptions::new().with_store_dir(dir.clone());
     run_training(&cfg, &x, None, &opts);
     // Corrupt one checkpoint.
     let victim = dir.join("t0001_y000.fbj");
@@ -100,7 +100,7 @@ fn store_survives_corrupt_checkpoint() {
     assert!(store.load_model().is_err(), "corrupt file must error, not silently load");
     // Delete and resume: the run retrains exactly that slot.
     std::fs::remove_file(&victim).unwrap();
-    let out = run_training(&cfg, &x, None, &RunOptions { resume: true, ..opts });
+    let out = run_training(&cfg, &x, None, &opts.clone().with_resume(true));
     assert_eq!(out.report.jobs.len(), 1);
     let model = ModelStore::open(&dir).unwrap().load_model().unwrap();
     assert!(model.is_complete());

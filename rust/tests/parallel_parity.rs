@@ -10,10 +10,10 @@
 //! `CALOFOREST_TEST_WORKERS` env var, which is appended to every sweep.
 
 use caloforest::coordinator::pool::WorkerPool;
-use caloforest::coordinator::{run_training, worker_budget, RunOptions};
+use caloforest::coordinator::{run_training, worker_budget, RunOptions, WorkerSplit};
 use caloforest::data::synthetic_dataset;
 use caloforest::forest::generate;
-use caloforest::forest::sampler::{generate_with, GenerateConfig, ParNativeField};
+use caloforest::forest::sampler::{generate_with, Backend, GenerateConfig};
 use caloforest::forest::trainer::{
     prepare, train_forest, train_job, train_job_in, train_job_materialized, ForestTrainConfig,
 };
@@ -63,7 +63,7 @@ fn intra_job_parallel_training_is_bit_identical_on_synthetic_benchmark() {
                 &cfg,
                 &x,
                 Some(&y),
-                &RunOptions { workers, intra_job_threads: intra, ..Default::default() },
+                &RunOptions::new().with_workers(workers).with_intra_job_threads(intra),
             );
             assert_eq!(par.intra_job_threads, intra);
             assert!(par.model.is_complete());
@@ -350,7 +350,7 @@ fn rebalanced_run_training_is_bit_identical_and_reports_grants() {
         &cfg,
         &x,
         Some(&y),
-        &RunOptions { workers: 3, intra_job_threads: 2, ..Default::default() },
+        &RunOptions::new().with_workers(3).with_intra_job_threads(2),
     );
     assert!(out.model.is_complete());
     assert_eq!(out.job_workers, 3);
@@ -421,11 +421,11 @@ fn blocked_engine_is_bit_identical_to_predict_batch_across_widths() {
 }
 
 #[test]
-fn compiled_default_sampling_backend_is_byte_identical() {
-    // generate()'s default backend swapped from booster traversal
-    // (ParNativeField) to the compiled blocked engine: for a fixed seed the
-    // output must not change by a single byte — both model kinds, every CI
-    // worker width.
+fn every_sampling_backend_is_byte_identical() {
+    // The three field-evaluation wirings now live behind one `Backend`
+    // enum (`ForestModel::field`). For a fixed seed every backend must
+    // produce the same bytes as the booster-traversal reference — both
+    // model kinds, every CI worker width.
     let (x, y) = synthetic_dataset(300, 5, 2, 23);
     for model_kind in [ModelKind::Flow, ModelKind::Diffusion] {
         let cfg = ForestTrainConfig {
@@ -442,16 +442,21 @@ fn compiled_default_sampling_backend_is_byte_identical() {
         let gen_cfg = GenerateConfig::new(3000, 13);
         let exec = WorkerPool::new(1);
         let reference =
-            generate_with(&model, &ParNativeField { model: &model, exec: &exec }, &gen_cfg);
+            generate_with(&model, &model.field(Backend::ParNative, &exec), &gen_cfg);
         let ref_bits: Vec<u32> = reference.0.data.iter().map(|v| v.to_bits()).collect();
-        for workers in worker_widths() {
-            let sampled = generate(&model, &gen_cfg.with_workers(workers));
-            let got_bits: Vec<u32> = sampled.0.data.iter().map(|v| v.to_bits()).collect();
-            assert_eq!(
-                ref_bits, got_bits,
-                "{model_kind:?} samples diverge at workers={workers}"
-            );
-            assert_eq!(reference.1, sampled.1, "{model_kind:?} labels diverge");
+        for backend in Backend::ALL {
+            for workers in worker_widths() {
+                let sampled =
+                    generate(&model, &gen_cfg.with_workers(workers).with_backend(backend));
+                let got_bits: Vec<u32> = sampled.0.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    ref_bits,
+                    got_bits,
+                    "{model_kind:?} samples diverge at backend={} workers={workers}",
+                    backend.name()
+                );
+                assert_eq!(reference.1, sampled.1, "{model_kind:?} labels diverge");
+            }
         }
     }
 }
@@ -460,8 +465,8 @@ fn compiled_default_sampling_backend_is_byte_identical() {
 fn auto_budget_saturates_few_job_runs() {
     // Few jobs × big budget: the policy must push the spare workers down
     // into the jobs instead of leaving them idle.
-    let (jobs, intra) = worker_budget(8, 2, 0);
-    assert_eq!((jobs, intra), (2, 4));
+    let split = worker_budget(8, 2, 0);
+    assert_eq!(split, WorkerSplit::new(2, 4));
     // And the auto split is what run_training actually applies. The split
     // is size-aware since PR 3: job-level width is additionally capped by
     // the reported effective width (⌈Σ sizes / max size⌉), which for the
@@ -472,7 +477,7 @@ fn auto_budget_saturates_few_job_runs() {
         &cfg,
         &x,
         Some(&y),
-        &RunOptions { workers: 8, ..Default::default() },
+        &RunOptions::new().with_workers(8),
     );
     // 2 timesteps × 2 classes = 4 jobs; budget 8.
     let expect_jobs = out.effective_job_width.min(4).min(8);

@@ -5,8 +5,9 @@
 //! artifact index is missing so `cargo test` still passes on a fresh
 //! checkout before the build step.
 
+use caloforest::coordinator::pool::WorkerPool;
 use caloforest::coordinator::{run_training, RunOptions};
-use caloforest::forest::sampler::{generate, generate_with, FieldEval, GenerateConfig, NativeField};
+use caloforest::forest::sampler::{generate, generate_with, Backend, FieldEval, GenerateConfig};
 use caloforest::forest::trainer::ForestTrainConfig;
 use caloforest::gbt::{TrainParams, TreeKind};
 use caloforest::runtime::xla_sampler::XlaField;
@@ -54,7 +55,8 @@ fn field_eval_native_vs_xla() {
     for kind in [TreeKind::Single, TreeKind::Multi] {
         let model = train_p2_model(kind, 42);
         let xla = XlaField::prepare(&runtime, &model).expect("artifact must fit p=2 model");
-        let native = NativeField(&model);
+        let pool = WorkerPool::new(1);
+        let native = model.field(Backend::Native, &pool);
         let mut rng = Rng::new(7);
         let batch = Matrix::randn(200, 2, &mut rng);
         let mut out_native = vec![0.0f32; 200 * 2];
