@@ -18,7 +18,7 @@ use caloforest::gbt::booster::{update_eval_preds, update_train_preds};
 use caloforest::gbt::histogram::{HistLayout, Histogram};
 use caloforest::gbt::predict::PackedForest;
 use caloforest::gbt::tree::PAR_BUILD_MIN_ROWS;
-use caloforest::gbt::{BinnedMatrix, Booster, QuantForest, TrainParams, TreeKind};
+use caloforest::gbt::{BinnedMatrix, Booster, QuantForest, TileShape, TrainParams, TreeKind};
 use caloforest::runtime::{xla_sampler::XlaField, PjrtRuntime};
 use caloforest::tensor::Matrix;
 use caloforest::util::bench::Bench;
@@ -236,6 +236,53 @@ fn main() {
         rows_n as f64 / m_old8.mean() / 1e6,
         rows_n as f64 / m_new8.mean() / 1e6,
     );
+    // --- Arena engine: SIMD lanes vs scalar walk, autotuned vs default. ---
+    // Same breadth-first arena, three traversals of the same batch: the
+    // laned row-group walk (production), the scalar per-row reference walk,
+    // and the laned walk pinned to the pre-autotuner DEFAULT tile shape.
+    // All three are bit-identical by the parity gates; the deltas measure
+    // what the lanes and the host-tuned blocking actually buy.
+    let arena_shape = engine.shape();
+    let engine_default = engine.clone().with_tile_shape(TileShape::DEFAULT);
+    let mut arena_results: Vec<(&str, f64)> = Vec::new();
+    let m_lanes = bench.time("arena laned walk (autotuned tiles, 1 thread)", || {
+        engine.predict_into(&batch.view(), &mut out);
+        std::hint::black_box(out[0]);
+    });
+    arena_results.push(("laned-autotuned", m_lanes.mean()));
+    let m_scalar = bench.time("arena scalar walk (autotuned tiles, 1 thread)", || {
+        engine.predict_into_scalar(&batch.view(), &mut out);
+        std::hint::black_box(out[0]);
+    });
+    arena_results.push(("scalar-autotuned", m_scalar.mean()));
+    let m_deftile = bench.time(
+        &format!(
+            "arena laned walk (default {}x{} tiles, 1 thread)",
+            TileShape::DEFAULT.block_rows,
+            TileShape::DEFAULT.tree_tile
+        ),
+        || {
+            engine_default.predict_into(&batch.view(), &mut out);
+            std::hint::black_box(out[0]);
+        },
+    );
+    arena_results.push(("laned-default-tiles", m_deftile.mean()));
+    for &(label, secs) in &arena_results {
+        bench.csv("path,label,mean_secs", format!("arena-engine,{label},{secs:.9}"));
+    }
+    let lane_speedup = m_scalar.mean() / m_lanes.mean().max(1e-12);
+    let tile_speedup = m_deftile.mean() / m_lanes.mean().max(1e-12);
+    println!(
+        "arena engine: scalar {:.2} vs laned {:.2} Mrow/s ({lane_speedup:.2}x lanes); \
+         default-tile {:.2} vs autotuned {:.2} Mrow/s ({tile_speedup:.2}x, shape {}x{})",
+        rows_n as f64 / m_scalar.mean() / 1e6,
+        rows_n as f64 / m_lanes.mean() / 1e6,
+        rows_n as f64 / m_deftile.mean() / 1e6,
+        rows_n as f64 / m_lanes.mean() / 1e6,
+        arena_shape.block_rows,
+        arena_shape.tree_tile,
+    );
+
     // --- Sampling service: solver ladder + request batcher. ---------------
     // The ladder trades steps for per-step order: Heun at n_t/2 and RK4 at
     // n_t/4 pay 2 and 4 field evaluations per step, so samples/sec tells
@@ -515,6 +562,25 @@ fn main() {
             .set("results", Json::Arr(results))
             .set("single_thread_speedup", speedup1)
             .set("pooled_speedup", speedup8);
+        let mut arena_sec = Json::obj();
+        let results = arena_results
+            .iter()
+            .map(|&(label, secs)| row_json(rows_n, label, 1, secs))
+            .collect::<Vec<_>>();
+        let mut config = Json::obj();
+        config
+            .set("rows", rows_n)
+            .set("trees", booster.trees.len())
+            .set("max_depth", booster.params.max_depth)
+            .set("autotuned_block_rows", arena_shape.block_rows)
+            .set("autotuned_tree_tile", arena_shape.tree_tile)
+            .set("default_block_rows", TileShape::DEFAULT.block_rows)
+            .set("default_tree_tile", TileShape::DEFAULT.tree_tile);
+        arena_sec
+            .set("config", config)
+            .set("results", Json::Arr(results))
+            .set("lane_speedup", lane_speedup)
+            .set("autotune_speedup_vs_default", tile_speedup);
         let mut upd_sec = Json::obj();
         let results = upd_results
             .iter()
@@ -581,6 +647,7 @@ fn main() {
         doc.set("bench", "perf_hotpaths")
             .set("status", "measured")
             .set("sampler_field_eval", sampler_sec)
+            .set("arena_engine", arena_sec)
             .set("training_update", upd_sec)
             .set("training_prepare", prep_sec)
             .set("sampling_service", svc_sec);

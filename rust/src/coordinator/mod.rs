@@ -30,7 +30,10 @@ pub mod memory;
 pub mod store;
 
 use crate::forest::model::ForestModel;
-use crate::forest::trainer::{prepare, train_job_in, ForestTrainConfig, JobRecord, TrainReport};
+use crate::forest::trainer::{
+    prepare, train_job_with_cuts, ForestTrainConfig, JobRecord, TrainReport,
+};
+use crate::gbt::BinCuts;
 use crate::tensor::Matrix;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -300,8 +303,8 @@ pub fn run_training(
     job_cfg.params.intra_threads = intra_threads;
     let job_cfg = &job_cfg;
 
-    let completed: Mutex<Vec<(usize, usize, Option<crate::gbt::Booster>, JobRecord)>> =
-        Mutex::new(Vec::with_capacity(jobs.len()));
+    type Done = (usize, usize, Option<(crate::gbt::Booster, BinCuts)>, JobRecord);
+    let completed: Mutex<Vec<Done>> = Mutex::new(Vec::with_capacity(jobs.len()));
     let next_job = AtomicUsize::new(0);
     let jobs_done = AtomicUsize::new(0);
 
@@ -336,7 +339,7 @@ pub fn run_training(
             }
             let (t_idx, y_idx) = jobs[job_idx];
             let jt0 = std::time::Instant::now();
-            let booster = train_job_in(&prep, job_cfg, t_idx, y_idx, exec);
+            let (booster, cuts) = train_job_with_cuts(&prep, job_cfg, t_idx, y_idx, exec);
             let rec = JobRecord {
                 t_idx,
                 y: y_idx,
@@ -347,13 +350,17 @@ pub fn run_training(
                 seconds: jt0.elapsed().as_secs_f64(),
                 nbytes: booster.nbytes(),
             };
-            // Issue 3: write to disk inside the worker, then drop from memory.
+            // Issue 3: write to disk inside the worker, then drop from
+            // memory. The training cuts travel with the in-memory booster
+            // (they power the slot's quantized sampling engine); the store
+            // path drops them — models loaded from disk fall back to the
+            // float engine everywhere.
             let keep = match &store {
                 Some(s) => {
                     s.save(t_idx, y_idx, &booster).expect("store write failed");
                     None
                 }
-                None => Some(booster),
+                None => Some((booster, cuts)),
             };
             completed.lock().unwrap().push((t_idx, y_idx, keep, rec));
             let done = jobs_done.fetch_add(1, Ordering::Relaxed);
@@ -409,8 +416,8 @@ pub fn run_training(
     );
     let mut report = TrainReport::default();
     for (t_idx, y_idx, booster, rec) in completed.into_inner().unwrap() {
-        if let Some(b) = booster {
-            model.set_ensemble(t_idx, y_idx, b);
+        if let Some((b, cuts)) = booster {
+            model.set_ensemble_with_cuts(t_idx, y_idx, b, cuts);
         }
         report.jobs.push(rec);
     }

@@ -3,7 +3,7 @@
 
 use super::scaler::ClassScalers;
 use super::schedule::{TimeGrid, VpSchedule};
-use crate::gbt::{serialize, Booster, NativeForest};
+use crate::gbt::{serialize, BinCuts, Booster, NativeForest, QuantForest};
 use std::path::Path;
 use std::sync::OnceLock;
 
@@ -45,6 +45,15 @@ pub struct ForestModel {
     /// after training / model-store load). Same `[n_t × n_y]` indexing as
     /// `ensembles`; invalidated by [`set_ensemble`](Self::set_ensemble).
     pub compiled: Vec<OnceLock<NativeForest>>,
+    /// Per-slot training bin cuts, when the trainer kept them
+    /// ([`set_ensemble_with_cuts`](Self::set_ensemble_with_cuts)). `None`
+    /// for slots loaded from disk or set without cuts — those fall back to
+    /// the float engine everywhere.
+    pub cuts: Vec<Option<BinCuts>>,
+    /// Per-slot quantized engines (u8 bin-code arenas), built lazily from
+    /// `cuts` for the sampler's first denoising step. Bit-identical to the
+    /// float engine on any input.
+    pub quantized: Vec<OnceLock<QuantForest>>,
 }
 
 impl ForestModel {
@@ -66,6 +75,8 @@ impl ForestModel {
             p,
             ensembles: vec![None; slots],
             compiled: (0..slots).map(|_| OnceLock::new()).collect(),
+            cuts: vec![None; slots],
+            quantized: (0..slots).map(|_| OnceLock::new()).collect(),
         }
     }
 
@@ -91,8 +102,36 @@ impl ForestModel {
     pub fn set_ensemble(&mut self, t_idx: usize, y: usize, booster: Booster) {
         let slot = self.slot(t_idx, y);
         self.ensembles[slot] = Some(booster);
-        // Any previously compiled engine for this slot is stale.
+        // Any previously compiled engine for this slot is stale — and so are
+        // cuts from a previous training run (this entry point has none).
         self.compiled[slot] = OnceLock::new();
+        self.cuts[slot] = None;
+        self.quantized[slot] = OnceLock::new();
+    }
+
+    /// [`set_ensemble`](Self::set_ensemble), additionally keeping the job's
+    /// training bin cuts so the slot can serve a quantized engine
+    /// ([`quantized`](Self::quantized_engine)).
+    pub fn set_ensemble_with_cuts(
+        &mut self,
+        t_idx: usize,
+        y: usize,
+        booster: Booster,
+        cuts: BinCuts,
+    ) {
+        self.set_ensemble(t_idx, y, booster);
+        self.cuts[self.slot(t_idx, y)] = Some(cuts);
+    }
+
+    /// The quantized bin-code engine for `(t_idx, y)` with the cuts its
+    /// codes must come from, building it on first use — `None` when the
+    /// trainer didn't keep cuts for the slot (e.g. a model-store load).
+    pub fn quantized_engine(&self, t_idx: usize, y: usize) -> Option<(&QuantForest, &BinCuts)> {
+        let slot = self.slot(t_idx, y);
+        let cuts = self.cuts[slot].as_ref()?;
+        let qf = self.quantized[slot]
+            .get_or_init(|| QuantForest::compile(self.ensemble(t_idx, y), cuts));
+        Some((qf, cuts))
     }
 
     /// The compiled blocked-inference engine for `(t_idx, y)`, building it
@@ -159,7 +198,12 @@ impl ForestModel {
             .iter()
             .filter_map(|c| c.get().map(|f| f.nbytes()))
             .sum();
-        boosters + engines
+        let quantized: usize = self
+            .quantized
+            .iter()
+            .filter_map(|c| c.get().map(|f| f.nbytes()))
+            .sum();
+        boosters + engines + quantized
     }
 
     /// Evaluate the learned vector field at grid point `t_idx` for class `y`
@@ -413,6 +457,37 @@ mod tests {
             1,
             "untrained slots must stay uncompiled"
         );
+    }
+
+    #[test]
+    fn quantized_engine_requires_cuts_and_invalidates_with_the_slot() {
+        let mut m = dummy_model();
+        let x = crate::tensor::Matrix::from_vec(4, 1, vec![0.0, 0.3, 0.6, 1.0]);
+        let y = crate::tensor::Matrix::from_vec(4, 1, vec![1.0, 1.0, -1.0, -1.0]);
+        let binned = crate::gbt::BinnedMatrix::fit_bin(&x.view(), 16);
+        let b = Booster::train_binned(
+            &binned,
+            &y.view(),
+            crate::gbt::TrainParams { n_trees: 2, max_depth: 2, ..Default::default() },
+            None,
+        );
+        // Without cuts: no quantized engine.
+        m.set_ensemble(1, 0, b.clone());
+        assert!(m.quantized_engine(1, 0).is_none());
+        // With cuts: lazily built, accounted in nbytes, exact on codes.
+        m.set_ensemble_with_cuts(1, 0, b.clone(), binned.cuts.clone());
+        let base = m.nbytes();
+        let (qf, cuts) = m.quantized_engine(1, 0).expect("cuts present");
+        assert_eq!(cuts, &binned.cuts);
+        let mut got = vec![0.0f32; 4];
+        qf.predict_into(&binned, &mut got);
+        let want = m.ensemble(1, 0).predict(&x.view());
+        assert_eq!(want.data, got);
+        assert!(m.nbytes() > base, "quantized engine must be accounted");
+        // Replacing the ensemble without cuts drops engine and cuts.
+        m.set_ensemble(1, 0, b);
+        assert!(m.cuts[m.slot(1, 0)].is_none());
+        assert!(m.quantized_engine(1, 0).is_none());
     }
 
     #[test]

@@ -237,6 +237,16 @@ pub trait FieldEval {
     /// Evaluate the field at grid index `t_idx` for class `y` over batch `x`
     /// (scaled space), writing row-major `[n × p]` into `out`.
     fn eval(&self, t_idx: usize, y: usize, x: &MatrixView<'_>, out: &mut [f32]);
+
+    /// [`eval`](Self::eval) for the *first* denoising step of a trajectory,
+    /// where the batch is pure Gaussian noise with no dependence on earlier
+    /// field evaluations. Backends may route this call through a cheaper
+    /// engine (the in-process backend uses the slot's quantized bin-code
+    /// arena when the trainer kept cuts); output must stay byte-identical
+    /// to `eval`. Defaults to `eval`.
+    fn eval_first(&self, t_idx: usize, y: usize, x: &MatrixView<'_>, out: &mut [f32]) {
+        self.eval(t_idx, y, x, out);
+    }
 }
 
 /// The unified in-process vector-field evaluator: one struct, one
@@ -265,6 +275,35 @@ impl<'a> FieldEval for BackendField<'a> {
             Backend::Compiled => self.model.eval_field_compiled(t_idx, y, x, out, self.exec),
             Backend::Native => self.model.eval_field(t_idx, y, x, out),
             Backend::ParNative => self.model.eval_field_par(t_idx, y, x, out, self.exec),
+        }
+    }
+
+    /// First denoising step through the slot's quantized engine when the
+    /// trainer kept bin cuts ([`ForestModel::quantized_engine`]): the noise
+    /// batch is binned once with the training cuts and routed by `u8`
+    /// codes. Split thresholds are bin upper edges, so code routing
+    /// reproduces float routing exactly on *any* rows — beyond-range values
+    /// clamp to the last bin and route right like their floats, NaNs map to
+    /// `MISSING_BIN` and follow the learned defaults — hence byte-identical
+    /// output for every backend. Slots without cuts (model-store loads)
+    /// fall back to the float engine.
+    fn eval_first(&self, t_idx: usize, y: usize, x: &MatrixView<'_>, out: &mut [f32]) {
+        let Some((qf, cuts)) = self.model.quantized_engine(t_idx, y) else {
+            return self.eval(t_idx, y, x, out);
+        };
+        match self.backend {
+            Backend::Native => {
+                let binned = crate::gbt::BinnedMatrix::bin(x, cuts);
+                qf.predict_into(&binned, out);
+            }
+            Backend::Compiled | Backend::ParNative => {
+                let binned = crate::gbt::BinnedMatrix::bin_par(x, cuts, self.exec);
+                let m = qf.m;
+                for r in 0..x.rows {
+                    out[r * m..(r + 1) * m].copy_from_slice(&qf.base_score);
+                }
+                qf.accumulate_pooled(&binned, out, self.exec);
+            }
         }
     }
 }
@@ -379,10 +418,19 @@ pub fn generate_batched(
         for (r, &(s, e)) in spans.iter().enumerate() {
             rngs[r].fill_normal(&mut x.data[s * p..e * p]);
         }
+        // The very first field evaluation of each class batch sees pure
+        // Gaussian noise (no trajectory dependence yet): route it through
+        // the backend's quantized first-step path (byte-identical; falls
+        // back to `eval` when the backend has no cheaper engine).
         match model.kind {
             ModelKind::Flow => {
+                let first = std::cell::Cell::new(true);
                 ode_solve(&model.grid, &plan, solver, &mut x, |t_idx, _t, xv, out| {
-                    field.eval(t_idx, y, xv, out);
+                    if first.replace(false) {
+                        field.eval_first(t_idx, y, xv, out);
+                    } else {
+                        field.eval(t_idx, y, xv, out);
+                    }
                 });
             }
             // Euler keeps the stochastic reverse SDE; the higher-order
@@ -393,8 +441,13 @@ pub fn generate_batched(
                 }
                 Solver::Heun | Solver::Rk4 => {
                     let sched = model.schedule;
+                    let first = std::cell::Cell::new(true);
                     ode_solve(&model.grid, &plan, solver, &mut x, |t_idx, t, xv, out| {
-                        field.eval(t_idx, y, xv, out);
+                        if first.replace(false) {
+                            field.eval_first(t_idx, y, xv, out);
+                        } else {
+                            field.eval(t_idx, y, xv, out);
+                        }
                         // Probability-flow slope, in the `x ← x − h·φ`
                         // convention: φ = −½β(t)·(x + s(x, t)).
                         let b = sched.beta(t);
@@ -567,7 +620,12 @@ fn em_solve(
     let mut s = vec![0.0f32; x.data.len()];
     for (step, &(t_idx, t)) in plan.steps.iter().enumerate() {
         let beta = sched.beta(t);
-        field.eval(t_idx, y, &x.view(), &mut s);
+        if step == 0 {
+            // Pure Gaussian input: the quantized first-step path applies.
+            field.eval_first(t_idx, y, &x.view(), &mut s);
+        } else {
+            field.eval(t_idx, y, &x.view(), &mut s);
+        }
         let noise_scale = if step + 1 == n_steps { 0.0 } else { (beta * h).sqrt() };
         for (r, &(sp, ep)) in spans.iter().enumerate() {
             let rng = &mut rngs[r];
@@ -886,6 +944,66 @@ mod tests {
             let (sx, sl) = generate(&model, cfg);
             assert_eq!(sx.data, bx.data, "coalescing perturbed seed {}", cfg.seed);
             assert_eq!(&sl, bl);
+        }
+    }
+
+    #[test]
+    fn quantized_first_step_is_bit_identical_to_float_path() {
+        // The trainer keeps per-slot bin cuts, so generation routes each
+        // class batch's first (pure-Gaussian) field evaluation through the
+        // quantized u8-code engine. Stripping the cuts forces the float
+        // fallback; outputs must match byte-for-byte — for both model
+        // kinds, both tree kinds, every in-process backend, and the solver
+        // ladder (first stage of Heun/Rk4, step 0 of Euler–Maruyama).
+        let (x, y) = blob_data(160, &[(-2.0, 1.0), (2.0, -1.0)], 50);
+        for (kind, tree_kind) in [
+            (ModelKind::Flow, TreeKind::Single),
+            (ModelKind::Flow, TreeKind::Multi),
+            (ModelKind::Diffusion, TreeKind::Single),
+        ] {
+            let cfg = ForestTrainConfig {
+                kind,
+                eps: if kind == ModelKind::Diffusion { 0.01 } else { 0.0 },
+                n_t: 5,
+                k_dup: 5,
+                params: TrainParams {
+                    n_trees: 8,
+                    max_depth: 3,
+                    kind: tree_kind,
+                    ..Default::default()
+                },
+                seed: 51,
+                ..Default::default()
+            };
+            let (model, _) = train_forest(&cfg, &x, Some(&y));
+            assert!(
+                model.cuts.iter().all(|c| c.is_some()),
+                "trainer must keep cuts for every slot"
+            );
+            let mut stripped = model.clone();
+            stripped.cuts = vec![None; stripped.cuts.len()];
+            stripped.quantized = (0..stripped.quantized.len())
+                .map(|_| std::sync::OnceLock::new())
+                .collect();
+            for backend in Backend::ALL {
+                for solver in [Solver::Euler, Solver::Heun] {
+                    let gen_cfg = GenerateConfig::new(150, 23)
+                        .with_backend(backend)
+                        .with_solver(solver)
+                        .with_n_t_override(3);
+                    let quant = generate(&model, &gen_cfg);
+                    let float = generate(&stripped, &gen_cfg);
+                    let qb: Vec<u32> = quant.0.data.iter().map(|v| v.to_bits()).collect();
+                    let fb: Vec<u32> = float.0.data.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        qb, fb,
+                        "{kind:?}/{tree_kind:?}/{}/{} quantized first step diverges",
+                        backend.name(),
+                        solver.name()
+                    );
+                    assert_eq!(quant.1, float.1);
+                }
+            }
         }
     }
 

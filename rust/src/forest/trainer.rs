@@ -33,7 +33,7 @@ use super::noising;
 use super::scaler::ClassScalers;
 use super::schedule::{TimeGrid, VpSchedule};
 use crate::coordinator::pool::WorkerPool;
-use crate::gbt::{Booster, TrainParams};
+use crate::gbt::{BinCuts, BinnedMatrix, Booster, TrainParams};
 use crate::tensor::Matrix;
 use crate::util::rng::{splitmix64, NormalStream};
 
@@ -309,6 +309,27 @@ pub fn train_job_in(
     y: usize,
     exec: &WorkerPool,
 ) -> Booster {
+    train_job_with_cuts(prep, cfg, t_idx, y, exec).0
+}
+
+/// [`train_job_in`], additionally returning the job's fitted [`BinCuts`].
+///
+/// The cuts let the model keep a quantized sampling engine per slot
+/// ([`ForestModel::set_ensemble_with_cuts`]): the sampler's first
+/// denoising step — pure Gaussian input, no trajectory dependence — can
+/// then route through `u8` bin codes instead of float thresholds,
+/// bit-identically. Binning happens here (not inside
+/// [`Booster::train_with`]) so the cuts survive the job: the eval set is
+/// binned once with the training cuts and passed pre-binned, the same
+/// operations in the same order as the raw-eval path, so models are
+/// byte-identical.
+pub fn train_job_with_cuts(
+    prep: &Prepared,
+    cfg: &ForestTrainConfig,
+    t_idx: usize,
+    y: usize,
+    exec: &WorkerPool,
+) -> (Booster, BinCuts) {
     let t = prep.grid.ts[t_idx];
     let (s, e) = prep.class_ranges[y];
     let x0 = prep.x.row_slice(s, e);
@@ -340,16 +361,21 @@ pub fn train_job_in(
         None
     };
 
-    match &val {
-        Some((xtv, zv)) => Booster::train_with(
-            &xt.view(),
-            &z.view(),
-            cfg.params,
-            Some((&xtv.view(), &zv.view())),
-            exec,
-        ),
-        None => Booster::train_with(&xt.view(), &z.view(), cfg.params, None, exec),
-    }
+    let binned = BinnedMatrix::fit_bin_par(&xt.view(), cfg.params.max_bins, exec);
+    let booster = match &val {
+        Some((xtv, zv)) => {
+            let eb = BinnedMatrix::bin_par(&xtv.view(), &binned.cuts, exec);
+            Booster::train_binned_with_eval(
+                &binned,
+                &z.view(),
+                cfg.params,
+                Some((&eb, &zv.view())),
+                exec,
+            )
+        }
+        None => Booster::train_binned_with_eval(&binned, &z.view(), cfg.params, None, exec),
+    };
+    (booster, binned.cuts)
 }
 
 /// [`train_job_in`] driven off [`Prepared::materialize`]'s old-style
@@ -441,7 +467,8 @@ pub fn train_forest(
     for t_idx in 0..prep.grid.n_t() {
         for y_idx in 0..prep.label_counts.len() {
             let t0 = std::time::Instant::now();
-            let booster = train_job(&prep, cfg, t_idx, y_idx);
+            let exec = WorkerPool::new(cfg.params.intra_threads.max(1));
+            let (booster, cuts) = train_job_with_cuts(&prep, cfg, t_idx, y_idx, &exec);
             let rec = JobRecord {
                 t_idx,
                 y: y_idx,
@@ -453,7 +480,7 @@ pub fn train_forest(
                 nbytes: booster.nbytes(),
             };
             report.jobs.push(rec);
-            model.set_ensemble(t_idx, y_idx, booster);
+            model.set_ensemble_with_cuts(t_idx, y_idx, booster, cuts);
         }
     }
     report.total_seconds = t_start.elapsed().as_secs_f64();

@@ -1,0 +1,776 @@
+//! Unified packed-tree arena: one BFS builder + one traversal kernel for
+//! every compiled engine.
+//!
+//! Before this module, the repo carried three separate flattenings of the
+//! same trained booster — [`super::packed_native::NativeForest`] (f32
+//! thresholds), [`super::packed_binned::QuantForest`] (u8 split bins) and
+//! the XLA-oriented [`super::predict::PackedForest`] — sharing only the
+//! breadth-first renumbering. This module hoists everything they shared:
+//!
+//! * [`flatten`] is the **single arena builder**, generic over a
+//!   [`NodeCodec`] that maps tree nodes to a 16-byte packed payload
+//!   ([`FloatCodec`] → [`FloatNode`], [`BinCodec`] → [`BinNode`]; the XLA
+//!   `PackedForest` transcribes the float arena via
+//!   `PackedForest::from_compiled`, so its fixed-shape tensors are also a
+//!   product of this one builder rather than a third flattening).
+//! * [`run_tile`] is the **single traversal kernel**: the fixed-depth
+//!   branch-free walk, restructured into explicit SIMD row groups —
+//!   [`LANES`]-wide lane arrays (`f32x8`-style, stable Rust: fixed-size
+//!   arrays built with `std::array::from_fn`, which LLVM unrolls and
+//!   vectorizes) with a scalar tail for the ragged remainder. The walk is
+//!   already branch-free, so lanes never diverge on control flow; per-row
+//!   arithmetic and per-output accumulation order are exactly the scalar
+//!   kernel's, hence bit-identity ([`run_tile_scalar`] is kept as the
+//!   in-repo reference and bench baseline).
+//! * [`TileShape`] + [`tile_shape`] replace the hard-coded 64-row ×
+//!   16-tree blocking: at first use the autotuner probes a small shape grid
+//!   on a synthetic forest and caches the fastest `(block_rows, tree_tile)`
+//!   for this host. `CALOFOREST_TILE_SHAPE=ROWSxTILES` pins the shape for
+//!   reproducible runs; engines also expose `with_tile_shape` so tests pin
+//!   shapes without touching the environment. Correctness never depends on
+//!   the shape — per-element accumulation stays in global tree order for
+//!   any blocking — so the autotuner can only change speed.
+
+use super::binning::{BinCuts, MISSING_BIN};
+use super::tree::{Tree, TreeKind};
+use std::collections::VecDeque;
+use std::sync::OnceLock;
+
+/// Flags bit: missing values (NaN / [`MISSING_BIN`]) default to the left
+/// child.
+pub(crate) const FLAG_DEFAULT_LEFT: u8 = 0b01;
+/// Flags bit: this node is a leaf (self-looping; traversal never leaves it).
+pub(crate) const FLAG_LEAF: u8 = 0b10;
+
+/// Rows advanced together per SIMD group inside [`run_tile`] — eight
+/// f32/u8 lanes, the widest shape stable Rust can express portably while
+/// still mapping onto one AVX2 register (or two NEON registers).
+pub(crate) const LANES: usize = 8;
+
+/// Upper bound for [`TileShape::block_rows`]: the traversal keeps the
+/// per-block cursor array on the stack, so the block size must be bounded
+/// at compile time.
+pub const MAX_BLOCK_ROWS: usize = 512;
+
+/// Per-tree metadata in a compiled forest — shared by every engine built on
+/// the arena.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct PackedTree {
+    /// Arena index of the root node.
+    pub(crate) root: u32,
+    /// Iterations needed for any row to reach (and self-loop on) a leaf.
+    pub(crate) depth: u32,
+    /// Output written by this tree: `-1` writes all `m` outputs
+    /// ([`TreeKind::Multi`]), otherwise the single slot
+    /// ([`TreeKind::Single`]).
+    pub(crate) out_slot: i32,
+}
+
+/// One node of the float arena — exactly 16 bytes, interleaved so a single
+/// cache line holds four complete nodes.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct FloatNode {
+    /// Split feature (0 for leaves).
+    pub(crate) feature: u16,
+    /// [`FLAG_DEFAULT_LEFT`] | [`FLAG_LEAF`].
+    pub(crate) flags: u8,
+    pub(crate) _pad: u8,
+    /// Split threshold; `x < threshold` goes left (0 for leaves).
+    pub(crate) threshold: f32,
+    /// Arena index of the left child; the right child is `left + 1`
+    /// (breadth-first layout). Leaves store their own index (self-loop).
+    pub(crate) left: u32,
+    /// Leaves: start index of this leaf's `m` values in the values arena.
+    pub(crate) payload: u32,
+}
+
+const _: () = assert!(std::mem::size_of::<FloatNode>() == 16);
+
+/// One node of the quantized arena — 16 bytes like [`FloatNode`], with the
+/// float threshold replaced by the u8 split bin.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct BinNode {
+    /// Split feature (0 for leaves).
+    pub(crate) feature: u16,
+    /// [`FLAG_DEFAULT_LEFT`] | [`FLAG_LEAF`].
+    pub(crate) flags: u8,
+    /// Split bin: non-missing codes `<= bin` go left (0 for leaves).
+    pub(crate) bin: u8,
+    /// Arena index of the left child; the right child is `left + 1`.
+    /// Leaves store their own index (self-loop).
+    pub(crate) left: u32,
+    /// Leaves: start index of this leaf's `m` values in the values arena.
+    pub(crate) payload: u32,
+    pub(crate) _pad: u32,
+}
+
+const _: () = assert!(std::mem::size_of::<BinNode>() == 16);
+
+/// Node payload codec: how one engine encodes tree nodes into its 16-byte
+/// arena record and selects children during the branch-free walk.
+/// Implementations must keep [`child`](NodeCodec::child) branch-free (the
+/// leaf bit masks the step to 0), which is what lets [`run_tile`] run it in
+/// divergence-free SIMD lane groups.
+pub(crate) trait NodeCodec {
+    /// Packed node record (must be exactly 16 bytes).
+    type Node: Copy;
+    /// Per-(row, feature) input consumed by the walk (f32 features for the
+    /// float engine, u8 bin codes for the quantized one).
+    type Value: Copy;
+
+    /// Encode internal node `old` of `tree`; `left` is the arena index its
+    /// BFS-renumbered left child received (the right child is `left + 1`).
+    fn internal(&self, tree: &Tree, old: usize, left: u32) -> Self::Node;
+    /// Encode a leaf that self-loops at arena index `me` and stores its
+    /// values starting at `payload` in the values arena.
+    fn leaf(&self, me: u32, payload: u32) -> Self::Node;
+    /// Split feature of a node (0 for leaves).
+    fn feature(nd: &Self::Node) -> usize;
+    /// Values-arena offset of a leaf's values.
+    fn payload(nd: &Self::Node) -> u32;
+    /// Branch-free child select: next arena index for a row whose value on
+    /// `feature(nd)` is `v`. Leaves return their own index.
+    fn child(nd: &Self::Node, v: Self::Value) -> u32;
+}
+
+/// Codec for the float-threshold engine
+/// ([`super::packed_native::NativeForest`]).
+pub(crate) struct FloatCodec;
+
+impl NodeCodec for FloatCodec {
+    type Node = FloatNode;
+    type Value = f32;
+
+    #[inline]
+    fn internal(&self, tree: &Tree, old: usize, left: u32) -> FloatNode {
+        FloatNode {
+            feature: tree.feature[old] as u16,
+            flags: if tree.default_left[old] { FLAG_DEFAULT_LEFT } else { 0 },
+            _pad: 0,
+            threshold: tree.threshold[old],
+            left,
+            payload: 0,
+        }
+    }
+
+    #[inline]
+    fn leaf(&self, me: u32, payload: u32) -> FloatNode {
+        FloatNode {
+            feature: 0,
+            flags: FLAG_LEAF | FLAG_DEFAULT_LEFT,
+            _pad: 0,
+            threshold: 0.0,
+            left: me,
+            payload,
+        }
+    }
+
+    #[inline(always)]
+    fn feature(nd: &FloatNode) -> usize {
+        nd.feature as usize
+    }
+
+    #[inline(always)]
+    fn payload(nd: &FloatNode) -> u32 {
+        nd.payload
+    }
+
+    /// NaN compares false, so `go_left = lt | (nan & default_left)`
+    /// reproduces `Tree::leaf_for`'s NaN routing; the leaf bit masks the
+    /// step to 0 (self-loop).
+    #[inline(always)]
+    fn child(nd: &FloatNode, v: f32) -> u32 {
+        let lt = v < nd.threshold;
+        let nan = v.is_nan();
+        let default_left = nd.flags & FLAG_DEFAULT_LEFT != 0;
+        let go_left = lt | (nan & default_left);
+        let internal = u32::from(nd.flags & FLAG_LEAF == 0);
+        nd.left + (u32::from(!go_left) & internal)
+    }
+}
+
+/// Codec for the quantized bin-code engine
+/// ([`super::packed_binned::QuantForest`]): split thresholds are recovered
+/// as bins against the training cuts at compile time.
+pub(crate) struct BinCodec<'a> {
+    pub(crate) cuts: &'a BinCuts,
+}
+
+impl NodeCodec for BinCodec<'_> {
+    type Node = BinNode;
+    type Value = u8;
+
+    #[inline]
+    fn internal(&self, tree: &Tree, old: usize, left: u32) -> BinNode {
+        let f = tree.feature[old] as usize;
+        BinNode {
+            feature: tree.feature[old] as u16,
+            flags: if tree.default_left[old] { FLAG_DEFAULT_LEFT } else { 0 },
+            bin: self.cuts.bin_for_threshold(f, tree.threshold[old]),
+            left,
+            payload: 0,
+            _pad: 0,
+        }
+    }
+
+    #[inline]
+    fn leaf(&self, me: u32, payload: u32) -> BinNode {
+        BinNode {
+            feature: 0,
+            flags: FLAG_LEAF | FLAG_DEFAULT_LEFT,
+            bin: 0,
+            left: me,
+            payload,
+            _pad: 0,
+        }
+    }
+
+    #[inline(always)]
+    fn feature(nd: &BinNode) -> usize {
+        nd.feature as usize
+    }
+
+    #[inline(always)]
+    fn payload(nd: &BinNode) -> u32 {
+        nd.payload
+    }
+
+    /// [`MISSING_BIN`] routes by the default-left flag, everything else by
+    /// `code <= bin` (never true for `MISSING_BIN` itself: split bins are
+    /// real bins, < 255); the leaf bit masks the step to 0 (self-loop).
+    #[inline(always)]
+    fn child(nd: &BinNode, code: u8) -> u32 {
+        let le = code <= nd.bin;
+        let miss = code == MISSING_BIN;
+        let default_left = nd.flags & FLAG_DEFAULT_LEFT != 0;
+        let go_left = (le & !miss) | (miss & default_left);
+        let internal = u32::from(nd.flags & FLAG_LEAF == 0);
+        nd.left + (u32::from(!go_left) & internal)
+    }
+}
+
+/// Breadth-first renumbering of one tree's nodes starting at arena index
+/// `base`: children are enqueued consecutively, so siblings land adjacent in
+/// the returned visit order (`right == left + 1` after renumbering), which is
+/// what lets a packed node address both children with one `left` offset.
+/// Returns `(order, new_id)` where `order` lists old node ids in arena order
+/// and `new_id[old]` is the arena index assigned to `old`.
+pub(crate) fn bfs_layout(tree: &Tree, base: u32) -> (Vec<usize>, Vec<u32>) {
+    let n_nodes = tree.n_nodes();
+    let mut order = Vec::with_capacity(n_nodes);
+    let mut new_id = vec![u32::MAX; n_nodes];
+    let mut queue = VecDeque::with_capacity(n_nodes);
+    queue.push_back(0usize);
+    while let Some(old) = queue.pop_front() {
+        new_id[old] = base + order.len() as u32;
+        order.push(old);
+        if !tree.is_leaf(old) {
+            queue.push_back(tree.left[old] as usize);
+            queue.push_back(tree.right[old] as usize);
+        }
+    }
+    debug_assert_eq!(order.len(), n_nodes, "tree has unreachable nodes");
+    (order, new_id)
+}
+
+/// A flattened ensemble: contiguous breadth-first node arena + leaf-value
+/// arena + per-tree metadata. The node payload type is whatever the codec
+/// produced; everything else is engine-independent.
+#[derive(Clone, Debug)]
+pub(crate) struct Arena<N> {
+    pub(crate) nodes: Vec<N>,
+    pub(crate) values: Vec<f32>,
+    pub(crate) trees: Vec<PackedTree>,
+}
+
+impl<N> Arena<N> {
+    pub(crate) fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    pub(crate) fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Number of nodes belonging to tree `ti` (trees are stored
+    /// contiguously in tree order, so this is the gap to the next root).
+    pub(crate) fn tree_node_count(&self, ti: usize) -> usize {
+        let start = self.trees[ti].root as usize;
+        let end = match self.trees.get(ti + 1) {
+            Some(next) => next.root as usize,
+            None => self.nodes.len(),
+        };
+        end - start
+    }
+
+    /// Logical size in bytes (model-store accounting).
+    pub(crate) fn nbytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<N>()
+            + self.values.len() * 4
+            + self.trees.len() * std::mem::size_of::<PackedTree>()
+    }
+}
+
+/// The single arena builder every compiled engine goes through: flatten a
+/// tree slice breadth-first with `codec` deciding the node payload. In
+/// [`TreeKind::Single`] mode tree `i` writes output `i % m` — correct both
+/// for a whole round-major ensemble and for one round's `m`-tree group.
+/// Tree order (and therefore accumulation order) is preserved exactly.
+pub(crate) fn flatten<C: NodeCodec>(
+    codec: &C,
+    trees: &[Tree],
+    kind: TreeKind,
+    m: usize,
+) -> Arena<C::Node> {
+    let total_nodes: usize = trees.iter().map(|t| t.n_nodes()).sum();
+    assert!(total_nodes <= u32::MAX as usize, "node arena index overflow");
+    let mut arena = Arena {
+        nodes: Vec::with_capacity(total_nodes),
+        values: Vec::new(),
+        trees: Vec::with_capacity(trees.len()),
+    };
+    for (ti, tree) in trees.iter().enumerate() {
+        let out_slot = match kind {
+            TreeKind::Multi => -1,
+            TreeKind::Single => (ti % m) as i32,
+        };
+        let base = arena.nodes.len() as u32;
+        // Shared breadth-first renumbering (see [`bfs_layout`]): siblings
+        // land adjacent, so `right == left + 1` holds.
+        let (order, new_id) = bfs_layout(tree, base);
+        for &old in &order {
+            let me = new_id[old];
+            if tree.is_leaf(old) {
+                let payload = arena.values.len() as u32;
+                arena
+                    .values
+                    .extend_from_slice(&tree.values[old * tree.m..(old + 1) * tree.m]);
+                arena.nodes.push(codec.leaf(me, payload));
+            } else {
+                let left = new_id[tree.left[old] as usize];
+                debug_assert_eq!(
+                    new_id[tree.right[old] as usize],
+                    left + 1,
+                    "BFS siblings must be adjacent"
+                );
+                arena.nodes.push(codec.internal(tree, old, left));
+            }
+        }
+        arena.trees.push(PackedTree {
+            root: base,
+            depth: tree.max_depth() as u32,
+            out_slot,
+        });
+    }
+    assert!(arena.values.len() <= u32::MAX as usize, "leaf-value arena index overflow");
+    arena
+}
+
+/// Add one tree's η-scaled leaf values into the output block, in the same
+/// per-element order as the scalar reference walkers.
+#[inline]
+fn accumulate_leaves<C: NodeCodec>(
+    arena: &Arena<C::Node>,
+    eta: f32,
+    m: usize,
+    pt: PackedTree,
+    idx: &[u32],
+    ob: &mut [f32],
+) {
+    match pt.out_slot {
+        -1 => {
+            for (node, o) in idx.iter().zip(ob.chunks_mut(m)) {
+                let at = C::payload(&arena.nodes[*node as usize]) as usize;
+                let vals = &arena.values[at..at + m];
+                for (oj, &vj) in o.iter_mut().zip(vals) {
+                    *oj += eta * vj;
+                }
+            }
+        }
+        j => {
+            let j = j as usize;
+            for (node, o) in idx.iter().zip(ob.chunks_mut(m)) {
+                let at = C::payload(&arena.nodes[*node as usize]) as usize;
+                o[j] += eta * arena.values[at];
+            }
+        }
+    }
+}
+
+/// Run one tree tile over one row block, accumulating η-scaled leaf values
+/// into `ob` (`rows × m`, rows ≤ [`MAX_BLOCK_ROWS`]). `fetch(i, f)` returns
+/// row `i`'s value on feature `f` (the float engine reads a row-major
+/// feature block, the quantized engine column-major bin codes).
+///
+/// The fixed-depth walk runs in explicit SIMD row groups: [`LANES`] cursors
+/// advance together through fixed-size lane arrays (`std::array::from_fn`
+/// compiles to straight-line code LLVM vectorizes), then a scalar tail
+/// finishes `rows % LANES`. Leaves self-loop and the child select is
+/// branch-free, so lanes never diverge; each row's arithmetic is exactly
+/// the scalar kernel's, so output is bit-identical to [`run_tile_scalar`].
+#[inline]
+pub(crate) fn run_tile<C, F>(
+    arena: &Arena<C::Node>,
+    eta: f32,
+    m: usize,
+    tile: std::ops::Range<usize>,
+    fetch: F,
+    ob: &mut [f32],
+) where
+    C: NodeCodec,
+    F: Fn(usize, usize) -> C::Value,
+{
+    let rows = ob.len() / m;
+    debug_assert!(rows <= MAX_BLOCK_ROWS);
+    debug_assert_eq!(ob.len(), rows * m);
+    let nodes = &arena.nodes[..];
+    let mut idx = [0u32; MAX_BLOCK_ROWS];
+    let full = rows - rows % LANES;
+    for t in tile {
+        let pt = arena.trees[t];
+        idx[..rows].fill(pt.root);
+        for _ in 0..pt.depth {
+            let mut g0 = 0;
+            while g0 < full {
+                let nd: [C::Node; LANES] = std::array::from_fn(|l| nodes[idx[g0 + l] as usize]);
+                let v: [C::Value; LANES] =
+                    std::array::from_fn(|l| fetch(g0 + l, C::feature(&nd[l])));
+                for l in 0..LANES {
+                    idx[g0 + l] = C::child(&nd[l], v[l]);
+                }
+                g0 += LANES;
+            }
+            for i in full..rows {
+                let nd = nodes[idx[i] as usize];
+                idx[i] = C::child(&nd, fetch(i, C::feature(&nd)));
+            }
+        }
+        accumulate_leaves::<C>(arena, eta, m, pt, &idx[..rows], ob);
+    }
+}
+
+/// Scalar (one row at a time) variant of [`run_tile`]: the pre-lane kernel,
+/// kept as the in-repo reference the SIMD groups must match bit-for-bit and
+/// as the baseline for the `lanes-vs-scalar` bench rows.
+#[inline]
+pub(crate) fn run_tile_scalar<C, F>(
+    arena: &Arena<C::Node>,
+    eta: f32,
+    m: usize,
+    tile: std::ops::Range<usize>,
+    fetch: F,
+    ob: &mut [f32],
+) where
+    C: NodeCodec,
+    F: Fn(usize, usize) -> C::Value,
+{
+    let rows = ob.len() / m;
+    debug_assert!(rows <= MAX_BLOCK_ROWS);
+    debug_assert_eq!(ob.len(), rows * m);
+    let nodes = &arena.nodes[..];
+    let mut idx = [0u32; MAX_BLOCK_ROWS];
+    for t in tile {
+        let pt = arena.trees[t];
+        idx[..rows].fill(pt.root);
+        for _ in 0..pt.depth {
+            for (i, node) in idx[..rows].iter_mut().enumerate() {
+                let nd = nodes[*node as usize];
+                *node = C::child(&nd, fetch(i, C::feature(&nd)));
+            }
+        }
+        accumulate_leaves::<C>(arena, eta, m, pt, &idx[..rows], ob);
+    }
+}
+
+/// Blocking shape for arena traversal: `block_rows` rows are kept hot in L1
+/// while a `tree_tile`-tree tile's node records stream through L1/L2.
+/// Correctness is shape-independent (per-element accumulation stays in
+/// global tree order for any blocking); the shape only moves throughput.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileShape {
+    /// Rows traversed together per (tile, block) kernel call
+    /// (1 ..= [`MAX_BLOCK_ROWS`]).
+    pub block_rows: usize,
+    /// Trees per tile; a tile's node records (≤ `tree_tile · 2^(depth+1) ·
+    /// 16` bytes) stay hot while every row block streams through it.
+    pub tree_tile: usize,
+}
+
+impl TileShape {
+    /// The pre-autotuner hard-coded shape (64 rows × 16 trees) — the
+    /// baseline the `autotuned-vs-default` bench row compares against, and
+    /// the fallback when probing is impossible.
+    pub const DEFAULT: TileShape = TileShape { block_rows: 64, tree_tile: 16 };
+
+    /// Build a shape, clamping into the valid domain
+    /// (`1 ..= MAX_BLOCK_ROWS` rows, ≥ 1 trees).
+    pub fn new(block_rows: usize, tree_tile: usize) -> TileShape {
+        TileShape {
+            block_rows: block_rows.clamp(1, MAX_BLOCK_ROWS),
+            tree_tile: tree_tile.max(1),
+        }
+    }
+
+    /// Parse a `ROWSxTILES` spec (e.g. `"64x16"`, case-insensitive `x`).
+    /// Returns `None` for anything malformed or out of domain.
+    pub fn parse(s: &str) -> Option<TileShape> {
+        let s = s.trim();
+        let (r, t) = s.split_once('x').or_else(|| s.split_once('X'))?;
+        let block_rows: usize = r.trim().parse().ok()?;
+        let tree_tile: usize = t.trim().parse().ok()?;
+        if block_rows == 0 || block_rows > MAX_BLOCK_ROWS || tree_tile == 0 {
+            return None;
+        }
+        Some(TileShape { block_rows, tree_tile })
+    }
+}
+
+impl std::fmt::Display for TileShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.block_rows, self.tree_tile)
+    }
+}
+
+/// The host's tile shape, resolved once per process and cached:
+/// `CALOFOREST_TILE_SHAPE=ROWSxTILES` pins it (reproducible runs, CI parity
+/// legs); otherwise [`autotune`] probes a small grid on a synthetic forest
+/// and the fastest shape wins. Engines capture this at compile time and can
+/// be re-pinned afterwards via their `with_tile_shape` builders.
+pub fn tile_shape() -> TileShape {
+    static CACHE: OnceLock<TileShape> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if let Ok(spec) = std::env::var("CALOFOREST_TILE_SHAPE") {
+            if let Some(shape) = TileShape::parse(&spec) {
+                return shape;
+            }
+        }
+        autotune()
+    })
+}
+
+/// Shape grid probed by [`autotune`]: every combination of these row-block
+/// and tree-tile sizes (the hard-coded [`TileShape::DEFAULT`] is a grid
+/// point, so the tuner can only match or beat it on the probe).
+pub const AUTOTUNE_ROW_GRID: [usize; 4] = [32, 64, 128, 256];
+/// Tree-tile candidates probed by [`autotune`].
+pub const AUTOTUNE_TILE_GRID: [usize; 3] = [8, 16, 32];
+
+/// Probe the shape grid on a synthetic forest and return the fastest
+/// `(block_rows, tree_tile)` for this host. The probe is deterministic in
+/// everything but wall-clock: a fixed hand-built forest and a fixed
+/// pseudo-random input, one timed pass per candidate after a warm-up pass.
+/// Ties (and the empty grid) fall back to earlier candidates /
+/// [`TileShape::DEFAULT`], so the result is always a valid shape.
+pub fn autotune() -> TileShape {
+    let trees: Vec<Tree> = (0..48).map(|salt| synthetic_tree(6, 16, salt)).collect();
+    let arena = flatten(&FloatCodec, &trees, TreeKind::Single, 1);
+    let p = 16usize;
+    let n = 1024usize;
+    let x = synthetic_rows(n, p);
+    let mut out = vec![0.0f32; n];
+    // Warm-up: fault in the arena and input before any candidate is timed.
+    probe_pass(&arena, TileShape::DEFAULT, &x, p, n, &mut out);
+    let mut best = TileShape::DEFAULT;
+    let mut best_secs = f64::INFINITY;
+    for &block_rows in AUTOTUNE_ROW_GRID.iter() {
+        for &tree_tile in AUTOTUNE_TILE_GRID.iter() {
+            let shape = TileShape { block_rows, tree_tile };
+            let t0 = std::time::Instant::now();
+            probe_pass(&arena, shape, &x, p, n, &mut out);
+            let secs = t0.elapsed().as_secs_f64();
+            if secs < best_secs {
+                best = shape;
+                best_secs = secs;
+            }
+        }
+    }
+    std::hint::black_box(&out);
+    best
+}
+
+/// One blocked traversal of the whole probe batch at `shape`.
+fn probe_pass(
+    arena: &Arena<FloatNode>,
+    shape: TileShape,
+    x: &[f32],
+    p: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    out.fill(0.0);
+    let mut tile_start = 0;
+    while tile_start < arena.n_trees() {
+        let tile = tile_start..(tile_start + shape.tree_tile).min(arena.n_trees());
+        let mut r0 = 0;
+        while r0 < n {
+            let rows = shape.block_rows.min(n - r0);
+            let xb = &x[r0 * p..(r0 + rows) * p];
+            run_tile::<FloatCodec, _>(
+                arena,
+                0.1,
+                1,
+                tile.clone(),
+                |i, f| xb[i * p + f],
+                &mut out[r0..r0 + rows],
+            );
+            r0 += rows;
+        }
+        tile_start = tile.end;
+    }
+}
+
+/// Complete binary tree of the given depth with deterministic splits —
+/// the autotuner's stand-in for a trained booster.
+fn synthetic_tree(depth: usize, p: usize, salt: usize) -> Tree {
+    let n_internal = (1usize << depth) - 1;
+    let n_nodes = (1usize << (depth + 1)) - 1;
+    let mut t = Tree {
+        m: 1,
+        feature: Vec::with_capacity(n_nodes),
+        threshold: Vec::with_capacity(n_nodes),
+        left: Vec::with_capacity(n_nodes),
+        right: Vec::with_capacity(n_nodes),
+        default_left: Vec::with_capacity(n_nodes),
+        values: Vec::with_capacity(n_nodes),
+    };
+    for id in 0..n_nodes {
+        if id < n_internal {
+            t.feature.push(((id * 7 + salt) % p) as u32);
+            t.threshold
+                .push(((id * 31 + salt * 17) % 257) as f32 / 128.0 - 1.0);
+            t.left.push((2 * id + 1) as i32);
+            t.right.push((2 * id + 2) as i32);
+            t.default_left.push(id % 2 == 0);
+            t.values.push(0.0);
+        } else {
+            t.feature.push(0);
+            t.threshold.push(0.0);
+            t.left.push(-1);
+            t.right.push(-1);
+            t.default_left.push(true);
+            t.values.push(((id + salt) % 13) as f32 - 6.0);
+        }
+    }
+    t
+}
+
+/// Deterministic pseudo-random probe rows in roughly `[-2, 2)` (splitmix-
+/// style integer mixing; no RNG dependency so the probe is reproducible).
+fn synthetic_rows(n: usize, p: usize) -> Vec<f32> {
+    let mut s: u64 = 0x9E37_79B9_7F4A_7C15;
+    (0..n * p)
+        .map(|_| {
+            s = s
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            ((s >> 40) as f32) / (1u64 << 24) as f32 * 4.0 - 2.0
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        assert_eq!(TileShape::parse("64x16"), Some(TileShape::DEFAULT));
+        assert_eq!(
+            TileShape::parse(" 128X8 "),
+            Some(TileShape { block_rows: 128, tree_tile: 8 })
+        );
+        for bad in ["", "64", "x16", "64x", "0x16", "64x0", "9999x16", "ax b"] {
+            assert_eq!(TileShape::parse(bad), None, "accepted {bad:?}");
+        }
+        let s = TileShape { block_rows: 127, tree_tile: 5 };
+        assert_eq!(TileShape::parse(&s.to_string()), Some(s));
+    }
+
+    #[test]
+    fn new_clamps_into_domain() {
+        assert_eq!(
+            TileShape::new(0, 0),
+            TileShape { block_rows: 1, tree_tile: 1 }
+        );
+        assert_eq!(
+            TileShape::new(1 << 20, 7),
+            TileShape { block_rows: MAX_BLOCK_ROWS, tree_tile: 7 }
+        );
+    }
+
+    #[test]
+    fn autotune_returns_a_grid_shape() {
+        let shape = autotune();
+        assert!(AUTOTUNE_ROW_GRID.contains(&shape.block_rows), "{shape}");
+        assert!(AUTOTUNE_TILE_GRID.contains(&shape.tree_tile), "{shape}");
+        assert!(shape.block_rows <= MAX_BLOCK_ROWS);
+    }
+
+    #[test]
+    fn flatten_preserves_structure_invariants() {
+        let trees: Vec<Tree> = (0..5).map(|salt| synthetic_tree(4, 8, salt)).collect();
+        let arena = flatten(&FloatCodec, &trees, TreeKind::Single, 2);
+        assert_eq!(arena.n_trees(), 5);
+        let total: usize = trees.iter().map(|t| t.n_nodes()).sum();
+        assert_eq!(arena.n_nodes(), total);
+        for ti in 0..arena.n_trees() {
+            assert_eq!(arena.tree_node_count(ti), trees[ti].n_nodes());
+            assert_eq!(arena.trees[ti].out_slot, (ti % 2) as i32);
+            let root = arena.trees[ti].root as usize;
+            let end = root + arena.tree_node_count(ti);
+            for (at, nd) in arena.nodes[root..end].iter().enumerate() {
+                let me = (root + at) as u32;
+                if nd.flags & FLAG_LEAF != 0 {
+                    assert_eq!(nd.left, me, "leaf must self-loop");
+                } else {
+                    // Both children are inside this tree's span and after
+                    // the parent (BFS order).
+                    assert!(nd.left > me && (nd.left as usize) + 1 < end);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn laned_walk_is_bit_identical_to_scalar_walk() {
+        // Ragged row counts force both the lane groups and the scalar tail;
+        // NaNs exercise the default-direction mask inside lanes.
+        let trees: Vec<Tree> = (0..7).map(|salt| synthetic_tree(5, 6, salt)).collect();
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let m = 1; // synthetic trees are single-output
+            let arena = flatten(&FloatCodec, &trees, kind, m);
+            let p = 6usize;
+            for rows in [1usize, 7, 8, 9, 63, 64, 65, 200] {
+                let mut x = synthetic_rows(rows, p);
+                for (i, v) in x.iter_mut().enumerate() {
+                    if i % 11 == 0 {
+                        *v = f32::NAN;
+                    }
+                }
+                let mut laned = vec![0.0f32; rows * m];
+                let mut scalar = vec![0.0f32; rows * m];
+                run_tile::<FloatCodec, _>(
+                    &arena,
+                    0.3,
+                    m,
+                    0..arena.n_trees(),
+                    |i, f| x[i * p + f],
+                    &mut laned,
+                );
+                run_tile_scalar::<FloatCodec, _>(
+                    &arena,
+                    0.3,
+                    m,
+                    0..arena.n_trees(),
+                    |i, f| x[i * p + f],
+                    &mut scalar,
+                );
+                let lb: Vec<u32> = laned.iter().map(|v| v.to_bits()).collect();
+                let sb: Vec<u32> = scalar.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(lb, sb, "{kind:?} rows={rows}");
+            }
+        }
+    }
+}

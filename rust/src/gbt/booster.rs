@@ -164,12 +164,43 @@ impl Booster {
     }
 
     /// [`train_binned`](Self::train_binned) on an existing persistent
-    /// worker pool.
+    /// worker pool. Bins the eval features once with the training cuts and
+    /// delegates to [`train_binned_with_eval`](Self::train_binned_with_eval)
+    /// — callers that train many boosters on the same eval set (the grid
+    /// coordinator) bin it themselves and reuse the codes across jobs.
     pub fn train_binned_with(
         binned: &BinnedMatrix,
         targets: &MatrixView<'_>,
         params: TrainParams,
         eval: Option<(&MatrixView<'_>, &MatrixView<'_>)>,
+        exec: &WorkerPool,
+    ) -> Booster {
+        // Eval rows binned once with the training cuts so the per-round
+        // prediction update runs on the quantized engine. Split thresholds
+        // are bin upper edges, so code routing reproduces float routing
+        // exactly — including beyond-range rows clamped to the last bin
+        // (split bins are always below it, so clamped codes route right,
+        // like their float values) and NaNs (MISSING_BIN follows the same
+        // learned default directions).
+        let eval_binned =
+            eval.map(|(xv, tv)| (BinnedMatrix::bin_par(xv, &binned.cuts, exec), tv));
+        let eval_ref = eval_binned.as_ref().map(|(eb, tv)| (eb, *tv));
+        Booster::train_binned_with_eval(binned, targets, params, eval_ref, exec)
+    }
+
+    /// The boosting loop over a pre-binned training matrix and an optional
+    /// *pre-binned* evaluation set: `eval` pairs the eval features' bin
+    /// codes with the raw eval targets. The codes **must** come from
+    /// `binned.cuts` — compile-time split-bin recovery assumes the shared
+    /// cut set. Models are byte-identical to
+    /// [`train_binned_with`](Self::train_binned_with) on the raw eval rows;
+    /// the grid coordinator uses this to bin the eval set once and reuse
+    /// the codes across every job with the same inputs.
+    pub fn train_binned_with_eval(
+        binned: &BinnedMatrix,
+        targets: &MatrixView<'_>,
+        params: TrainParams,
+        eval: Option<(&BinnedMatrix, &MatrixView<'_>)>,
         exec: &WorkerPool,
     ) -> Booster {
         let n = binned.n;
@@ -205,10 +236,13 @@ impl Booster {
         let targets_flat: Vec<f32> = (0..n).flat_map(|r| targets.row(r).to_vec()).collect();
 
         // Validation predictions evolve incrementally as trees are added.
-        let eval_state = eval.map(|(xv, tv)| {
+        let eval_state = eval.map(|(eb, tv)| {
             assert_eq!(tv.cols, m);
-            let mut ep = Vec::with_capacity(xv.rows * m);
-            for _ in 0..xv.rows {
+            assert_eq!(eb.n, tv.rows, "eval codes/targets row mismatch");
+            assert_eq!(eb.p, binned.p, "eval codes/features column mismatch");
+            debug_assert_eq!(eb.cuts, binned.cuts, "eval codes must use the training cuts");
+            let mut ep = Vec::with_capacity(eb.n * m);
+            for _ in 0..eb.n {
                 ep.extend_from_slice(&base_score);
             }
             let tflat: Vec<f32> = (0..tv.rows).flat_map(|r| tv.row(r).to_vec()).collect();
@@ -246,15 +280,6 @@ impl Booster {
             Some((p, t)) => (Some(p), Some(t)),
             None => (None, None),
         };
-        // Eval rows binned once with the training cuts so the per-round
-        // prediction update runs on the quantized engine. Split thresholds
-        // are bin upper edges, so code routing reproduces float routing
-        // exactly — including beyond-range rows clamped to the last bin
-        // (split bins are always below it, so clamped codes route right,
-        // like their float values) and NaNs (MISSING_BIN follows the same
-        // learned default directions).
-        let eval_binned = eval.map(|(xv, _)| BinnedMatrix::bin_par(xv, &binned.cuts, exec));
-
         for round in 0..params.n_trees {
             // Per-row gradients in fixed chunks on the pool (disjoint
             // elementwise writes: bit-identical for any worker count).
@@ -305,7 +330,7 @@ impl Booster {
                 &binned.cuts,
             );
             qf.accumulate_pooled(binned, &mut preds, exec);
-            if let (Some(ep), Some(eb)) = (eval_preds.as_mut(), eval_binned.as_ref()) {
+            if let (Some(ep), Some((eb, _))) = (eval_preds.as_mut(), eval) {
                 qf.accumulate_pooled(eb, ep, exec);
             }
 
@@ -702,6 +727,67 @@ mod tests {
             }
         }
         assert!(correct as f64 / n as f64 > 0.85, "accuracy {}", correct as f64 / n as f64);
+    }
+
+    #[test]
+    fn prebinned_eval_set_trains_byte_identical_models() {
+        // The grid coordinator bins the eval set once and reuses the codes
+        // across jobs; that path must reproduce the raw-eval path exactly,
+        // early stopping included.
+        let mut rng = Rng::new(17);
+        let n = 500;
+        let x = Matrix::randn(n, 4, &mut rng);
+        let mut y = Matrix::zeros(n, 2);
+        for r in 0..n {
+            y.set(r, 0, x.at(r, 0) - x.at(r, 2));
+            y.set(r, 1, (x.at(r, 1) + x.at(r, 3)).sin());
+        }
+        let xv = Matrix::randn(120, 4, &mut rng);
+        let mut yv = Matrix::zeros(120, 2);
+        for r in 0..120 {
+            yv.set(r, 0, xv.at(r, 0) - xv.at(r, 2));
+            yv.set(r, 1, (xv.at(r, 1) + xv.at(r, 3)).sin());
+        }
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let params = TrainParams {
+                n_trees: 25,
+                max_depth: 4,
+                kind,
+                early_stopping_rounds: 3,
+                ..Default::default()
+            };
+            let exec = WorkerPool::new(2);
+            let binned = BinnedMatrix::fit_bin_par(&x.view(), params.max_bins, &exec);
+            let raw = Booster::train_binned_with(
+                &binned,
+                &y.view(),
+                params,
+                Some((&xv.view(), &yv.view())),
+                &exec,
+            );
+            let eb = BinnedMatrix::bin_par(&xv.view(), &binned.cuts, &exec);
+            let pre = Booster::train_binned_with_eval(
+                &binned,
+                &y.view(),
+                params,
+                Some((&eb, &yv.view())),
+                &exec,
+            );
+            assert_eq!(raw.trees, pre.trees, "{kind:?}: trees diverge");
+            assert_eq!(raw.base_score, pre.base_score);
+            assert_eq!(raw.best_round, pre.best_round, "{kind:?}: early stopping diverges");
+            let lr: Vec<(u64, Option<u64>)> = raw
+                .history
+                .iter()
+                .map(|h| (h.train_loss.to_bits(), h.valid_loss.map(f64::to_bits)))
+                .collect();
+            let lp: Vec<(u64, Option<u64>)> = pre
+                .history
+                .iter()
+                .map(|h| (h.train_loss.to_bits(), h.valid_loss.map(f64::to_bits)))
+                .collect();
+            assert_eq!(lr, lp, "{kind:?}: loss history diverges");
+        }
     }
 
     #[test]

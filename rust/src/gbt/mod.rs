@@ -15,16 +15,19 @@
 //!   early stopping, squared-error and logistic objectives ([`booster`],
 //!   [`objective`]);
 //! * a batched, allocation-free prediction path ([`predict`]) plus the
-//!   blocked native inference engine ([`packed_native`]): ensembles are
+//!   unified packed-tree arena ([`arena`]): **one** generic BFS builder and
+//!   **one** SIMD-lane fixed-depth traversal kernel behind every compiled
+//!   engine, with a host-autotuned row-block × tree-tile blocking shape
+//!   ([`arena::tile_shape`], pin with `CALOFOREST_TILE_SHAPE`);
+//! * the blocked native inference engine ([`packed_native`]): ensembles are
 //!   compiled post-training into a contiguous arena of 16-byte
-//!   breadth-first node records and traversed row-block × tree-tile with
-//!   branch-free child selection — bit-identical to [`predict`] and the
-//!   default sampling backend;
+//!   breadth-first float-threshold records — bit-identical to [`predict`]
+//!   and the default sampling backend;
 //! * the quantized bin-code training predictor ([`packed_binned`]): the
-//!   same 16-byte arena with `u8` split bins instead of float thresholds,
-//!   traversed directly over [`BinnedMatrix`] codes — the boosting loop's
-//!   per-round train/eval prediction updates run on it, bit-identical to
-//!   the float reference walkers;
+//!   same arena with `u8` split bins instead of float thresholds, traversed
+//!   directly over [`BinnedMatrix`] codes — the boosting loop's per-round
+//!   train/eval prediction updates and the sampler's quantized first step
+//!   run on it, bit-identical to the float reference walkers;
 //! * a compact binary model format with save/load for the streaming model
 //!   store — the stand-in for XGBoost's UBJ ([`serialize`]);
 //! * a multi-pass *data iterator* for out-of-core quantile construction,
@@ -32,6 +35,7 @@
 //!   multiple-consumption semantics that the paper's Appendix B.3 analyses
 //!   ([`binning::BatchIterator`]).
 
+pub mod arena;
 pub mod binning;
 pub mod histogram;
 pub mod split;
@@ -43,6 +47,7 @@ pub mod packed_native;
 pub mod predict;
 pub mod serialize;
 
+pub use arena::{tile_shape, TileShape};
 pub use binning::{BinCuts, BinnedMatrix, BatchIterator, MISSING_BIN};
 pub use booster::{Booster, EvalRecord, TrainParams};
 pub use packed_binned::QuantForest;

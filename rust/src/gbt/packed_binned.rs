@@ -9,55 +9,32 @@
 //!   upper edge exceeds `x`, and cuts are strictly ascending, so
 //!   `code <= b ⟺ x < cuts[b]`;
 //! * codes clamped to the last bin (values at or beyond every cut — possible
-//!   only for *unseen* rows, e.g. an eval set): the split search
-//!   ([`super::split::best_split`]) only proposes bins `< n_bins − 1`, so a
-//!   clamped code routes right, exactly like its float value;
-//! * missing ([`MISSING_BIN`]): routed by the learned default direction,
-//!   same as NaN on the float path.
+//!   only for *unseen* rows, e.g. an eval set or a sampler batch): the split
+//!   search ([`super::split::best_split`]) only proposes bins `< n_bins − 1`,
+//!   so a clamped code routes right, exactly like its float value;
+//! * missing ([`MISSING_BIN`](super::binning::MISSING_BIN)): routed by the
+//!   learned default direction, same as NaN on the float path.
 //!
 //! The reference training-update walkers pay for that equivalence per row:
 //! [`super::booster::leaf_for_binned`] re-derives each visited node's split
 //! bin with a binary search over the cuts, and the eval-set walker re-reads
 //! raw `f32` features. [`QuantForest`] hoists the bin recovery to compile
-//! time: trees are flattened into the same contiguous 16-byte breadth-first
-//! arena as [`NativeForest`](super::packed_native::NativeForest) (one shared
-//! flattening, [`bfs_layout`]), with the `f32` threshold replaced by the
-//! `u8` split bin, and traversal runs row-block × tree-tile directly over
+//! time: trees are flattened by the **same arena builder** as
+//! [`NativeForest`](super::packed_native::NativeForest)
+//! ([`super::arena::flatten`], here with [`super::arena::BinCodec`]), with
+//! the `f32` threshold replaced by the `u8` split bin, and traversal runs
+//! the shared SIMD-lane walk ([`super::arena::run_tile`]) directly over
 //! [`BinnedMatrix`] codes — one-byte feature reads, no float compares, no
 //! per-node searches, and the same branch-free child selection. Per output
 //! element, contributions accumulate in exact tree order, so predictions
-//! are **bit-identical** to the float path for both [`TreeKind`]s and any
-//! worker count.
+//! are **bit-identical** to the float path for both [`TreeKind`]s, any
+//! worker count, and any blocking shape ([`super::arena::tile_shape`]).
 
-use super::binning::{BinCuts, BinnedMatrix, MISSING_BIN};
+use super::arena::{self, Arena, BinCodec, BinNode, TileShape};
+use super::binning::{BinCuts, BinnedMatrix};
 use super::booster::{Booster, UPDATE_BLOCK_ROWS};
-use super::packed_native::{
-    bfs_layout, FLAG_DEFAULT_LEFT, FLAG_LEAF, PackedTree, ROW_BLOCK, TREE_TILE,
-};
 use super::tree::{Tree, TreeKind};
 use crate::coordinator::pool::WorkerPool;
-
-/// One node of the quantized arena — 16 bytes like
-/// [`super::packed_native::PackedNode`](super::packed_native), with the
-/// float threshold replaced by the split bin.
-#[repr(C)]
-#[derive(Clone, Copy, Debug)]
-struct QuantNode {
-    /// Split feature (0 for leaves).
-    feature: u16,
-    /// [`FLAG_DEFAULT_LEFT`] | [`FLAG_LEAF`].
-    flags: u8,
-    /// Split bin: non-missing codes `<= bin` go left (0 for leaves).
-    bin: u8,
-    /// Arena index of the left child; the right child is `left + 1`
-    /// (breadth-first layout). Leaves store their own index (self-loop).
-    left: u32,
-    /// Leaves: start index of this leaf's `m` values in the values arena.
-    payload: u32,
-    _pad: u32,
-}
-
-const _: () = assert!(std::mem::size_of::<QuantNode>() == 16);
 
 /// A compiled bin-code ensemble: contiguous breadth-first node arena +
 /// leaf-value arena + per-tree metadata, traversed over [`BinnedMatrix`]
@@ -71,9 +48,8 @@ pub struct QuantForest {
     pub n_features: usize,
     pub eta: f32,
     pub base_score: Vec<f32>,
-    nodes: Vec<QuantNode>,
-    values: Vec<f32>,
-    trees: Vec<PackedTree>,
+    pub(crate) arena: Arena<BinNode>,
+    shape: TileShape,
 }
 
 impl QuantForest {
@@ -92,7 +68,8 @@ impl QuantForest {
         )
     }
 
-    /// Flatten a tree slice into the quantized arena. In
+    /// Flatten a tree slice into the quantized arena through the shared
+    /// builder ([`arena::flatten`] with [`BinCodec`]). In
     /// [`TreeKind::Single`] mode tree `i` writes output `i % m` — correct
     /// both for a whole round-major ensemble and for one round's `m`-tree
     /// group. Tree order (and therefore accumulation order) is preserved
@@ -110,141 +87,40 @@ impl QuantForest {
             n_features <= u16::MAX as usize + 1,
             "packed node stores features as u16"
         );
-        let total_nodes: usize = trees.iter().map(|t| t.n_nodes()).sum();
-        assert!(total_nodes <= u32::MAX as usize, "node arena index overflow");
-        let mut qf = QuantForest {
+        QuantForest {
             m,
             n_features,
             eta,
             base_score,
-            nodes: Vec::with_capacity(total_nodes),
-            values: Vec::new(),
-            trees: Vec::with_capacity(trees.len()),
-        };
-        for (ti, tree) in trees.iter().enumerate() {
-            let out_slot = match kind {
-                TreeKind::Multi => -1,
-                TreeKind::Single => (ti % m) as i32,
-            };
-            let base = qf.nodes.len() as u32;
-            let (order, new_id) = bfs_layout(tree, base);
-            for &old in &order {
-                let me = new_id[old];
-                if tree.is_leaf(old) {
-                    let payload = qf.values.len() as u32;
-                    qf.values
-                        .extend_from_slice(&tree.values[old * tree.m..(old + 1) * tree.m]);
-                    qf.nodes.push(QuantNode {
-                        feature: 0,
-                        flags: FLAG_LEAF | FLAG_DEFAULT_LEFT,
-                        bin: 0,
-                        left: me,
-                        payload,
-                        _pad: 0,
-                    });
-                } else {
-                    let left = new_id[tree.left[old] as usize];
-                    debug_assert_eq!(
-                        new_id[tree.right[old] as usize],
-                        left + 1,
-                        "BFS siblings must be adjacent"
-                    );
-                    let f = tree.feature[old] as usize;
-                    let flags = if tree.default_left[old] { FLAG_DEFAULT_LEFT } else { 0 };
-                    qf.nodes.push(QuantNode {
-                        feature: tree.feature[old] as u16,
-                        flags,
-                        bin: cuts.bin_for_threshold(f, tree.threshold[old]),
-                        left,
-                        payload: 0,
-                        _pad: 0,
-                    });
-                }
-            }
-            qf.trees.push(PackedTree {
-                root: base,
-                depth: tree.max_depth() as u32,
-                out_slot,
-            });
+            arena: arena::flatten(&BinCodec { cuts }, trees, kind, m),
+            shape: arena::tile_shape(),
         }
-        assert!(qf.values.len() <= u32::MAX as usize, "leaf-value arena index overflow");
-        qf
+    }
+
+    /// Re-pin the blocking shape (clamped into the valid domain). Output is
+    /// bit-identical at any shape; tests use this to sweep shapes
+    /// deterministically.
+    pub fn with_tile_shape(mut self, shape: TileShape) -> QuantForest {
+        self.shape = TileShape::new(shape.block_rows, shape.tree_tile);
+        self
+    }
+
+    /// The blocking shape this instance traverses with.
+    pub fn shape(&self) -> TileShape {
+        self.shape
     }
 
     pub fn n_trees(&self) -> usize {
-        self.trees.len()
+        self.arena.n_trees()
     }
 
     pub fn n_nodes(&self) -> usize {
-        self.nodes.len()
+        self.arena.n_nodes()
     }
 
     /// Logical size in bytes.
     pub fn nbytes(&self) -> usize {
-        self.nodes.len() * std::mem::size_of::<QuantNode>()
-            + self.values.len() * 4
-            + self.trees.len() * std::mem::size_of::<PackedTree>()
-            + self.base_score.len() * 4
-    }
-
-    /// Run one tree tile over the row block `[r0, r0 + rows)` of the binned
-    /// dataset (`codes` column-major, `n` rows per column), accumulating
-    /// into `ob` (`rows × m`, rows ≤ [`ROW_BLOCK`]).
-    #[inline]
-    fn run_tile(
-        &self,
-        tile: std::ops::Range<usize>,
-        codes: &[u8],
-        n: usize,
-        r0: usize,
-        ob: &mut [f32],
-    ) {
-        let m = self.m;
-        let rows = ob.len() / m;
-        debug_assert!(rows <= ROW_BLOCK);
-        debug_assert!(r0 + rows <= n);
-        let nodes = &self.nodes[..];
-        let eta = self.eta;
-        let mut idx = [0u32; ROW_BLOCK];
-        for t in tile {
-            let qt = self.trees[t];
-            idx[..rows].fill(qt.root);
-            // Fixed-depth walk over bin codes: MISSING_BIN routes by the
-            // default-left flag, everything else by `code <= bin` (which is
-            // never true for MISSING_BIN itself: split bins are real bins,
-            // < 255). The leaf bit masks the step to 0 (self-loop), so the
-            // child select is branch-free like the float engine's.
-            for _ in 0..qt.depth {
-                for (i, node) in idx[..rows].iter_mut().enumerate() {
-                    let nd = nodes[*node as usize];
-                    let code = codes[nd.feature as usize * n + r0 + i];
-                    let le = code <= nd.bin;
-                    let miss = code == MISSING_BIN;
-                    let default_left = nd.flags & FLAG_DEFAULT_LEFT != 0;
-                    let go_left = (le & !miss) | (miss & default_left);
-                    let internal = u32::from(nd.flags & FLAG_LEAF == 0);
-                    *node = nd.left + (u32::from(!go_left) & internal);
-                }
-            }
-            match qt.out_slot {
-                -1 => {
-                    for (node, o) in idx[..rows].iter().zip(ob.chunks_mut(m)) {
-                        let at = nodes[*node as usize].payload as usize;
-                        let vals = &self.values[at..at + m];
-                        for (oj, &vj) in o.iter_mut().zip(vals) {
-                            *oj += eta * vj;
-                        }
-                    }
-                }
-                j => {
-                    let j = j as usize;
-                    for (node, o) in idx[..rows].iter().zip(ob.chunks_mut(m)) {
-                        let at = nodes[*node as usize].payload as usize;
-                        o[j] += eta * self.values[at];
-                    }
-                }
-            }
-        }
+        self.arena.nbytes() + self.base_score.len() * 4
     }
 
     /// Add this forest's η-scaled contributions for rows
@@ -253,24 +129,28 @@ impl QuantForest {
     /// Tile-outer blocking: a tile's nodes stay hot while row blocks stream
     /// through it, and per output element contributions still accumulate in
     /// global tree order (tiles advance in order), hence bit-identity with
-    /// the scalar reference walk.
+    /// the scalar reference walk at any blocking shape.
     pub fn accumulate_block(&self, binned: &BinnedMatrix, r0: usize, out: &mut [f32]) {
         let m = self.m;
         debug_assert_eq!(out.len() % m, 0);
         let rows = out.len() / m;
         assert!(r0 + rows <= binned.n, "row block out of range");
         assert_eq!(binned.p, self.n_features, "feature count mismatch");
+        let codes = &binned.codes[..];
+        let n = binned.n;
         let mut tile_start = 0;
-        while tile_start < self.trees.len() {
-            let tile = tile_start..(tile_start + TREE_TILE).min(self.trees.len());
+        while tile_start < self.n_trees() {
+            let tile = tile_start..(tile_start + self.shape.tree_tile).min(self.n_trees());
             let mut b0 = 0;
             while b0 < rows {
-                let brows = ROW_BLOCK.min(rows - b0);
-                self.run_tile(
+                let brows = self.shape.block_rows.min(rows - b0);
+                let row_base = r0 + b0;
+                arena::run_tile::<BinCodec<'_>, _>(
+                    &self.arena,
+                    self.eta,
+                    m,
                     tile.clone(),
-                    &binned.codes,
-                    binned.n,
-                    r0 + b0,
+                    |i, f| codes[f * n + row_base + i],
                     &mut out[b0 * m..(b0 + brows) * m],
                 );
                 b0 += brows;
@@ -470,6 +350,23 @@ mod tests {
                 qf.accumulate_pooled(&binned, &mut par, &exec);
                 assert_eq!(bits_f32(&seq), bits_f32(&par), "{kind:?} workers={workers}");
             }
+        }
+    }
+
+    #[test]
+    fn tile_shape_sweep_is_bit_identical() {
+        // The blocking shape must never change quantized output either —
+        // including a block that is not a multiple of the lane width.
+        let (x, b) = trained(TreeKind::Multi, 33, 9, 5);
+        let binned = BinnedMatrix::fit_bin(&x.view(), b.params.max_bins);
+        let qf = QuantForest::compile(&b, &binned.cuts).with_tile_shape(TileShape::DEFAULT);
+        let mut reference = vec![0.0f32; x.rows * b.m];
+        qf.predict_into(&binned, &mut reference);
+        for (rows, tiles) in [(32usize, 8usize), (127, 5), (512, 1)] {
+            let pinned = qf.clone().with_tile_shape(TileShape::new(rows, tiles));
+            let mut out = vec![0.0f32; x.rows * b.m];
+            pinned.predict_into(&binned, &mut out);
+            assert_eq!(bits_f32(&reference), bits_f32(&out), "shape {rows}x{tiles}");
         }
     }
 

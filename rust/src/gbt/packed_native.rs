@@ -8,106 +8,29 @@
 //!
 //! [`NativeForest`] is the cache-optimized alternative: after training, the
 //! whole ensemble is flattened into one contiguous arena of 16-byte
-//! [`PackedNode`] records laid out **breadth-first per tree** (children are
-//! adjacent, so one `left` offset addresses both: `right == left + 1`).
-//! Leaves self-loop (`left == own index`), which lets traversal run a fixed
-//! `depth`-iteration loop with **branch-free child selection** — the NaN
-//! default direction and the leaf bit live in a flags byte, and the next
-//! node index is pure comparison arithmetic, so the hot loop has no
-//! unpredictable branches at all.
+//! [`FloatNode`](super::arena) records by the shared arena builder
+//! ([`super::arena::flatten`] with [`super::arena::FloatCodec`]) — the same
+//! builder the quantized engine and the XLA artifact path go through, so a
+//! structural divergence between engines is impossible by construction.
+//! Nodes are laid out **breadth-first per tree** (children adjacent, so one
+//! `left` offset addresses both: `right == left + 1`), leaves self-loop,
+//! and traversal runs the fixed-depth branch-free SIMD-lane walk
+//! ([`super::arena::run_tile`]).
 //!
-//! Traversal is blocked two ways: [`ROW_BLOCK`] rows are kept hot in L1
-//! while a [`TREE_TILE`]-tree tile's node records stream through L1/L2, and
-//! tiles advance in tree order. Because every output element accumulates
-//! its per-tree contributions in exactly the tree order of
+//! Traversal is blocked two ways — `block_rows` rows stay hot in L1 while a
+//! `tree_tile`-tree tile's node records stream through L1/L2 — with the
+//! shape chosen per host by the startup autotuner
+//! ([`super::arena::tile_shape`]; pin it with `CALOFOREST_TILE_SHAPE` or
+//! [`NativeForest::with_tile_shape`]). Because every output element
+//! accumulates its per-tree contributions in exactly the tree order of
 //! [`super::predict::predict_batch`], the engine is **bit-identical** to
-//! the reference path — for any row blocking and any worker count. The
-//! fixed-shape [`super::predict::PackedForest`] (the XLA-oriented packing)
-//! doubles as a parity oracle for this engine.
+//! the reference path — for any blocking shape and any worker count.
 
+use super::arena::{self, Arena, FloatCodec, FloatNode, TileShape};
 use super::booster::Booster;
 use super::predict::PREDICT_BLOCK_ROWS;
-use super::tree::TreeKind;
 use crate::coordinator::pool::WorkerPool;
 use crate::tensor::MatrixView;
-use std::collections::VecDeque;
-
-/// Rows traversed together per (tile, block) kernel call; 64 rows × p
-/// features stay resident in L1 across a whole tree tile.
-pub const ROW_BLOCK: usize = 64;
-
-/// Trees per tile; a tile's node records (≤ `TREE_TILE · 2^(depth+1) · 16`
-/// bytes) stay hot while every row block streams through it.
-pub const TREE_TILE: usize = 16;
-
-/// Flags bit: missing values (NaN / [`super::binning::MISSING_BIN`])
-/// default to the left child. Shared with the quantized training engine
-/// ([`super::packed_binned::QuantForest`]), which uses the same flags byte.
-pub(crate) const FLAG_DEFAULT_LEFT: u8 = 0b01;
-/// Flags bit: this node is a leaf (self-looping; traversal never leaves it).
-pub(crate) const FLAG_LEAF: u8 = 0b10;
-
-/// One node of the packed arena — exactly 16 bytes, interleaved so a single
-/// cache line holds four complete nodes.
-#[repr(C)]
-#[derive(Clone, Copy, Debug)]
-struct PackedNode {
-    /// Split feature (0 for leaves).
-    feature: u16,
-    /// [`FLAG_DEFAULT_LEFT`] | [`FLAG_LEAF`].
-    flags: u8,
-    _pad: u8,
-    /// Split threshold; `x < threshold` goes left (0 for leaves).
-    threshold: f32,
-    /// Arena index of the left child; the right child is `left + 1`
-    /// (breadth-first layout). Leaves store their own index (self-loop).
-    left: u32,
-    /// Leaves: start index of this leaf's `m` values in the values arena.
-    payload: u32,
-}
-
-const _: () = assert!(std::mem::size_of::<PackedNode>() == 16);
-
-/// Per-tree metadata in a compiled forest — shared by the float
-/// ([`NativeForest`]) and quantized ([`super::packed_binned::QuantForest`])
-/// arenas.
-#[derive(Clone, Copy, Debug)]
-pub(crate) struct PackedTree {
-    /// Arena index of the root node.
-    pub(crate) root: u32,
-    /// Iterations needed for any row to reach (and self-loop on) a leaf.
-    pub(crate) depth: u32,
-    /// Output written by this tree: `-1` writes all `m` outputs
-    /// ([`TreeKind::Multi`]), otherwise the single slot
-    /// ([`TreeKind::Single`]).
-    pub(crate) out_slot: i32,
-}
-
-/// Breadth-first renumbering of one tree's nodes starting at arena index
-/// `base`: children are enqueued consecutively, so siblings land adjacent in
-/// the returned visit order (`right == left + 1` after renumbering), which is
-/// what lets a packed node address both children with one `left` offset.
-/// Returns `(order, new_id)` where `order` lists old node ids in arena order
-/// and `new_id[old]` is the arena index assigned to `old`. This is the one
-/// flattening shared by the float and quantized compilers — a structural
-/// divergence between the two engines is impossible by construction.
-pub(crate) fn bfs_layout(tree: &super::tree::Tree, base: u32) -> (Vec<usize>, Vec<u32>) {
-    let n_nodes = tree.n_nodes();
-    let mut order = Vec::with_capacity(n_nodes);
-    let mut new_id = vec![u32::MAX; n_nodes];
-    let mut queue = VecDeque::with_capacity(n_nodes);
-    queue.push_back(0usize);
-    while let Some(old) = queue.pop_front() {
-        new_id[old] = base + order.len() as u32;
-        order.push(old);
-        if !tree.is_leaf(old) {
-            queue.push_back(tree.left[old] as usize);
-            queue.push_back(tree.right[old] as usize);
-        }
-    }
-    debug_assert_eq!(order.len(), n_nodes, "tree has unreachable nodes");
-    (order, new_id)
-}
 
 /// A compiled ensemble: contiguous breadth-first node arena + leaf-value
 /// arena + per-tree metadata. Built once per trained [`Booster`] (see
@@ -120,156 +43,78 @@ pub struct NativeForest {
     pub n_features: usize,
     pub eta: f32,
     pub base_score: Vec<f32>,
-    nodes: Vec<PackedNode>,
-    values: Vec<f32>,
-    trees: Vec<PackedTree>,
+    pub(crate) arena: Arena<FloatNode>,
+    shape: TileShape,
 }
 
 impl NativeForest {
-    /// Flatten a trained booster into the packed arena. Tree order (and
-    /// therefore accumulation order) is preserved exactly.
+    /// Flatten a trained booster into the packed arena (the shared builder,
+    /// [`arena::flatten`]). Tree order (and therefore accumulation order)
+    /// is preserved exactly. The blocking shape is the host's autotuned /
+    /// pinned [`arena::tile_shape`]; override per-instance with
+    /// [`with_tile_shape`](Self::with_tile_shape).
     pub fn compile(booster: &Booster) -> NativeForest {
         assert!(
             booster.n_features <= u16::MAX as usize + 1,
             "packed node stores features as u16"
         );
-        let total_nodes: usize = booster.trees.iter().map(|t| t.n_nodes()).sum();
-        assert!(total_nodes <= u32::MAX as usize, "node arena index overflow");
-        let m = booster.m;
-        let mut nf = NativeForest {
-            m,
+        NativeForest {
+            m: booster.m,
             n_features: booster.n_features,
             eta: booster.params.eta,
             base_score: booster.base_score.clone(),
-            nodes: Vec::with_capacity(total_nodes),
-            values: Vec::new(),
-            trees: Vec::with_capacity(booster.trees.len()),
-        };
-        for (ti, tree) in booster.trees.iter().enumerate() {
-            let out_slot = match booster.params.kind {
-                TreeKind::Multi => -1,
-                TreeKind::Single => (ti % m) as i32,
-            };
-            let base = nf.nodes.len() as u32;
-            // Shared breadth-first renumbering (see [`bfs_layout`]): siblings
-            // land adjacent, so `right == left + 1` holds.
-            let (order, new_id) = bfs_layout(tree, base);
-            for &old in &order {
-                let me = new_id[old];
-                if tree.is_leaf(old) {
-                    let payload = nf.values.len() as u32;
-                    nf.values
-                        .extend_from_slice(&tree.values[old * tree.m..(old + 1) * tree.m]);
-                    nf.nodes.push(PackedNode {
-                        feature: 0,
-                        flags: FLAG_LEAF | FLAG_DEFAULT_LEFT,
-                        _pad: 0,
-                        threshold: 0.0,
-                        left: me,
-                        payload,
-                    });
-                } else {
-                    let left = new_id[tree.left[old] as usize];
-                    debug_assert_eq!(
-                        new_id[tree.right[old] as usize],
-                        left + 1,
-                        "BFS siblings must be adjacent"
-                    );
-                    let flags = if tree.default_left[old] { FLAG_DEFAULT_LEFT } else { 0 };
-                    nf.nodes.push(PackedNode {
-                        feature: tree.feature[old] as u16,
-                        flags,
-                        _pad: 0,
-                        threshold: tree.threshold[old],
-                        left,
-                        payload: 0,
-                    });
-                }
-            }
-            nf.trees.push(PackedTree {
-                root: base,
-                depth: tree.max_depth() as u32,
-                out_slot,
-            });
+            arena: arena::flatten(&FloatCodec, &booster.trees, booster.params.kind, booster.m),
+            shape: arena::tile_shape(),
         }
-        assert!(nf.values.len() <= u32::MAX as usize, "leaf-value arena index overflow");
-        nf
+    }
+
+    /// Re-pin the blocking shape (clamped into the valid domain). Output is
+    /// bit-identical at any shape; this only moves throughput — tests use
+    /// it to sweep shapes deterministically, benches to compare against
+    /// [`TileShape::DEFAULT`].
+    pub fn with_tile_shape(mut self, shape: TileShape) -> NativeForest {
+        self.shape = TileShape::new(shape.block_rows, shape.tree_tile);
+        self
+    }
+
+    /// The blocking shape this instance traverses with.
+    pub fn shape(&self) -> TileShape {
+        self.shape
     }
 
     pub fn n_trees(&self) -> usize {
-        self.trees.len()
+        self.arena.n_trees()
     }
 
     pub fn n_nodes(&self) -> usize {
-        self.nodes.len()
+        self.arena.n_nodes()
     }
 
     /// Logical size in bytes (model-store accounting: the compiled engine
     /// is counted on top of the booster it was built from).
     pub fn nbytes(&self) -> usize {
-        self.nodes.len() * std::mem::size_of::<PackedNode>()
-            + self.values.len() * 4
-            + self.trees.len() * std::mem::size_of::<PackedTree>()
-            + self.base_score.len() * 4
-    }
-
-    /// Run one tree tile over one row block, accumulating into `ob`
-    /// (`rows × m`, rows ≤ [`ROW_BLOCK`]). `xb` is the block's feature rows
-    /// (`rows × p`).
-    #[inline]
-    fn run_tile(&self, tile: std::ops::Range<usize>, xb: &[f32], p: usize, ob: &mut [f32]) {
-        let m = self.m;
-        let rows = ob.len() / m;
-        debug_assert!(rows <= ROW_BLOCK);
-        debug_assert_eq!(xb.len(), rows * p);
-        let nodes = &self.nodes[..];
-        let eta = self.eta;
-        let mut idx = [0u32; ROW_BLOCK];
-        for t in tile {
-            let pt = self.trees[t];
-            idx[..rows].fill(pt.root);
-            // Fixed-depth walk: leaves self-loop, so after `depth` steps
-            // every row sits on its leaf. The child select is branch-free:
-            // NaN compares false, so `go_left = lt | (nan & default_left)`
-            // reproduces leaf_for's NaN routing, and the leaf bit masks the
-            // step to 0 (self-loop).
-            for _ in 0..pt.depth {
-                for (i, node) in idx[..rows].iter_mut().enumerate() {
-                    let nd = nodes[*node as usize];
-                    let v = xb[i * p + nd.feature as usize];
-                    let lt = v < nd.threshold;
-                    let nan = v.is_nan();
-                    let default_left = nd.flags & FLAG_DEFAULT_LEFT != 0;
-                    let go_left = lt | (nan & default_left);
-                    let internal = u32::from(nd.flags & FLAG_LEAF == 0);
-                    *node = nd.left + (u32::from(!go_left) & internal);
-                }
-            }
-            match pt.out_slot {
-                -1 => {
-                    for (node, o) in idx[..rows].iter().zip(ob.chunks_mut(m)) {
-                        let at = nodes[*node as usize].payload as usize;
-                        let vals = &self.values[at..at + m];
-                        for (oj, &vj) in o.iter_mut().zip(vals) {
-                            *oj += eta * vj;
-                        }
-                    }
-                }
-                j => {
-                    let j = j as usize;
-                    for (node, o) in idx[..rows].iter().zip(ob.chunks_mut(m)) {
-                        let at = nodes[*node as usize].payload as usize;
-                        o[j] += eta * self.values[at];
-                    }
-                }
-            }
-        }
+        self.arena.nbytes() + self.base_score.len() * 4
     }
 
     /// Blocked batch prediction into `out` (row-major `[n × m]`), starting
     /// from the base score — bit-identical to
     /// [`super::predict::predict_batch`] on the source booster.
     pub fn predict_into(&self, x: &MatrixView<'_>, out: &mut [f32]) {
+        self.predict_blocked(x, out, false);
+    }
+
+    /// [`predict_into`](Self::predict_into) on the scalar (non-laned)
+    /// reference kernel — kept for the `lanes-vs-scalar` bench rows and
+    /// lane-parity tests; output is bit-identical to the laned path.
+    pub fn predict_into_scalar(&self, x: &MatrixView<'_>, out: &mut [f32]) {
+        self.predict_blocked(x, out, true);
+    }
+
+    /// Tile-outer blocking shared by the laned and scalar entry points: a
+    /// tile's nodes stay hot in cache while every row block streams through
+    /// it; per-element accumulation order is still global tree order (tiles
+    /// advance in order), hence bit-identity at any shape.
+    fn predict_blocked(&self, x: &MatrixView<'_>, out: &mut [f32], scalar: bool) {
         let n = x.rows;
         let m = self.m;
         assert_eq!(out.len(), n * m, "output buffer shape mismatch");
@@ -278,21 +123,34 @@ impl NativeForest {
             out[r * m..(r + 1) * m].copy_from_slice(&self.base_score);
         }
         let p = x.cols;
-        // Tile-outer: a tile's nodes stay hot in cache while every row
-        // block streams through it; per-element accumulation order is still
-        // global tree order (tiles advance in order), hence bit-identity.
         let mut tile_start = 0;
-        while tile_start < self.trees.len() {
-            let tile = tile_start..(tile_start + TREE_TILE).min(self.trees.len());
+        while tile_start < self.n_trees() {
+            let tile = tile_start..(tile_start + self.shape.tree_tile).min(self.n_trees());
             let mut r0 = 0;
             while r0 < n {
-                let rows = ROW_BLOCK.min(n - r0);
-                self.run_tile(
-                    tile.clone(),
-                    &x.data[r0 * p..(r0 + rows) * p],
-                    p,
-                    &mut out[r0 * m..(r0 + rows) * m],
-                );
+                let rows = self.shape.block_rows.min(n - r0);
+                let xb = &x.data[r0 * p..(r0 + rows) * p];
+                let ob = &mut out[r0 * m..(r0 + rows) * m];
+                let fetch = |i: usize, f: usize| xb[i * p + f];
+                if scalar {
+                    arena::run_tile_scalar::<FloatCodec, _>(
+                        &self.arena,
+                        self.eta,
+                        m,
+                        tile.clone(),
+                        fetch,
+                        ob,
+                    );
+                } else {
+                    arena::run_tile::<FloatCodec, _>(
+                        &self.arena,
+                        self.eta,
+                        m,
+                        tile.clone(),
+                        fetch,
+                        ob,
+                    );
+                }
                 r0 += rows;
             }
             tile_start = tile.end;
@@ -335,10 +193,14 @@ mod tests {
     use super::*;
     use crate::gbt::booster::TrainParams;
     use crate::gbt::predict::{predict_batch, PackedForest};
-    use crate::gbt::tree::Tree;
+    use crate::gbt::tree::{Tree, TreeKind};
     use crate::tensor::Matrix;
     use crate::util::prop::assert_close;
     use crate::util::rng::Rng;
+
+    /// Default-shape row block, used to size test batches around block
+    /// boundaries (ragged / exact / multi-block cases).
+    const RB: usize = TileShape::DEFAULT.block_rows;
 
     fn trained(kind: TreeKind, seed: u64, n_trees: usize, depth: usize) -> (Matrix, Booster) {
         let mut rng = Rng::new(seed);
@@ -370,10 +232,10 @@ mod tests {
             let nf = b.compile();
             assert_eq!(nf.n_trees(), b.trees.len());
             assert_eq!(nf.n_nodes(), b.n_nodes());
-            // Training data + unseen data, including a ragged (< ROW_BLOCK)
+            // Training data + unseen data, including a ragged (< block)
             // and a multi-block batch.
             let mut rng = Rng::new(99);
-            for rows in [1usize, ROW_BLOCK - 1, ROW_BLOCK, 3 * ROW_BLOCK + 17] {
+            for rows in [1usize, RB - 1, RB, 3 * RB + 17] {
                 let xb = Matrix::randn(rows, 4, &mut rng);
                 let mut reference = vec![0.0f32; rows * b.m];
                 predict_batch(&b, &xb.view(), &mut reference);
@@ -476,21 +338,49 @@ mod tests {
     }
 
     #[test]
-    fn packed_forest_is_a_consistent_oracle() {
-        // The XLA-oriented fixed-shape packing and the blocked engine must
-        // agree on the same booster (oracle check, incl. NaNs).
+    fn any_tile_shape_and_the_scalar_kernel_are_bit_identical() {
+        // The blocking shape and the lane grouping must never change
+        // output: sweep non-default shapes (including a non-multiple-of-
+        // LANES block and a degenerate 1-tree tile) and the scalar kernel
+        // against the default-shape laned walk.
+        for kind in [TreeKind::Single, TreeKind::Multi] {
+            let (_, b) = trained(kind, 17, 10, 5);
+            let nf = b.compile().with_tile_shape(TileShape::DEFAULT);
+            let mut rng = Rng::new(23);
+            let mut x = Matrix::randn(3 * RB + 29, 4, &mut rng);
+            for r in (0..x.rows).step_by(13) {
+                x.set(r, r % 4, f32::NAN);
+            }
+            let mut reference = vec![0.0f32; x.rows * b.m];
+            nf.predict_into(&x.view(), &mut reference);
+            let mut scalar = vec![0.0f32; x.rows * b.m];
+            nf.predict_into_scalar(&x.view(), &mut scalar);
+            assert_eq!(bits(&reference), bits(&scalar), "{kind:?} scalar kernel diverges");
+            for (rows, tiles) in [(32usize, 8usize), (127, 5), (512, 1)] {
+                let pinned = nf.clone().with_tile_shape(TileShape::new(rows, tiles));
+                let mut out = vec![0.0f32; x.rows * b.m];
+                pinned.predict_into(&x.view(), &mut out);
+                assert_eq!(bits(&reference), bits(&out), "{kind:?} shape {rows}x{tiles}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_forest_transcription_agrees_with_the_engine() {
+        // The XLA-oriented fixed-shape packing is a transcription of this
+        // engine's arena; both must agree on the same booster (incl. NaNs).
         for kind in [TreeKind::Single, TreeKind::Multi] {
             let (_, b) = trained(kind, 31, 9, 6);
             let nf = b.compile();
-            let oracle = PackedForest::pack(&b);
+            let transcribed = PackedForest::pack(&b);
             let mut rng = Rng::new(13);
             let mut x = Matrix::randn(150, 4, &mut rng);
             for r in (0..150).step_by(7) {
                 x.set(r, r % 4, f32::NAN);
             }
-            let via_oracle = oracle.predict(&x.view());
+            let via_packed = transcribed.predict(&x.view());
             let via_blocked = nf.predict(&x.view());
-            assert_close(&via_oracle.data, &via_blocked.data, 1e-6, 1e-6).unwrap();
+            assert_close(&via_packed.data, &via_blocked.data, 1e-6, 1e-6).unwrap();
         }
     }
 

@@ -8,9 +8,10 @@
 //!
 //! [`predict_batch`] defines the *bit-identity contract* for every other
 //! backend: the blocked native engine ([`super::packed_native`], the
-//! default sampling path) must reproduce it exactly, and the fixed-shape
-//! [`PackedForest`] here — originally the XLA packing — doubles as its
-//! parity oracle.
+//! default sampling path) must reproduce it exactly. The fixed-shape
+//! [`PackedForest`] here — the XLA packing — is a padded transcription of
+//! that engine's arena, so every compiled representation descends from the
+//! one arena builder ([`super::arena::flatten`]).
 
 use super::booster::Booster;
 use super::tree::TreeKind;
@@ -86,13 +87,19 @@ pub fn predict_batch_par(
     });
 }
 
-/// Flattened forest tensors for the XLA backend — and the parity oracle
-/// for the blocked native engine ([`super::packed_native::NativeForest`]):
-/// an independently-derived flat representation whose reference traversal
-/// pins down the exact leaf routing (incl. NaN defaults and self-loops).
+/// Flattened forest tensors for the XLA backend: a fixed-shape padded
+/// transcription of the compiled arena
+/// ([`super::packed_native::NativeForest`]), so the artifact path shares
+/// the single arena builder ([`super::arena::flatten`]) instead of
+/// re-flattening the booster a third time. Its reference traversal
+/// ([`PackedForest::predict`]) pins down the exact leaf routing (incl. NaN
+/// defaults and self-loops) for the Pallas kernel; the true bit-identity
+/// reference for all engines remains [`predict_batch`].
 ///
-/// All trees are padded to a common node count; `feature` is `-1` padded.
-/// Layout matches `python/compile/kernels/forest_predict.py`.
+/// All trees are padded to a common node count; padding nodes are inert
+/// self-loop leaves with zero values. Node ids are tree-local breadth-first
+/// (the arena's order). Layout matches
+/// `python/compile/kernels/forest_predict.py`.
 #[derive(Clone, Debug)]
 pub struct PackedForest {
     pub n_trees: usize,
@@ -112,8 +119,9 @@ pub struct PackedForest {
     pub right: Vec<i32>,
     /// `[n_trees × max_nodes]` 1.0 where missing defaults left else 0.0.
     pub default_left: Vec<f32>,
-    /// `[n_trees × max_nodes × m]` leaf values (0 for internal nodes, but
-    /// every node's value is its own: self-loops land on leaves only).
+    /// `[n_trees × max_nodes × m]` leaf values (0 for internal and padding
+    /// nodes — safe because the fixed-depth self-loop walk always ends on a
+    /// leaf).
     pub values: Vec<f32>,
     /// Iterations needed for any row to reach a leaf.
     pub depth: usize,
@@ -122,24 +130,35 @@ pub struct PackedForest {
 }
 
 impl PackedForest {
-    /// Pack a booster into fixed-shape tensors.
+    /// Pack a booster into fixed-shape tensors: compile through the shared
+    /// arena builder, then transcribe ([`PackedForest::from_compiled`]).
     pub fn pack(booster: &Booster) -> PackedForest {
-        let n_trees = booster.trees.len();
-        let max_nodes = booster.trees.iter().map(|t| t.n_nodes()).max().unwrap_or(1);
-        let depth = booster
-            .trees
-            .iter()
-            .map(|t| t.max_depth())
+        PackedForest::from_compiled(&super::packed_native::NativeForest::compile(booster))
+    }
+
+    /// Transcribe an already-compiled arena into the fixed-shape padded
+    /// tensors the XLA backend consumes. Arena node indices become
+    /// tree-local (`global − root`); leaves and padding self-loop so the
+    /// fixed-depth walk converges. Reusing the compiled engine (e.g. a
+    /// [`crate::forest::ForestModel`]'s per-slot cache) means the artifact
+    /// path never re-flattens what the native engine already built.
+    pub fn from_compiled(nf: &super::packed_native::NativeForest) -> PackedForest {
+        use super::arena::{FLAG_DEFAULT_LEFT, FLAG_LEAF};
+        let arena = &nf.arena;
+        let n_trees = arena.n_trees();
+        let max_nodes = (0..n_trees)
+            .map(|ti| arena.tree_node_count(ti))
             .max()
-            .unwrap_or(0);
-        let m = booster.m;
+            .unwrap_or(1);
+        let depth = arena.trees.iter().map(|t| t.depth as usize).max().unwrap_or(0);
+        let m = nf.m;
         let mut pf = PackedForest {
             n_trees,
             max_nodes,
             m,
-            n_features: booster.n_features,
-            eta: booster.params.eta,
-            base_score: booster.base_score.clone(),
+            n_features: nf.n_features,
+            eta: nf.eta,
+            base_score: nf.base_score.clone(),
             feature: vec![0; n_trees * max_nodes],
             threshold: vec![0.0; n_trees * max_nodes],
             left: vec![0; n_trees * max_nodes],
@@ -149,28 +168,29 @@ impl PackedForest {
             depth,
             out_index: Vec::with_capacity(n_trees),
         };
-        for (ti, tree) in booster.trees.iter().enumerate() {
+        for (ti, pt) in arena.trees.iter().enumerate() {
             let base = ti * max_nodes;
-            // Which output slot a Single tree writes to; Multi writes all.
-            let out_slot = match booster.params.kind {
-                TreeKind::Multi => -1,
-                TreeKind::Single => (ti % m) as i32,
-            };
+            let root = pt.root as usize;
+            let count = arena.tree_node_count(ti);
             for node in 0..max_nodes {
                 let idx = base + node;
-                if node < tree.n_nodes() {
-                    let is_leaf = tree.left[node] < 0;
-                    pf.feature[idx] = tree.feature[node] as i32;
-                    pf.threshold[idx] = tree.threshold[node];
-                    pf.left[idx] = if is_leaf { node as i32 } else { tree.left[node] };
-                    pf.right[idx] = if is_leaf { node as i32 } else { tree.right[node] };
-                    pf.default_left[idx] = if tree.default_left[node] { 1.0 } else { 0.0 };
-                    if out_slot < 0 {
-                        for j in 0..tree.m {
-                            pf.values[idx * m + j] = tree.values[node * tree.m + j];
+                if node < count {
+                    let nd = arena.nodes[root + node];
+                    let is_leaf = nd.flags & FLAG_LEAF != 0;
+                    pf.feature[idx] = nd.feature as i32;
+                    pf.threshold[idx] = nd.threshold;
+                    let left_local = if is_leaf { node } else { nd.left as usize - root };
+                    pf.left[idx] = left_local as i32;
+                    pf.right[idx] = if is_leaf { node as i32 } else { left_local as i32 + 1 };
+                    pf.default_left[idx] =
+                        if nd.flags & FLAG_DEFAULT_LEFT != 0 { 1.0 } else { 0.0 };
+                    if is_leaf {
+                        let at = nd.payload as usize;
+                        match pt.out_slot {
+                            -1 => pf.values[idx * m..idx * m + m]
+                                .copy_from_slice(&arena.values[at..at + m]),
+                            j => pf.values[idx * m + j as usize] = arena.values[at],
                         }
-                    } else {
-                        pf.values[idx * m + out_slot as usize] = tree.values[node];
                     }
                 } else {
                     // Padding: self-loop leaf with zero value.
@@ -178,7 +198,7 @@ impl PackedForest {
                     pf.right[idx] = node as i32;
                 }
             }
-            pf.out_index.push(out_slot);
+            pf.out_index.push(pt.out_slot);
         }
         pf
     }

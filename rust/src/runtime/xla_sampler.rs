@@ -37,18 +37,21 @@ pub struct XlaField {
 impl XlaField {
     /// Pack every ensemble of a model for the given runtime. Fails when no
     /// artifact fits the model's dimensions (callers fall back to native).
+    ///
+    /// Transcribes the model's cached compiled engines
+    /// ([`ForestModel::compiled`] → [`PackedForest::from_compiled`]) instead
+    /// of re-flattening each booster — the XLA artifact path shares the
+    /// native engine's arena build.
     pub fn prepare(runtime: &PjrtRuntime, model: &ForestModel) -> Result<XlaField> {
-        let packed: Vec<PackedForest> = model
-            .ensembles
-            .iter()
-            .map(|e| {
-                PackedForest::pack(
-                    e.as_ref()
-                        .ok_or_else(|| anyhow!("model has untrained slots"))?,
-                )
-                .pipe_ok()
-            })
-            .collect::<Result<_>>()?;
+        let n_y = model.n_y();
+        let mut packed = Vec::with_capacity(model.ensembles.len());
+        for slot in 0..model.ensembles.len() {
+            if model.ensembles[slot].is_none() {
+                return Err(anyhow!("model has untrained slots"));
+            }
+            let (t_idx, y) = (slot / n_y, slot % n_y);
+            packed.push(PackedForest::from_compiled(model.compiled(t_idx, y)));
+        }
         let need_trees = packed.iter().map(|p| p.n_trees).max().unwrap_or(1);
         let need_nodes = packed.iter().map(|p| p.max_nodes).max().unwrap_or(1);
         let need_depth = packed.iter().map(|p| p.depth).max().unwrap_or(1);
@@ -167,14 +170,6 @@ fn pad_packed(pf: &PackedForest, n_trees: usize, max_nodes: usize) -> PackedSlot
     }
     slot
 }
-
-/// Small helper: wrap a value in Ok for collecting.
-trait PipeOk: Sized {
-    fn pipe_ok(self) -> Result<Self> {
-        Ok(self)
-    }
-}
-impl<T> PipeOk for T {}
 
 #[cfg(test)]
 mod tests {

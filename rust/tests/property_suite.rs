@@ -19,7 +19,8 @@ use caloforest::forest::{LabelSampler, ModelKind};
 use caloforest::gbt::booster::leaf_for_binned;
 use caloforest::gbt::predict::{predict_batch, PackedForest};
 use caloforest::gbt::{
-    BinCuts, BinnedMatrix, Booster, MISSING_BIN, Objective, QuantForest, TrainParams, TreeKind,
+    BinCuts, BinnedMatrix, Booster, MISSING_BIN, NativeForest, Objective, QuantForest, TileShape,
+    TrainParams, TreeKind,
 };
 use caloforest::tensor::Matrix;
 use caloforest::util::prop::{
@@ -385,6 +386,79 @@ fn prop_quantforest_leaf_for_binned_predict_batch_bit_identity() {
                 qf.accumulate_pooled(&binned, &mut pooled, &exec);
                 if bits_f32(&float_ref) != bits_f32(&pooled) {
                     return Err(format!("pooled accumulate diverges at workers={workers}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The unified-arena acceptance gate: on any randomized booster (both tree
+/// kinds, NaN rows, ragged depths), both arena-built engines must reproduce
+/// the pre-unification oracles **bit-for-bit** — [`NativeForest`] (laned
+/// kernel, scalar kernel, pooled dispatch across every CI worker width)
+/// against [`predict_batch`] on a NaN-bearing probe, and [`QuantForest`]
+/// against `predict_batch` on the training rows — and stay bit-identical
+/// across a sweep of non-default `(block_rows, tree_tile)` blocking shapes,
+/// including one whose row block is not a lane multiple (127 % 8 != 0
+/// exercises the scalar tail).
+#[test]
+fn prop_arena_engines_bit_identical_to_oracles_at_any_tile_shape() {
+    forall(
+        "arena engines == oracles at any shape",
+        Config { cases: 8, seed: 0xA7E },
+        |rng, case| {
+            let BoosterCase { x, binned, booster } = Gen::booster_case(rng, case);
+            let m = booster.m;
+            let p = x.cols;
+            let shapes = [(32usize, 8usize), (127, 5), (512, 1)];
+
+            // Float engine vs predict_batch on unseen NaN-bearing rows.
+            let probe = Gen::matrix_with_nans(rng, 40 + rng.below(120), p, 0.1);
+            let n_probe = probe.rows;
+            let mut float_ref = vec![0.0f32; n_probe * m];
+            predict_batch(&booster, &probe.view(), &mut float_ref);
+
+            let nf = NativeForest::compile(&booster);
+            let mut laned = vec![0.0f32; n_probe * m];
+            nf.predict_into(&probe.view(), &mut laned);
+            if bits_f32(&float_ref) != bits_f32(&laned) {
+                return Err("laned NativeForest diverges from predict_batch".into());
+            }
+            let mut scalar = vec![0.0f32; n_probe * m];
+            nf.predict_into_scalar(&probe.view(), &mut scalar);
+            if bits_f32(&float_ref) != bits_f32(&scalar) {
+                return Err("scalar-kernel NativeForest diverges".into());
+            }
+            for (rows, tiles) in shapes {
+                let pinned = nf.clone().with_tile_shape(TileShape::new(rows, tiles));
+                let mut out = vec![0.0f32; n_probe * m];
+                pinned.predict_into(&probe.view(), &mut out);
+                if bits_f32(&float_ref) != bits_f32(&out) {
+                    return Err(format!("NativeForest diverges at shape {rows}x{tiles}"));
+                }
+            }
+            for workers in worker_widths() {
+                let exec = WorkerPool::new(workers);
+                let mut pooled = vec![0.0f32; n_probe * m];
+                nf.predict_into_pooled(&probe.view(), &mut pooled, &exec);
+                if bits_f32(&float_ref) != bits_f32(&pooled) {
+                    return Err(format!("pooled NativeForest diverges at workers={workers}"));
+                }
+            }
+
+            // Quant engine vs predict_batch on the training rows, across the
+            // same shape sweep.
+            let n = x.rows;
+            let mut train_ref = vec![0.0f32; n * m];
+            predict_batch(&booster, &x.view(), &mut train_ref);
+            let qf = QuantForest::compile(&booster, &binned.cuts);
+            for (rows, tiles) in shapes {
+                let pinned = qf.clone().with_tile_shape(TileShape::new(rows, tiles));
+                let mut out = vec![0.0f32; n * m];
+                pinned.predict_into(&binned, &mut out);
+                if bits_f32(&train_ref) != bits_f32(&out) {
+                    return Err(format!("QuantForest diverges at shape {rows}x{tiles}"));
                 }
             }
             Ok(())
