@@ -42,7 +42,7 @@ fn main() {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let out = run_training(&cfg, &x, Some(&y), &RunOptions { workers: 2, ..Default::default() });
+    let out = run_training(&cfg, &x, Some(&y), &RunOptions::new().with_workers(2));
     println!(
         "trained {} ensembles in {:.2}s",
         out.report.jobs.len(),

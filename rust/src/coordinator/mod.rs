@@ -57,10 +57,18 @@ pub struct RunOptions {
     /// Stream trained ensembles to this directory and drop them from memory
     /// (Issue 3). `None` keeps the full model in memory.
     pub store_dir: Option<PathBuf>,
-    /// Resume: skip `(t, y)` slots already present in the store.
+    /// Resume: skip `(t, y)` slots already present *and valid* in the
+    /// store (corrupt or truncated slot files are re-trained).
     pub resume: bool,
     /// Sample the memory timeline while training.
     pub track_memory: bool,
+    /// Per-job retries after a failed attempt (panic or I/O error) before
+    /// the slot is marked failed. Retries back off exponentially.
+    pub max_retries: usize,
+    /// Wall-clock budget for the whole run: jobs past the shared deadline
+    /// stop at their current boosting round (a valid, shorter ensemble)
+    /// instead of dying. `None` = unbudgeted.
+    pub time_budget: Option<std::time::Duration>,
 }
 
 impl Default for RunOptions {
@@ -71,6 +79,8 @@ impl Default for RunOptions {
             store_dir: None,
             resume: false,
             track_memory: false,
+            max_retries: 2,
+            time_budget: None,
         }
     }
 }
@@ -107,6 +117,21 @@ impl RunOptions {
     /// Sample the memory timeline while training.
     pub fn with_track_memory(mut self, track: bool) -> RunOptions {
         self.track_memory = track;
+        self
+    }
+
+    /// Per-job retries before a failing slot is marked failed (default 2).
+    pub fn with_max_retries(mut self, retries: usize) -> RunOptions {
+        self.max_retries = retries;
+        self
+    }
+
+    /// Wall-clock budget for the run: past the deadline, every job stops at
+    /// its current boosting round and the outcome reports per-job
+    /// rounds-completed ([`JobRecord::rounds_trained`] /
+    /// [`JobRecord::deadline_stopped`]).
+    pub fn with_time_budget(mut self, budget: std::time::Duration) -> RunOptions {
+        self.time_budget = Some(budget);
         self
     }
 
@@ -203,6 +228,67 @@ pub fn worker_budget_sized(
     worker_budget(total, width_cap, intra_override)
 }
 
+/// Why a job attempt failed (the job-slot boundary's failure domains).
+#[derive(Clone, Debug)]
+pub enum FailureCause {
+    /// The attempt panicked — in the training code itself or in one of the
+    /// slot pool's workers (the pool re-throws at the dispatch site, so
+    /// both surface here and the pool stays usable for the next job).
+    Panic(String),
+    /// The attempt returned an I/O error (a failed store write).
+    Io(String),
+}
+
+impl std::fmt::Display for FailureCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FailureCause::Panic(msg) => write!(f, "panic: {msg}"),
+            FailureCause::Io(msg) => write!(f, "io error: {msg}"),
+        }
+    }
+}
+
+/// A `(t, y)` slot that exhausted its retries and was marked failed. The
+/// rest of the grid keeps training and streaming to the store; re-running
+/// with `resume` re-trains exactly the failed slots.
+#[derive(Clone, Debug)]
+pub struct JobFailure {
+    pub t_idx: usize,
+    pub y: usize,
+    /// 0-based index of the final attempt (== retries consumed).
+    pub attempt: usize,
+    /// The final attempt's failure (earlier attempts may have differed).
+    pub cause: FailureCause,
+}
+
+/// Completion status of a coordinated run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunStatus {
+    /// Every scheduled job trained and persisted.
+    Complete,
+    /// Some slots failed permanently (see [`RunOutcome::failed_slots`]);
+    /// the survivors trained and streamed normally.
+    Partial,
+}
+
+/// Bounded exponential backoff between job retry attempts: 10 ms doubling
+/// per attempt, capped at 500 ms — enough to outlive transient I/O
+/// conditions without stalling the slot's queue.
+fn retry_backoff(attempt: usize) -> std::time::Duration {
+    let ms = 10u64.saturating_mul(1u64 << attempt.min(10)).min(500);
+    std::time::Duration::from_millis(ms)
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Outcome of a coordinated run.
 pub struct RunOutcome {
     /// The trained model; ensembles are `None` when streamed to disk only
@@ -229,6 +315,13 @@ pub struct RunOutcome {
     /// drained (the dynamic worker-budget rebalance; 0 with a single job
     /// worker).
     pub rebalanced_threads: usize,
+    /// [`RunStatus::Partial`] when any slot failed permanently.
+    pub status: RunStatus,
+    /// Slots that exhausted their retries, sorted by `(t_idx, y)`. Empty on
+    /// a complete run.
+    pub failed_slots: Vec<JobFailure>,
+    /// Jobs that succeeded only after at least one retry.
+    pub retried_slots: usize,
 }
 
 /// Run the improved training pipeline: prepare shared state once, schedule
@@ -267,14 +360,16 @@ pub fn run_training(
         .as_ref()
         .map(|dir| store::ModelStore::create(dir).expect("cannot create model store"));
 
-    // Job list, skipping already-stored slots on resume.
+    // Job list, skipping already-stored slots on resume. Presence alone is
+    // not enough: a slot interrupted mid-write or corrupted on disk fails
+    // `verify`, so resume re-trains it instead of shipping a broken model.
     let mut jobs: Vec<(usize, usize)> = Vec::with_capacity(n_t * n_y);
     for t_idx in 0..n_t {
         for y_idx in 0..n_y {
             let done = opts.resume
                 && store
                     .as_ref()
-                    .map(|s| s.contains(t_idx, y_idx))
+                    .map(|s| s.contains_valid(t_idx, y_idx))
                     .unwrap_or(false);
             if !done {
                 jobs.push((t_idx, y_idx));
@@ -301,10 +396,16 @@ pub fn run_training(
     let (job_workers, intra_threads) = (split.job_workers, split.intra);
     let mut job_cfg = cfg.clone();
     job_cfg.params.intra_threads = intra_threads;
+    // One shared deadline for the whole grid: jobs check it between
+    // boosting rounds and stop with whatever ensemble they have (round 0
+    // always runs, so even a zero budget yields a sampleable model).
+    job_cfg.params.deadline = opts.time_budget.map(|budget| t0 + budget);
     let job_cfg = &job_cfg;
 
     type Done = (usize, usize, Option<(crate::gbt::Booster, BinCuts)>, JobRecord);
     let completed: Mutex<Vec<Done>> = Mutex::new(Vec::with_capacity(jobs.len()));
+    let failures: Mutex<Vec<JobFailure>> = Mutex::new(Vec::new());
+    let retried = AtomicUsize::new(0);
     let next_job = AtomicUsize::new(0);
     let jobs_done = AtomicUsize::new(0);
 
@@ -338,31 +439,94 @@ pub fn run_training(
                 break;
             }
             let (t_idx, y_idx) = jobs[job_idx];
-            let jt0 = std::time::Instant::now();
-            let (booster, cuts) = train_job_with_cuts(&prep, job_cfg, t_idx, y_idx, exec);
-            let rec = JobRecord {
-                t_idx,
-                y: y_idx,
-                best_round: booster.best_round,
-                rounds_trained: booster.history.len(),
-                final_train_loss: booster.history.last().map(|h| h.train_loss).unwrap_or(0.0),
-                final_valid_loss: booster.history.last().and_then(|h| h.valid_loss),
-                seconds: jt0.elapsed().as_secs_f64(),
-                nbytes: booster.nbytes(),
-            };
-            // Issue 3: write to disk inside the worker, then drop from
-            // memory. The training cuts travel with the in-memory booster
-            // (they power the slot's quantized sampling engine); the store
-            // path drops them — models loaded from disk fall back to the
-            // float engine everywhere.
-            let keep = match &store {
-                Some(s) => {
-                    s.save(t_idx, y_idx, &booster).expect("store write failed");
-                    None
+            let slot_name = store::slot_stem(t_idx, y_idx);
+            // Job failure domain: each attempt is fenced with catch_unwind
+            // (the slot pool re-throws worker panics at the dispatch site
+            // and stays usable, so a panic anywhere in the attempt lands
+            // here), and store-write errors propagate as `io::Result`
+            // instead of unwinding the coordinator. Failed attempts retry
+            // with bounded backoff; an exhausted slot is recorded and the
+            // loop moves on — survivors keep streaming.
+            let mut attempt = 0usize;
+            loop {
+                let jt0 = std::time::Instant::now();
+                type Kept = Option<(crate::gbt::Booster, BinCuts)>;
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || -> std::io::Result<(Kept, JobRecord)> {
+                        if let Some(kind) = crate::util::faultplan::job_fault(job_idx, &slot_name)
+                        {
+                            match kind {
+                                crate::util::faultplan::FaultKind::Panic => {
+                                    panic!("injected fault: job {job_idx} ({slot_name})")
+                                }
+                                crate::util::faultplan::FaultKind::Io => {
+                                    return Err(std::io::Error::other(format!(
+                                        "injected I/O fault: job {job_idx} ({slot_name})"
+                                    )))
+                                }
+                            }
+                        }
+                        let (booster, cuts) =
+                            train_job_with_cuts(&prep, job_cfg, t_idx, y_idx, exec);
+                        let rec = JobRecord {
+                            t_idx,
+                            y: y_idx,
+                            best_round: booster.best_round,
+                            rounds_trained: booster.history.len(),
+                            final_train_loss: booster
+                                .history
+                                .last()
+                                .map(|h| h.train_loss)
+                                .unwrap_or(0.0),
+                            final_valid_loss: booster.history.last().and_then(|h| h.valid_loss),
+                            seconds: jt0.elapsed().as_secs_f64(),
+                            nbytes: booster.nbytes(),
+                            deadline_stopped: booster.stopped_by_deadline,
+                        };
+                        // Issue 3: write to disk inside the worker, then
+                        // drop from memory. The training cuts travel with
+                        // the in-memory booster (they power the slot's
+                        // quantized sampling engine); the store path drops
+                        // them — models loaded from disk fall back to the
+                        // float engine everywhere.
+                        let keep = match &store {
+                            Some(s) => {
+                                s.save(t_idx, y_idx, &booster)?;
+                                None
+                            }
+                            None => Some((booster, cuts)),
+                        };
+                        Ok((keep, rec))
+                    },
+                ));
+                let cause = match outcome {
+                    Ok(Ok((keep, rec))) => {
+                        if attempt > 0 {
+                            retried.fetch_add(1, Ordering::Relaxed);
+                        }
+                        completed.lock().unwrap().push((t_idx, y_idx, keep, rec));
+                        break;
+                    }
+                    Ok(Err(e)) => FailureCause::Io(e.to_string()),
+                    Err(payload) => FailureCause::Panic(panic_message(payload)),
+                };
+                if attempt >= opts.max_retries {
+                    eprintln!(
+                        "caloforest: job ({t_idx}, {y_idx}) failed permanently \
+                         after {} attempt(s): {cause}",
+                        attempt + 1
+                    );
+                    failures.lock().unwrap().push(JobFailure {
+                        t_idx,
+                        y: y_idx,
+                        attempt,
+                        cause,
+                    });
+                    break;
                 }
-                None => Some((booster, cuts)),
-            };
-            completed.lock().unwrap().push((t_idx, y_idx, keep, rec));
+                std::thread::sleep(retry_backoff(attempt));
+                attempt += 1;
+            }
             let done = jobs_done.fetch_add(1, Ordering::Relaxed);
             if done % 8 == 0 {
                 sample_mem(&timeline, &t0);
@@ -427,6 +591,12 @@ pub fn run_training(
     }
     report.total_seconds = t0.elapsed().as_secs_f64();
 
+    // Completion order varies with scheduling; sort for deterministic
+    // reporting (the set itself is schedule-independent for keyed plans).
+    let mut failed_slots = failures.into_inner().unwrap();
+    failed_slots.sort_by_key(|f| (f.t_idx, f.y));
+    let status = if failed_slots.is_empty() { RunStatus::Complete } else { RunStatus::Partial };
+
     RunOutcome {
         model,
         report,
@@ -436,6 +606,9 @@ pub fn run_training(
         intra_job_threads: intra_threads,
         effective_job_width: eff_width,
         rebalanced_threads: rebalanced.load(Ordering::Relaxed),
+        status,
+        failed_slots,
+        retried_slots: retried.load(Ordering::Relaxed),
     }
 }
 
@@ -506,6 +679,9 @@ mod tests {
         let out = run_training(&c, &x, Some(&y), &opts);
         // Streamed: in-memory model is empty, store holds everything.
         assert_eq!(out.model.n_trained(), 0);
+        assert_eq!(out.status, RunStatus::Complete);
+        assert!(out.failed_slots.is_empty());
+        assert_eq!(out.retried_slots, 0);
         let store = store::ModelStore::open(&dir).unwrap();
         let loaded = store.load_model().unwrap();
         assert!(loaded.is_complete());
@@ -603,6 +779,67 @@ mod tests {
                 let b1 = crate::gbt::serialize::to_bytes(seq.model.ensemble(t, yy));
                 let b2 = crate::gbt::serialize::to_bytes(par.model.ensemble(t, yy));
                 assert_eq!(b1, b2, "ensemble (t={t}, y={yy}) diverges");
+            }
+        }
+    }
+
+    #[test]
+    fn retry_backoff_doubles_and_caps() {
+        assert_eq!(retry_backoff(0).as_millis(), 10);
+        assert_eq!(retry_backoff(1).as_millis(), 20);
+        assert_eq!(retry_backoff(2).as_millis(), 40);
+        assert_eq!(retry_backoff(6).as_millis(), 500, "capped");
+        assert_eq!(retry_backoff(100).as_millis(), 500, "shift is clamped, no overflow");
+    }
+
+    #[test]
+    fn zero_time_budget_degrades_every_job_to_one_round() {
+        let (x, y) = data(40, 6);
+        let c = cfg();
+        let out = run_training(
+            &c,
+            &x,
+            Some(&y),
+            &RunOptions::new().with_workers(2).with_time_budget(std::time::Duration::ZERO),
+        );
+        // Degradation, not failure: every slot trained, every slot stopped
+        // at the deadline after its guaranteed first round.
+        assert_eq!(out.status, RunStatus::Complete);
+        assert!(out.model.is_complete());
+        assert_eq!(out.report.jobs.len(), 6);
+        assert_eq!(out.report.deadline_stopped_jobs(), 6);
+        for job in &out.report.jobs {
+            assert!(job.deadline_stopped);
+            assert_eq!(job.rounds_trained, 1, "min-one-round guarantee");
+        }
+        // The shallow model still samples.
+        let (g, _) =
+            crate::forest::generate(&out.model, &crate::forest::GenerateConfig::new(10, 7));
+        assert_eq!(g.rows, 10);
+        assert!(g.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn generous_time_budget_matches_unbudgeted_run() {
+        let (x, y) = data(30, 8);
+        let c = cfg();
+        let plain = run_training(&c, &x, Some(&y), &RunOptions::new().with_workers(2));
+        let budgeted = run_training(
+            &c,
+            &x,
+            Some(&y),
+            &RunOptions::new()
+                .with_workers(2)
+                .with_time_budget(std::time::Duration::from_secs(3600)),
+        );
+        assert_eq!(budgeted.report.deadline_stopped_jobs(), 0);
+        for t in 0..plain.model.n_t() {
+            for yy in 0..plain.model.n_y() {
+                assert_eq!(
+                    crate::gbt::serialize::to_bytes(plain.model.ensemble(t, yy)),
+                    crate::gbt::serialize::to_bytes(budgeted.model.ensemble(t, yy)),
+                    "budgeted ensemble (t={t}, y={yy}) diverges"
+                );
             }
         }
     }

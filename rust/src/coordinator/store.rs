@@ -1,9 +1,12 @@
 //! On-disk streaming model store (the paper's Issue 3 solution).
 //!
 //! Workers write each trained ensemble to `<dir>/tXXXX_yYYY.fbj` the moment
-//! training finishes (atomic rename), then drop it from memory. The store
-//! therefore bounds trained-model memory at O(1 ensemble) and doubles as a
-//! checkpoint: a crashed run resumes by skipping present files.
+//! training finishes (checksummed payload, fsync + atomic rename — see
+//! [`serialize::save`]), then drop it from memory. The store therefore
+//! bounds trained-model memory at O(1 ensemble) and doubles as a crash-safe
+//! checkpoint: a killed run resumes by skipping slots that are present
+//! *and* pass [`ModelStore::verify`], so truncated or bit-flipped files are
+//! re-trained rather than shipped.
 
 use crate::forest::model::ForestModel;
 use crate::gbt::{serialize, Booster};
@@ -16,27 +19,65 @@ pub struct ModelStore {
     dir: PathBuf,
 }
 
+/// Canonical stem for a `(t, y)` slot's files — also the key the fault
+/// plan's `io:` entries and the coordinator's `job:` name entries address.
+pub fn slot_stem(t_idx: usize, y: usize) -> String {
+    format!("t{t_idx:04}_y{y:03}")
+}
+
 impl ModelStore {
-    /// Create (or reuse) a store directory.
+    /// Create (or reuse) a store directory; stale `.tmp` leftovers from
+    /// interrupted writes are swept.
     pub fn create(dir: &Path) -> io::Result<ModelStore> {
         std::fs::create_dir_all(dir)?;
-        Ok(ModelStore { dir: dir.to_path_buf() })
+        let store = ModelStore { dir: dir.to_path_buf() };
+        store.sweep_tmp();
+        Ok(store)
     }
 
-    /// Open an existing store.
+    /// Open an existing store; stale `.tmp` leftovers are swept.
     pub fn open(dir: &Path) -> io::Result<ModelStore> {
         if !dir.is_dir() {
             return Err(io::Error::new(io::ErrorKind::NotFound, "store dir missing"));
         }
-        Ok(ModelStore { dir: dir.to_path_buf() })
+        let store = ModelStore { dir: dir.to_path_buf() };
+        store.sweep_tmp();
+        Ok(store)
+    }
+
+    /// Remove `.tmp` files a crashed writer left behind. Best-effort: the
+    /// atomic temp+rename protocol means a `.tmp` is never the only copy
+    /// of anything worth keeping.
+    fn sweep_tmp(&self) {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return };
+        for entry in entries.filter_map(|e| e.ok()) {
+            let path = entry.path();
+            if path.extension().is_some_and(|ext| ext == "tmp") {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
     }
 
     fn slot_path(&self, t_idx: usize, y: usize) -> PathBuf {
-        self.dir.join(format!("t{t_idx:04}_y{y:03}.fbj"))
+        self.dir.join(format!("{}.fbj", slot_stem(t_idx, y)))
     }
 
     pub fn contains(&self, t_idx: usize, y: usize) -> bool {
         self.slot_path(t_idx, y).exists()
+    }
+
+    /// Integrity-check one stored slot: checksummed files verify by CRC,
+    /// legacy un-trailered files by a full structural parse. `Err` means
+    /// missing, truncated, or corrupt.
+    pub fn verify(&self, t_idx: usize, y: usize) -> io::Result<()> {
+        serialize::verify_file(&self.slot_path(t_idx, y))
+    }
+
+    /// `contains` plus integrity: true only when the slot file exists *and*
+    /// verifies. The resume path uses this, so corrupt or truncated slots
+    /// are re-trained instead of exploding at sampling time.
+    pub fn contains_valid(&self, t_idx: usize, y: usize) -> bool {
+        self.contains(t_idx, y) && self.verify(t_idx, y).is_ok()
     }
 
     /// Persist one ensemble (atomic).
@@ -77,12 +118,14 @@ impl ModelStore {
         ForestModel::load_dir(&self.dir)
     }
 
-    /// Total bytes on disk.
+    /// Total bytes on disk, excluding `.tmp` leftovers from interrupted
+    /// writes (transient scratch, not stored models).
     pub fn disk_bytes(&self) -> u64 {
         std::fs::read_dir(&self.dir)
             .map(|entries| {
                 entries
                     .filter_map(|e| e.ok())
+                    .filter(|e| !e.path().extension().is_some_and(|ext| ext == "tmp"))
                     .filter_map(|e| e.metadata().ok())
                     .map(|m| m.len())
                     .sum()
@@ -172,5 +215,53 @@ mod tests {
         let dir = std::env::temp_dir().join("caloforest_no_such_store");
         let _ = std::fs::remove_dir_all(&dir);
         assert!(ModelStore::open(&dir).is_err());
+    }
+
+    #[test]
+    fn disk_bytes_skips_and_open_sweeps_stale_tmp() {
+        let dir = std::env::temp_dir().join("caloforest_test_store_tmp_sweep");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::create(&dir).unwrap();
+        let (_, b) = booster(7);
+        store.save(0, 0, &b).unwrap();
+        let clean_bytes = store.disk_bytes();
+        assert!(clean_bytes > 0);
+        // Plant a stale temp file, as a writer crashing mid-save would.
+        let stale = dir.join("t0009_y000.tmp");
+        std::fs::write(&stale, vec![0xAB; 4096]).unwrap();
+        assert_eq!(store.disk_bytes(), clean_bytes, "tmp scratch must not count");
+        // Reopening sweeps it; the real slot survives.
+        let reopened = ModelStore::open(&dir).unwrap();
+        assert!(!stale.exists(), "open must sweep stale .tmp files");
+        assert!(reopened.contains_valid(0, 0));
+        assert_eq!(reopened.disk_bytes(), clean_bytes);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn verify_flags_truncated_and_bitflipped_slots() {
+        let dir = std::env::temp_dir().join("caloforest_test_store_verify");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::create(&dir).unwrap();
+        let (_, b) = booster(9);
+        store.save(1, 0, &b).unwrap();
+        store.verify(1, 0).unwrap();
+        assert!(store.contains_valid(1, 0));
+        let path = dir.join("t0001_y000.fbj");
+        let image = std::fs::read(&path).unwrap();
+        // Truncated to half: exists, but not valid.
+        std::fs::write(&path, &image[..image.len() / 2]).unwrap();
+        assert!(store.contains(1, 0));
+        assert!(store.verify(1, 0).is_err());
+        assert!(!store.contains_valid(1, 0));
+        // Bit-flipped payload byte: CRC catches it.
+        let mut flipped = image.clone();
+        flipped[image.len() / 3] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(store.verify(1, 0).is_err());
+        assert!(store.load(1, 0).is_err(), "corrupt load must be Err, not panic");
+        // Missing slot verifies as Err too.
+        assert!(store.verify(3, 2).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -36,5 +36,5 @@ pub use model::{ForestModel, ModelKind};
 pub use sampler::{
     generate, generate_batched, Backend, GenerateConfig, LabelSampler, Solver,
 };
-pub use service::{SampleTicket, SamplerService, ServiceStats};
+pub use service::{QueueFull, SampleTicket, SamplerService, ServiceStats};
 pub use trainer::{train_forest, ForestTrainConfig, Materialized, Prepared, TrainReport};

@@ -62,6 +62,9 @@ struct Shared {
     served: AtomicUsize,
     batches: AtomicUsize,
     max_coalesced: AtomicUsize,
+    /// Queue bound: submissions that would push the queued depth past this
+    /// are rejected with [`QueueFull`]. `usize::MAX` = unbounded.
+    max_queue: AtomicUsize,
 }
 
 /// Completion handle for one submitted request.
@@ -76,7 +79,47 @@ impl SampleTicket {
             .recv()
             .expect("sampler service dropped before completing the request")
     }
+
+    /// Block for at most `timeout`. On timeout the ticket comes back in
+    /// `Err`, so the caller can keep waiting (or drop it to abandon the
+    /// request — the scheduler just discards the samples).
+    pub fn wait_timeout(
+        self,
+        timeout: std::time::Duration,
+    ) -> Result<(Matrix, Vec<u32>), SampleTicket> {
+        match self.done.recv_timeout(timeout) {
+            Ok(result) => Ok(result),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(self),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                panic!("sampler service dropped before completing the request")
+            }
+        }
+    }
 }
+
+/// A submission was rejected because it would overflow the service's
+/// bounded request queue (see [`SamplerService::with_max_queue`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueFull {
+    /// Requests already queued at rejection time.
+    pub queued: usize,
+    /// Size of the rejected submission group.
+    pub submitted: usize,
+    /// The configured bound.
+    pub max: usize,
+}
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "sampler queue full: {} queued + {} submitted > max {}",
+            self.queued, self.submitted, self.max
+        )
+    }
+}
+
+impl std::error::Error for QueueFull {}
 
 /// Service counters (observability + the coalescing tests).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -87,6 +130,8 @@ pub struct ServiceStats {
     pub batches_run: usize,
     /// Largest number of requests coalesced into a single solve.
     pub max_coalesced: usize,
+    /// Requests queued but not yet claimed by the scheduler right now.
+    pub queue_depth: usize,
 }
 
 /// A batching sampler: owns one [`ForestModel`] (engines precompiled), one
@@ -115,6 +160,7 @@ impl SamplerService {
             served: AtomicUsize::new(0),
             batches: AtomicUsize::new(0),
             max_coalesced: AtomicUsize::new(0),
+            max_queue: AtomicUsize::new(usize::MAX),
         });
         let on_thread = Arc::clone(&shared);
         let scheduler = std::thread::Builder::new()
@@ -124,27 +170,44 @@ impl SamplerService {
         SamplerService { shared, scheduler: Some(scheduler) }
     }
 
-    /// Queue one request; returns immediately with its completion handle.
-    pub fn submit(&self, cfg: GenerateConfig) -> SampleTicket {
-        self.submit_many(std::slice::from_ref(&cfg))
+    /// Bound the request queue: a submission that would push the queued
+    /// depth past `max` is rejected whole with [`QueueFull`] instead of
+    /// growing the queue without limit. Builder-style; unbounded by
+    /// default.
+    pub fn with_max_queue(self, max: usize) -> SamplerService {
+        self.shared.max_queue.store(max, Ordering::Relaxed);
+        self
+    }
+
+    /// Queue one request; returns immediately with its completion handle,
+    /// or [`QueueFull`] when the bounded queue cannot take it.
+    pub fn submit(&self, cfg: GenerateConfig) -> Result<SampleTicket, QueueFull> {
+        Ok(self
+            .submit_many(std::slice::from_ref(&cfg))?
             .pop()
-            .expect("one request in, one ticket out")
+            .expect("one request in, one ticket out"))
     }
 
     /// Queue a group of requests atomically. The whole group lands in the
     /// queue before the scheduler can drain (the wake-up is signalled while
     /// the queue lock is held), so one `submit_many` of a single config
-    /// class is always eligible for one coalesced solve.
-    pub fn submit_many(&self, cfgs: &[GenerateConfig]) -> Vec<SampleTicket> {
+    /// class is always eligible for one coalesced solve. All-or-nothing
+    /// against the queue bound: a group that does not fit is rejected whole
+    /// (no partially queued groups).
+    pub fn submit_many(&self, cfgs: &[GenerateConfig]) -> Result<Vec<SampleTicket>, QueueFull> {
+        let max = self.shared.max_queue.load(Ordering::Relaxed);
         let mut tickets = Vec::with_capacity(cfgs.len());
         let mut queue = self.shared.queue.lock().unwrap();
+        if queue.len().saturating_add(cfgs.len()) > max {
+            return Err(QueueFull { queued: queue.len(), submitted: cfgs.len(), max });
+        }
         for cfg in cfgs {
             let (tx, rx) = mpsc::channel();
             queue.push_back(Request { cfg: *cfg, done: tx });
             tickets.push(SampleTicket { done: rx });
         }
         self.shared.wake.notify_all();
-        tickets
+        Ok(tickets)
     }
 
     pub fn model(&self) -> &ForestModel {
@@ -161,6 +224,7 @@ impl SamplerService {
             requests_served: self.shared.served.load(Ordering::Relaxed),
             batches_run: self.shared.batches.load(Ordering::Relaxed),
             max_coalesced: self.shared.max_coalesced.load(Ordering::Relaxed),
+            queue_depth: self.shared.queue.lock().unwrap().len(),
         }
     }
 }
@@ -256,7 +320,7 @@ mod tests {
         // Solo references from a plain model before the service takes it.
         let solo: Vec<(Matrix, Vec<u32>)> = cfgs.iter().map(|c| generate(&model, c)).collect();
         let service = SamplerService::new(model, 2);
-        let tickets = service.submit_many(&cfgs);
+        let tickets = service.submit_many(&cfgs).unwrap();
         for (ticket, (sx, sl)) in tickets.into_iter().zip(solo) {
             let (bx, bl) = ticket.wait();
             assert_eq!(sx.data, bx.data, "coalesced output diverged from solo");
@@ -278,7 +342,7 @@ mod tests {
         let solo_a = generate(&model, &a);
         let solo_b = generate(&model, &b);
         let service = SamplerService::new(model, 1);
-        let tickets = service.submit_many(&[a, b, a, b]);
+        let tickets = service.submit_many(&[a, b, a, b]).unwrap();
         let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
         assert_eq!(results[0].0.data, solo_a.0.data);
         assert_eq!(results[1].0.data, solo_b.0.data);
@@ -298,7 +362,7 @@ mod tests {
         let handles: Vec<_> = (0..4)
             .map(|_| {
                 let svc = std::sync::Arc::clone(&service);
-                std::thread::spawn(move || svc.submit(GenerateConfig::new(20, 9)).wait())
+                std::thread::spawn(move || svc.submit(GenerateConfig::new(20, 9)).unwrap().wait())
             })
             .collect();
         for h in handles {
@@ -314,9 +378,50 @@ mod tests {
         let model = small_model();
         let expect = generate(&model, &GenerateConfig::new(15, 3));
         let service = SamplerService::new(model, 1);
-        let ticket = service.submit(GenerateConfig::new(15, 3));
+        let ticket = service.submit(GenerateConfig::new(15, 3)).unwrap();
         drop(service);
         let (gx, _) = ticket.wait();
         assert_eq!(gx.data, expect.0.data);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_oversized_groups_whole() {
+        let service = SamplerService::new(small_model(), 1).with_max_queue(4);
+        // A group larger than the bound is rejected before the scheduler
+        // can drain anything — deterministic regardless of timing.
+        let cfgs: Vec<GenerateConfig> =
+            (0..6).map(|i| GenerateConfig::new(10, i as u64)).collect();
+        let err = service.submit_many(&cfgs).unwrap_err();
+        assert_eq!(err.submitted, 6);
+        assert_eq!(err.max, 4);
+        assert!(err.to_string().contains("queue full"), "{err}");
+        // Nothing from the rejected group was queued or served.
+        let fitting = service.submit_many(&cfgs[..3]).unwrap();
+        for t in fitting {
+            t.wait();
+        }
+        let stats = service.stats();
+        assert_eq!(stats.requests_served, 3);
+        assert_eq!(stats.queue_depth, 0, "drained queue reports empty: {stats:?}");
+    }
+
+    #[test]
+    fn wait_timeout_returns_ticket_then_result() {
+        let model = small_model();
+        let expect = generate(&model, &GenerateConfig::new(12, 21));
+        let service = SamplerService::new(model, 1);
+        // A zero timeout on a just-submitted request typically expires
+        // first; either way the ticket survives to deliver the samples.
+        let mut ticket = service.submit(GenerateConfig::new(12, 21)).unwrap();
+        loop {
+            match ticket.wait_timeout(std::time::Duration::from_millis(5)) {
+                Ok((gx, gl)) => {
+                    assert_eq!(gx.data, expect.0.data);
+                    assert_eq!(gl, expect.1);
+                    break;
+                }
+                Err(back) => ticket = back,
+            }
+        }
     }
 }

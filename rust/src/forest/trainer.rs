@@ -256,6 +256,9 @@ pub struct JobRecord {
     pub seconds: f64,
     /// Serialized ensemble size.
     pub nbytes: usize,
+    /// True when the job hit the run's wall-clock budget and stopped with a
+    /// shorter (but valid) ensemble — `rounds_trained` says how far it got.
+    pub deadline_stopped: bool,
 }
 
 /// Aggregate training report.
@@ -283,6 +286,11 @@ impl TrainReport {
 
     pub fn total_nbytes(&self) -> usize {
         self.jobs.iter().map(|j| j.nbytes).sum()
+    }
+
+    /// Jobs that stopped at the run's wall-clock budget (shorter ensembles).
+    pub fn deadline_stopped_jobs(&self) -> usize {
+        self.jobs.iter().filter(|j| j.deadline_stopped).count()
     }
 }
 
@@ -478,6 +486,7 @@ pub fn train_forest(
                 final_valid_loss: booster.history.last().and_then(|h| h.valid_loss),
                 seconds: t0.elapsed().as_secs_f64(),
                 nbytes: booster.nbytes(),
+                deadline_stopped: booster.stopped_by_deadline,
             };
             report.jobs.push(rec);
             model.set_ensemble_with_cuts(t_idx, y_idx, booster, cuts);

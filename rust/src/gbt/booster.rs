@@ -46,6 +46,11 @@ pub struct TrainParams {
     /// mid-run by rebalancing. 1 runs fully sequentially; any value
     /// produces bit-identical models.
     pub intra_threads: usize,
+    /// Wall-clock deadline for training (the coordinator's shared
+    /// time-budget instant). Checked once per boosting round *after* the
+    /// first: a past-deadline booster still trains one round, so every job
+    /// yields a valid (if shallow) ensemble. `None` = unbudgeted.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl Default for TrainParams {
@@ -63,6 +68,7 @@ impl Default for TrainParams {
             early_stopping_rounds: 0,
             hist_subtraction: true,
             intra_threads: 1,
+            deadline: None,
         }
     }
 }
@@ -104,6 +110,9 @@ pub struct Booster {
     pub best_round: usize,
     /// Per-round losses.
     pub history: Vec<EvalRecord>,
+    /// True when training stopped at [`TrainParams::deadline`] before
+    /// reaching `n_trees` rounds (the ensemble is valid, just shorter).
+    pub stopped_by_deadline: bool,
 }
 
 impl Booster {
@@ -257,6 +266,7 @@ impl Booster {
             trees: Vec::new(),
             best_round: 0,
             history: Vec::new(),
+            stopped_by_deadline: false,
         };
 
         let rows: Vec<u32> = (0..n as u32).collect();
@@ -281,6 +291,14 @@ impl Booster {
             None => (None, None),
         };
         for round in 0..params.n_trees {
+            // Wall-clock budget (ControlFlow-style): stop *between* rounds
+            // once the shared deadline passes, keeping whatever ensemble
+            // exists. Round 0 always runs, so a budgeted job never returns
+            // an empty (unsampleable) booster.
+            if deadline_reached(params.deadline, round).is_break() {
+                booster.stopped_by_deadline = true;
+                break;
+            }
             // Per-row gradients in fixed chunks on the pool (disjoint
             // elementwise writes: bit-identical for any worker count).
             params
@@ -418,6 +436,21 @@ impl Booster {
     /// contiguous 16-byte-node layout (see [`super::packed_native`]).
     pub fn compile(&self) -> super::packed_native::NativeForest {
         super::packed_native::NativeForest::compile(self)
+    }
+}
+
+/// The per-round time-budget check: `Break` once the deadline has passed,
+/// except on round 0 (the minimum-one-round guarantee). Factored out so the
+/// policy is unit-testable without timing a real boosting run.
+fn deadline_reached(
+    deadline: Option<std::time::Instant>,
+    round: usize,
+) -> std::ops::ControlFlow<()> {
+    match deadline {
+        Some(d) if round > 0 && std::time::Instant::now() >= d => {
+            std::ops::ControlFlow::Break(())
+        }
+        _ => std::ops::ControlFlow::Continue(()),
     }
 }
 
@@ -816,6 +849,65 @@ mod tests {
         assert!(
             (rmse - recorded).abs() < 1e-4,
             "router mismatch: predict rmse {rmse} vs recorded {recorded}"
+        );
+    }
+
+    #[test]
+    fn deadline_policy_always_runs_round_zero() {
+        use std::ops::ControlFlow;
+        use std::time::{Duration, Instant};
+        let past = Instant::now() - Duration::from_secs(1);
+        let far = Instant::now() + Duration::from_secs(3600);
+        assert_eq!(deadline_reached(None, 0), ControlFlow::Continue(()));
+        assert_eq!(deadline_reached(None, 7), ControlFlow::Continue(()));
+        assert_eq!(deadline_reached(Some(past), 0), ControlFlow::Continue(()));
+        assert_eq!(deadline_reached(Some(past), 1), ControlFlow::Break(()));
+        assert_eq!(deadline_reached(Some(far), 1), ControlFlow::Continue(()));
+    }
+
+    #[test]
+    fn expired_deadline_trains_exactly_one_round() {
+        let mut rng = Rng::new(91);
+        let x = Matrix::randn(150, 3, &mut rng);
+        let mut y = Matrix::zeros(150, 2);
+        for r in 0..150 {
+            y.set(r, 0, x.at(r, 0));
+            y.set(r, 1, x.at(r, 1) - x.at(r, 2));
+        }
+        let params = TrainParams {
+            n_trees: 12,
+            max_depth: 3,
+            deadline: Some(std::time::Instant::now()),
+            ..Default::default()
+        };
+        let b = Booster::train(&x.view(), &y.view(), params, None);
+        assert!(b.stopped_by_deadline);
+        assert_eq!(b.n_rounds(), 1, "min-one-round guarantee");
+        assert_eq!(b.history.len(), 1);
+        assert_eq!(b.best_round, 0);
+        // The one-round ensemble is a valid predictor.
+        assert_eq!(b.predict(&x.view()).data.len(), 150 * 2);
+    }
+
+    #[test]
+    fn generous_deadline_is_bit_identical_to_unbudgeted() {
+        let mut rng = Rng::new(92);
+        let x = Matrix::randn(120, 3, &mut rng);
+        let mut y = Matrix::zeros(120, 1);
+        for r in 0..120 {
+            y.set(r, 0, (x.at(r, 0) - x.at(r, 2)).tanh());
+        }
+        let base = TrainParams { n_trees: 6, max_depth: 3, ..Default::default() };
+        let budgeted = TrainParams {
+            deadline: Some(std::time::Instant::now() + std::time::Duration::from_secs(3600)),
+            ..base
+        };
+        let b1 = Booster::train(&x.view(), &y.view(), base, None);
+        let b2 = Booster::train(&x.view(), &y.view(), budgeted, None);
+        assert!(!b2.stopped_by_deadline);
+        assert_eq!(
+            super::super::serialize::to_bytes(&b1),
+            super::super::serialize::to_bytes(&b2)
         );
     }
 }

@@ -412,6 +412,7 @@ mod tests {
                     trees: vec![stump.clone(), split],
                     best_round: 1,
                     history: Vec::new(),
+                    stopped_by_deadline: false,
                 };
                 let mut reference = vec![0.0f32; x.rows];
                 predict_batch(&b, &x.view(), &mut reference);

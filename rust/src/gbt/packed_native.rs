@@ -304,6 +304,7 @@ mod tests {
             trees: vec![stump, split],
             best_round: 1,
             history: Vec::new(),
+            stopped_by_deadline: false,
         };
         let nf = b.compile();
         let x = Matrix::from_vec(

@@ -4,6 +4,16 @@
 //! Issue 3 solution): trained boosters are streamed to disk as soon as a
 //! training job finishes, freeing their memory and doubling as resumable
 //! checkpoints. Little-endian, versioned, with a magic header.
+//!
+//! On-disk files additionally carry a 16-byte integrity trailer after the
+//! payload: `payload_len: u64 LE`, `crc32: u32 LE` (IEEE, over the
+//! payload), then the trailer magic `FBC1` as the file's last 4 bytes.
+//! [`load`]/[`verify_file`] validate it, so a truncated or bit-flipped
+//! checkpoint surfaces as `InvalidData` at open time instead of a garbage
+//! model at sampling time. Pre-trailer files (written before the
+//! fault-tolerance PR) still load, with a one-time warning. The in-memory
+//! [`to_bytes`]/[`from_bytes`] pair stays trailer-free — byte equality of
+//! `to_bytes` output is the model-identity check used across the tests.
 
 use super::booster::{Booster, TrainParams};
 use super::objective::Objective;
@@ -11,6 +21,68 @@ use super::tree::{Tree, TreeKind};
 use std::io::{self, Read, Write};
 
 const MAGIC: &[u8; 4] = b"FBJ1";
+/// Last 4 bytes of every trailered file.
+const TRAILER_MAGIC: &[u8; 4] = b"FBC1";
+/// Trailer layout: `u64` payload length + `u32` CRC32 + magic.
+const TRAILER_LEN: usize = 16;
+
+/// CRC32 (IEEE 802.3, reflected, polynomial `0xEDB88320`) — the zero-dep
+/// checksum guarding stored checkpoints.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    const TABLE: [u32; 256] = crc32_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// File-image encoding: serialized payload plus the integrity trailer.
+pub fn to_file_bytes(b: &Booster) -> Vec<u8> {
+    let mut out = to_bytes(b);
+    let len = out.len() as u64;
+    let crc = crc32(&out);
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(TRAILER_MAGIC);
+    out
+}
+
+/// Split a file image into its payload, validating the integrity trailer.
+/// Returns `(payload, had_trailer)`; `had_trailer == false` means a
+/// pre-trailer legacy file (the whole buffer is the payload, unverified).
+/// A present-but-inconsistent trailer (bad length or CRC) is `InvalidData`.
+pub fn checked_payload(buf: &[u8]) -> io::Result<(&[u8], bool)> {
+    if buf.len() < TRAILER_LEN || &buf[buf.len() - 4..] != TRAILER_MAGIC {
+        return Ok((buf, false));
+    }
+    let t = buf.len() - TRAILER_LEN;
+    let len = u64::from_le_bytes(buf[t..t + 8].try_into().unwrap());
+    let crc = u32::from_le_bytes(buf[t + 8..t + 12].try_into().unwrap());
+    if len != t as u64 {
+        return Err(bad("trailer length mismatch (truncated or corrupt model file)"));
+    }
+    if crc32(&buf[..t]) != crc {
+        return Err(bad("checksum mismatch (corrupt model file)"));
+    }
+    Ok((&buf[..t], true))
+}
 
 /// Serialize a booster into a byte buffer.
 pub fn to_bytes(b: &Booster) -> Vec<u8> {
@@ -131,25 +203,76 @@ pub fn from_bytes(buf: &[u8]) -> io::Result<Booster> {
         trees,
         best_round,
         history: Vec::new(),
+        stopped_by_deadline: false,
     })
 }
 
-/// Save to a file (atomic via temp + rename so crashes never leave partial
-/// checkpoints the resume path would trip on).
+/// Save to a file: checksummed payload, written to a temp file, fsynced,
+/// atomically renamed into place, then a best-effort directory fsync — a
+/// crash at any point leaves either the old file or the new one, never a
+/// partial checkpoint the resume path would trip on.
 pub fn save(b: &Booster, path: &std::path::Path) -> io::Result<()> {
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+    if let Some(kind) = crate::util::faultplan::io_fault(stem) {
+        match kind {
+            crate::util::faultplan::FaultKind::Panic => {
+                panic!("injected fault: save {stem}")
+            }
+            crate::util::faultplan::FaultKind::Io => {
+                return Err(io::Error::other(format!("injected I/O fault: save {stem}")))
+            }
+        }
+    }
     let tmp = path.with_extension("tmp");
     {
         let mut f = std::fs::File::create(&tmp)?;
-        f.write_all(&to_bytes(b))?;
+        f.write_all(&to_file_bytes(b))?;
         f.sync_all()?;
     }
-    std::fs::rename(&tmp, path)
+    std::fs::rename(&tmp, path)?;
+    // Durability of the rename itself needs the directory synced; failure
+    // here never corrupts (the data file is already synced), so best-effort.
+    if let Some(parent) = path.parent() {
+        if let Ok(dir) = std::fs::File::open(parent) {
+            let _ = dir.sync_all();
+        }
+    }
+    Ok(())
 }
 
-/// Load from a file.
+/// Load from a file, validating the integrity trailer when present.
+/// Legacy un-trailered files load unverified with a one-time warning.
 pub fn load(path: &std::path::Path) -> io::Result<Booster> {
     let buf = std::fs::read(path)?;
-    from_bytes(&buf)
+    let (payload, trailered) = checked_payload(&buf)?;
+    if !trailered {
+        warn_legacy(path);
+    }
+    from_bytes(payload)
+}
+
+/// Integrity check without materializing the model: trailered files verify
+/// by CRC; legacy files fall back to a full structural parse.
+pub fn verify_file(path: &std::path::Path) -> io::Result<()> {
+    let buf = std::fs::read(path)?;
+    let (payload, trailered) = checked_payload(&buf)?;
+    if !trailered {
+        from_bytes(payload)?;
+    }
+    Ok(())
+}
+
+fn warn_legacy(path: &std::path::Path) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "caloforest: loading un-checksummed legacy model file {} \
+             (re-save to add the integrity trailer); further legacy loads \
+             will not be reported",
+            path.display()
+        );
+    }
 }
 
 fn bad(msg: &str) -> io::Error {
@@ -283,5 +406,74 @@ mod tests {
         for cut in [5usize, 20, 40, bytes.len() - 3] {
             assert!(from_bytes(&bytes[..cut]).is_err(), "cut at {cut} must error");
         }
+    }
+
+    #[test]
+    fn crc32_known_answers() {
+        // IEEE 802.3 check value for the standard test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn trailer_guards_truncation_and_bitflips() {
+        let (_, b) = trained(TreeKind::Multi);
+        let dir = std::env::temp_dir().join("caloforest_test_serialize_trailer");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.fbj");
+        save(&b, &path).unwrap();
+        let image = std::fs::read(&path).unwrap();
+        assert_eq!(image.len(), to_bytes(&b).len() + TRAILER_LEN);
+        verify_file(&path).unwrap();
+
+        // Truncation into the payload: the trailer magic is gone, so the
+        // legacy structural parse runs and rejects the half-file.
+        std::fs::write(&path, &image[..image.len() / 2]).unwrap();
+        assert!(verify_file(&path).is_err());
+        assert!(load(&path).is_err());
+
+        // A single flipped payload bit fails the CRC.
+        let mut flipped = image.clone();
+        let mid = (flipped.len() - TRAILER_LEN) / 2;
+        flipped[mid] ^= 0x40;
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(verify_file(&path).is_err());
+        assert!(load(&path).is_err());
+
+        // Intact image round-trips to the identical model.
+        std::fs::write(&path, &image).unwrap();
+        assert_eq!(to_bytes(&load(&path).unwrap()), to_bytes(&b));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn legacy_untrailered_files_still_load() {
+        let (x, b) = trained(TreeKind::Single);
+        let dir = std::env::temp_dir().join("caloforest_test_serialize_legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.fbj");
+        // A pre-trailer file is exactly the raw payload.
+        std::fs::write(&path, to_bytes(&b)).unwrap();
+        verify_file(&path).unwrap();
+        let b2 = load(&path).unwrap();
+        assert_eq!(b.predict(&x.view()).data, b2.predict(&x.view()).data);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn injected_io_fault_fails_save_then_clears() {
+        let (_, b) = trained(TreeKind::Single);
+        let dir = std::env::temp_dir().join("caloforest_test_serialize_fault");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("faulted.fbj");
+        let guard = crate::util::faultplan::scoped("io:faulted:once");
+        let err = save(&b, &path).unwrap_err();
+        assert!(err.to_string().contains("injected I/O fault"));
+        assert!(!path.exists(), "faulted save must not create the file");
+        // The once-entry drained: the retry succeeds.
+        save(&b, &path).unwrap();
+        drop(guard);
+        verify_file(&path).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -71,17 +71,24 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         .opt("intra", "0", "threads inside each training job (0 = auto split)")
         .opt("seed", "0", "seed")
         .opt("store", "results/model_store", "model store directory")
-        .flag("resume", "resume from existing store")
+        .opt("retries", "2", "per-job retries before a slot is marked failed")
+        .opt("time-budget", "0", "wall-clock training budget in seconds (0 = none)")
+        .flag("resume", "resume from existing store (re-trains corrupt slots)")
         .parse(argv)?;
 
     let (x, y) = load_dataset(&args)?;
     let cfg = forest_cfg_from(&args);
-    let opts = caloforest::coordinator::RunOptions::new()
+    let mut opts = caloforest::coordinator::RunOptions::new()
         .with_workers(args.get_usize("workers"))
         .with_intra_job_threads(args.get_usize("intra"))
         .with_store_dir(args.get("store"))
         .with_resume(args.get_bool("resume"))
+        .with_max_retries(args.get_usize("retries"))
         .with_track_memory(true);
+    let budget_secs = args.get_f64("time-budget");
+    if budget_secs > 0.0 {
+        opts = opts.with_time_budget(std::time::Duration::from_secs_f64(budget_secs));
+    }
     let out = caloforest::coordinator::run_training(&cfg, &x, y.as_deref(), &opts);
     println!(
         "trained {} ensembles in {:.2}s (peak heap {}, {} job workers x {} intra threads), store: {}",
@@ -92,6 +99,32 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         out.intra_job_threads,
         args.get("store"),
     );
+    if out.retried_slots > 0 {
+        println!("{} slot(s) succeeded after retries", out.retried_slots);
+    }
+    let stopped = out.report.deadline_stopped_jobs();
+    if stopped > 0 {
+        println!(
+            "{stopped} job(s) stopped at the {budget_secs}s time budget (shorter ensembles; \
+             see per-job rounds in the report)"
+        );
+    }
+    if out.status == caloforest::coordinator::RunStatus::Partial {
+        for f in &out.failed_slots {
+            eprintln!(
+                "FAILED slot (t={}, y={}) after {} attempt(s): {}",
+                f.t_idx,
+                f.y,
+                f.attempt + 1,
+                f.cause
+            );
+        }
+        return Err(format!(
+            "partial run: {} slot(s) failed; survivors are in the store — rerun with \
+             --resume to re-train the failed slots",
+            out.failed_slots.len()
+        ));
+    }
     Ok(())
 }
 

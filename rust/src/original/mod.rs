@@ -283,6 +283,7 @@ pub fn merge_single_output(parts: Vec<Booster>) -> Booster {
         trees: Vec::with_capacity(n_rounds * p),
         best_round: n_rounds.saturating_sub(1),
         history: Vec::new(),
+        stopped_by_deadline: false,
     };
     for round in 0..n_rounds {
         for part in &parts {

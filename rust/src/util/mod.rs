@@ -14,6 +14,8 @@
 //!   `cargo bench` targets.
 //! * [`prop`] — a minimal property-based testing harness (randomized
 //!   generators + counterexample reporting) used by the test suite.
+//! * [`faultplan`] — deterministic fault injection (env-keyed panic/I/O
+//!   faults at named sites) driving the fault-tolerance test surface.
 
 pub mod rng;
 pub mod json;
@@ -21,6 +23,7 @@ pub mod cli;
 pub mod stats;
 pub mod bench;
 pub mod prop;
+pub mod faultplan;
 
 pub use rng::Rng;
 pub use json::Json;

@@ -76,10 +76,11 @@ fn calo_pipeline_beats_shuffled_baseline() {
 
 #[test]
 fn store_survives_corrupt_checkpoint() {
-    // Failure injection: a truncated ensemble file must not poison resume —
-    // the coordinator retrains the corrupted slot... (it skips slots by file
-    // presence, so corrupting a file then loading must error loudly, and
-    // deleting it must resume cleanly).
+    // Failure injection: a corrupt ensemble file must not poison the store —
+    // loading must error loudly, and a delete-then-resume retrains exactly
+    // that slot. (tests/fault_tolerance.rs covers the stronger path where
+    // resume itself detects corrupt-but-present slots via the checksum
+    // trailer and re-trains them in place.)
     let mut rng = Rng::new(9);
     let x = Matrix::randn(40, 2, &mut rng);
     let cfg = ForestTrainConfig {

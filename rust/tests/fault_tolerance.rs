@@ -1,0 +1,255 @@
+//! Fault-tolerance acceptance suite: job failure domains, the checksummed
+//! crash-safe store, wall-clock budgets, and the deterministic fault plan.
+//!
+//! Every test installs a scoped fault plan (possibly empty), which also
+//! serializes the suite — plans never leak between concurrent tests. Under
+//! the CI fault leg (`CALOFOREST_FAULT_PLAN` set) the scoped plans shadow
+//! the environment plan except in `env_fault_plan_smoke`, which replays it.
+
+use caloforest::coordinator::store::ModelStore;
+use caloforest::coordinator::{run_training, FailureCause, RunOptions, RunStatus};
+use caloforest::forest::{generate, ForestTrainConfig, GenerateConfig};
+use caloforest::gbt::TrainParams;
+use caloforest::tensor::Matrix;
+use caloforest::util::faultplan;
+use caloforest::util::prop::worker_widths;
+use caloforest::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+/// Coordinator width for every run in this suite: the CI matrix leg's
+/// `CALOFOREST_TEST_WORKERS` pin when set, else the widest default sweep
+/// width. Fault semantics (which slots fail, what resumes) must not depend
+/// on this.
+fn workers() -> usize {
+    *worker_widths().last().unwrap()
+}
+
+fn data(n: usize, seed: u64) -> (Matrix, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut x = Matrix::randn(n, 3, &mut rng);
+    let y: Vec<u32> = (0..n).map(|i| (i % 2) as u32).collect();
+    for r in 0..n {
+        let shift = if y[r] == 0 { -2.0 } else { 2.0 };
+        x.set(r, 0, x.at(r, 0) + shift);
+    }
+    (x, y)
+}
+
+/// 3 timesteps × 2 classes = 6 jobs, scheduled t-major:
+/// job 0 = t0000_y000, job 1 = t0000_y001, …, job 5 = t0002_y001.
+fn cfg() -> ForestTrainConfig {
+    ForestTrainConfig {
+        n_t: 3,
+        k_dup: 4,
+        params: TrainParams { n_trees: 4, max_depth: 3, ..Default::default() },
+        seed: 3,
+        ..Default::default()
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("caloforest_fault_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Byte-compare every slot file + meta.json of two stores.
+fn assert_stores_identical(a: &Path, b: &Path, n_t: usize, n_y: usize) {
+    for t in 0..n_t {
+        for y in 0..n_y {
+            let name = format!("t{t:04}_y{y:03}.fbj");
+            let fa = std::fs::read(a.join(&name)).expect("slot missing in reference store");
+            let fb = std::fs::read(b.join(&name)).expect("slot missing in resumed store");
+            assert_eq!(fa, fb, "slot {name} differs between stores");
+        }
+    }
+    assert_eq!(
+        std::fs::read(a.join("meta.json")).unwrap(),
+        std::fs::read(b.join("meta.json")).unwrap(),
+        "meta.json differs between stores"
+    );
+}
+
+#[test]
+fn faulted_grid_survives_and_reports_failed_slots() {
+    // job 1 (t0000_y001) panics on every attempt ⇒ exhausts the 2 retries
+    // and is marked failed; slot t0001_y000's first store write I/O-faults
+    // once ⇒ the retry succeeds; job t0002_y000 panics on its first
+    // attempt only ⇒ the retry succeeds.
+    let guard = faultplan::scoped("job:1:panic,io:t0001_y000:once,job:t0002_y000:panic@1");
+    let (x, y) = data(40, 10);
+    let c = cfg();
+    let dir = tmp("failure_domains");
+    let opts = RunOptions::new().with_workers(workers()).with_store_dir(dir.clone());
+    let out = run_training(&c, &x, Some(&y), &opts);
+
+    // The coordinator never unwound: survivors trained and streamed.
+    assert_eq!(out.status, RunStatus::Partial);
+    assert_eq!(out.report.jobs.len(), 5);
+    assert_eq!(out.retried_slots, 2, "one I/O retry + one panic retry succeeded");
+    assert_eq!(out.failed_slots.len(), 1);
+    let failure = &out.failed_slots[0];
+    assert_eq!((failure.t_idx, failure.y), (0, 1));
+    assert_eq!(failure.attempt, 2, "default max_retries = 2 ⇒ final attempt index 2");
+    match &failure.cause {
+        FailureCause::Panic(msg) => assert!(msg.contains("injected fault"), "{msg}"),
+        other => panic!("expected a panic cause, got {other:?}"),
+    }
+
+    // The store holds exactly the survivors, all valid; the partial model
+    // loads (no panic) and reports itself incomplete.
+    let store = ModelStore::open(&dir).unwrap();
+    assert!(!store.contains(0, 1), "failed slot must not be persisted");
+    for (t, yy) in [(0, 0), (1, 0), (1, 1), (2, 0), (2, 1)] {
+        assert!(store.contains_valid(t, yy), "survivor ({t}, {yy}) missing or invalid");
+    }
+    let partial = store.load_model().unwrap();
+    assert!(!partial.is_complete());
+
+    // A clean resume re-trains exactly the failed slot.
+    drop(guard);
+    let _clean = faultplan::scoped("");
+    let out2 = run_training(&c, &x, Some(&y), &opts.clone().with_resume(true));
+    assert_eq!(out2.status, RunStatus::Complete);
+    assert_eq!(out2.report.jobs.len(), 1);
+    assert_eq!((out2.report.jobs[0].t_idx, out2.report.jobs[0].y), (0, 1));
+    assert!(ModelStore::open(&dir).unwrap().load_model().unwrap().is_complete());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn killed_then_resumed_store_is_byte_identical_to_uninterrupted() {
+    let (x, y) = data(40, 20);
+    let c = cfg();
+    let dir_ref = tmp("resume_reference");
+    let dir_crash = tmp("resume_crashed");
+
+    // Reference: one uninterrupted run.
+    {
+        let _clean = faultplan::scoped("");
+        let opts = RunOptions::new().with_workers(workers()).with_store_dir(dir_ref.clone());
+        assert_eq!(run_training(&c, &x, Some(&y), &opts).status, RunStatus::Complete);
+    }
+
+    // "Crash" half the grid: jobs 3–5 fail every attempt, so only the
+    // first half of the job list lands in the store — the state a killed
+    // run leaves behind.
+    let opts = RunOptions::new().with_workers(workers()).with_store_dir(dir_crash.clone());
+    {
+        let _faults = faultplan::scoped("job:3:panic,job:4:panic,job:5:panic");
+        let out = run_training(&c, &x, Some(&y), &opts);
+        assert_eq!(out.status, RunStatus::Partial);
+        assert_eq!(out.failed_slots.len(), 3);
+        assert_eq!(out.report.jobs.len(), 3);
+    }
+
+    // Reopen with resume, no faults: only the missing half re-trains, and
+    // the result is byte-identical to the uninterrupted store (models are
+    // deterministic — equality, not statistics).
+    {
+        let _clean = faultplan::scoped("");
+        let out = run_training(&c, &x, Some(&y), &opts.clone().with_resume(true));
+        assert_eq!(out.status, RunStatus::Complete);
+        assert_eq!(out.report.jobs.len(), 3, "resume trains exactly the missing slots");
+    }
+    assert_stores_identical(&dir_ref, &dir_crash, 3, 2);
+    std::fs::remove_dir_all(&dir_ref).unwrap();
+    std::fs::remove_dir_all(&dir_crash).unwrap();
+}
+
+#[test]
+fn corrupt_slots_are_flagged_and_retrained_on_resume() {
+    let _clean = faultplan::scoped("");
+    let (x, y) = data(40, 30);
+    let c = cfg();
+    let dir = tmp("corrupt_store");
+    let opts = RunOptions::new().with_workers(workers()).with_store_dir(dir.clone());
+    assert_eq!(run_training(&c, &x, Some(&y), &opts).status, RunStatus::Complete);
+    let store = ModelStore::open(&dir).unwrap();
+    let slot = dir.join("t0001_y000.fbj");
+    let pristine = std::fs::read(&slot).unwrap();
+
+    for (label, corrupt) in [
+        ("truncated", pristine[..pristine.len() / 2].to_vec()),
+        ("bit-flipped", {
+            let mut b = pristine.clone();
+            b[pristine.len() / 3] ^= 0x20;
+            b
+        }),
+    ] {
+        std::fs::write(&slot, &corrupt).unwrap();
+        // verify flags it; loading the whole store errors instead of
+        // panicking or silently shipping garbage.
+        assert!(store.verify(1, 0).is_err(), "{label}: verify must flag the slot");
+        assert!(!store.contains_valid(1, 0), "{label}");
+        assert!(store.load_model().is_err(), "{label}: load_model must be Err, not panic");
+
+        // Resume re-trains exactly the corrupt slot, restoring the
+        // original bytes (deterministic model + canonical encoding).
+        let out = run_training(&c, &x, Some(&y), &opts.clone().with_resume(true));
+        assert_eq!(out.status, RunStatus::Complete);
+        assert_eq!(out.report.jobs.len(), 1, "{label}: exactly one slot re-trains");
+        assert_eq!((out.report.jobs[0].t_idx, out.report.jobs[0].y), (1, 0), "{label}");
+        assert_eq!(std::fs::read(&slot).unwrap(), pristine, "{label}: bytes must match");
+        store.verify(1, 0).unwrap();
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn budgeted_run_with_faults_degrades_to_shorter_ensembles() {
+    // A zero budget + one injected I/O fault: every job still trains its
+    // guaranteed first round, the faulted write retries, and the result is
+    // a complete, sampleable (if shallow) model with per-job rounds
+    // reported.
+    let _faults = faultplan::scoped("io:t0000_y000:once");
+    let (x, y) = data(40, 40);
+    let c = cfg();
+    let dir = tmp("budgeted");
+    let opts = RunOptions::new()
+        .with_workers(workers())
+        .with_store_dir(dir.clone())
+        .with_time_budget(std::time::Duration::ZERO);
+    let out = run_training(&c, &x, Some(&y), &opts);
+    assert_eq!(out.status, RunStatus::Complete);
+    assert_eq!(out.retried_slots, 1);
+    assert_eq!(out.report.jobs.len(), 6);
+    assert_eq!(out.report.deadline_stopped_jobs(), 6);
+    for job in &out.report.jobs {
+        assert!(job.deadline_stopped);
+        assert_eq!(job.rounds_trained, 1, "past-deadline jobs stop after round 0");
+    }
+    let model = ModelStore::open(&dir).unwrap().load_model().unwrap();
+    assert!(model.is_complete());
+    let (g, labels) = generate(&model, &GenerateConfig::new(12, 5));
+    assert_eq!(g.rows, 12);
+    assert_eq!(labels.len(), 12);
+    assert!(g.data.iter().all(|v| v.is_finite()));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The CI fault leg: replay whatever `CALOFOREST_FAULT_PLAN` says against a
+/// small grid and check the coordinator's accounting stays coherent, then
+/// prove a clean resume completes the grid. A no-op when the variable is
+/// unset (the default local run).
+#[test]
+fn env_fault_plan_smoke() {
+    let Some(guard) = faultplan::scoped_from_env() else { return };
+    let (x, y) = data(40, 50);
+    let c = cfg();
+    let dir = tmp("env_smoke");
+    let opts = RunOptions::new().with_workers(workers()).with_store_dir(dir.clone());
+    let out = run_training(&c, &x, Some(&y), &opts);
+    // Whatever was injected, the coordinator returned instead of
+    // unwinding, and every job is accounted for exactly once.
+    assert_eq!(out.report.jobs.len() + out.failed_slots.len(), 6);
+    assert_eq!(out.status == RunStatus::Partial, !out.failed_slots.is_empty());
+    drop(guard);
+
+    let _clean = faultplan::scoped("");
+    let out2 = run_training(&c, &x, Some(&y), &opts.clone().with_resume(true));
+    assert_eq!(out2.status, RunStatus::Complete);
+    assert_eq!(out.report.jobs.len() + out2.report.jobs.len(), 6);
+    assert!(ModelStore::open(&dir).unwrap().load_model().unwrap().is_complete());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

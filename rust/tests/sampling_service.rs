@@ -167,7 +167,7 @@ fn service_tickets_match_solo_generation() {
         .collect();
     let solo: Vec<_> = cfgs.iter().map(|c| generate(&model, c)).collect();
     let service = SamplerService::new(model, 2);
-    let tickets = service.submit_many(&cfgs);
+    let tickets = service.submit_many(&cfgs).expect("unbounded queue accepts the group");
     for (i, (ticket, (sx, sl))) in tickets.into_iter().zip(solo.iter()).enumerate() {
         let (bx, bl) = ticket.wait();
         assert_eq!(sx.data, bx.data, "service output diverges from solo for request {i}");
@@ -179,4 +179,30 @@ fn service_tickets_match_solo_generation() {
     // splits into exactly two batched solves.
     assert_eq!(stats.batches_run, 2);
     assert_eq!(stats.max_coalesced, 4);
+    assert_eq!(stats.queue_depth, 0, "all tickets waited ⇒ empty queue");
+}
+
+#[test]
+fn bounded_service_rejects_then_recovers_and_times_out_cleanly() {
+    let model = tiny_model(ModelKind::Flow);
+    let reference = generate(&model, &GenerateConfig::new(10, 77));
+    let service = SamplerService::new(model, 1).with_max_queue(2);
+    let burst: Vec<GenerateConfig> =
+        (0..5).map(|i| GenerateConfig::new(10, 77 + i as u64)).collect();
+    // Oversized group: rejected atomically with a structured error.
+    let err = service.submit_many(&burst).unwrap_err();
+    assert_eq!((err.submitted, err.max), (5, 2));
+    // The bound applies to queued (unclaimed) requests, so a fitting
+    // submission goes through and completes normally afterwards.
+    let ticket = service.submit(GenerateConfig::new(10, 77)).expect("within bound");
+    // wait_timeout eventually yields the same bytes wait() would.
+    let mut pending = ticket;
+    let (gx, gl) = loop {
+        match pending.wait_timeout(std::time::Duration::from_millis(10)) {
+            Ok(result) => break result,
+            Err(back) => pending = back,
+        }
+    };
+    assert_eq!(gx.data, reference.0.data);
+    assert_eq!(gl, reference.1);
 }
