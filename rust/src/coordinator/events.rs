@@ -1,0 +1,129 @@
+//! Coordinator-side glue for the event stream: per-slot job-lifecycle
+//! emitters feeding [`crate::util::events`], plus a JSONL read-back helper
+//! for tools and tests.
+//!
+//! One [`JobEvents`] handle per `(t_idx, y)` slot pins the job identity;
+//! the coordinator's attempt loop calls the phase methods at each
+//! transition. The handle is a no-op when no sink is configured, so the
+//! unlogged path stays exactly the seed path.
+
+use crate::util::events::{Event, EventSink, JobEvent, JobPhase};
+use crate::util::json::Json;
+use std::fmt::Display;
+use std::io;
+use std::path::Path;
+
+/// Per-job lifecycle emitter: `started` → (`retried` →)* → `completed` /
+/// `failed`, with `deadline_stopped` riding in front of a truncated
+/// `completed`.
+pub struct JobEvents<'a> {
+    sink: Option<&'a EventSink>,
+    t_idx: usize,
+    y: usize,
+}
+
+impl<'a> JobEvents<'a> {
+    pub fn new(sink: Option<&'a EventSink>, t_idx: usize, y: usize) -> JobEvents<'a> {
+        JobEvents { sink, t_idx, y }
+    }
+
+    /// An attempt began (one event per retry; `attempt` disambiguates).
+    pub fn started(&self, attempt: usize) {
+        self.emit(JobPhase::Started, attempt, 0, String::new());
+    }
+
+    /// The job finished and its ensemble was kept.
+    pub fn completed(&self, attempt: usize, rounds_trained: usize) {
+        self.emit(JobPhase::Completed, attempt, rounds_trained, String::new());
+    }
+
+    /// The job hit the run's wall-clock deadline and stopped at
+    /// `rounds_trained` rounds (a `completed` event follows — the truncated
+    /// ensemble is still a valid model).
+    pub fn deadline_stopped(&self, attempt: usize, rounds_trained: usize) {
+        self.emit(JobPhase::DeadlineStopped, attempt, rounds_trained, String::new());
+    }
+
+    /// Attempt `attempt` failed with `cause`; the slot backs off and tries
+    /// again.
+    pub fn retried(&self, attempt: usize, cause: &impl Display) {
+        self.emit(JobPhase::Retried, attempt, 0, cause.to_string());
+    }
+
+    /// Retries are exhausted; the slot is recorded as a `JobFailure`.
+    pub fn failed(&self, attempt: usize, cause: &impl Display) {
+        self.emit(JobPhase::Failed, attempt, 0, cause.to_string());
+    }
+
+    fn emit(&self, phase: JobPhase, attempt: usize, rounds_trained: usize, detail: String) {
+        if let Some(sink) = self.sink {
+            sink.emit(Event::Job(JobEvent {
+                t_idx: self.t_idx,
+                y: self.y,
+                phase,
+                attempt,
+                rounds_trained,
+                detail,
+            }));
+        }
+    }
+}
+
+/// Parse a JSONL event log back into one [`Json`] object per line. Blank
+/// lines are skipped; a malformed line surfaces as `InvalidData` (a partial
+/// log should fail loudly, not truncate silently).
+pub fn read_jsonl(path: &Path) -> io::Result<Vec<Json>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = Json::parse(line).map_err(|e| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("event log line {}: {e}", i + 1),
+            )
+        })?;
+        events.push(parsed);
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_lifecycle_events_serialize_and_read_back() {
+        let dir = std::env::temp_dir().join("caloforest_coord_events_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("jobs.jsonl");
+        let sink = EventSink::to_path(&path).unwrap();
+        {
+            let log = JobEvents::new(Some(&sink), 1, 0);
+            log.started(0);
+            log.retried(0, &"boom");
+            log.started(1);
+            log.completed(1, 12);
+            // A sink-less logger is inert.
+            JobEvents::new(None, 9, 9).failed(3, &"ignored");
+        }
+        drop(sink); // joins the writer: the file below is complete
+        let events = read_jsonl(&path).unwrap();
+        let phases: Vec<&str> =
+            events.iter().map(|e| e.get("phase").unwrap().as_str().unwrap()).collect();
+        assert_eq!(phases, ["started", "retried", "started", "completed"]);
+        assert_eq!(events[1].get("detail").unwrap().as_str(), Some("boom"));
+        assert_eq!(events[3].get("rounds_trained").unwrap().as_usize(), Some(12));
+        assert!(events.iter().all(|e| e.get("t_idx").unwrap().as_usize() == Some(1)));
+        assert!(events.iter().all(|e| e.get("type").unwrap().as_str() == Some("job")));
+
+        // Malformed logs surface as InvalidData, not a silent skip.
+        std::fs::write(&path, "{\"ok\":1}\nnot json\n").unwrap();
+        let err = read_jsonl(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -28,10 +28,11 @@
 pub mod pool;
 pub mod memory;
 pub mod store;
+pub mod events;
 
 use crate::forest::model::ForestModel;
 use crate::forest::trainer::{
-    prepare, train_job_with_cuts, ForestTrainConfig, JobRecord, TrainReport,
+    prepare, train_job_logged, ForestTrainConfig, JobRecord, TrainReport,
 };
 use crate::gbt::BinCuts;
 use crate::tensor::Matrix;
@@ -69,6 +70,10 @@ pub struct RunOptions {
     /// stop at their current boosting round (a valid, shorter ensemble)
     /// instead of dying. `None` = unbudgeted.
     pub time_budget: Option<std::time::Duration>,
+    /// Stream per-round and per-job lifecycle events to this file through
+    /// the bounded off-hot-path sink ([`crate::util::events::EventSink`]).
+    /// `.csv` extension selects CSV, anything else JSONL. `None` = off.
+    pub event_log: Option<PathBuf>,
 }
 
 impl Default for RunOptions {
@@ -81,6 +86,7 @@ impl Default for RunOptions {
             track_memory: false,
             max_retries: 2,
             time_budget: None,
+            event_log: None,
         }
     }
 }
@@ -132,6 +138,16 @@ impl RunOptions {
     /// [`JobRecord::deadline_stopped`]).
     pub fn with_time_budget(mut self, budget: std::time::Duration) -> RunOptions {
         self.time_budget = Some(budget);
+        self
+    }
+
+    /// Stream per-round / per-job training events to `path` (`.csv` for
+    /// CSV, anything else for JSONL). The sink never blocks training: one
+    /// writer thread drains a bounded queue, and overflow drops events —
+    /// counted in [`RunOutcome::events_dropped`] — instead of stalling a
+    /// boosting round. Models are byte-identical with or without a log.
+    pub fn with_event_log(mut self, path: impl Into<PathBuf>) -> RunOptions {
+        self.event_log = Some(path.into());
         self
     }
 
@@ -224,7 +240,14 @@ pub fn worker_budget_sized(
     job_sizes: &[usize],
     intra_override: usize,
 ) -> WorkerSplit {
-    let width_cap = job_sizes.len().max(1).min(effective_job_width(job_sizes));
+    // No jobs ⇒ no parallelism to budget: one 1-thread slot regardless of
+    // the total budget or any intra override. (A resume over a complete
+    // store schedules an empty grid; granting the whole budget — or the
+    // override — to a slot with nothing to train spawns phantom threads.)
+    if job_sizes.is_empty() {
+        return WorkerSplit::new(1, 1);
+    }
+    let width_cap = job_sizes.len().min(effective_job_width(job_sizes));
     worker_budget(total, width_cap, intra_override)
 }
 
@@ -322,6 +345,9 @@ pub struct RunOutcome {
     pub failed_slots: Vec<JobFailure>,
     /// Jobs that succeeded only after at least one retry.
     pub retried_slots: usize,
+    /// Events the bounded sink had to drop (queue full or dead output);
+    /// always 0 without an event log. 0 means the log is gap-free.
+    pub events_dropped: usize,
 }
 
 /// Run the improved training pipeline: prepare shared state once, schedule
@@ -359,6 +385,15 @@ pub fn run_training(
         .store_dir
         .as_ref()
         .map(|dir| store::ModelStore::create(dir).expect("cannot create model store"));
+
+    // Off-hot-path event sink: one writer thread behind a bounded queue.
+    // Emitters (the boosting loop, the job slots) only `try_send`, so a
+    // slow log disk can lose events but can never slow a round — models
+    // stay byte-identical with or without a sink.
+    let event_sink_owned = opts.event_log.as_ref().map(|path| {
+        crate::util::events::EventSink::to_path(path).expect("cannot create event log")
+    });
+    let event_sink = event_sink_owned.as_ref();
 
     // Job list, skipping already-stored slots on resume. Presence alone is
     // not enough: a slot interrupted mid-write or corrupted on disk fails
@@ -420,8 +455,10 @@ pub fn run_training(
     // a width of 3 ⇒ 3 × 2 + 2 spare). Grant the remainder to the leading
     // slots' pools up front — widths never affect results (fixed chunk
     // boundaries), so this is pure utilization. No grants with an explicit
-    // intra override: the caller chose the per-job width deliberately.
-    if opts.intra_job_threads == 0 {
+    // intra override (the caller chose the per-job width deliberately), and
+    // none on an empty grid: the (1, 1) degenerate split would otherwise be
+    // granted the entire budget as phantom threads with nothing to train.
+    if opts.intra_job_threads == 0 && !jobs.is_empty() {
         let remainder = total_budget.saturating_sub(job_workers * intra_threads);
         for k in 0..remainder {
             pools[k % job_workers].grow(1);
@@ -440,6 +477,7 @@ pub fn run_training(
             }
             let (t_idx, y_idx) = jobs[job_idx];
             let slot_name = store::slot_stem(t_idx, y_idx);
+            let joblog = events::JobEvents::new(event_sink, t_idx, y_idx);
             // Job failure domain: each attempt is fenced with catch_unwind
             // (the slot pool re-throws worker panics at the dispatch site
             // and stays usable, so a panic anywhere in the attempt lands
@@ -449,6 +487,7 @@ pub fn run_training(
             // loop moves on — survivors keep streaming.
             let mut attempt = 0usize;
             loop {
+                joblog.started(attempt);
                 let jt0 = std::time::Instant::now();
                 type Kept = Option<(crate::gbt::Booster, BinCuts)>;
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
@@ -467,7 +506,7 @@ pub fn run_training(
                             }
                         }
                         let (booster, cuts) =
-                            train_job_with_cuts(&prep, job_cfg, t_idx, y_idx, exec);
+                            train_job_logged(&prep, job_cfg, t_idx, y_idx, exec, event_sink);
                         let rec = JobRecord {
                             t_idx,
                             y: y_idx,
@@ -504,6 +543,10 @@ pub fn run_training(
                         if attempt > 0 {
                             retried.fetch_add(1, Ordering::Relaxed);
                         }
+                        if rec.deadline_stopped {
+                            joblog.deadline_stopped(attempt, rec.rounds_trained);
+                        }
+                        joblog.completed(attempt, rec.rounds_trained);
                         completed.lock().unwrap().push((t_idx, y_idx, keep, rec));
                         break;
                     }
@@ -516,6 +559,7 @@ pub fn run_training(
                          after {} attempt(s): {cause}",
                         attempt + 1
                     );
+                    joblog.failed(attempt, &cause);
                     failures.lock().unwrap().push(JobFailure {
                         t_idx,
                         y: y_idx,
@@ -524,6 +568,7 @@ pub fn run_training(
                     });
                     break;
                 }
+                joblog.retried(attempt, &cause);
                 std::thread::sleep(retry_backoff(attempt));
                 attempt += 1;
             }
@@ -569,6 +614,11 @@ pub fn run_training(
     }
     drop(pools);
     sample_mem(&timeline, &t0);
+    // Close the sink before building the outcome: dropping it joins the
+    // writer thread, so the log file is flushed and complete the moment
+    // run_training hands the outcome back.
+    let events_dropped = event_sink.map(|s| s.dropped_events() as usize).unwrap_or(0);
+    drop(event_sink_owned);
 
     let mut model = ForestModel::empty(
         cfg.kind,
@@ -609,6 +659,7 @@ pub fn run_training(
         status,
         failed_slots,
         retried_slots: retried.load(Ordering::Relaxed),
+        events_dropped,
     }
 }
 
@@ -716,8 +767,59 @@ mod tests {
         assert_eq!(effective_job_width(&[60, 40, 60, 40]), 4);
         // Explicit intra override still wins; degenerate inputs stay sane.
         assert_eq!(worker_budget_sized(8, &[1000, 10], 3), WorkerSplit::new(2, 3));
-        assert_eq!(worker_budget_sized(4, &[], 0), WorkerSplit::new(1, 4));
+        // An empty grid budgets nothing (it used to be handed the whole
+        // budget as intra threads for a slot with no work).
+        assert_eq!(worker_budget_sized(4, &[], 0), WorkerSplit::new(1, 1));
         assert_eq!(worker_budget_sized(1, &[0, 0], 0), WorkerSplit::new(1, 1));
+    }
+
+    #[test]
+    fn empty_grid_schedules_no_phantom_threads() {
+        // The zero-jobs corner of the budget arithmetic: no budget, no
+        // override, and no remainder grant may manufacture threads when
+        // there is nothing to train.
+        assert_eq!(worker_budget_sized(8, &[], 0), WorkerSplit::new(1, 1));
+        assert_eq!(worker_budget_sized(8, &[], 4), WorkerSplit::new(1, 1));
+        assert_eq!(worker_budget_sized(0, &[], 0), WorkerSplit::new(1, 1));
+        // End to end: a resume over a complete store schedules zero jobs;
+        // the run must degenerate to one idle 1-thread slot (the remainder
+        // grant is gated on a non-empty grid) and report no rebalancing.
+        let (x, y) = data(30, 21);
+        let c = cfg();
+        let dir = std::env::temp_dir().join("caloforest_test_empty_grid");
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = RunOptions::new().with_workers(8).with_store_dir(dir.clone());
+        run_training(&c, &x, Some(&y), &opts);
+        let out = run_training(&c, &x, Some(&y), &opts.clone().with_resume(true));
+        assert_eq!(out.report.jobs.len(), 0, "complete store: nothing to train");
+        assert_eq!((out.job_workers, out.intra_job_threads), (1, 1));
+        assert_eq!(out.rebalanced_threads, 0);
+        assert_eq!(out.status, RunStatus::Complete);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn explicit_intra_override_is_exempt_from_remainder_grants() {
+        // workers=1 with intra_job_threads>1 is an explicit
+        // oversubscription: the split honors it verbatim, and the
+        // remainder grant must not stack more threads on top (overridden
+        // splits skip the grant entirely).
+        assert_eq!(worker_budget(1, 2, 4), WorkerSplit::new(1, 4));
+        assert_eq!(worker_budget_sized(1, &[10, 10], 4), WorkerSplit::new(1, 4));
+        // Budget smaller than the job list without an override: never more
+        // than the budget.
+        assert_eq!(worker_budget(1, 2, 0), WorkerSplit::new(1, 1));
+        assert_eq!(worker_budget_sized(1, &[10, 10], 0), WorkerSplit::new(1, 1));
+        let (x, y) = data(30, 22);
+        let c = cfg();
+        let out = run_training(
+            &c,
+            &x,
+            Some(&y),
+            &RunOptions::new().with_workers(1).with_intra_job_threads(3),
+        );
+        assert_eq!((out.job_workers, out.intra_job_threads), (1, 3));
+        assert!(out.model.is_complete());
     }
 
     #[test]

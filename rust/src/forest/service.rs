@@ -28,9 +28,10 @@ use super::model::ForestModel;
 use super::sampler::{generate_batched, Backend, GenerateConfig, Solver};
 use crate::coordinator::pool::WorkerPool;
 use crate::tensor::Matrix;
+use crate::util::events::{Event, EventSink, ServiceGauge};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 /// Requests coalesce only within one class: the solver and step count fix
@@ -65,6 +66,10 @@ struct Shared {
     /// Queue bound: submissions that would push the queued depth past this
     /// are rejected with [`QueueFull`]. `usize::MAX` = unbounded.
     max_queue: AtomicUsize,
+    /// Optional gauge stream: one [`ServiceGauge`] snapshot per batched
+    /// solve, through the bounded off-hot-path sink. Set once via
+    /// [`SamplerService::with_event_log`].
+    events: OnceLock<EventSink>,
 }
 
 /// Completion handle for one submitted request.
@@ -161,6 +166,7 @@ impl SamplerService {
             batches: AtomicUsize::new(0),
             max_coalesced: AtomicUsize::new(0),
             max_queue: AtomicUsize::new(usize::MAX),
+            events: OnceLock::new(),
         });
         let on_thread = Arc::clone(&shared);
         let scheduler = std::thread::Builder::new()
@@ -177,6 +183,22 @@ impl SamplerService {
     pub fn with_max_queue(self, max: usize) -> SamplerService {
         self.shared.max_queue.store(max, Ordering::Relaxed);
         self
+    }
+
+    /// Stream a [`ServiceGauge`] snapshot (queue depth, requests served,
+    /// batches run, max coalesced) to `path` after every batched solve —
+    /// `.csv` extension selects CSV, anything else JSONL. Rides the same
+    /// bounded off-hot-path sink as training: a full queue drops snapshots
+    /// rather than delaying a solve. Builder-style; may be set once.
+    pub fn with_event_log(
+        self,
+        path: impl AsRef<std::path::Path>,
+    ) -> std::io::Result<SamplerService> {
+        let sink = EventSink::to_path(path.as_ref())?;
+        if self.shared.events.set(sink).is_err() {
+            panic!("sampler service event log may only be configured once");
+        }
+        Ok(self)
     }
 
     /// Queue one request; returns immediately with its completion handle,
@@ -274,6 +296,16 @@ fn run_batch(shared: &Shared, batch: Vec<Request>) {
         shared.batches.fetch_add(1, Ordering::Relaxed);
         shared.served.fetch_add(members.len(), Ordering::Relaxed);
         shared.max_coalesced.fetch_max(members.len(), Ordering::Relaxed);
+        // One gauge snapshot per solve, off the hot path: a single
+        // bounded-channel try_send; overflow drops the snapshot.
+        if let Some(sink) = shared.events.get() {
+            sink.emit(Event::Gauge(ServiceGauge {
+                queue_depth: shared.queue.lock().unwrap().len(),
+                requests_served: shared.served.load(Ordering::Relaxed),
+                batches_run: shared.batches.load(Ordering::Relaxed),
+                max_coalesced: shared.max_coalesced.load(Ordering::Relaxed),
+            }));
+        }
         for (req, result) in members.into_iter().zip(results) {
             // A dropped ticket just discards its samples.
             let _ = req.done.send(result);
@@ -403,6 +435,32 @@ mod tests {
         let stats = service.stats();
         assert_eq!(stats.requests_served, 3);
         assert_eq!(stats.queue_depth, 0, "drained queue reports empty: {stats:?}");
+    }
+
+    #[test]
+    fn event_log_streams_gauge_snapshots() {
+        let dir = std::env::temp_dir().join("caloforest_test_service_events");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gauges.jsonl");
+        let service = SamplerService::new(small_model(), 1).with_event_log(&path).unwrap();
+        let cfgs: Vec<GenerateConfig> =
+            (0..4).map(|i| GenerateConfig::new(10, i as u64)).collect();
+        let tickets = service.submit_many(&cfgs).unwrap();
+        for t in tickets {
+            t.wait();
+        }
+        drop(service); // joins the scheduler, then the sink writer
+        let events = crate::coordinator::events::read_jsonl(&path).unwrap();
+        assert!(!events.is_empty(), "at least one solve ⇒ at least one gauge");
+        for e in &events {
+            assert_eq!(e.get("type").unwrap().as_str(), Some("gauge"));
+        }
+        let last = events.last().unwrap();
+        assert!(last.get("batches_run").unwrap().as_usize().unwrap() >= 1);
+        assert_eq!(last.get("requests_served").unwrap().as_usize(), Some(4));
+        assert!(last.get("max_coalesced").unwrap().as_usize().unwrap() >= 1);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

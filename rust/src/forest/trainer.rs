@@ -35,6 +35,7 @@ use super::schedule::{TimeGrid, VpSchedule};
 use crate::coordinator::pool::WorkerPool;
 use crate::gbt::{BinCuts, BinnedMatrix, Booster, TrainParams};
 use crate::tensor::Matrix;
+use crate::util::events::{EventSink, RoundLog};
 use crate::util::rng::{splitmix64, NormalStream};
 
 /// Time-grid shape.
@@ -338,6 +339,22 @@ pub fn train_job_with_cuts(
     y: usize,
     exec: &WorkerPool,
 ) -> (Booster, BinCuts) {
+    train_job_logged(prep, cfg, t_idx, y, exec, None)
+}
+
+/// [`train_job_with_cuts`] with an optional event sink: every boosting
+/// round of this `(t, y)` job emits one `TrainRoundEvent` through the
+/// bounded off-hot-path channel ([`crate::util::events`]). `None` is the
+/// exact unlogged path — logged and unlogged jobs train byte-identical
+/// ensembles.
+pub fn train_job_logged(
+    prep: &Prepared,
+    cfg: &ForestTrainConfig,
+    t_idx: usize,
+    y: usize,
+    exec: &WorkerPool,
+    events: Option<&EventSink>,
+) -> (Booster, BinCuts) {
     let t = prep.grid.ts[t_idx];
     let (s, e) = prep.class_ranges[y];
     let x0 = prep.x.row_slice(s, e);
@@ -370,18 +387,27 @@ pub fn train_job_with_cuts(
     };
 
     let binned = BinnedMatrix::fit_bin_par(&xt.view(), cfg.params.max_bins, exec);
+    let log = events.map(|sink| RoundLog::new(sink, t_idx, y));
     let booster = match &val {
         Some((xtv, zv)) => {
             let eb = BinnedMatrix::bin_par(&xtv.view(), &binned.cuts, exec);
-            Booster::train_binned_with_eval(
+            Booster::train_binned_logged(
                 &binned,
                 &z.view(),
                 cfg.params,
                 Some((&eb, &zv.view())),
                 exec,
+                log.as_ref(),
             )
         }
-        None => Booster::train_binned_with_eval(&binned, &z.view(), cfg.params, None, exec),
+        None => Booster::train_binned_logged(
+            &binned,
+            &z.view(),
+            cfg.params,
+            None,
+            exec,
+            log.as_ref(),
+        ),
     };
     (booster, binned.cuts)
 }

@@ -17,6 +17,7 @@ use super::packed_binned::QuantForest;
 use super::tree::{grow_tree_pooled, GrowParams, Tree, TreeKind};
 use crate::coordinator::pool::WorkerPool;
 use crate::tensor::MatrixView;
+use crate::util::events::RoundLog;
 
 /// Training hyperparameters; defaults mirror the paper's Table 9 "Original"
 /// row (n_tree=100, depth 7, η=0.3, λ=0, no early stopping).
@@ -212,6 +213,23 @@ impl Booster {
         eval: Option<(&BinnedMatrix, &MatrixView<'_>)>,
         exec: &WorkerPool,
     ) -> Booster {
+        Booster::train_binned_logged(binned, targets, params, eval, exec, None)
+    }
+
+    /// [`train_binned_with_eval`](Self::train_binned_with_eval) with an
+    /// optional per-round event log. The log rides the same seam as the
+    /// deadline check: one bounded-channel `try_send` after each round's
+    /// loss bookkeeping, nothing else on the hot path — and `None` runs the
+    /// exact same loop, so logged and unlogged training produce
+    /// byte-identical models.
+    pub fn train_binned_logged(
+        binned: &BinnedMatrix,
+        targets: &MatrixView<'_>,
+        params: TrainParams,
+        eval: Option<(&BinnedMatrix, &MatrixView<'_>)>,
+        exec: &WorkerPool,
+        log: Option<&RoundLog<'_>>,
+    ) -> Booster {
         let n = binned.n;
         let m = targets.cols;
         assert_eq!(targets.rows, n, "targets/features row mismatch");
@@ -299,6 +317,7 @@ impl Booster {
                 booster.stopped_by_deadline = true;
                 break;
             }
+            let round_t0 = log.map(|_| std::time::Instant::now());
             // Per-row gradients in fixed chunks on the pool (disjoint
             // elementwise writes: bit-identical for any worker count).
             params
@@ -363,6 +382,18 @@ impl Booster {
                 _ => None,
             };
             booster.history.push(EvalRecord { round, train_loss, valid_loss });
+
+            // Off-hot-path telemetry: a full sink queue drops the event
+            // rather than stalling the round.
+            if let (Some(log), Some(rt0)) = (log, round_t0) {
+                log.round(
+                    round,
+                    params.objective.name(),
+                    train_loss,
+                    valid_loss,
+                    rt0.elapsed().as_secs_f64() * 1000.0,
+                );
+            }
 
             // Early stopping on validation loss (train loss if no eval set).
             let monitored = valid_loss.unwrap_or(train_loss);

@@ -20,6 +20,14 @@ impl Objective {
         matches!(self, Objective::SquaredError)
     }
 
+    /// Stable short name used on the event-stream wire and in logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::SquaredError => "sqerr",
+            Objective::Logistic => "logistic",
+        }
+    }
+
     /// Fill per-row gradients (and hessians for non-uniform objectives).
     ///
     /// `preds` and `targets` are row-major `[n × m]`; `grads` likewise;

@@ -263,9 +263,9 @@ pub fn verify_file(path: &std::path::Path) -> io::Result<()> {
 }
 
 fn warn_legacy(path: &std::path::Path) {
-    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::atomic::AtomicBool;
     static WARNED: AtomicBool = AtomicBool::new(false);
-    if !WARNED.swap(true, Ordering::Relaxed) {
+    if first_transition(&WARNED) {
         eprintln!(
             "caloforest: loading un-checksummed legacy model file {} \
              (re-save to add the integrity trailer); further legacy loads \
@@ -273,6 +273,16 @@ fn warn_legacy(path: &std::path::Path) {
             path.display()
         );
     }
+}
+
+/// True for exactly one caller per flag no matter how many threads race —
+/// the once-per-process gate behind [`warn_legacy`]. The atomic `swap` makes
+/// read-and-set one operation; a separate load-then-store pair would let N
+/// worker threads loading legacy slots concurrently all observe `false` and
+/// print N warnings. Factored out so the race itself is unit-testable
+/// against a local flag (the process-wide static is one-shot by design).
+fn first_transition(flag: &std::sync::atomic::AtomicBool) -> bool {
+    !flag.swap(true, std::sync::atomic::Ordering::Relaxed)
 }
 
 fn bad(msg: &str) -> io::Error {
@@ -457,6 +467,53 @@ mod tests {
         verify_file(&path).unwrap();
         let b2 = load(&path).unwrap();
         assert_eq!(b.predict(&x.view()).data, b2.predict(&x.view()).data);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn legacy_warning_gate_fires_exactly_once_across_threads() {
+        use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+        use std::sync::Barrier;
+        // Race the gate on a *local* flag (the process-wide static may
+        // already be spent by other tests in this binary): 8 threads
+        // released together, exactly one may pass.
+        let flag = AtomicBool::new(false);
+        let fired = AtomicUsize::new(0);
+        let barrier = Barrier::new(8);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    barrier.wait();
+                    if first_transition(&flag) {
+                        fired.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(fired.load(Ordering::Relaxed), 1, "exactly one thread wins the gate");
+        assert!(!first_transition(&flag), "the gate stays shut afterwards");
+    }
+
+    #[test]
+    fn concurrent_legacy_loads_share_one_warning_gate() {
+        // Two threads loading legacy files concurrently must both load
+        // fine; the warning they funnel into is gated process-wide by
+        // `first_transition` (the race itself is pinned above — this
+        // exercises the real `load` → `warn_legacy` path under threads).
+        let (x, b) = trained(TreeKind::Single);
+        let dir = std::env::temp_dir().join("caloforest_test_serialize_legacy_mt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("a.fbj");
+        let p2 = dir.join("b.fbj");
+        std::fs::write(&p1, to_bytes(&b)).unwrap();
+        std::fs::write(&p2, to_bytes(&b)).unwrap();
+        let (r1, r2) = std::thread::scope(|s| {
+            let h1 = s.spawn(|| load(&p1).unwrap());
+            let h2 = s.spawn(|| load(&p2).unwrap());
+            (h1.join().unwrap(), h2.join().unwrap())
+        });
+        assert_eq!(r1.predict(&x.view()).data, b.predict(&x.view()).data);
+        assert_eq!(r2.predict(&x.view()).data, b.predict(&x.view()).data);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

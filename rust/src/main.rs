@@ -73,6 +73,7 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         .opt("store", "results/model_store", "model store directory")
         .opt("retries", "2", "per-job retries before a slot is marked failed")
         .opt("time-budget", "0", "wall-clock training budget in seconds (0 = none)")
+        .opt("event-log", "", "per-round/per-job event stream file (.jsonl or .csv; empty = off)")
         .flag("resume", "resume from existing store (re-trains corrupt slots)")
         .parse(argv)?;
 
@@ -89,6 +90,10 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     if budget_secs > 0.0 {
         opts = opts.with_time_budget(std::time::Duration::from_secs_f64(budget_secs));
     }
+    let event_log = args.get("event-log");
+    if !event_log.is_empty() {
+        opts = opts.with_event_log(event_log);
+    }
     let out = caloforest::coordinator::run_training(&cfg, &x, y.as_deref(), &opts);
     println!(
         "trained {} ensembles in {:.2}s (peak heap {}, {} job workers x {} intra threads), store: {}",
@@ -101,6 +106,12 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     );
     if out.retried_slots > 0 {
         println!("{} slot(s) succeeded after retries", out.retried_slots);
+    }
+    if out.events_dropped > 0 {
+        eprintln!(
+            "caloforest: event log overflowed; {} event(s) dropped (training was unaffected)",
+            out.events_dropped
+        );
     }
     let stopped = out.report.deadline_stopped_jobs();
     if stopped > 0 {

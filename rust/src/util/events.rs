@@ -1,0 +1,570 @@
+//! Round-level training event stream: a bounded-queue, off-hot-path sink.
+//!
+//! The paper's scaling claims rest on thousand-job `(t, y)` training grids
+//! where per-round visibility is the difference between diagnosing one slow
+//! slot and re-running the whole grid. This module is the transport: emitters
+//! (the boosting loop, the coordinator's job slots, the sampler service)
+//! serialize [`Event`]s through a bounded [`std::sync::mpsc`] channel to a
+//! single writer thread that owns the output file.
+//!
+//! The contract is **never block a boosting round**: [`EventSink::emit`] is
+//! one `try_send` — if the queue is full (slow disk, dead pipe) the event is
+//! dropped and counted in [`EventSink::dropped_events`], and training
+//! proceeds bit-identically either way. Dropping the sink closes the channel
+//! and joins the writer, so the log file is complete when the owner returns.
+//!
+//! Two wire formats, chosen by file extension (`.csv` → CSV with a fixed
+//! union-column header, anything else → JSONL via [`crate::util::json`]).
+
+use crate::util::json::Json;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+/// Queue capacity for file-backed sinks: deep enough to absorb bursty
+/// multi-job rounds, small enough that a wedged disk bounds memory.
+pub const DEFAULT_QUEUE_EVENTS: usize = 65_536;
+
+/// The writer flushes its buffer every this many events, so a tail -f on the
+/// log sees progress at round granularity without a syscall per event.
+const FLUSH_EVERY: usize = 64;
+
+/// Fixed union-column CSV header; inapplicable fields are left empty so every
+/// row has the same arity regardless of event kind.
+pub const CSV_HEADER: &str = "type,t_idx,y,round,attempt,phase,objective,train_loss,\
+eval_loss,round_wall_ms,rounds_trained,queue_depth,requests_served,batches_run,\
+max_coalesced,detail";
+
+/// Wire format of an event log.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventFormat {
+    /// One compact JSON object per line (the default).
+    Jsonl,
+    /// Fixed-arity rows under [`CSV_HEADER`]; `detail` is quoted when needed.
+    Csv,
+}
+
+impl EventFormat {
+    /// Choose the format from a path: `.csv` means CSV, everything else JSONL.
+    pub fn for_path(path: &Path) -> EventFormat {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("csv") => EventFormat::Csv,
+            _ => EventFormat::Jsonl,
+        }
+    }
+}
+
+/// Lifecycle phase of a coordinator job slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobPhase {
+    /// An attempt began (one per retry, so `attempt` disambiguates).
+    Started,
+    /// The job finished and its ensemble was kept.
+    Completed,
+    /// An attempt failed and the slot is backing off before the next one.
+    Retried,
+    /// Retries are exhausted; the slot is recorded as a `JobFailure`.
+    Failed,
+    /// The job hit the run's wall-clock deadline and stopped early (it still
+    /// completes with a truncated ensemble; a `Completed` event follows).
+    DeadlineStopped,
+}
+
+impl JobPhase {
+    /// Stable lowercase name used on the wire.
+    pub fn name(self) -> &'static str {
+        match self {
+            JobPhase::Started => "started",
+            JobPhase::Completed => "completed",
+            JobPhase::Retried => "retried",
+            JobPhase::Failed => "failed",
+            JobPhase::DeadlineStopped => "deadline_stopped",
+        }
+    }
+}
+
+/// One boosting round of one `(t, y)` job.
+#[derive(Clone, Debug)]
+pub struct TrainRoundEvent {
+    pub t_idx: usize,
+    pub y: usize,
+    pub round: usize,
+    pub objective: &'static str,
+    pub train_loss: f64,
+    /// `None` when the job trains without a validation split.
+    pub eval_loss: Option<f64>,
+    pub round_wall_ms: f64,
+}
+
+/// A job-slot lifecycle transition in the coordinator.
+#[derive(Clone, Debug)]
+pub struct JobEvent {
+    pub t_idx: usize,
+    pub y: usize,
+    pub phase: JobPhase,
+    pub attempt: usize,
+    /// Rounds actually trained; meaningful for `Completed`/`DeadlineStopped`.
+    pub rounds_trained: usize,
+    /// Failure cause for `Retried`/`Failed`; empty otherwise.
+    pub detail: String,
+}
+
+/// A point-in-time snapshot of the sampler service counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceGauge {
+    pub queue_depth: usize,
+    pub requests_served: usize,
+    pub batches_run: usize,
+    pub max_coalesced: usize,
+}
+
+/// Anything the sink can carry.
+#[derive(Clone, Debug)]
+pub enum Event {
+    Round(TrainRoundEvent),
+    Job(JobEvent),
+    Gauge(ServiceGauge),
+}
+
+impl Event {
+    /// Stable `type` discriminator used on the wire.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Round(_) => "round",
+            Event::Job(_) => "job",
+            Event::Gauge(_) => "gauge",
+        }
+    }
+
+    /// Serialize to one flat JSON object (keys sorted by `util::json`).
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("type", self.kind());
+        match self {
+            Event::Round(r) => {
+                obj.set("t_idx", r.t_idx)
+                    .set("y", r.y)
+                    .set("round", r.round)
+                    .set("objective", r.objective)
+                    .set("train_loss", r.train_loss)
+                    .set(
+                        "eval_loss",
+                        match r.eval_loss {
+                            Some(v) => Json::Num(v),
+                            None => Json::Null,
+                        },
+                    )
+                    .set("round_wall_ms", r.round_wall_ms);
+            }
+            Event::Job(j) => {
+                obj.set("t_idx", j.t_idx)
+                    .set("y", j.y)
+                    .set("phase", j.phase.name())
+                    .set("attempt", j.attempt)
+                    .set("rounds_trained", j.rounds_trained)
+                    .set("detail", j.detail.as_str());
+            }
+            Event::Gauge(g) => {
+                obj.set("queue_depth", g.queue_depth)
+                    .set("requests_served", g.requests_served)
+                    .set("batches_run", g.batches_run)
+                    .set("max_coalesced", g.max_coalesced);
+            }
+        }
+        obj
+    }
+
+    /// Serialize to one fixed-arity CSV row under [`CSV_HEADER`].
+    pub fn to_csv_row(&self) -> String {
+        let mut f: Vec<String> = vec![String::new(); 16];
+        f[0] = self.kind().to_string();
+        match self {
+            Event::Round(r) => {
+                f[1] = r.t_idx.to_string();
+                f[2] = r.y.to_string();
+                f[3] = r.round.to_string();
+                f[6] = r.objective.to_string();
+                f[7] = r.train_loss.to_string();
+                if let Some(v) = r.eval_loss {
+                    f[8] = v.to_string();
+                }
+                f[9] = r.round_wall_ms.to_string();
+            }
+            Event::Job(j) => {
+                f[1] = j.t_idx.to_string();
+                f[2] = j.y.to_string();
+                f[4] = j.attempt.to_string();
+                f[5] = j.phase.name().to_string();
+                f[10] = j.rounds_trained.to_string();
+                f[15] = csv_field(&j.detail);
+            }
+            Event::Gauge(g) => {
+                f[11] = g.queue_depth.to_string();
+                f[12] = g.requests_served.to_string();
+                f[13] = g.batches_run.to_string();
+                f[14] = g.max_coalesced.to_string();
+            }
+        }
+        f.join(",")
+    }
+}
+
+/// RFC-4180 quoting: fields containing a comma, quote, or newline are wrapped
+/// in double quotes with internal quotes doubled.
+fn csv_field(s: &str) -> String {
+    if s.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// The bounded, off-hot-path event sink.
+///
+/// Emitters share it as `&EventSink` (a `SyncSender` is `Sync`, so one sink
+/// serves every job-slot thread without cloning); the single writer thread
+/// owns the output. A full queue drops the event and bumps the counter —
+/// `emit` never waits on I/O.
+pub struct EventSink {
+    tx: Option<mpsc::SyncSender<Event>>,
+    dropped: Arc<AtomicU64>,
+    writer: Option<JoinHandle<()>>,
+}
+
+impl EventSink {
+    /// Open a file-backed sink, creating parent directories. The format
+    /// follows the extension ([`EventFormat::for_path`]).
+    pub fn to_path(path: &Path) -> io::Result<EventSink> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let format = EventFormat::for_path(path);
+        let file = std::fs::File::create(path)?;
+        Ok(EventSink::to_writer(
+            Box::new(BufWriter::new(file)),
+            format,
+            DEFAULT_QUEUE_EVENTS,
+        ))
+    }
+
+    /// Build a sink over an arbitrary writer with an explicit queue capacity.
+    /// `out` receives one `write` per line (wrap it in a `BufWriter` if that
+    /// matters); tests use this to observe and to throttle the writer.
+    pub fn to_writer(
+        out: Box<dyn Write + Send>,
+        format: EventFormat,
+        queue_capacity: usize,
+    ) -> EventSink {
+        let (tx, rx) = mpsc::sync_channel::<Event>(queue_capacity.max(1));
+        let dropped = Arc::new(AtomicU64::new(0));
+        let counter = Arc::clone(&dropped);
+        let writer = std::thread::Builder::new()
+            .name("event-sink".into())
+            .spawn(move || drain(rx, out, format, &counter))
+            .expect("spawn event-sink writer");
+        EventSink { tx: Some(tx), dropped, writer: Some(writer) }
+    }
+
+    /// Enqueue one event. Never blocks: a full queue (or a sink already shut
+    /// down) drops the event and increments the dropped counter.
+    pub fn emit(&self, event: Event) {
+        let Some(tx) = &self.tx else { return };
+        if tx.try_send(event).is_err() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Events lost to a full queue or a dead output so far. A completed run
+    /// with 0 here has a gap-free log.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for EventSink {
+    fn drop(&mut self) {
+        // Closing the sender lets the writer drain the queue and exit; the
+        // join guarantees the file is flushed and complete before the owner
+        // (e.g. `run_training`) returns.
+        self.tx.take();
+        if let Some(handle) = self.writer.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Writer-thread loop: format and write each event, flushing periodically.
+/// A dead output (closed pipe, full disk) flips the sink into drain-and-count
+/// mode — emitters keep their non-blocking guarantee either way.
+fn drain(
+    rx: mpsc::Receiver<Event>,
+    out: Box<dyn Write + Send>,
+    format: EventFormat,
+    dropped: &AtomicU64,
+) {
+    let mut w = out;
+    let mut alive = true;
+    if format == EventFormat::Csv {
+        alive = writeln!(w, "{CSV_HEADER}").is_ok();
+    }
+    let mut since_flush = 0usize;
+    for event in rx {
+        if !alive {
+            dropped.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        let line = match format {
+            EventFormat::Jsonl => event.to_json().to_string(),
+            EventFormat::Csv => event.to_csv_row(),
+        };
+        if writeln!(w, "{line}").is_err() {
+            alive = false;
+            dropped.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        since_flush += 1;
+        if since_flush >= FLUSH_EVERY {
+            let _ = w.flush();
+            since_flush = 0;
+        }
+    }
+    let _ = w.flush();
+}
+
+/// Per-job handle the boosting loop logs rounds through: pins the `(t, y)`
+/// identity once so the hot loop passes only per-round values.
+pub struct RoundLog<'a> {
+    sink: &'a EventSink,
+    t_idx: usize,
+    y: usize,
+}
+
+impl<'a> RoundLog<'a> {
+    pub fn new(sink: &'a EventSink, t_idx: usize, y: usize) -> RoundLog<'a> {
+        RoundLog { sink, t_idx, y }
+    }
+
+    /// Emit one [`TrainRoundEvent`] (a single bounded-channel `try_send`).
+    pub fn round(
+        &self,
+        round: usize,
+        objective: &'static str,
+        train_loss: f64,
+        eval_loss: Option<f64>,
+        round_wall_ms: f64,
+    ) {
+        self.sink.emit(Event::Round(TrainRoundEvent {
+            t_idx: self.t_idx,
+            y: self.y,
+            round,
+            objective,
+            train_loss,
+            eval_loss,
+            round_wall_ms,
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+
+    /// Test writer backed by a shared buffer the test can read after the
+    /// sink (and with it the writer thread) has been dropped.
+    #[derive(Clone)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl SharedBuf {
+        fn new() -> SharedBuf {
+            SharedBuf(Arc::new(Mutex::new(Vec::new())))
+        }
+
+        fn text(&self) -> String {
+            String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+        }
+    }
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// Sleeps on every write call: with a tiny queue this forces overflow
+    /// while the emitter must stay non-blocking.
+    struct SlowWriter {
+        inner: SharedBuf,
+        delay: Duration,
+    }
+
+    impl Write for SlowWriter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            std::thread::sleep(self.delay);
+            self.inner.write(buf)
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn round_event(t_idx: usize, round: usize) -> TrainRoundEvent {
+        TrainRoundEvent {
+            t_idx,
+            y: 0,
+            round,
+            objective: "sqerr",
+            train_loss: 0.5,
+            eval_loss: Some(0.25),
+            round_wall_ms: 1.5,
+        }
+    }
+
+    #[test]
+    fn format_follows_the_path_extension() {
+        assert_eq!(EventFormat::for_path(Path::new("a/b/events.csv")), EventFormat::Csv);
+        assert_eq!(EventFormat::for_path(Path::new("events.jsonl")), EventFormat::Jsonl);
+        assert_eq!(EventFormat::for_path(Path::new("events")), EventFormat::Jsonl);
+    }
+
+    #[test]
+    fn jsonl_events_roundtrip_through_the_parser() {
+        let parsed = Json::parse(&Event::Round(round_event(3, 7)).to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("type").unwrap().as_str(), Some("round"));
+        assert_eq!(parsed.get("t_idx").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("round").unwrap().as_usize(), Some(7));
+        assert_eq!(parsed.get("objective").unwrap().as_str(), Some("sqerr"));
+        assert_eq!(parsed.get("eval_loss").unwrap().as_f64(), Some(0.25));
+
+        // A missing eval loss serializes as null, not a number.
+        let no_eval = Event::Round(TrainRoundEvent { eval_loss: None, ..round_event(0, 0) });
+        let parsed = Json::parse(&no_eval.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("eval_loss"), Some(&Json::Null));
+
+        let job = Event::Job(JobEvent {
+            t_idx: 1,
+            y: 2,
+            phase: JobPhase::Retried,
+            attempt: 0,
+            rounds_trained: 0,
+            detail: "panic: \"quoted\", with comma".into(),
+        });
+        let parsed = Json::parse(&job.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("phase").unwrap().as_str(), Some("retried"));
+        assert_eq!(
+            parsed.get("detail").unwrap().as_str(),
+            Some("panic: \"quoted\", with comma")
+        );
+
+        let gauge = Event::Gauge(ServiceGauge {
+            queue_depth: 4,
+            requests_served: 9,
+            batches_run: 2,
+            max_coalesced: 5,
+        });
+        let parsed = Json::parse(&gauge.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("type").unwrap().as_str(), Some("gauge"));
+        assert_eq!(parsed.get("queue_depth").unwrap().as_usize(), Some(4));
+        assert_eq!(parsed.get("max_coalesced").unwrap().as_usize(), Some(5));
+    }
+
+    #[test]
+    fn csv_rows_are_fixed_arity_with_quoted_details() {
+        let cols = CSV_HEADER.split(',').count();
+        let r = Event::Round(round_event(1, 2)).to_csv_row();
+        assert_eq!(r.split(',').count(), cols, "{r}");
+        assert!(r.starts_with("round,1,0,2,"), "{r}");
+
+        let g = Event::Gauge(ServiceGauge::default()).to_csv_row();
+        assert_eq!(g.split(',').count(), cols, "{g}");
+
+        // Commas and quotes in the failure detail get RFC-4180 quoting.
+        let j = Event::Job(JobEvent {
+            t_idx: 0,
+            y: 1,
+            phase: JobPhase::Failed,
+            attempt: 2,
+            rounds_trained: 0,
+            detail: "a, \"b\"".into(),
+        })
+        .to_csv_row();
+        assert!(j.ends_with("\"a, \"\"b\"\"\""), "{j}");
+    }
+
+    #[test]
+    fn sink_preserves_emit_order_and_drops_nothing_under_capacity() {
+        let buf = SharedBuf::new();
+        let sink =
+            EventSink::to_writer(Box::new(buf.clone()), EventFormat::Jsonl, DEFAULT_QUEUE_EVENTS);
+        for i in 0..100 {
+            sink.emit(Event::Round(round_event(0, i)));
+        }
+        assert_eq!(sink.dropped_events(), 0);
+        drop(sink); // joins the writer: everything below is flushed
+        let text = buf.text();
+        let rounds: Vec<usize> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap().get("round").unwrap().as_usize().unwrap())
+            .collect();
+        assert_eq!(rounds, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn csv_sink_writes_the_header_first() {
+        let buf = SharedBuf::new();
+        let sink = EventSink::to_writer(Box::new(buf.clone()), EventFormat::Csv, 16);
+        sink.emit(Event::Round(round_event(0, 0)));
+        drop(sink);
+        let text = buf.text();
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some(CSV_HEADER));
+        assert!(lines.next().unwrap().starts_with("round,"), "{text}");
+    }
+
+    #[test]
+    fn overflow_drops_events_but_never_blocks_the_emitter() {
+        let buf = SharedBuf::new();
+        let slow = SlowWriter { inner: buf.clone(), delay: Duration::from_millis(25) };
+        let sink = EventSink::to_writer(Box::new(slow), EventFormat::Jsonl, 2);
+        let n = 40u64;
+        let t0 = Instant::now();
+        for i in 0..n {
+            sink.emit(Event::Round(round_event(0, i as usize)));
+        }
+        let emit_elapsed = t0.elapsed();
+        // Serial drain needs >= 25 ms x 40 = 1 s; the emitter must come
+        // nowhere near that — try_send never waits for the writer.
+        assert!(emit_elapsed < Duration::from_millis(500), "emitter stalled: {emit_elapsed:?}");
+        let dropped = sink.dropped_events();
+        assert!(dropped > 0, "a 2-slot queue behind a slow writer must shed load");
+        drop(sink);
+        let written = buf.text().lines().count() as u64;
+        assert_eq!(written + dropped, n, "every event is either written or counted dropped");
+    }
+
+    #[test]
+    fn to_path_creates_parents_and_writes_jsonl() {
+        let dir = std::env::temp_dir().join("caloforest_events_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("run.jsonl");
+        let sink = EventSink::to_path(&path).unwrap();
+        sink.emit(Event::Round(round_event(2, 0)));
+        drop(sink);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        let v = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("t_idx").unwrap().as_usize(), Some(2));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -16,6 +16,8 @@
 //!   generators + counterexample reporting) used by the test suite.
 //! * [`faultplan`] — deterministic fault injection (env-keyed panic/I/O
 //!   faults at named sites) driving the fault-tolerance test surface.
+//! * [`events`] — bounded-queue, off-hot-path training event sink (per-round
+//!   and per-job telemetry to CSV/JSONL, drop-on-full, one writer thread).
 
 pub mod rng;
 pub mod json;
@@ -24,6 +26,7 @@ pub mod stats;
 pub mod bench;
 pub mod prop;
 pub mod faultplan;
+pub mod events;
 
 pub use rng::Rng;
 pub use json::Json;

@@ -1,0 +1,290 @@
+//! Event-stream acceptance suite: the bounded-queue telemetry sink must
+//! describe a training run exactly — per-job round counts matching the
+//! coordinator's own accounting, lifecycle phases matching the attempt
+//! history — without perturbing the run: models trained with a sink are
+//! byte-identical to models trained without one, at every worker width.
+//!
+//! Every test installs a scoped fault plan (possibly empty) so CI fault
+//! legs never leak injected faults into these runs, and the suite
+//! serializes around the plan lock.
+
+use caloforest::coordinator::events::read_jsonl;
+use caloforest::coordinator::store::ModelStore;
+use caloforest::coordinator::{run_training, RunOptions, RunStatus};
+use caloforest::forest::ForestTrainConfig;
+use caloforest::gbt::{serialize, TrainParams};
+use caloforest::tensor::Matrix;
+use caloforest::util::faultplan;
+use caloforest::util::prop::worker_widths;
+use caloforest::util::rng::Rng;
+use caloforest::util::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn data(n: usize, seed: u64) -> (Matrix, Vec<u32>) {
+    let mut rng = Rng::new(seed);
+    let mut x = Matrix::randn(n, 3, &mut rng);
+    let y: Vec<u32> = (0..n).map(|i| (i % 2) as u32).collect();
+    for r in 0..n {
+        let shift = if y[r] == 0 { -2.0 } else { 2.0 };
+        x.set(r, 0, x.at(r, 0) + shift);
+    }
+    (x, y)
+}
+
+/// 3 timesteps × 2 classes = 6 jobs, scheduled t-major:
+/// job 0 = t0000_y000, job 1 = t0000_y001, …, job 5 = t0002_y001.
+fn cfg() -> ForestTrainConfig {
+    ForestTrainConfig {
+        n_t: 3,
+        k_dup: 4,
+        params: TrainParams { n_trees: 4, max_depth: 3, ..Default::default() },
+        seed: 3,
+        ..Default::default()
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("caloforest_events_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn str_field<'a>(e: &'a Json, key: &str) -> &'a str {
+    e.get(key).unwrap_or_else(|| panic!("missing {key}: {e:?}")).as_str().unwrap()
+}
+
+fn usize_field(e: &Json, key: &str) -> usize {
+    e.get(key).unwrap_or_else(|| panic!("missing {key}: {e:?}")).as_usize().unwrap()
+}
+
+/// Rounds logged per `(t_idx, y)` slot.
+fn round_counts(events: &[Json]) -> BTreeMap<(usize, usize), usize> {
+    let mut counts = BTreeMap::new();
+    for e in events.iter().filter(|e| str_field(e, "type") == "round") {
+        *counts.entry((usize_field(e, "t_idx"), usize_field(e, "y"))).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Job-lifecycle phases per `(t_idx, y)` slot, in emission order.
+fn job_phases(events: &[Json]) -> BTreeMap<(usize, usize), Vec<(String, usize)>> {
+    let mut phases: BTreeMap<_, Vec<_>> = BTreeMap::new();
+    for e in events.iter().filter(|e| str_field(e, "type") == "job") {
+        phases
+            .entry((usize_field(e, "t_idx"), usize_field(e, "y")))
+            .or_default()
+            .push((str_field(e, "phase").to_string(), usize_field(e, "attempt")));
+    }
+    phases
+}
+
+#[test]
+fn round_counts_match_outcome_and_models_stay_identical() {
+    let _clean = faultplan::scoped("");
+    let (x, y) = data(40, 60);
+    let c = cfg();
+
+    // Reference: no sink at all — the exact seed training path.
+    let ref_dir = tmp("reference");
+    let ref_opts = RunOptions::new().with_workers(1).with_store_dir(ref_dir.clone());
+    assert_eq!(run_training(&c, &x, Some(&y), &ref_opts).status, RunStatus::Complete);
+    let ref_model = ModelStore::open(&ref_dir).unwrap().load_model().unwrap();
+
+    for w in worker_widths() {
+        let dir = tmp(&format!("logged_w{w}"));
+        let log = dir.join("events.jsonl");
+        let opts = RunOptions::new()
+            .with_workers(w)
+            .with_store_dir(dir.clone())
+            .with_event_log(log.clone());
+        let out = run_training(&c, &x, Some(&y), &opts);
+        assert_eq!(out.status, RunStatus::Complete, "workers={w}");
+        assert_eq!(out.events_dropped, 0, "workers={w}: queue must not shed this tiny run");
+
+        // Logging must not perturb training: every ensemble byte-identical
+        // to the sink-less reference.
+        let model = ModelStore::open(&dir).unwrap().load_model().unwrap();
+        for t in 0..c.n_t {
+            for yy in 0..2 {
+                assert_eq!(
+                    serialize::to_bytes(model.ensemble(t, yy)),
+                    serialize::to_bytes(ref_model.ensemble(t, yy)),
+                    "workers={w}: ensemble ({t}, {yy}) differs from unlogged run"
+                );
+            }
+        }
+
+        // The stream's per-job round counts match the coordinator's own
+        // accounting exactly.
+        let events = read_jsonl(&log).unwrap();
+        let counts = round_counts(&events);
+        assert_eq!(counts.len(), 6, "workers={w}: every job must appear in the stream");
+        for job in &out.report.jobs {
+            assert_eq!(
+                counts.get(&(job.t_idx, job.y)),
+                Some(&job.rounds_trained),
+                "workers={w}: round count for ({}, {}) disagrees with RunOutcome",
+                job.t_idx,
+                job.y
+            );
+        }
+
+        // Per-job round indices arrive in order 0..n even when jobs
+        // interleave (one channel preserves per-sender order, and a job's
+        // rounds all come from one thread).
+        let mut rounds: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        for e in events.iter().filter(|e| str_field(e, "type") == "round") {
+            assert_eq!(str_field(e, "objective"), "sqerr", "workers={w}");
+            assert!(e.get("train_loss").unwrap().as_f64().unwrap().is_finite(), "workers={w}");
+            assert!(e.get("round_wall_ms").unwrap().as_f64().unwrap() >= 0.0, "workers={w}");
+            rounds
+                .entry((usize_field(e, "t_idx"), usize_field(e, "y")))
+                .or_default()
+                .push(usize_field(e, "round"));
+        }
+        for ((t, yy), seq) in &rounds {
+            let expect: Vec<usize> = (0..seq.len()).collect();
+            assert_eq!(seq, &expect, "workers={w}: job ({t}, {yy}) rounds out of order");
+        }
+
+        // A clean run is one started + one completed per job, attempt 0.
+        for ((t, yy), phases) in job_phases(&events) {
+            assert_eq!(
+                phases,
+                [("started".to_string(), 0), ("completed".to_string(), 0)],
+                "workers={w}: job ({t}, {yy}) lifecycle"
+            );
+        }
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    std::fs::remove_dir_all(&ref_dir).unwrap();
+}
+
+#[test]
+fn deadline_stopped_jobs_truncate_their_streams() {
+    let _clean = faultplan::scoped("");
+    let (x, y) = data(40, 61);
+    let c = cfg();
+    let dir = tmp("deadline");
+    let log = dir.join("events.jsonl");
+    // A zero budget stops every job after its guaranteed first round, so
+    // the stream must show exactly one round per job plus a
+    // deadline_stopped marker carrying the truncated count.
+    let opts = RunOptions::new()
+        .with_workers(2)
+        .with_store_dir(dir.clone())
+        .with_time_budget(std::time::Duration::ZERO)
+        .with_event_log(log.clone());
+    let out = run_training(&c, &x, Some(&y), &opts);
+    assert_eq!(out.status, RunStatus::Complete);
+    assert_eq!(out.report.deadline_stopped_jobs(), 6);
+    for job in &out.report.jobs {
+        assert_eq!(job.rounds_trained, 1);
+    }
+
+    let events = read_jsonl(&log).unwrap();
+    let counts = round_counts(&events);
+    assert_eq!(counts.len(), 6);
+    assert!(counts.values().all(|&n| n == 1), "deadline-stopped jobs log exactly round 0");
+    let stopped: Vec<&Json> = events
+        .iter()
+        .filter(|e| str_field(e, "type") == "job" && str_field(e, "phase") == "deadline_stopped")
+        .collect();
+    assert_eq!(stopped.len(), 6, "every job reports its deadline stop");
+    for e in &stopped {
+        assert_eq!(usize_field(e, "rounds_trained"), 1);
+    }
+    // The truncated ensembles are still kept: completed follows.
+    for (_, phases) in job_phases(&events) {
+        assert_eq!(phases.last().map(|(p, _)| p.as_str()), Some("completed"));
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn faulted_run_emits_matching_retry_and_failure_events() {
+    // job 1 (t0000_y001) panics on every attempt; with max_retries = 1 it
+    // exhausts both attempts and fails. Job t0002_y000 panics only on its
+    // first attempt, so its retry completes. Sequential (workers = 1) so
+    // the interleaving is deterministic.
+    let _faults = faultplan::scoped("job:1:panic,job:t0002_y000:panic@1");
+    let (x, y) = data(40, 62);
+    let c = cfg();
+    let dir = tmp("faulted");
+    let log = dir.join("events.jsonl");
+    let opts = RunOptions::new()
+        .with_store_dir(dir.clone())
+        .with_max_retries(1)
+        .with_event_log(log.clone());
+    let out = run_training(&c, &x, Some(&y), &opts);
+    assert_eq!(out.status, RunStatus::Partial);
+    assert_eq!(out.failed_slots.len(), 1);
+    assert_eq!((out.failed_slots[0].t_idx, out.failed_slots[0].y), (0, 1));
+    assert_eq!(out.retried_slots, 1);
+
+    let events = read_jsonl(&log).unwrap();
+    let phases = job_phases(&events);
+    let ph = |p: &str, a: usize| (p.to_string(), a);
+    assert_eq!(
+        phases[&(0, 1)],
+        [ph("started", 0), ph("retried", 0), ph("started", 1), ph("failed", 1)],
+        "exhausted slot lifecycle"
+    );
+    assert_eq!(
+        phases[&(2, 0)],
+        [ph("started", 0), ph("retried", 0), ph("started", 1), ph("completed", 1)],
+        "retried-then-recovered slot lifecycle"
+    );
+    // Clean jobs stay two-event.
+    for &(t, yy) in &[(0, 0), (1, 0), (1, 1), (2, 1)] {
+        assert_eq!(phases[&(t, yy)].len(), 2, "clean job ({t}, {yy})");
+    }
+    // The failure detail carries the panic payload.
+    let failed = events
+        .iter()
+        .find(|e| str_field(e, "type") == "job" && str_field(e, "phase") == "failed")
+        .unwrap();
+    assert!(str_field(failed, "detail").contains("injected fault"), "{failed:?}");
+    // The exhausted job logged rounds on no attempt (the fault fires before
+    // training), so it never appears in the round stream.
+    assert!(!round_counts(&events).contains_key(&(0, 1)));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn csv_event_log_writes_header_and_fixed_arity_rows() {
+    let _clean = faultplan::scoped("");
+    let (x, y) = data(40, 63);
+    let c = cfg();
+    let dir = tmp("csv");
+    let log = dir.join("events.csv");
+    let opts = RunOptions::new()
+        .with_workers(2)
+        .with_store_dir(dir.clone())
+        .with_event_log(log.clone());
+    let out = run_training(&c, &x, Some(&y), &opts);
+    assert_eq!(out.status, RunStatus::Complete);
+
+    let text = std::fs::read_to_string(&log).unwrap();
+    let mut lines = text.lines();
+    let header = lines.next().unwrap();
+    assert!(header.starts_with("type,t_idx,y,round,"), "{header}");
+    let cols = header.matches(',').count();
+    // A clean run has empty detail fields, so no RFC-4180 quoting: the
+    // comma count is the column count on every row.
+    let rows: Vec<&str> = lines.collect();
+    assert!(!rows.is_empty());
+    for row in &rows {
+        assert_eq!(row.matches(',').count(), cols, "ragged row: {row}");
+    }
+    let total_rounds: usize = out.report.jobs.iter().map(|j| j.rounds_trained).sum();
+    assert_eq!(rows.iter().filter(|r| r.starts_with("round,")).count(), total_rounds);
+    assert_eq!(
+        rows.iter().filter(|r| r.starts_with("job,") && r.contains(",started,")).count(),
+        out.report.jobs.len(),
+        "one started row per job"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
