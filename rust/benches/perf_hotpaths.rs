@@ -4,7 +4,7 @@
 //! noising data construction (training-data prep). Results feed
 //! EXPERIMENTS.md §Perf.
 
-use caloforest::coordinator::memory::TrackingAlloc;
+use caloforest::coordinator::memory::{current_bytes, peak_bytes, reset_peak, TrackingAlloc};
 use caloforest::coordinator::pool::{self as cpool, WorkerPool};
 use caloforest::data::synthetic_dataset;
 use caloforest::forest::noising;
@@ -12,13 +12,16 @@ use caloforest::forest::sampler::{
     generate, generate_batched, generate_with, Backend, GenerateConfig, Solver,
 };
 use caloforest::forest::schedule::VpSchedule;
-use caloforest::forest::trainer::{prepare as forest_prepare, train_forest, ForestTrainConfig};
+use caloforest::forest::trainer::{prepare_opts, train_forest, ForestTrainConfig, SpillConfig};
 use caloforest::forest::ModelKind;
 use caloforest::gbt::booster::{update_eval_preds, update_train_preds};
 use caloforest::gbt::histogram::{HistLayout, Histogram};
 use caloforest::gbt::predict::PackedForest;
 use caloforest::gbt::tree::PAR_BUILD_MIN_ROWS;
-use caloforest::gbt::{BinnedMatrix, Booster, QuantForest, TileShape, TrainParams, TreeKind};
+use caloforest::gbt::{
+    BinnedMatrix, Booster, QuantForest, StreamingSketch, TileShape, TrainParams, TreeKind,
+    SKETCH_BUDGET,
+};
 use caloforest::runtime::{xla_sampler::XlaField, PjrtRuntime};
 use caloforest::tensor::Matrix;
 use caloforest::util::bench::Bench;
@@ -479,11 +482,14 @@ fn main() {
     let dp_k = if quick { 8 } else { 64 };
     let dp_x = Matrix::randn(dp_n, dp_p, &mut rng);
     let dp_cfg = ForestTrainConfig { n_t: 2, k_dup: dp_k, seed: 3, ..Default::default() };
+    // Resident-explicit (`spill: None`): this section measures the
+    // in-memory layout and must not follow CALOFOREST_SPILL_MB; the spilled
+    // plane is benchmarked in the out-of-core section below.
     let m_prep = bench.time(&format!("training prepare n={dp_n} p={dp_p} K={dp_k} (virtual)"), || {
-        let prep = forest_prepare(&dp_cfg, &dp_x, None);
+        let prep = prepare_opts(&dp_cfg, &dp_x, None, None);
         std::hint::black_box(prep.nbytes());
     });
-    let dp_prep = forest_prepare(&dp_cfg, &dp_x, None);
+    let dp_prep = prepare_opts(&dp_cfg, &dp_x, None, None);
     let dup_rows = dp_n * dp_k;
     let mut dp_xt = Matrix::zeros(dup_rows, dp_p);
     let mut dp_z = Matrix::zeros(dup_rows, dp_p);
@@ -529,6 +535,81 @@ fn main() {
         dp_n as f64 / m_prep.mean() / 1e6,
         dup_rows as f64 / jb_mean(1) / 1e6,
         dup_rows as f64 / jb_mean(8) / 1e6,
+    );
+
+    // --- Out-of-core data plane: streaming sketch + spilled prepare. ------
+    // The spilled plane's two prepare-side kernels: (1) the merge-and-prune
+    // quantile sketch absorbing the matrix chunk-at-a-time (pass 1 of every
+    // spilled job), and (2) `prepare` itself writing the scaled matrix into
+    // the file-backed column store instead of holding it resident. Targets
+    // (recorded under `out_of_core.targets`): spilled prepare keeps >= 0.5x
+    // the resident prepare's throughput, at <= 0.3x its peak resident bytes.
+    let oc_n = if quick { 10_000 } else { 200_000 };
+    let oc_p = 10;
+    let oc_chunk = 8192;
+    let oc_x = Matrix::randn(oc_n, oc_p, &mut rng);
+    // (stage, threads, mean_secs, rows-processed-per-call).
+    let mut oc_results: Vec<(&str, usize, f64, usize)> = Vec::new();
+    for (threads, oc_pool) in [(1usize, &upd_pool1), (8, &pool8)] {
+        let m = bench.time(
+            &format!("streaming sketch n={oc_n} p={oc_p} ({threads} thread)"),
+            || {
+                let mut sk = StreamingSketch::new(oc_p, 255);
+                let mut r0 = 0;
+                while r0 < oc_n {
+                    let r1 = (r0 + oc_chunk).min(oc_n);
+                    let chunk = oc_x.row_slice(r0, r1);
+                    if threads == 1 {
+                        sk.push_chunk(&chunk);
+                    } else {
+                        sk.push_chunk_pool(&chunk, oc_pool);
+                    }
+                    r0 = r1;
+                }
+                std::hint::black_box(sk.finish().n_features());
+            },
+        );
+        oc_results.push(("streaming-sketch", threads, m.mean(), oc_n));
+    }
+    let oc_cfg = ForestTrainConfig { n_t: 2, k_dup: 8, seed: 5, ..Default::default() };
+    let oc_spill = SpillConfig::new(std::env::temp_dir().join("caloforest_bench_spill"), 0);
+    let oc_before = current_bytes();
+    reset_peak();
+    let m_oc_res = bench.time(&format!("prepare resident n={oc_n} p={oc_p}"), || {
+        let prep = prepare_opts(&oc_cfg, &oc_x, None, None);
+        std::hint::black_box(prep.nbytes());
+    });
+    let oc_resident_peak = peak_bytes().saturating_sub(oc_before);
+    let oc_before = current_bytes();
+    reset_peak();
+    let m_oc_spill = bench.time(&format!("prepare spilled n={oc_n} p={oc_p}"), || {
+        let prep = prepare_opts(&oc_cfg, &oc_x, None, Some(&oc_spill));
+        std::hint::black_box(prep.disk_bytes());
+    });
+    let oc_spilled_peak = peak_bytes().saturating_sub(oc_before);
+    oc_results.push(("prepare-resident", 1, m_oc_res.mean(), oc_n));
+    oc_results.push(("prepare-spilled", 1, m_oc_spill.mean(), oc_n));
+    for &(stage, threads, secs, _rows) in &oc_results {
+        bench.csv("path,label,mean_secs", format!("out-of-core,{stage}-t{threads},{secs:.9}"));
+    }
+    let oc_tput_ratio = m_oc_res.mean() / m_oc_spill.mean().max(1e-12);
+    let oc_peak_ratio = oc_spilled_peak as f64 / (oc_resident_peak as f64).max(1.0);
+    let oc_mean = |stage: &str, threads: usize| {
+        oc_results
+            .iter()
+            .find(|&&(s, th, _, _)| s == stage && th == threads)
+            .map(|&(_, _, m, _)| m)
+            .unwrap_or(f64::NAN)
+    };
+    println!(
+        "out-of-core: sketch {:.2} Mrow/s (1 thread) vs {:.2} Mrow/s (8 threads); spilled \
+         prepare {:.2}x resident throughput at {:.2}x resident peak ({} vs {} bytes)",
+        oc_n as f64 / oc_mean("streaming-sketch", 1) / 1e6,
+        oc_n as f64 / oc_mean("streaming-sketch", 8) / 1e6,
+        oc_tput_ratio,
+        oc_peak_ratio,
+        oc_spilled_peak,
+        oc_resident_peak,
     );
 
     // Full-size runs persist the trajectory at the workspace root (cargo
@@ -614,6 +695,34 @@ fn main() {
             .set("config", config)
             .set("results", Json::Arr(results))
             .set("job_build_speedup_8t", jb_speedup);
+        let mut oc_sec = Json::obj();
+        let results = oc_results
+            .iter()
+            .map(|&(stage, threads, secs, rows)| row_json(rows, stage, threads, secs))
+            .collect::<Vec<_>>();
+        let mut oc_config = Json::obj();
+        oc_config
+            .set("rows", oc_n)
+            .set("features", oc_p)
+            .set("chunk_rows", oc_chunk)
+            .set("sketch_budget", SKETCH_BUDGET);
+        let mut oc_prepare = Json::obj();
+        oc_prepare
+            .set("resident_secs", m_oc_res.mean())
+            .set("spilled_secs", m_oc_spill.mean())
+            .set("spilled_throughput_ratio", oc_tput_ratio)
+            .set("resident_peak_bytes", oc_resident_peak)
+            .set("spilled_peak_bytes", oc_spilled_peak)
+            .set("spilled_peak_ratio", oc_peak_ratio);
+        let mut oc_targets = Json::obj();
+        oc_targets
+            .set("spilled_prepare_min_throughput_ratio", 0.5)
+            .set("spilled_peak_max_ratio", 0.3);
+        oc_sec
+            .set("config", oc_config)
+            .set("results", Json::Arr(results))
+            .set("prepare", oc_prepare)
+            .set("targets", oc_targets);
         let mut svc_sec = Json::obj();
         let results = svc_results
             .iter()
@@ -650,6 +759,7 @@ fn main() {
             .set("arena_engine", arena_sec)
             .set("training_update", upd_sec)
             .set("training_prepare", prep_sec)
+            .set("out_of_core", oc_sec)
             .set("sampling_service", svc_sec);
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .parent()

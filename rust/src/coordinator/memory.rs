@@ -124,11 +124,18 @@ struct Block {
 #[derive(Debug)]
 pub struct MemoryModel {
     blocks: Vec<Block>,
+    disk_blocks: Vec<Block>,
     pub current: usize,
     pub peak: usize,
+    /// Bytes moved out of residency to disk (the out-of-core spill plane).
+    /// Counted separately: spilled bytes never touch `current`/`peak` or
+    /// the resident `limit` — that separation is exactly what the 4×
+    /// f32→u8 resident-reduction gate in `fig2_memory_timeline` checks.
+    pub disk: usize,
     pub limit: Option<usize>,
     pub failed: bool,
-    /// Timeline of (label, bytes-after-event).
+    /// Timeline of (label, bytes-after-event). Labels: `+name` resident
+    /// alloc, `-name` resident free, `~name` spill-to-disk move.
     pub timeline: Vec<(String, usize)>,
 }
 
@@ -136,8 +143,10 @@ impl MemoryModel {
     pub fn new(limit: Option<usize>) -> MemoryModel {
         MemoryModel {
             blocks: Vec::new(),
+            disk_blocks: Vec::new(),
             current: 0,
             peak: 0,
+            disk: 0,
             limit,
             failed: false,
             timeline: Vec::new(),
@@ -182,6 +191,42 @@ impl MemoryModel {
             .map(|b| b.bytes)
             .sum()
     }
+
+    /// Charge a named allocation straight to disk (never resident — e.g.
+    /// the spill store written chunk-at-a-time). Disk is unbounded in the
+    /// model, so this cannot fail the run.
+    pub fn alloc_disk(&mut self, name: &str, bytes: usize) {
+        self.disk_blocks.push(Block { name: name.to_string(), bytes });
+        self.disk += bytes;
+        self.timeline.push((format!("~{name}"), self.current));
+    }
+
+    /// Move every resident block whose name matches to disk: residency
+    /// drops, `disk` grows, and the timeline records the spill (`~name`).
+    pub fn spill(&mut self, name: &str) {
+        let mut moved = 0usize;
+        self.blocks.retain(|b| {
+            if b.name == name {
+                moved += b.bytes;
+                self.disk_blocks.push(b.clone());
+                false
+            } else {
+                true
+            }
+        });
+        self.current -= moved;
+        self.disk += moved;
+        self.timeline.push((format!("~{name}"), self.current));
+    }
+
+    /// Bytes on disk under a name prefix.
+    pub fn held_disk(&self, prefix: &str) -> usize {
+        self.disk_blocks
+            .iter()
+            .filter(|b| b.name.starts_with(prefix))
+            .map(|b| b.bytes)
+            .sum()
+    }
 }
 
 /// Human-readable byte size.
@@ -218,6 +263,25 @@ mod tests {
         assert_eq!(m.held("job/"), 50);
         assert!(!m.failed);
         assert!(m.timeline.len() == 4);
+    }
+
+    #[test]
+    fn model_spill_moves_bytes_off_residency() {
+        let mut m = MemoryModel::new(Some(250));
+        m.alloc("x", 200);
+        m.alloc("codes", 50);
+        assert_eq!(m.peak, 250);
+        m.spill("x");
+        assert_eq!(m.current, 50, "spilled bytes leave residency");
+        assert_eq!(m.disk, 200);
+        assert_eq!(m.held("x"), 0);
+        assert_eq!(m.held_disk("x"), 200);
+        // Disk growth never trips the resident limit.
+        m.alloc_disk("x/chunk", 10_000);
+        assert_eq!(m.disk, 10_200);
+        assert!(!m.failed);
+        assert_eq!(m.peak, 250, "peak is resident-only");
+        assert!(m.timeline.iter().any(|(l, _)| l == "~x"));
     }
 
     #[test]

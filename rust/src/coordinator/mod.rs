@@ -32,7 +32,8 @@ pub mod events;
 
 use crate::forest::model::ForestModel;
 use crate::forest::trainer::{
-    prepare, train_job_logged, ForestTrainConfig, JobRecord, TrainReport,
+    prepare, prepare_opts, train_job_logged, ForestTrainConfig, JobRecord, SpillConfig,
+    TrainReport,
 };
 use crate::gbt::BinCuts;
 use crate::tensor::Matrix;
@@ -74,6 +75,12 @@ pub struct RunOptions {
     /// the bounded off-hot-path sink ([`crate::util::events::EventSink`]).
     /// `.csv` extension selects CSV, anything else JSONL. `None` = off.
     pub event_log: Option<PathBuf>,
+    /// Out-of-core data plane: spill the scaled training matrix to a
+    /// file-backed column-chunk store once it reaches
+    /// `spill.threshold_bytes`, leaving per-job `u8` bin codes as the only
+    /// resident training representation. `None` follows the environment
+    /// (`CALOFOREST_SPILL_MB`/`CALOFOREST_SPILL_DIR`; unset ⇒ resident).
+    pub spill: Option<SpillConfig>,
 }
 
 impl Default for RunOptions {
@@ -87,6 +94,7 @@ impl Default for RunOptions {
             max_retries: 2,
             time_budget: None,
             event_log: None,
+            spill: None,
         }
     }
 }
@@ -148,6 +156,15 @@ impl RunOptions {
     /// boosting round. Models are byte-identical with or without a log.
     pub fn with_event_log(mut self, path: impl Into<PathBuf>) -> RunOptions {
         self.event_log = Some(path.into());
+        self
+    }
+
+    /// Spill the scaled training matrix to `dir` once it would occupy
+    /// `threshold_bytes` resident bytes (`0` = always spill): the run then
+    /// trains through the out-of-core binned data plane — byte-identical
+    /// models, `u8` codes as the only per-job `O(rows·p)` resident state.
+    pub fn with_spill(mut self, dir: impl Into<PathBuf>, threshold_bytes: usize) -> RunOptions {
+        self.spill = Some(SpillConfig::new(dir, threshold_bytes));
         self
     }
 
@@ -376,7 +393,15 @@ pub fn run_training(
     // `[n × p]` matrix plus a noise-stream definition, so shared bytes are
     // `n·p·4` regardless of K; each job synthesizes its own duplicated
     // xt/z transiently on its slot's pool.
-    let prep = prepare(cfg, x_raw, y);
+    //
+    // With a spill policy (explicit `opts.spill`, or the environment's
+    // `CALOFOREST_SPILL_MB` when unset), even that matrix moves to the
+    // file-backed column store and each job streams its `u8` bin codes
+    // chunk-at-a-time — same models, byte for byte.
+    let prep = match &opts.spill {
+        Some(sc) => prepare_opts(cfg, x_raw, y, Some(sc)),
+        None => prepare(cfg, x_raw, y),
+    };
     sample_mem(&timeline, &t0);
 
     let n_t = prep.grid.n_t();

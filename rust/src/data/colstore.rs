@@ -1,0 +1,326 @@
+//! File-backed f32 column-chunk store — the spill target of the out-of-core
+//! data plane.
+//!
+//! [`ColStoreWriter`] streams a row-major dataset to disk as fixed-size
+//! row chunks, each stored **column-major** (`payload[f · rows_c + r]`) so a
+//! reader gets every feature's chunk-column as one contiguous run — the
+//! layout streamed binning and code construction consume. Std-only by the
+//! zero-dependency rule: plain `File` + seek/read, no mmap, no libc.
+//!
+//! Every chunk carries the same 16-byte integrity trailer as the model
+//! store's checkpoint files (`payload_len: u64 LE`, IEEE CRC32 over the
+//! payload via [`crate::gbt::serialize::crc32`], then the `FBC1` magic), so
+//! a bit-flipped or truncated spill surfaces as `InvalidData` at read time
+//! instead of silently corrupting cuts or bin codes. All chunks except the
+//! last have exactly `chunk_rows` rows, which makes every chunk offset a
+//! closed form — no index block needed.
+//!
+//! Values round-trip through `to_le_bytes`/`from_le_bytes`, i.e. bitwise —
+//! NaN payloads and `-0.0` included — which is what lets the spilled
+//! training path stay byte-identical to the in-memory one.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::gbt::serialize::crc32;
+
+/// Store header magic (`FBCS` = forest binary column store).
+const HEADER_MAGIC: &[u8; 4] = b"FBCS";
+const HEADER_VERSION: u32 = 1;
+/// Header layout: magic(4) + version(4) + n(8) + p(8) + chunk_rows(8).
+const HEADER_LEN: u64 = 32;
+/// Per-chunk trailer: `payload_len u64 LE` + `crc32 u32 LE` + magic — the
+/// model store's `FBC1` trailer layout, mirrored here (the constants there
+/// are private; the byte format is shared).
+const TRAILER_MAGIC: &[u8; 4] = b"FBC1";
+const TRAILER_LEN: u64 = 16;
+
+fn encode_header(n: usize, p: usize, chunk_rows: usize) -> [u8; HEADER_LEN as usize] {
+    let mut h = [0u8; HEADER_LEN as usize];
+    h[0..4].copy_from_slice(HEADER_MAGIC);
+    h[4..8].copy_from_slice(&HEADER_VERSION.to_le_bytes());
+    h[8..16].copy_from_slice(&(n as u64).to_le_bytes());
+    h[16..24].copy_from_slice(&(p as u64).to_le_bytes());
+    h[24..32].copy_from_slice(&(chunk_rows as u64).to_le_bytes());
+    h
+}
+
+fn bad(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Append-only writer; [`finish`](Self::finish) seals the header and
+/// reopens the file as a read-only [`ColStore`] that owns (deletes on drop)
+/// the temp file.
+#[derive(Debug)]
+pub struct ColStoreWriter {
+    file: File,
+    path: PathBuf,
+    p: usize,
+    chunk_rows: usize,
+    n: usize,
+}
+
+impl ColStoreWriter {
+    pub fn create(path: &Path, p: usize, chunk_rows: usize) -> std::io::Result<ColStoreWriter> {
+        assert!(p > 0, "column store needs at least one feature");
+        assert!(chunk_rows > 0, "chunk_rows must be positive");
+        let mut file = File::create(path)?;
+        file.write_all(&encode_header(0, p, chunk_rows))?;
+        Ok(ColStoreWriter { file, path: path.to_path_buf(), p, chunk_rows, n: 0 })
+    }
+
+    /// Append one column-major chunk (`data[f · rows + r]`). Every chunk
+    /// must be full (`rows == chunk_rows`) except the final one — the
+    /// closed-form chunk offsets depend on it.
+    pub fn append_chunk(&mut self, rows: usize, data: &[f32]) -> std::io::Result<()> {
+        assert_eq!(data.len(), rows * self.p, "chunk payload shape mismatch");
+        assert!(rows > 0 && rows <= self.chunk_rows, "chunk row count out of range");
+        assert!(self.n % self.chunk_rows == 0, "append after a ragged (final) chunk");
+        let mut payload = Vec::with_capacity(data.len() * 4);
+        for &v in data {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let crc = crc32(&payload);
+        self.file.write_all(&payload)?;
+        self.file.write_all(&(payload.len() as u64).to_le_bytes())?;
+        self.file.write_all(&crc.to_le_bytes())?;
+        self.file.write_all(TRAILER_MAGIC)?;
+        self.n += rows;
+        Ok(())
+    }
+
+    /// Seal the header with the final row count and reopen as an owned
+    /// (delete-on-drop) [`ColStore`].
+    pub fn finish(mut self) -> std::io::Result<ColStore> {
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.write_all(&encode_header(self.n, self.p, self.chunk_rows))?;
+        self.file.flush()?;
+        drop(self.file);
+        ColStore::open_with_ownership(&self.path, true)
+    }
+}
+
+/// Read side: seek + checksummed chunk reads behind a `Mutex<File>` (one
+/// descriptor; readers hold the lock only for the positioned read itself).
+#[derive(Debug)]
+pub struct ColStore {
+    file: Mutex<File>,
+    path: PathBuf,
+    n: usize,
+    p: usize,
+    chunk_rows: usize,
+    /// Owned stores are spill temporaries: the file is deleted on drop.
+    owned: bool,
+}
+
+impl ColStore {
+    /// Open an existing store file (not owned: the file survives drop).
+    pub fn open(path: &Path) -> std::io::Result<ColStore> {
+        ColStore::open_with_ownership(path, false)
+    }
+
+    fn open_with_ownership(path: &Path, owned: bool) -> std::io::Result<ColStore> {
+        let mut file = File::open(path)?;
+        let mut h = [0u8; HEADER_LEN as usize];
+        file.read_exact(&mut h)?;
+        if &h[0..4] != HEADER_MAGIC {
+            return Err(bad(format!("{}: not a column store (bad magic)", path.display())));
+        }
+        let version = u32::from_le_bytes(h[4..8].try_into().unwrap());
+        if version != HEADER_VERSION {
+            return Err(bad(format!("unsupported column store version {version}")));
+        }
+        let n = u64::from_le_bytes(h[8..16].try_into().unwrap()) as usize;
+        let p = u64::from_le_bytes(h[16..24].try_into().unwrap()) as usize;
+        let chunk_rows = u64::from_le_bytes(h[24..32].try_into().unwrap()) as usize;
+        if p == 0 || chunk_rows == 0 {
+            return Err(bad("column store header has zero width or chunk size".into()));
+        }
+        Ok(ColStore { file: Mutex::new(file), path: path.to_path_buf(), n, p, chunk_rows, owned })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    pub fn cols(&self) -> usize {
+        self.p
+    }
+
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.n.div_ceil(self.chunk_rows)
+    }
+
+    /// Row span `[r0, r1)` of chunk `c`.
+    pub fn chunk_range(&self, c: usize) -> (usize, usize) {
+        let r0 = c * self.chunk_rows;
+        (r0, (r0 + self.chunk_rows).min(self.n))
+    }
+
+    fn chunk_offset(&self, c: usize) -> u64 {
+        HEADER_LEN + c as u64 * (self.chunk_rows as u64 * self.p as u64 * 4 + TRAILER_LEN)
+    }
+
+    /// Bytes of the store file (header + payloads + trailers).
+    pub fn disk_bytes(&self) -> usize {
+        let full = self.n / self.chunk_rows;
+        let mut bytes = HEADER_LEN as usize
+            + full * (self.chunk_rows * self.p * 4 + TRAILER_LEN as usize);
+        let tail = self.n % self.chunk_rows;
+        if tail > 0 {
+            bytes += tail * self.p * 4 + TRAILER_LEN as usize;
+        }
+        bytes
+    }
+
+    /// Read chunk `c` into `buf` (column-major, `buf[f · rows + r]`),
+    /// validating the trailer checksum. Returns the chunk's row count.
+    pub fn read_chunk_into(&self, c: usize, buf: &mut Vec<f32>) -> std::io::Result<usize> {
+        assert!(c < self.n_chunks(), "chunk index out of range");
+        let (r0, r1) = self.chunk_range(c);
+        let rows = r1 - r0;
+        let payload_len = rows * self.p * 4;
+        let mut bytes = vec![0u8; payload_len + TRAILER_LEN as usize];
+        {
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(self.chunk_offset(c)))?;
+            f.read_exact(&mut bytes)?;
+        }
+        let (payload, trailer) = bytes.split_at(payload_len);
+        let len = u64::from_le_bytes(trailer[0..8].try_into().unwrap());
+        let crc = u32::from_le_bytes(trailer[8..12].try_into().unwrap());
+        if &trailer[12..16] != TRAILER_MAGIC
+            || len != payload_len as u64
+            || crc != crc32(payload)
+        {
+            return Err(bad(format!(
+                "column store chunk {c}: corrupt trailer or checksum mismatch"
+            )));
+        }
+        buf.clear();
+        buf.reserve(rows * self.p);
+        for b in payload.chunks_exact(4) {
+            buf.push(f32::from_le_bytes(b.try_into().unwrap()));
+        }
+        Ok(rows)
+    }
+}
+
+impl Drop for ColStore {
+    fn drop(&mut self) {
+        if self.owned {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("caloforest_colstore_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{tag}-{}.fbcs", std::process::id()))
+    }
+
+    fn write_store(path: &Path, n: usize, p: usize, chunk_rows: usize) -> (ColStore, Vec<f32>) {
+        // Row-major reference data including NaN and -0.0 bit patterns.
+        let mut rng = Rng::new(7);
+        let mut data = vec![0.0f32; n * p];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = match i % 13 {
+                0 => f32::NAN,
+                1 => -0.0,
+                _ => rng.normal_f32(),
+            };
+        }
+        let mut w = ColStoreWriter::create(path, p, chunk_rows).unwrap();
+        let mut chunk = vec![0.0f32; chunk_rows * p];
+        let mut r0 = 0usize;
+        while r0 < n {
+            let rows = chunk_rows.min(n - r0);
+            for r in 0..rows {
+                for f in 0..p {
+                    chunk[f * rows + r] = data[(r0 + r) * p + f];
+                }
+            }
+            w.append_chunk(rows, &chunk[..rows * p]).unwrap();
+            r0 += rows;
+        }
+        (w.finish().unwrap(), data)
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_with_ragged_tail() {
+        let path = tmp_path("roundtrip");
+        let (n, p, cr) = (1000, 3, 256); // 3 full chunks + ragged 232
+        let (store, data) = write_store(&path, n, p, cr);
+        assert_eq!(store.rows(), n);
+        assert_eq!(store.cols(), p);
+        assert_eq!(store.n_chunks(), 4);
+        assert_eq!(store.chunk_range(3), (768, 1000));
+        let mut buf = Vec::new();
+        for c in 0..store.n_chunks() {
+            let rows = store.read_chunk_into(c, &mut buf).unwrap();
+            let (r0, r1) = store.chunk_range(c);
+            assert_eq!(rows, r1 - r0);
+            for r in 0..rows {
+                for f in 0..p {
+                    let got = buf[f * rows + r].to_bits();
+                    let want = data[(r0 + r) * p + f].to_bits();
+                    assert_eq!(got, want, "chunk {c} row {r} feature {f}");
+                }
+            }
+        }
+        let file_len = std::fs::metadata(&path).unwrap().len() as usize;
+        assert_eq!(store.disk_bytes(), file_len);
+        drop(store); // owned: the temp file must be deleted
+        assert!(!path.exists(), "owned store must remove its file on drop");
+    }
+
+    #[test]
+    fn reopen_reads_the_same_chunks() {
+        let path = tmp_path("reopen");
+        let (store, data) = write_store(&path, 300, 2, 128);
+        // Reopening by path is not owned — the file survives that handle.
+        let reopened = ColStore::open(&path).unwrap();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        store.read_chunk_into(1, &mut a).unwrap();
+        reopened.read_chunk_into(1, &mut b).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+        assert_eq!(a.len(), 128 * 2);
+        assert_eq!(a[0].to_bits(), data[128 * 2].to_bits());
+        drop(reopened);
+        assert!(path.exists(), "non-owned handle must not delete the file");
+        drop(store);
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn corruption_is_detected_by_the_trailer() {
+        let path = tmp_path("corrupt");
+        let (store, _) = write_store(&path, 512, 2, 256);
+        // Flip one payload byte of chunk 1 behind the store's back.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off = HEADER_LEN as usize + (256 * 2 * 4 + TRAILER_LEN as usize) + 17;
+        bytes[off] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let reopened = ColStore::open(&path).unwrap();
+        let mut buf = Vec::new();
+        assert!(reopened.read_chunk_into(0, &mut buf).is_ok(), "chunk 0 untouched");
+        let err = reopened.read_chunk_into(1, &mut buf).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("chunk 1"), "{err}");
+        drop(store);
+    }
+}

@@ -3,8 +3,10 @@
 
 pub mod synthetic;
 pub mod benchmark;
+pub mod colstore;
 pub mod split;
 
 pub use benchmark::{benchmark_registry, load_benchmark, BenchmarkSpec, TargetType};
+pub use colstore::{ColStore, ColStoreWriter};
 pub use split::train_test_split;
 pub use synthetic::synthetic_dataset;

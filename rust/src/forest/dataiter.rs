@@ -250,7 +250,11 @@ pub fn train_job_iterator_in(
 ) -> Booster {
     let t = prep.grid.ts[t_idx];
     let (s, e) = prep.class_ranges[y];
-    let x0 = prep.x.row_slice(s, e);
+    // `class_rows` keeps this path working for spilled `Prepared`s too: the
+    // class rows are fetched (bitwise) from the store and held for the job —
+    // the iterator path's own out-of-core axis is the duplicated dimension.
+    let rows = prep.class_rows(s, e);
+    let x0 = rows.view();
     let n_rows = e - s;
     let rows_dup = n_rows * prep.k;
     let p = prep.p;
@@ -363,7 +367,8 @@ mod tests {
     #[test]
     fn seeded_iterator_is_reproducible_across_passes() {
         let (prep, cfg) = prep_and_cfg();
-        let x0 = prep.x.row_slice(0, prep.n);
+        let rows = prep.class_rows(0, prep.n);
+        let x0 = rows.view();
         let mut it = NoisingIter::new(
             x0, 0, prep.noise, prep.k, 0.5, cfg.kind, prep.schedule, 32,
             /* flawed */ false, 0,
@@ -385,7 +390,8 @@ mod tests {
     #[test]
     fn flawed_iterator_differs_across_passes() {
         let (prep, cfg) = prep_and_cfg();
-        let x0 = prep.x.row_slice(0, prep.n);
+        let rows = prep.class_rows(0, prep.n);
+        let x0 = rows.view();
         let mut it = NoisingIter::new(
             x0, 0, prep.noise, prep.k, 0.5, cfg.kind, prep.schedule, 32, true, 3,
         );
@@ -406,7 +412,8 @@ mod tests {
         // With the same stream realization, iterator-built cuts equal
         // single-shot cuts on the in-memory virtual x_t.
         let (prep, cfg) = prep_and_cfg();
-        let x0 = prep.x.row_slice(0, prep.n);
+        let rows = prep.class_rows(0, prep.n);
+        let x0 = rows.view();
         let rows_dup = prep.n * prep.k;
         let p = prep.p;
         let mut it = NoisingIter::new(
@@ -439,7 +446,8 @@ mod tests {
     #[test]
     fn iterator_is_batch_size_invariant_and_matches_in_memory_path() {
         let (prep, cfg) = prep_and_cfg();
-        let x0 = prep.x.row_slice(0, prep.n);
+        let rows = prep.class_rows(0, prep.n);
+        let x0 = rows.view();
         // Positional streams make the produced x_t independent of the batch
         // structure — including ragged tails and batch > total.
         let collect = |batch: usize| {

@@ -37,4 +37,6 @@ pub use sampler::{
     generate, generate_batched, Backend, GenerateConfig, LabelSampler, Solver,
 };
 pub use service::{QueueFull, SampleTicket, SamplerService, ServiceStats};
-pub use trainer::{train_forest, ForestTrainConfig, Materialized, Prepared, TrainReport};
+pub use trainer::{
+    train_forest, ForestTrainConfig, Materialized, Prepared, SpillConfig, TrainReport,
+};

@@ -117,6 +117,18 @@ pub fn diffusion_target_elem(inv_sigma: f32, e: f32) -> f32 {
     inv_sigma * e
 }
 
+/// Kind-dispatched regression target element: flow `ε − x0`, diffusion
+/// `−ε/σ` (pass `inv_sigma` from [`target_inv_sigma`]; `x` is ignored for
+/// diffusion). Used by the out-of-core path, which builds targets per
+/// streamed chunk instead of through [`stream_inputs_targets`].
+#[inline(always)]
+pub fn target_elem(kind: ModelKind, inv_sigma: f32, x: f32, e: f32) -> f32 {
+    match kind {
+        ModelKind::Flow => flow_target_elem(x, e),
+        ModelKind::Diffusion => diffusion_target_elem(inv_sigma, e),
+    }
+}
+
 /// One parallel work unit of the virtual data plane: a single replica's
 /// overlap with one fixed global row chunk.
 struct Unit {

@@ -41,6 +41,14 @@ impl MinMaxScaler {
         }
     }
 
+    /// The per-feature affine map `v ↦ a·v + b` that [`transform`](Self::transform)
+    /// applies — exposed so streaming consumers (the out-of-core spill
+    /// writer) can scale chunk-at-a-time with bitwise-identical arithmetic.
+    #[inline]
+    pub fn affine(&self, c: usize) -> (f32, f32) {
+        self.scale_of(c)
+    }
+
     /// Transform in place (NaN passes through — XGBoost handles missing).
     pub fn transform(&self, x: &mut Matrix) {
         assert_eq!(x.cols, self.mins.len());

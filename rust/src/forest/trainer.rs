@@ -19,6 +19,18 @@
 //! through the scalar kernels — the bit-exact parity oracle the
 //! `parallel_parity` suite pins the virtual path against.
 //!
+//! The **out-of-core spill plane** removes even the `n·p` float matrix:
+//! when a [`SpillConfig`] is active (explicitly via [`prepare_opts`] /
+//! `RunOptions::with_spill`, or through `CALOFOREST_SPILL_MB`),
+//! [`prepare`] streams the class-sorted, scaled rows into a checksummed
+//! file-backed column-chunk store ([`crate::data::colstore`]) instead of
+//! keeping them resident, and each job rebuilds its `u8` bin codes
+//! chunk-at-a-time from the store (streamed quantile-sketch cuts, double-
+//! buffered chunk prefetch on the job's [`WorkerPool`]). The `u8` codes are
+//! then the only `O(rows·p)` resident training representation — 4× smaller
+//! than `f32` — and the spilled path trains byte-identical models to the
+//! in-memory path at every worker width.
+//!
 //! Parallel execution with the shared-memory policy (Issue 2) and streaming
 //! model store (Issue 3) is the coordinator's job
 //! ([`crate::coordinator::run_training`]); this module exposes the pure
@@ -28,13 +40,18 @@
 //! `cfg.params.intra_threads` — the coordinator's worker-budget policy sets
 //! it, and any value yields bit-identical models.
 
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use super::model::{ForestModel, ModelKind};
 use super::noising;
-use super::scaler::ClassScalers;
+use super::scaler::{ClassScalers, MinMaxScaler};
 use super::schedule::{TimeGrid, VpSchedule};
 use crate::coordinator::pool::WorkerPool;
-use crate::gbt::{BinCuts, BinnedMatrix, Booster, TrainParams};
-use crate::tensor::Matrix;
+use crate::data::colstore::{ColStore, ColStoreWriter};
+use crate::gbt::{BinCuts, BinnedMatrix, Booster, StreamingSketch, TrainParams};
+use crate::tensor::{Matrix, MatrixView};
 use crate::util::events::{EventSink, RoundLog};
 use crate::util::rng::{splitmix64, NormalStream};
 
@@ -84,6 +101,51 @@ impl Default for ForestTrainConfig {
     }
 }
 
+/// Default spill-store chunk size, in rows. 8192 rows keeps the resident
+/// streaming state (one front + one prefetch buffer + one noise chunk) at a
+/// few hundred KiB for typical widths while amortizing seek+checksum cost.
+pub const SPILL_CHUNK_ROWS: usize = 8192;
+
+/// Out-of-core configuration: when active, [`prepare_opts`] spills the
+/// scaled training matrix to a file-backed column-chunk store instead of
+/// keeping it resident.
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    /// Directory for the spill file (deleted when the [`Prepared`] drops).
+    pub dir: PathBuf,
+    /// Spill once the scaled matrix would occupy at least this many resident
+    /// bytes (`n·p·4`); `0` means always spill.
+    pub threshold_bytes: usize,
+    /// Rows per store chunk (the streaming granularity).
+    pub chunk_rows: usize,
+}
+
+impl SpillConfig {
+    pub fn new(dir: impl Into<PathBuf>, threshold_bytes: usize) -> SpillConfig {
+        SpillConfig { dir: dir.into(), threshold_bytes, chunk_rows: SPILL_CHUNK_ROWS }
+    }
+}
+
+/// Spill policy from the environment: `CALOFOREST_SPILL_MB` (unset ⇒ no
+/// spilling; `0` ⇒ always spill) and `CALOFOREST_SPILL_DIR` (default: the
+/// system temp dir). [`prepare`] consults this so the whole test suite can
+/// be forced through the out-of-core plane by the CI spill leg.
+pub fn spill_config_from_env() -> Option<SpillConfig> {
+    let mb: usize = std::env::var("CALOFOREST_SPILL_MB").ok()?.trim().parse().ok()?;
+    let dir = std::env::var("CALOFOREST_SPILL_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| std::env::temp_dir());
+    Some(SpillConfig::new(dir, mb.saturating_mul(1024 * 1024)))
+}
+
+/// Process-unique spill file names (many `Prepared`s may share a dir).
+static SPILL_COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+fn spill_file_name(seed: u64) -> String {
+    let c = SPILL_COUNTER.fetch_add(1, Ordering::Relaxed);
+    format!("caloforest-spill-{}-{seed}-{c}.fbcs", std::process::id())
+}
+
 /// Read-only state shared by every training job.
 ///
 /// Duplication is **virtual**: only the undup'd `[n × p]` scaled matrix is
@@ -96,8 +158,13 @@ impl Default for ForestTrainConfig {
 #[derive(Debug)]
 pub struct Prepared {
     /// Scaled, class-sorted, *undup'd* data `[n × p]` — the only `O(n·p)`
-    /// shared array.
+    /// shared array. **Empty (`0 × p`) in spilled mode**: the same rows then
+    /// live in [`Self::store`] and consumers go through
+    /// [`Self::class_rows`] or the streaming job path.
     pub x: Matrix,
+    /// Out-of-core mode: the scaled rows as a checksummed file-backed
+    /// column-chunk store (owned — the file is deleted on drop).
+    pub store: Option<ColStore>,
     /// Noise-stream definition: replicas `0..k` are training noise, replica
     /// `k` is the fresh-noise validation draw.
     pub noise: NormalStream,
@@ -132,12 +199,76 @@ pub struct Materialized {
     pub x1_val: Option<Matrix>,
 }
 
+/// Row material for a class range: a borrowed view of the resident matrix,
+/// or rows fetched (and transposed back to row-major) from the spill store.
+#[derive(Debug)]
+pub enum Rows<'a> {
+    Borrowed(MatrixView<'a>),
+    Owned(Matrix),
+}
+
+impl Rows<'_> {
+    pub fn view(&self) -> MatrixView<'_> {
+        match self {
+            Rows::Borrowed(v) => *v,
+            Rows::Owned(m) => m.view(),
+        }
+    }
+}
+
 impl Prepared {
-    /// Logical bytes of the shared training state (feeds the memory model).
-    /// Virtual duplication keeps this at `n·p·4` — independent of K; the
-    /// noise exists only as an `O(1)` stream definition.
+    /// Logical *resident* bytes of the shared training state (feeds the
+    /// memory model). Virtual duplication keeps this at `n·p·4` —
+    /// independent of K; the noise exists only as an `O(1)` stream
+    /// definition. In spilled mode this is **0**: the rows live on disk
+    /// ([`Self::disk_bytes`]) and only per-job `u8` codes
+    /// ([`Self::job_code_bytes`]) become resident.
     pub fn nbytes(&self) -> usize {
         self.x.nbytes()
+    }
+
+    /// Whether the scaled rows live in the file-backed store.
+    pub fn spilled(&self) -> bool {
+        self.store.is_some()
+    }
+
+    /// Bytes of the spill file (0 when resident).
+    pub fn disk_bytes(&self) -> usize {
+        self.store.as_ref().map_or(0, |s| s.disk_bytes())
+    }
+
+    /// Resident bytes of one job's `u8` bin-code matrix — in spilled mode
+    /// the only `O(rows·p)` training representation (4× under `f32`).
+    pub fn job_code_bytes(&self, y: usize) -> usize {
+        let (s, e) = self.class_ranges_dup[y];
+        (e - s) * self.p
+    }
+
+    /// Scaled rows `[s, e)` — borrowed from the resident matrix, or read
+    /// back (checksummed) from the spill store. The spilled read is bitwise
+    /// (`f32` LE round-trip), so consumers see identical values either way.
+    pub fn class_rows(&self, s: usize, e: usize) -> Rows<'_> {
+        let store = match &self.store {
+            None => return Rows::Borrowed(self.x.row_slice(s, e)),
+            Some(store) => store,
+        };
+        let mut m = Matrix::zeros(e - s, self.p);
+        if e > s {
+            let cr = store.chunk_rows();
+            let mut buf = Vec::new();
+            for c in s / cr..(e - 1) / cr + 1 {
+                let rows_c = store.read_chunk_into(c, &mut buf).expect("spill store read");
+                let (r0, _) = store.chunk_range(c);
+                let (a, b) = (s.max(r0), e.min(r0 + rows_c));
+                for f in 0..self.p {
+                    let col = &buf[f * rows_c..(f + 1) * rows_c];
+                    for r in a..b {
+                        m.data[(r - s) * self.p + f] = col[r - r0];
+                    }
+                }
+            }
+        }
+        Rows::Owned(m)
     }
 
     /// Build the old-style duplicated `x0`/`x1` matrices (and validation
@@ -151,9 +282,10 @@ impl Prepared {
         for (y, &(s, e)) in self.class_ranges.iter().enumerate() {
             let rows = e - s;
             let (ds, _) = self.class_ranges_dup[y];
+            let src = self.class_rows(s, e);
             for rep in 0..k {
                 let d0 = (ds + rep * rows) * p;
-                x0.data[d0..d0 + rows * p].copy_from_slice(&self.x.data[s * p..e * p]);
+                x0.data[d0..d0 + rows * p].copy_from_slice(src.view().data);
                 self.noise.fill(rep, s, rows, &mut x1.data[d0..d0 + rows * p]);
             }
         }
@@ -173,21 +305,18 @@ fn noise_stream_seed(seed: u64) -> u64 {
     splitmix64(&mut s)
 }
 
-/// Sort rows by label, fit scalers, and define the virtual duplication:
-/// no K-sized array is allocated — duplication and noise exist only as the
-/// stream definition in the returned [`Prepared`].
-///
-/// `y = None` trains unconditionally (a single pseudo-class).
-pub fn prepare(cfg: &ForestTrainConfig, x_raw: &Matrix, y: Option<&[u32]>) -> Prepared {
-    let n = x_raw.rows;
-    let p = x_raw.cols;
-
-    // Class-sort (Issue 5): stable argsort by label.
-    let (x_sorted, label_counts, class_ranges) = match y {
+/// Class-sort bookkeeping shared by both prepare paths: the stable label
+/// argsort (None when already in order), per-class counts, and contiguous
+/// `[start, end)` ranges.
+#[allow(clippy::type_complexity)]
+fn class_layout(
+    n: usize,
+    y: Option<&[u32]>,
+) -> (Option<Vec<usize>>, Vec<usize>, Vec<(usize, usize)>) {
+    match y {
         Some(labels) => {
             assert_eq!(labels.len(), n, "label/row mismatch");
             let order = crate::util::stats::argsort_u32(labels);
-            let x_sorted = x_raw.take_rows(&order);
             let n_y = labels.iter().map(|&l| l as usize).max().unwrap_or(0) + 1;
             let mut counts = vec![0usize; n_y];
             for &l in labels {
@@ -199,9 +328,48 @@ pub fn prepare(cfg: &ForestTrainConfig, x_raw: &Matrix, y: Option<&[u32]>) -> Pr
                 ranges.push((cum, cum + c));
                 cum += c;
             }
-            (x_sorted, counts, ranges)
+            (Some(order), counts, ranges)
         }
-        None => (x_raw.clone(), vec![n], vec![(0, n)]),
+        None => (None, vec![n], vec![(0, n)]),
+    }
+}
+
+/// Sort rows by label, fit scalers, and define the virtual duplication:
+/// no K-sized array is allocated — duplication and noise exist only as the
+/// stream definition in the returned [`Prepared`].
+///
+/// `y = None` trains unconditionally (a single pseudo-class).
+///
+/// Spill policy comes from the environment ([`spill_config_from_env`]);
+/// callers that need an explicit policy (or none) use [`prepare_opts`].
+pub fn prepare(cfg: &ForestTrainConfig, x_raw: &Matrix, y: Option<&[u32]>) -> Prepared {
+    prepare_opts(cfg, x_raw, y, spill_config_from_env().as_ref())
+}
+
+/// [`prepare`] with an explicit spill policy: `Some(sc)` spills the scaled
+/// matrix to `sc.dir` once `n·p·4 ≥ sc.threshold_bytes`; `None` always
+/// keeps it resident. Both paths produce bitwise-identical scaled rows and
+/// train byte-identical models.
+pub fn prepare_opts(
+    cfg: &ForestTrainConfig,
+    x_raw: &Matrix,
+    y: Option<&[u32]>,
+    spill: Option<&SpillConfig>,
+) -> Prepared {
+    if let Some(sc) = spill {
+        // Degenerate zero-width data stays resident (nothing to spill).
+        if x_raw.cols > 0 && x_raw.rows * x_raw.cols * 4 >= sc.threshold_bytes {
+            return prepare_spilled(cfg, x_raw, y, sc);
+        }
+    }
+    let n = x_raw.rows;
+    let p = x_raw.cols;
+
+    // Class-sort (Issue 5): stable argsort by label.
+    let (order, label_counts, class_ranges) = class_layout(n, y);
+    let x_sorted = match &order {
+        Some(o) => x_raw.take_rows(o),
+        None => x_raw.clone(),
     };
 
     // Per-class (or global) scaling to [-1, 1] (§C.3).
@@ -229,6 +397,121 @@ pub fn prepare(cfg: &ForestTrainConfig, x_raw: &Matrix, y: Option<&[u32]>) -> Pr
 
     Prepared {
         x: x_scaled,
+        store: None,
+        noise,
+        k,
+        fresh_noise_validation: cfg.fresh_noise_validation,
+        grid,
+        schedule: VpSchedule::default(),
+        class_ranges_dup,
+        class_ranges,
+        scalers,
+        label_counts,
+        n,
+        p,
+    }
+}
+
+/// The out-of-core prepare: identical semantics to the resident path —
+/// class-sort, per-class (or global) `[-1, 1]` scaling, virtual duplication
+/// — but the scaled matrix is streamed chunk-at-a-time into the spill store
+/// and never materialized. Scaler fitting streams min/max in the same
+/// class-sorted row order with the same comparisons as
+/// [`Matrix::col_min_max`], and scaling applies the same `a·v + b` affine,
+/// so the stored rows are bitwise-identical to the resident path's.
+fn prepare_spilled(
+    cfg: &ForestTrainConfig,
+    x_raw: &Matrix,
+    y: Option<&[u32]>,
+    sc: &SpillConfig,
+) -> Prepared {
+    let n = x_raw.rows;
+    let p = x_raw.cols;
+    let (order, label_counts, class_ranges) = class_layout(n, y);
+    let src_row = |gi: usize| -> &[f32] {
+        x_raw.row(order.as_ref().map_or(gi, |o| o[gi]))
+    };
+
+    // Streaming scaler fit: one pass per class range over the sorted rows,
+    // mirroring `col_min_max` (±∞ init, NaN skip, strict compares).
+    let fit_range = |lo: usize, hi: usize| -> MinMaxScaler {
+        let mut mins = vec![f32::INFINITY; p];
+        let mut maxs = vec![f32::NEG_INFINITY; p];
+        for gi in lo..hi {
+            let row = src_row(gi);
+            for c in 0..p {
+                let v = row[c];
+                if v.is_nan() {
+                    continue;
+                }
+                if v < mins[c] {
+                    mins[c] = v;
+                }
+                if v > maxs[c] {
+                    maxs[c] = v;
+                }
+            }
+        }
+        MinMaxScaler { mins, maxs, lo: -1.0, hi: 1.0 }
+    };
+    let scalers = if cfg.per_class_scaler {
+        let fitted = class_ranges.iter().map(|&(s, e)| fit_range(s, e)).collect();
+        ClassScalers { scalers: fitted, per_class: true }
+    } else {
+        ClassScalers { scalers: vec![fit_range(0, n)], per_class: false }
+    };
+    let affines: Vec<Vec<(f32, f32)>> = scalers
+        .scalers
+        .iter()
+        .map(|s| (0..p).map(|c| s.affine(c)).collect())
+        .collect();
+
+    // Stream sorted, scaled rows into the column-chunk store. Resident
+    // high-water mark here: one chunk (`chunk_rows·p` floats) + its encoded
+    // bytes inside the writer — O(chunk), not O(n).
+    std::fs::create_dir_all(&sc.dir).expect("create spill directory");
+    let path = sc.dir.join(spill_file_name(cfg.seed));
+    let chunk_rows = sc.chunk_rows.max(1);
+    let mut writer = ColStoreWriter::create(&path, p, chunk_rows).expect("create spill store");
+    let mut chunk = vec![0.0f32; chunk_rows * p];
+    let mut class = 0usize;
+    let mut g0 = 0usize;
+    while g0 < n {
+        let rows = chunk_rows.min(n - g0);
+        for r in 0..rows {
+            let gi = g0 + r;
+            while gi >= class_ranges[class].1 {
+                class += 1;
+            }
+            let aff = &affines[if scalers.per_class { class } else { 0 }];
+            let row = src_row(gi);
+            for f in 0..p {
+                let v = row[f];
+                chunk[f * rows + r] = if v.is_nan() {
+                    v // NaN passes through, as in `MinMaxScaler::transform`
+                } else {
+                    let (a, b) = aff[f];
+                    a * v + b
+                };
+            }
+        }
+        writer.append_chunk(rows, &chunk[..rows * p]).expect("write spill chunk");
+        g0 += rows;
+    }
+    let store = writer.finish().expect("seal spill store");
+
+    let k = cfg.k_dup.max(1);
+    let class_ranges_dup: Vec<(usize, usize)> =
+        class_ranges.iter().map(|&(s, e)| (s * k, e * k)).collect();
+    let noise = NormalStream::new(noise_stream_seed(cfg.seed), p);
+    let grid = match cfg.grid_kind {
+        GridKind::Uniform => TimeGrid::uniform(cfg.n_t, cfg.eps),
+        GridKind::Cosine => TimeGrid::cosine(cfg.n_t, cfg.eps),
+    };
+
+    Prepared {
+        x: Matrix::zeros(0, p),
+        store: Some(store),
         noise,
         k,
         fresh_noise_validation: cfg.fresh_noise_validation,
@@ -355,6 +638,9 @@ pub fn train_job_logged(
     exec: &WorkerPool,
     events: Option<&EventSink>,
 ) -> (Booster, BinCuts) {
+    if prep.spilled() {
+        return train_job_spilled(prep, cfg, t_idx, y, exec, events);
+    }
     let t = prep.grid.ts[t_idx];
     let (s, e) = prep.class_ranges[y];
     let x0 = prep.x.row_slice(s, e);
@@ -412,6 +698,261 @@ pub fn train_job_logged(
     (booster, binned.cuts)
 }
 
+/// One streaming work unit of the spilled data plane: a single replica's
+/// overlap with one store chunk, in *global* (sorted matrix) rows `[a, b)`.
+/// Units are emitted replica-major, chunks ascending — exactly the virtual
+/// duplicated row order, so unit row `r` maps to virtual job row
+/// `rep·(e−s) + (a−s) + r` and consecutive units tile the job contiguously.
+struct StreamUnit {
+    rep: usize,
+    chunk: usize,
+    a: usize,
+    b: usize,
+}
+
+fn job_units(store: &ColStore, s: usize, e: usize, rep0: usize, reps: usize) -> Vec<StreamUnit> {
+    let mut units = Vec::new();
+    if e <= s {
+        return units;
+    }
+    let cr = store.chunk_rows();
+    for rep in rep0..rep0 + reps {
+        for c in s / cr..(e - 1) / cr + 1 {
+            let (r0, r1) = store.chunk_range(c);
+            let (a, b) = (r0.max(s), r1.min(e));
+            if b > a {
+                units.push(StreamUnit { rep, chunk: c, a, b });
+            }
+        }
+    }
+    units
+}
+
+/// Drive `units` through the store with double-buffered chunk prefetch on
+/// the job's pool: for every unit, the unit's noise block is synthesized,
+/// then one `run_indexed` round runs `consume(task, unit_idx, unit, chunk
+/// floats (column-major), chunk_row0, chunk_rows, unit noise (row-major))`
+/// for `task ∈ 0..n_tasks` *while task slot 0 prefetches the next chunk*
+/// into the back buffer — the consumer never stalls on I/O when more than
+/// one thread is available (single-threaded pools inline the read, which is
+/// still correct, just unoverlapped). Chunk reads are checksummed; a failed
+/// prefetch panics at the swap point with the I/O error.
+fn stream_chunks<F>(
+    store: &ColStore,
+    noise: &NormalStream,
+    units: &[StreamUnit],
+    n_tasks: usize,
+    exec: &WorkerPool,
+    consume: F,
+) where
+    F: Fn(usize, usize, &StreamUnit, &[f32], usize, usize, &[f32]) + Sync,
+{
+    if units.is_empty() {
+        return;
+    }
+    let p = store.cols();
+    let mut front = Vec::new();
+    let mut front_chunk = units[0].chunk;
+    let mut front_rows = store
+        .read_chunk_into(front_chunk, &mut front)
+        .expect("spill store read failed");
+    // Back buffer: (floats, rows, error) — written only by task slot 0.
+    let back: Mutex<(Vec<f32>, usize, Option<std::io::Error>)> =
+        Mutex::new((Vec::new(), 0, None));
+    let mut eps = vec![0.0f32; store.chunk_rows() * p];
+    for (ui, u) in units.iter().enumerate() {
+        debug_assert_eq!(u.chunk, front_chunk, "units must follow chunk order");
+        let rows = u.b - u.a;
+        let ebuf = &mut eps[..rows * p];
+        noise.fill(u.rep, u.a, rows, ebuf);
+        let next = units.get(ui + 1).map(|nu| nu.chunk).filter(|&c| c != front_chunk);
+        let (chunk_r0, _) = store.chunk_range(front_chunk);
+        let (fr, eb): (&[f32], &[f32]) = (&front, ebuf);
+        exec.run_indexed(1 + n_tasks, |i| {
+            if i == 0 {
+                if let Some(c) = next {
+                    let mut guard = back.lock().unwrap();
+                    let mut buf = std::mem::take(&mut guard.0);
+                    match store.read_chunk_into(c, &mut buf) {
+                        Ok(rc) => *guard = (buf, rc, None),
+                        Err(err) => *guard = (buf, 0, Some(err)),
+                    }
+                }
+            } else {
+                consume(i - 1, ui, u, fr, chunk_r0, front_rows, eb);
+            }
+        });
+        if let Some(c) = next {
+            let mut guard = back.lock().unwrap();
+            if let Some(err) = guard.2.take() {
+                panic!("spill store prefetch failed: {err}");
+            }
+            std::mem::swap(&mut front, &mut guard.0);
+            front_rows = guard.1;
+            front_chunk = c;
+        }
+    }
+}
+
+/// One streamed pass building a job's `u8` bin codes (column-major,
+/// `codes[f·rows_dup + v]`) and regression targets `z` from the spill store
+/// — the spilled replacement for materializing `x_t` as `f32`. Replicas
+/// `rep0..rep0+reps` of class rows `[s, e)`; every element goes through the
+/// same pointwise kernels ([`noising::xt_elem`], [`noising::target_elem`],
+/// [`BinCuts::bin_value`]) as the in-memory path, so codes and targets are
+/// bitwise-identical to binning a materialized `x_t` for any worker width.
+#[allow(clippy::too_many_arguments)]
+fn stream_codes_targets(
+    store: &ColStore,
+    prep: &Prepared,
+    cfg: &ForestTrainConfig,
+    cuts: &BinCuts,
+    t: f32,
+    s: usize,
+    e: usize,
+    rep0: usize,
+    reps: usize,
+    exec: &WorkerPool,
+) -> (Vec<u8>, Matrix) {
+    let p = prep.p;
+    let rows_dup = (e - s) * reps;
+    let (alpha, sigma) = noising::xt_coeffs(cfg.kind, t, &prep.schedule);
+    let inv_sigma = noising::target_inv_sigma(t, &prep.schedule);
+    let units = job_units(store, s, e, rep0, reps);
+
+    let mut codes = vec![0u8; rows_dup * p];
+    let mut z = Matrix::zeros(rows_dup, p);
+    // Pre-split disjoint output cells per (unit, column) and per unit —
+    // units tile the virtual rows in order, so each column's code run and
+    // each z block is one contiguous take. Mutex-cell wrapping gives the
+    // shared `Fn` closure interior mutability over provably disjoint spans.
+    let mut code_cells: Vec<Vec<Mutex<&mut [u8]>>> = Vec::with_capacity(units.len());
+    let mut z_cells: Vec<Mutex<&mut [f32]>> = Vec::with_capacity(units.len());
+    {
+        let mut cols: Vec<&mut [u8]> = codes.chunks_mut(rows_dup.max(1)).collect();
+        let mut z_rest: &mut [f32] = &mut z.data;
+        for u in &units {
+            let rows = u.b - u.a;
+            let mut per_col = Vec::with_capacity(p);
+            for col in cols.iter_mut() {
+                let (head, tail) = std::mem::take(col).split_at_mut(rows);
+                *col = tail;
+                per_col.push(Mutex::new(head));
+            }
+            code_cells.push(per_col);
+            let (head, tail) = std::mem::take(&mut z_rest).split_at_mut(rows * p);
+            z_rest = tail;
+            z_cells.push(Mutex::new(head));
+        }
+    }
+
+    // Task layout per streamed unit: tasks 0..p bin one feature column
+    // each; task p writes the unit's target block.
+    stream_chunks(store, &prep.noise, &units, p + 1, exec, |task, ui, u, x, r0, rows_c, eps| {
+        let rows = u.b - u.a;
+        let off = u.a - r0;
+        if task < p {
+            let f = task;
+            let xcol = &x[f * rows_c..(f + 1) * rows_c];
+            let mut out = code_cells[ui][f].lock().unwrap();
+            for r in 0..rows {
+                let xt = noising::xt_elem(alpha, sigma, xcol[off + r], eps[r * p + f]);
+                out[r] = cuts.bin_value(f, xt);
+            }
+        } else {
+            let mut zb = z_cells[ui].lock().unwrap();
+            for r in 0..rows {
+                for f in 0..p {
+                    let xv = x[f * rows_c + off + r];
+                    zb[r * p + f] = noising::target_elem(cfg.kind, inv_sigma, xv, eps[r * p + f]);
+                }
+            }
+        }
+    });
+    drop(code_cells);
+    drop(z_cells);
+    (codes, z)
+}
+
+/// The out-of-core `(t, y)` job: two streamed passes over the spill store
+/// instead of one materialized `x_t`.
+///
+/// Pass 1 fits the bin cuts through per-feature [`StreamingSketch`]es fed
+/// in virtual row order — within the sketch's exact regime (per-feature
+/// non-NaN count ≤ [`crate::gbt::SKETCH_BUDGET`]) the cuts are bit-identical
+/// to [`BinnedMatrix::fit_bin_par`] on the materialized `x_t`; above it they
+/// are deterministic bounded approximations. Pass 2 streams again and emits
+/// only `u8` codes + `f32` targets — the raw `x_t` floats never exist as a
+/// job-sized array, cutting the job's resident input 4× and making the
+/// dataset size disk-bounded. Training then runs the exact same
+/// [`Booster::train_binned_logged`] call as the in-memory path.
+fn train_job_spilled(
+    prep: &Prepared,
+    cfg: &ForestTrainConfig,
+    t_idx: usize,
+    y: usize,
+    exec: &WorkerPool,
+    events: Option<&EventSink>,
+) -> (Booster, BinCuts) {
+    let store = prep.store.as_ref().expect("spilled job without a store");
+    let t = prep.grid.ts[t_idx];
+    let (s, e) = prep.class_ranges[y];
+    let p = prep.p;
+    let (alpha, sigma) = noising::xt_coeffs(cfg.kind, t, &prep.schedule);
+
+    // Pass 1: streamed quantile sketch per feature over the virtual rows.
+    let units = job_units(store, s, e, 0, prep.k);
+    let sketches: Vec<Mutex<StreamingSketch>> = (0..p)
+        .map(|_| Mutex::new(StreamingSketch::new(1, cfg.params.max_bins)))
+        .collect();
+    stream_chunks(store, &prep.noise, &units, p, exec, |f, _ui, u, x, r0, rows_c, eps| {
+        let rows = u.b - u.a;
+        let off = u.a - r0;
+        let xcol = &x[f * rows_c..(f + 1) * rows_c];
+        let mut col = Vec::with_capacity(rows);
+        for r in 0..rows {
+            col.push(noising::xt_elem(alpha, sigma, xcol[off + r], eps[r * p + f]));
+        }
+        sketches[f].lock().unwrap().absorb_col(0, &col);
+    });
+    let cuts = BinCuts {
+        cuts: sketches
+            .into_iter()
+            .map(|m| {
+                let fitted = m.into_inner().unwrap().finish();
+                fitted.cuts.into_iter().next().unwrap_or_default()
+            })
+            .collect(),
+    };
+
+    // Pass 2: u8 codes + targets for training; one more undup'd pass with
+    // the dedicated validation replica when §3.4 validation is on.
+    let (codes, z) = stream_codes_targets(store, prep, cfg, &cuts, t, s, e, 0, prep.k, exec);
+    let rows_dup = (e - s) * prep.k;
+    let binned = BinnedMatrix { n: rows_dup, p, codes, cuts };
+    let val = prep.fresh_noise_validation.then(|| {
+        let (vcodes, zv) =
+            stream_codes_targets(store, prep, cfg, &binned.cuts, t, s, e, prep.k, 1, exec);
+        (BinnedMatrix { n: e - s, p, codes: vcodes, cuts: binned.cuts.clone() }, zv)
+    });
+
+    let log = events.map(|sink| RoundLog::new(sink, t_idx, y));
+    let booster = match &val {
+        Some((eb, zv)) => Booster::train_binned_logged(
+            &binned,
+            &z.view(),
+            cfg.params,
+            Some((eb, &zv.view())),
+            exec,
+            log.as_ref(),
+        ),
+        None => {
+            Booster::train_binned_logged(&binned, &z.view(), cfg.params, None, exec, log.as_ref())
+        }
+    };
+    (booster, binned.cuts)
+}
+
 /// [`train_job_in`] driven off [`Prepared::materialize`]'s old-style
 /// duplicated matrices through the scalar kernels — the bit-exact oracle
 /// for the virtual path: for any `(t, y)`, any pool width, and both model
@@ -448,9 +989,12 @@ pub fn train_job_materialized(
     let val = match &mat.x1_val {
         Some(x1v_all) => {
             let (vs, ve) = prep.class_ranges[y];
-            let x0v = prep.x.row_slice(vs, ve);
-            let x1v = x1v_all.row_slice(vs, ve);
+            // Replica 0's block of this class in the materialized layout is
+            // exactly the undup'd class rows — works for spilled `Prepared`s
+            // too, where `prep.x` is empty.
             let vrows = ve - vs;
+            let x0v = mat.x0.row_slice(s, s + vrows);
+            let x1v = x1v_all.row_slice(vs, ve);
             let mut xtv = Matrix::zeros(vrows, p);
             let mut zv = Matrix::zeros(vrows, p);
             match cfg.kind {
@@ -556,7 +1100,9 @@ mod tests {
     fn prepare_sorts_scales_and_duplicates_virtually() {
         let (x, y) = two_cluster_data(20, 1);
         let cfg = tiny_cfg();
-        let prep = prepare(&cfg, &x, Some(&y));
+        // Resident-explicit: this test asserts the in-memory layout, so it
+        // must not follow a forced-spill environment (CALOFOREST_SPILL_MB).
+        let prep = prepare_opts(&cfg, &x, Some(&y), None);
         // Only the undup'd matrix is stored; duplication is addressing.
         assert_eq!(prep.x.rows, 20);
         assert_eq!(prep.k, 3);
@@ -599,9 +1145,10 @@ mod tests {
     fn prepared_footprint_is_independent_of_k() {
         let (x, y) = two_cluster_data(20, 8);
         let mut cfg = tiny_cfg();
-        let small = prepare(&cfg, &x, Some(&y));
+        // Resident-explicit (see above): asserts the in-memory byte count.
+        let small = prepare_opts(&cfg, &x, Some(&y), None);
         cfg.k_dup = 50;
-        let big = prepare(&cfg, &x, Some(&y));
+        let big = prepare_opts(&cfg, &x, Some(&y), None);
         assert_eq!(small.nbytes(), big.nbytes());
         assert_eq!(big.nbytes(), 20 * 2 * 4);
         assert_eq!(big.class_ranges_dup, vec![(0, 500), (500, 1000)]);
@@ -632,6 +1179,47 @@ mod tests {
                 crate::gbt::serialize::to_bytes(&virt),
                 crate::gbt::serialize::to_bytes(&oracle),
                 "virtual job diverges from materialized oracle (y={y_idx})"
+            );
+        }
+    }
+
+    #[test]
+    fn spilled_prepare_and_job_match_resident_bitwise() {
+        // Unit-level parity (the full sweep across model kinds and widths
+        // lives in tests/parallel_parity.rs). chunk_rows=16 with two
+        // 20-row classes makes chunk 1 straddle the class boundary.
+        let (x, y) = two_cluster_data(40, 21);
+        let cfg = ForestTrainConfig {
+            fresh_noise_validation: true,
+            params: TrainParams {
+                n_trees: 4,
+                max_depth: 3,
+                early_stopping_rounds: 2,
+                ..Default::default()
+            },
+            ..tiny_cfg()
+        };
+        let resident = prepare_opts(&cfg, &x, Some(&y), None);
+        let sc = SpillConfig { chunk_rows: 16, ..SpillConfig::new(std::env::temp_dir(), 0) };
+        let spilled = prepare_opts(&cfg, &x, Some(&y), Some(&sc));
+        assert!(spilled.spilled());
+        assert_eq!(spilled.nbytes(), 0, "spilled rows must not count as resident");
+        assert!(spilled.disk_bytes() >= 40 * 2 * 4);
+        // Scaled rows round-trip bitwise through the store.
+        let bits = |d: &[f32]| d.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for &(s, e) in &resident.class_ranges {
+            let rows = spilled.class_rows(s, e);
+            assert_eq!(bits(resident.x.row_slice(s, e).data), bits(rows.view().data));
+        }
+        // Jobs train byte-identical boosters on both planes.
+        let exec = WorkerPool::new(2);
+        for y_idx in 0..2 {
+            let a = train_job_in(&resident, &cfg, 1, y_idx, &exec);
+            let b = train_job_in(&spilled, &cfg, 1, y_idx, &exec);
+            assert_eq!(
+                crate::gbt::serialize::to_bytes(&a),
+                crate::gbt::serialize::to_bytes(&b),
+                "spilled job diverges from resident (y={y_idx})"
             );
         }
     }

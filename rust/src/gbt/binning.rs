@@ -16,6 +16,15 @@
 //!   XGBoost consumes its iterator four times; an iterator whose batches are
 //!   not reproducible across passes therefore produces inconsistent
 //!   bin indices — the bug the paper found in the upstream codebase.
+//!
+//! A third, truly out-of-core path rides the bounded [`StreamingSketch`]
+//! ([`BinCuts::fit_streaming`]): row chunks are absorbed one at a time into
+//! a merge-and-prune quantile summary holding at most [`SKETCH_BUDGET`]
+//! values per feature, so cut construction never concatenates the dataset.
+//! While a feature fits the budget the sketch is *exact* — its buffer is the
+//! stable sort of every value seen — and the finished cuts equal
+//! [`BinCuts::fit`] / [`BinCuts::fit_par`] bit for bit, for any chunk size
+//! and any worker count.
 
 use crate::coordinator::pool::WorkerPool;
 use crate::tensor::MatrixView;
@@ -90,6 +99,26 @@ impl BinCuts {
             .map(|col| cuts_for_column(col, max_bins))
             .collect();
         BinCuts { cuts }
+    }
+
+    /// Build cuts from a batch iterator in **one pass** through the bounded
+    /// [`StreamingSketch`] — unlike [`fit_iterator`](Self::fit_iterator) it
+    /// never concatenates the dataset, holding `O(chunk + SKETCH_BUDGET)`
+    /// floats per feature. In the sketch's exact regime (per-feature non-NaN
+    /// count ≤ [`SKETCH_BUDGET`]) the cuts are bit-identical to
+    /// [`fit`](Self::fit)/[`fit_par`](Self::fit_par) for any batch size.
+    pub fn fit_streaming<I: BatchIterator>(it: &mut I, max_bins: usize) -> BinCuts {
+        it.reset();
+        let mut sketch: Option<StreamingSketch> = None;
+        while let Some(batch) = it.next_batch() {
+            sketch
+                .get_or_insert_with(|| StreamingSketch::new(batch.cols, max_bins))
+                .push_chunk(&batch);
+        }
+        match sketch {
+            Some(s) => s.finish(),
+            None => BinCuts { cuts: Vec::new() },
+        }
     }
 
     /// Feature-parallel [`fit`](Self::fit) on a persistent worker pool:
@@ -339,6 +368,262 @@ fn next_up(v: f32) -> f32 {
     let bits = v.to_bits();
     let next = if v >= 0.0 { bits + 1 } else { bits - 1 };
     f32::from_bits(next).max(v + v.abs() * 1e-6 + f32::MIN_POSITIVE)
+}
+
+/// Per-feature value budget of [`StreamingSketch`]: the sketch is exact (and
+/// its cuts bit-identical to [`BinCuts::fit`]) while a feature's non-NaN
+/// count stays within this; past it the sketch degrades to a deterministic
+/// weighted summary. 64Ki f32 values = 256 KiB per feature, far above any
+/// per-job row count the CI parity legs train at.
+pub const SKETCH_BUDGET: usize = 1 << 16;
+
+/// One feature's bounded merge-and-prune quantile summary.
+#[derive(Clone, Debug)]
+struct ColSketch {
+    /// Ascending kept values. While unpruned this is the *stable sort* of
+    /// every non-NaN value absorbed so far (bit-exact, including the
+    /// relative order of `-0.0`/`0.0`).
+    vals: Vec<f32>,
+    /// Per-entry weights; empty ⇒ every entry has weight 1 (exact regime).
+    weights: Vec<u64>,
+    /// Total non-NaN values absorbed (= Σ weights).
+    seen: u64,
+}
+
+impl ColSketch {
+    fn new() -> ColSketch {
+        ColSketch { vals: Vec::new(), weights: Vec::new(), seen: 0 }
+    }
+
+    /// Absorb one chunk of raw values in row order (NaNs dropped): the chunk
+    /// is stable-sorted, then merged with the existing buffer taking ties
+    /// from the existing (earlier-row) side — one stable-mergesort step, so
+    /// the unpruned buffer always equals `sort_by(partial_cmp)` of the full
+    /// value sequence. Chunk boundaries therefore cannot change the result.
+    fn absorb(&mut self, chunk: &[f32], budget: usize) {
+        let mut incoming: Vec<f32> = chunk.iter().copied().filter(|v| !v.is_nan()).collect();
+        if incoming.is_empty() {
+            return;
+        }
+        incoming.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        self.seen += incoming.len() as u64;
+        if self.vals.is_empty() {
+            self.vals = incoming;
+        } else {
+            let old_vals = std::mem::take(&mut self.vals);
+            let old_w = std::mem::take(&mut self.weights);
+            let total = old_vals.len() + incoming.len();
+            let mut vals = Vec::with_capacity(total);
+            let mut weights =
+                if old_w.is_empty() { Vec::new() } else { Vec::with_capacity(total) };
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < old_vals.len() || j < incoming.len() {
+                let take_left =
+                    j >= incoming.len() || (i < old_vals.len() && old_vals[i] <= incoming[j]);
+                if take_left {
+                    vals.push(old_vals[i]);
+                    if !old_w.is_empty() {
+                        weights.push(old_w[i]);
+                    }
+                    i += 1;
+                } else {
+                    vals.push(incoming[j]);
+                    if !old_w.is_empty() {
+                        weights.push(1);
+                    }
+                    j += 1;
+                }
+            }
+            self.vals = vals;
+            self.weights = weights;
+        }
+        self.prune(budget);
+    }
+
+    /// Shrink to ≤ `budget` entries: collapse equal-adjacent values into one
+    /// weighted entry, then pairwise-halve (each pair keeps its *second*
+    /// value — the pair's upper rank, matching the upper-edge cut semantics
+    /// — with the combined weight; a trailing singleton survives) until
+    /// within budget. A pure function of the buffer, so pruning stays
+    /// deterministic for a fixed chunking.
+    fn prune(&mut self, budget: usize) {
+        if self.vals.len() <= budget {
+            return;
+        }
+        if self.weights.is_empty() {
+            self.weights = vec![1; self.vals.len()];
+        }
+        let mut w = 0usize;
+        for i in 0..self.vals.len() {
+            if w > 0 && self.vals[i] == self.vals[w - 1] {
+                self.weights[w - 1] += self.weights[i];
+            } else {
+                self.vals[w] = self.vals[i];
+                self.weights[w] = self.weights[i];
+                w += 1;
+            }
+        }
+        self.vals.truncate(w);
+        self.weights.truncate(w);
+        while self.vals.len() > budget {
+            let n = self.vals.len();
+            let mut w = 0usize;
+            let mut i = 0usize;
+            while i < n {
+                if i + 1 < n {
+                    self.vals[w] = self.vals[i + 1];
+                    self.weights[w] = self.weights[i] + self.weights[i + 1];
+                } else {
+                    self.vals[w] = self.vals[i];
+                    self.weights[w] = self.weights[i];
+                }
+                w += 1;
+                i += 2;
+            }
+            self.vals.truncate(w);
+            self.weights.truncate(w);
+        }
+    }
+
+    fn into_cuts(self, max_bins: usize) -> Vec<f32> {
+        if self.weights.is_empty() {
+            // Exact regime: the buffer *is* the stable-sorted column.
+            return cuts_for_sorted_column(&self.vals, max_bins);
+        }
+        weighted_cuts(&self.vals, &self.weights, self.seen, max_bins)
+    }
+}
+
+/// [`cuts_for_sorted_column`] generalized to ascending weighted `(value,
+/// count)` entries — with all weights 1 it reduces to the unweighted logic
+/// exactly (same `(b·n)/max_bins` positional indexing, via cumulative
+/// weights).
+fn weighted_cuts(vals: &[f32], weights: &[u64], total: u64, max_bins: usize) -> Vec<f32> {
+    if vals.is_empty() || total == 0 {
+        return Vec::new();
+    }
+    let mut distinct: Vec<f32> = Vec::new();
+    let mut dw: Vec<u64> = Vec::new();
+    for (&v, &w) in vals.iter().zip(weights) {
+        if distinct.last() == Some(&v) {
+            *dw.last_mut().unwrap() += w;
+        } else {
+            distinct.push(v);
+            dw.push(w);
+        }
+    }
+    if distinct.len() <= 1 {
+        return Vec::new();
+    }
+    if distinct.len() <= max_bins {
+        let mut cuts: Vec<f32> = distinct.windows(2).map(|w| midpoint(w[0], w[1])).collect();
+        cuts.push(next_up(*distinct.last().unwrap()));
+        return cuts;
+    }
+    let n = total as u128;
+    let mut cuts: Vec<f32> = Vec::with_capacity(max_bins);
+    let mut k = 0usize;
+    let mut cum = 0u128; // total weight before entry k
+    for b in 1..max_bins {
+        let idx = ((b as u128 * n) / max_bins as u128).min(n - 1);
+        while cum + dw[k] as u128 <= idx {
+            cum += dw[k] as u128;
+            k += 1;
+        }
+        let q = distinct[k];
+        if cuts.last().map(|&c| q > c).unwrap_or(true) {
+            cuts.push(q);
+        }
+    }
+    cuts.push(next_up(*distinct.last().unwrap()));
+    cuts
+}
+
+/// Bounded streaming quantile sketch over row chunks — the out-of-core cut
+/// construction behind [`BinCuts::fit_streaming`] and the spilled trainer.
+///
+/// Holds at most the budget ([`SKETCH_BUDGET`] by default) values per
+/// feature, so absorbing an arbitrarily large stream costs
+/// `O(chunk + budget)` resident floats per feature. Determinism ladder:
+///
+/// * **exact regime** (feature's non-NaN count ≤ budget): bit-identical to
+///   [`BinCuts::fit`]/[`fit_par`](BinCuts::fit_par) for *any* chunk size and
+///   worker count — absorbing fixed chunks in row order and stable-merging
+///   reproduces the full stable sort;
+/// * **pruned regime**: still deterministic for a fixed chunking (prune is a
+///   pure function of the buffer), with approximate quantiles; rank error
+///   per cut is bounded by the largest collapsed weight, ~`seen/budget`.
+#[derive(Clone, Debug)]
+pub struct StreamingSketch {
+    cols: Vec<ColSketch>,
+    max_bins: usize,
+    budget: usize,
+}
+
+impl StreamingSketch {
+    /// Sketch for `p` features at the default [`SKETCH_BUDGET`].
+    pub fn new(p: usize, max_bins: usize) -> StreamingSketch {
+        StreamingSketch::with_budget(p, max_bins, SKETCH_BUDGET)
+    }
+
+    /// Explicit per-feature budget (tests exercise the pruned regime with
+    /// tiny budgets; clamped to ≥ 8 entries).
+    pub fn with_budget(p: usize, max_bins: usize, budget: usize) -> StreamingSketch {
+        StreamingSketch {
+            cols: (0..p).map(|_| ColSketch::new()).collect(),
+            max_bins: max_bins.min(MAX_BINS),
+            budget: budget.max(8),
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Absorb one chunk of feature `f`'s raw values in row order (NaNs
+    /// allowed — they are dropped, as in [`BinCuts::fit`]).
+    pub fn absorb_col(&mut self, f: usize, values: &[f32]) {
+        let budget = self.budget;
+        self.cols[f].absorb(values, budget);
+    }
+
+    /// Absorb one row-major row chunk (all features).
+    pub fn push_chunk(&mut self, chunk: &MatrixView<'_>) {
+        assert_eq!(chunk.cols, self.cols.len(), "chunk/sketch width mismatch");
+        let mut buf = Vec::with_capacity(chunk.rows);
+        for f in 0..chunk.cols {
+            buf.clear();
+            for r in 0..chunk.rows {
+                buf.push(chunk.at(r, f));
+            }
+            self.absorb_col(f, &buf);
+        }
+    }
+
+    /// Feature-parallel [`push_chunk`](Self::push_chunk) on the persistent
+    /// pool — features are independent, so the result is identical for any
+    /// worker count.
+    pub fn push_chunk_pool(&mut self, chunk: &MatrixView<'_>, exec: &WorkerPool) {
+        assert_eq!(chunk.cols, self.cols.len(), "chunk/sketch width mismatch");
+        if exec.threads() == 1 || chunk.cols < 2 {
+            self.push_chunk(chunk);
+            return;
+        }
+        let budget = self.budget;
+        exec.for_each_mut_chunk(&mut self.cols, 1, |f, cols| {
+            let mut buf = Vec::with_capacity(chunk.rows);
+            for r in 0..chunk.rows {
+                buf.push(chunk.at(r, f));
+            }
+            cols[0].absorb(&buf, budget);
+        });
+    }
+
+    /// Finish into per-feature cuts.
+    pub fn finish(self) -> BinCuts {
+        let max_bins = self.max_bins;
+        BinCuts { cuts: self.cols.into_iter().map(|c| c.into_cuts(max_bins)).collect() }
+    }
 }
 
 /// Column-major binned dataset: `codes[f * n + r]` is the bin of row `r`,
@@ -686,6 +971,89 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn streaming_sketch_exact_fit_matches_fit_par_bitwise() {
+        // NaNs, duplicates, ±0.0 and a constant column — in the exact
+        // regime the streamed cuts must reproduce fit/fit_par bit for bit,
+        // for every chunk size and worker width.
+        let mut rng = Rng::new(21);
+        let mut x = Matrix::randn(700, 4, &mut rng);
+        for r in (0..700).step_by(11) {
+            x.set(r, 1, f32::NAN);
+        }
+        for r in 0..700 {
+            x.set(r, 2, 1.25);
+        }
+        for r in (0..700).step_by(5) {
+            x.set(r, 3, if r % 10 == 0 { 0.0 } else { -0.0 });
+        }
+        let seq = BinCuts::fit(&x.view(), 64);
+        let bits = |c: &BinCuts| -> Vec<Vec<u32>> {
+            c.cuts
+                .iter()
+                .map(|col| col.iter().map(|v| v.to_bits()).collect())
+                .collect()
+        };
+        for chunk in [1usize, 7, 64, 700, 10_000] {
+            let mut it = SliceBatches::new(x.view(), chunk);
+            let streamed = BinCuts::fit_streaming(&mut it, 64);
+            assert_eq!(bits(&seq), bits(&streamed), "chunk={chunk}");
+        }
+        for workers in [1usize, 2, 8] {
+            let exec = WorkerPool::new(workers);
+            let mut sk = StreamingSketch::new(4, 64);
+            let mut r0 = 0usize;
+            while r0 < 700 {
+                let r1 = (r0 + 97).min(700);
+                let view = MatrixView {
+                    rows: r1 - r0,
+                    cols: 4,
+                    data: &x.data[r0 * 4..r1 * 4],
+                };
+                sk.push_chunk_pool(&view, &exec);
+                r0 = r1;
+            }
+            assert_eq!(bits(&seq), bits(&sk.finish()), "pooled sketch, workers={workers}");
+        }
+    }
+
+    #[test]
+    fn pruned_sketch_is_deterministic_bounded_and_close() {
+        let mut rng = Rng::new(33);
+        let x = Matrix::randn(20_000, 2, &mut rng);
+        let run = |chunk: usize| -> BinCuts {
+            let mut sk = StreamingSketch::with_budget(2, 32, 256);
+            let mut it = SliceBatches::new(x.view(), chunk);
+            it.reset();
+            while let Some(b) = it.next_batch() {
+                sk.push_chunk(&b);
+            }
+            sk.finish()
+        };
+        let a = run(512);
+        let b = run(512);
+        assert_eq!(a, b, "same chunking must give identical cuts");
+        for f in 0..2 {
+            assert!(a.cuts[f].len() <= 32, "cut count exceeds max_bins");
+            assert!(
+                a.cuts[f].windows(2).all(|w| w[0] < w[1]),
+                "cuts must be strictly ascending"
+            );
+        }
+        // Quantile quality: each interior pruned cut's empirical CDF
+        // position stays near its target rank (budget 256 on 20k values ⇒
+        // ≲1% rank error per entry; 8% is a loose regression gate).
+        let mut vals: Vec<f32> = (0..20_000).map(|r| x.at(r, 0)).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = vals.len() as f64;
+        let pruned = &a.cuts[0];
+        for (i, &c) in pruned[..pruned.len() - 1].iter().enumerate() {
+            let cdf = vals.partition_point(|&v| v < c) as f64 / n;
+            let want = (i + 1) as f64 / 32.0;
+            assert!((cdf - want).abs() < 0.08, "cut {i}: cdf {cdf:.3}, want {want:.3}");
         }
     }
 

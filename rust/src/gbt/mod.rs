@@ -48,7 +48,7 @@ pub mod predict;
 pub mod serialize;
 
 pub use arena::{tile_shape, TileShape};
-pub use binning::{BinCuts, BinnedMatrix, BatchIterator, MISSING_BIN};
+pub use binning::{BinCuts, BinnedMatrix, BatchIterator, StreamingSketch, MISSING_BIN, SKETCH_BUDGET};
 pub use booster::{Booster, EvalRecord, TrainParams};
 pub use packed_binned::QuantForest;
 pub use packed_native::NativeForest;

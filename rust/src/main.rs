@@ -74,6 +74,12 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         .opt("retries", "2", "per-job retries before a slot is marked failed")
         .opt("time-budget", "0", "wall-clock training budget in seconds (0 = none)")
         .opt("event-log", "", "per-round/per-job event stream file (.jsonl or .csv; empty = off)")
+        .opt("spill-dir", "", "spill the scaled training matrix to this directory (out-of-core)")
+        .opt(
+            "spill-mb",
+            "",
+            "resident MiB threshold before spilling (0 = always; needs --spill-dir)",
+        )
         .flag("resume", "resume from existing store (re-trains corrupt slots)")
         .parse(argv)?;
 
@@ -93,6 +99,18 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     let event_log = args.get("event-log");
     if !event_log.is_empty() {
         opts = opts.with_event_log(event_log);
+    }
+    let spill_dir = args.get("spill-dir");
+    if !spill_dir.is_empty() {
+        let spill_mb = args.get("spill-mb");
+        let threshold_mb: usize = if spill_mb.is_empty() {
+            0 // --spill-dir alone means: always spill
+        } else {
+            spill_mb
+                .parse()
+                .map_err(|_| format!("--spill-mb: not a number: {spill_mb}"))?
+        };
+        opts = opts.with_spill(spill_dir, threshold_mb.saturating_mul(1024 * 1024));
     }
     let out = caloforest::coordinator::run_training(&cfg, &x, y.as_deref(), &opts);
     println!(

@@ -8,9 +8,13 @@
 //! This file holds a single test so no concurrent test can perturb the
 //! global allocator counters mid-measurement.
 
+//! (The spilled counterpart — peak resident bytes during an *out-of-core*
+//! prepare and training job — lives in `memory_footprint_spill.rs`, its own
+//! binary for the same allocator-isolation reason.)
+
 use caloforest::coordinator::memory::{current_bytes, peak_bytes, reset_peak, TrackingAlloc};
 use caloforest::data::synthetic_dataset;
-use caloforest::forest::trainer::{prepare, ForestTrainConfig};
+use caloforest::forest::trainer::{prepare_opts, ForestTrainConfig};
 use caloforest::gbt::TrainParams;
 
 #[global_allocator]
@@ -34,7 +38,9 @@ fn prepared_footprint_is_k_independent_and_near_n_p_bytes() {
         };
         let before = current_bytes();
         reset_peak();
-        let prep = prepare(&cfg, &x, Some(&y));
+        // Resident-explicit: this gate measures the in-memory layout, so it
+        // must not follow a forced-spill environment (CALOFOREST_SPILL_MB).
+        let prep = prepare_opts(&cfg, &x, Some(&y), None);
         let live = current_bytes().saturating_sub(before);
         let peak = peak_bytes().saturating_sub(before);
         (live, peak, prep.nbytes())

@@ -1,0 +1,96 @@
+//! Memory regression gate for the out-of-core binned data plane: with the
+//! tracking allocator registered, (1) a spilled prepare must peak at
+//! O(chunk) resident bytes — never the O(n·p) scaled f32 matrix — and (2) a
+//! spilled training job must beat the in-memory job's peak by at least the
+//! matrix + materialized-`x_t` savings, so a reintroduced resident n·p f32
+//! array (in prepare, or as a materialized job input) fails immediately.
+//!
+//! Like `memory_footprint.rs`, this file holds a single test in its own
+//! binary so no concurrent test perturbs the global allocator counters.
+
+use caloforest::coordinator::memory::{current_bytes, peak_bytes, reset_peak, TrackingAlloc};
+use caloforest::coordinator::pool::WorkerPool;
+use caloforest::data::synthetic_dataset;
+use caloforest::forest::trainer::{prepare_opts, train_job_in, ForestTrainConfig, SpillConfig};
+use caloforest::gbt::TrainParams;
+
+#[global_allocator]
+static ALLOC: TrackingAlloc = TrackingAlloc;
+
+#[test]
+fn spilled_prepare_and_training_stay_out_of_core() {
+    let spill_dir = std::env::temp_dir().join("caloforest_footprint_spill");
+
+    // Part 1 — absolute gate on prepare: spilling a 200k×8 matrix (6.4 MB
+    // as resident f32) must peak at O(chunk): one column-major chunk buffer
+    // plus its encoded bytes inside the writer, well under the matrix.
+    {
+        let (n, p) = (200_000usize, 8usize);
+        let (x, _) = synthetic_dataset(n, p, 1, 3);
+        let cfg = ForestTrainConfig {
+            n_t: 1,
+            k_dup: 1,
+            params: TrainParams { n_trees: 2, max_depth: 2, ..Default::default() },
+            seed: 21,
+            ..Default::default()
+        };
+        let spill = SpillConfig::new(&spill_dir, 0);
+        let before = current_bytes();
+        reset_peak();
+        let prep = prepare_opts(&cfg, &x, None, Some(&spill));
+        let peak = peak_bytes().saturating_sub(before);
+        assert_eq!(prep.nbytes(), 0, "spilled rows must not count as resident");
+        assert!(
+            prep.disk_bytes() >= n * p * 4,
+            "the full scaled matrix must be on disk, got {} bytes",
+            prep.disk_bytes()
+        );
+        assert!(
+            peak < 2_500_000,
+            "spilled prepare peaked at {peak} resident bytes — the scaled matrix \
+             (n·p·4 = {} bytes) must never be resident",
+            n * p * 4
+        );
+    }
+
+    // Part 2 — relative gate on one full (prepare + train) job, K=1 so the
+    // in-memory and spilled paths differ exactly by what out-of-core
+    // removes: the resident n·p f32 matrix and the materialized f32 `x_t`
+    // (the u8 codes replace it). Everything else — targets, predictions,
+    // gradients, histograms — is identical on both planes and cancels in
+    // the subtraction, so the gate is robust to booster internals. n is
+    // far above SKETCH_BUDGET, so the streamed sketch is in its *bounded*
+    // pruned regime (O(budget) per feature, independent of n).
+    {
+        let (n, p) = (400_000usize, 6usize);
+        let shared = n * p * 4;
+        let (x, _) = synthetic_dataset(n, p, 1, 5);
+        let cfg = ForestTrainConfig {
+            n_t: 1,
+            k_dup: 1,
+            params: TrainParams { n_trees: 2, max_depth: 2, ..Default::default() },
+            seed: 23,
+            ..Default::default()
+        };
+        let exec = WorkerPool::new(1);
+        let measure = |spill: Option<&SpillConfig>| {
+            let before = current_bytes();
+            reset_peak();
+            let prep = prepare_opts(&cfg, &x, None, spill);
+            let _booster = train_job_in(&prep, &cfg, 0, 0, &exec);
+            peak_bytes().saturating_sub(before)
+        };
+        let inmem_peak = measure(None);
+        let spill = SpillConfig::new(&spill_dir, 0);
+        let spilled_peak = measure(Some(&spill));
+        let saved = inmem_peak.saturating_sub(spilled_peak);
+        assert!(
+            saved >= shared * 3 / 2,
+            "spilled job saved only {saved} resident bytes over in-memory \
+             (in-memory {inmem_peak}, spilled {spilled_peak}); dropping the \
+             f32 matrix + materialized x_t must save ~2·n·p·4 = {} bytes — \
+             a reintroduced resident n·p f32 array fails this gate",
+            2 * shared
+        );
+    }
+}
